@@ -1,0 +1,6 @@
+# Allow `pytest python/tests/` from the repository root: the functional
+# model lives in the `compile` package under python/.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,127 @@
+//! Design-space exploration: sweep BARISTA's grid geometry, buffer
+//! depths, and telescoping schedules on one benchmark and print a
+//! speedup/refetch Pareto table.
+//!
+//! The paper chose 64 FGRs × 32 IFGCs × 4 PEs "based on light
+//! exploration" (§4); this example is that exploration, reproducible.
+//!
+//! Run: `cargo run --release --example design_space [benchmark]`
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::workload::Benchmark;
+
+fn run_cfg(benchmark: Benchmark, cfg: SimConfig) -> (f64, f64) {
+    let dense = {
+        let mut d = SimConfig::paper(ArchKind::Dense);
+        d.window_cap = cfg.window_cap;
+        d.batch = cfg.batch;
+        run_one(&RunRequest {
+            benchmark,
+            config: d,
+        })
+        .network
+        .cycles
+    };
+    let r = run_one(&RunRequest {
+        benchmark,
+        config: cfg,
+    });
+    (dense / r.network.cycles, r.network.refetch_ratio())
+}
+
+fn main() {
+    let benchmark = std::env::args()
+        .nth(1)
+        .and_then(|s| Benchmark::parse(&s))
+        .unwrap_or(Benchmark::AlexNet);
+    println!("== BARISTA design-space exploration on {benchmark} ==");
+    println!("(8K MACs per cluster held constant; paper default marked *)\n");
+
+    // --- grid geometry: fgrs × ifgcs × pes = 8192 -----------------------
+    println!(
+        "{:<26} {:>12} {:>14}",
+        "grid (FGR×IFGC×PE)", "speedup", "refetch ratio"
+    );
+    for (fgrs, ifgcs, pes) in [
+        (128usize, 32usize, 2usize),
+        (64, 32, 4), // paper default
+        (32, 32, 8),
+        (64, 64, 2),
+        (32, 64, 4),
+        (128, 16, 4),
+    ] {
+        let mut cfg = SimConfig::paper(ArchKind::Barista);
+        cfg.window_cap = 256;
+        cfg.fgrs = fgrs;
+        cfg.ifgcs = ifgcs;
+        cfg.pes_per_node = pes;
+        // Telescoping schedule must sum to the FGR count.
+        cfg.telescope_schedule = telescope_for(fgrs);
+        cfg.validate().expect("valid grid");
+        let (speedup, refetch) = run_cfg(benchmark, cfg);
+        let mark = if (fgrs, ifgcs, pes) == (64, 32, 4) { "*" } else { " " };
+        println!(
+            "{mark}{fgrs:>3} x {ifgcs:>3} x {pes}              {speedup:>11.2}x {refetch:>14.2}"
+        );
+    }
+
+    // --- per-node buffer depth ------------------------------------------
+    println!(
+        "\n{:<26} {:>12} {:>14}",
+        "node buffer depth", "speedup", "refetch ratio"
+    );
+    for depth in [1usize, 2, 3, 4, 6] {
+        let mut cfg = SimConfig::paper(ArchKind::Barista);
+        cfg.window_cap = 256;
+        cfg.node_buf_depth = depth;
+        let (speedup, refetch) = run_cfg(benchmark, cfg);
+        let mark = if depth == 3 { "*" } else { " " };
+        println!("{mark}{depth:<25} {speedup:>11.2}x {refetch:>14.2}");
+    }
+
+    // --- telescoping schedule shape --------------------------------------
+    println!(
+        "\n{:<26} {:>12} {:>14}",
+        "telescope schedule", "speedup", "refetch ratio"
+    );
+    for (name, sched) in [
+        ("48+12+2+1+1 (paper)", vec![48usize, 12, 2, 1, 1]),
+        ("64 (all-combine)", vec![64]),
+        ("32+16+8+4+2+1+1", vec![32, 16, 8, 4, 2, 1, 1]),
+        ("16x4 (uniform)", vec![16, 16, 16, 16]),
+        ("8x8 (uniform)", vec![8; 8]),
+    ] {
+        let mut cfg = SimConfig::paper(ArchKind::Barista);
+        cfg.window_cap = 256;
+        cfg.telescope_schedule = sched;
+        let (speedup, refetch) = run_cfg(benchmark, cfg);
+        println!("{name:<26} {speedup:>11.2}x {refetch:>14.2}");
+    }
+
+    println!("\n(The paper's point: telescoping ~matches all-combine's refetch count");
+    println!(" while avoiding its implicit barrier on the leading nodes.)");
+}
+
+fn telescope_for(fgrs: usize) -> Vec<usize> {
+    // Scale the paper's 48/12/2/1/1 shape (75%/19%/3%/tails) to any size.
+    let first = fgrs * 3 / 4;
+    let second = fgrs * 3 / 16;
+    let third = (fgrs / 32).max(1);
+    let mut used = first + second + third;
+    let mut sched = vec![first, second, third];
+    while used < fgrs {
+        sched.push(1);
+        used += 1;
+    }
+    // Trim overshoot (small grids).
+    while sched.iter().sum::<usize>() > fgrs {
+        let last = sched.last_mut().unwrap();
+        if *last > 1 {
+            *last -= 1;
+        } else {
+            sched.pop();
+        }
+    }
+    sched
+}

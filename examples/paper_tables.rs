@@ -1,0 +1,132 @@
+//! Regenerate every table and figure of the paper's evaluation in one
+//! run, writing text + CSV artifacts under `out/`.
+//!
+//! Run: `cargo run --release --example paper_tables [--window-cap N]`
+//! (the individual `cargo bench` targets regenerate each artifact with
+//! timing statistics; this example is the one-shot version.)
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{report, Coordinator};
+use barista::energy::area_power_table;
+use barista::workload::{network, Benchmark};
+
+fn main() {
+    let cap = std::env::args()
+        .skip_while(|a| a != "--window-cap")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(384usize);
+    let mut base = SimConfig::paper(ArchKind::Barista);
+    base.window_cap = cap;
+
+    println!("== regenerating all paper tables/figures (window cap {cap}) ==\n");
+
+    // Table 1 + Table 2.
+    let mut t1 = String::from("benchmark,layers,filter_density,map_density\n");
+    println!("Table 1 — benchmarks:");
+    for b in Benchmark::ALL {
+        let s = network(b);
+        println!(
+            "  {:<14} {:>3} layers  filter {:.3}  map {:.3}",
+            b.name(),
+            s.layers.len(),
+            s.filter_density,
+            s.map_density
+        );
+        t1.push_str(&format!(
+            "{},{},{},{}\n",
+            b.name(),
+            s.layers.len(),
+            s.filter_density,
+            s.map_density
+        ));
+    }
+    report::write_out("table1.csv", &t1).unwrap();
+
+    let mut t2 = String::from("arch,macs_per_cluster,clusters,total_macs,cache_mb,banks\n");
+    println!("\nTable 2 — hardware parameters:");
+    for a in ArchKind::ALL {
+        let c = SimConfig::paper(a);
+        println!(
+            "  {:<18} {:>6} × {:>4} = {:>6} MACs, {:>2} MB, {:>2} banks",
+            a.name(),
+            c.macs_per_cluster,
+            c.clusters,
+            c.total_macs(),
+            c.cache_bytes >> 20,
+            c.cache_banks
+        );
+        t2.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            a.name(),
+            c.macs_per_cluster,
+            c.clusters,
+            c.total_macs(),
+            c.cache_bytes >> 20,
+            c.cache_banks
+        ));
+    }
+    report::write_out("table2.csv", &t2).unwrap();
+
+    // Figures 7-9 from one sweep.
+    println!("\nrunning the benchmark × architecture sweep...");
+    let coord = Coordinator::new();
+    let t0 = std::time::Instant::now();
+    let results = coord.sweep(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    println!("sweep done in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    let (txt, csv) = report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7);
+    println!("Figure 7 — speedup over Dense:\n{txt}");
+    report::write_out("fig7.csv", &csv).unwrap();
+
+    let (txt, csv) = report::fig8_breakdown(&results, &Benchmark::ALL, &ArchKind::FIG7);
+    report::write_out("fig8.csv", &csv).unwrap();
+    println!("Figure 8 — execution-time breakdown:\n{txt}");
+
+    let energy_archs = [
+        ArchKind::Dense,
+        ArchKind::OneSided,
+        ArchKind::SparTen,
+        ArchKind::Barista,
+    ];
+    let (txt, csv) = report::fig9_energy(&results, &Benchmark::ALL, &energy_archs);
+    report::write_out("fig9.csv", &csv).unwrap();
+    println!("Figure 9 — energy (normalized to Dense):\n{txt}");
+
+    // Table 3.
+    println!("Table 3 — area & power (45 nm model):");
+    let mut t3 = String::from(
+        "arch,buffers_mm2,prefix_mm2,priority_mm2,macs_mm2,other_mm2,cache_mm2,total_mm2,total_w\n",
+    );
+    for (arch, ap) in area_power_table() {
+        println!(
+            "  {:<10} buffers {:>6.1}  prefix {:>5.1}  priority {:>4.1}  macs {:>5.1}  other {:>6.1}  cache {:>5.1} | total {:>6.1} mm², {:>6.1} W",
+            arch.name(),
+            ap.buffers_mm2,
+            ap.prefix_mm2,
+            ap.priority_mm2,
+            ap.macs_mm2,
+            ap.other_mm2,
+            ap.cache_mm2,
+            ap.total_mm2(),
+            ap.total_w()
+        );
+        t3.push_str(&format!(
+            "{},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1},{:.1}\n",
+            arch.name(),
+            ap.buffers_mm2,
+            ap.prefix_mm2,
+            ap.priority_mm2,
+            ap.macs_mm2,
+            ap.other_mm2,
+            ap.cache_mm2,
+            ap.total_mm2(),
+            ap.total_w()
+        ));
+    }
+    report::write_out("table3.csv", &t3).unwrap();
+
+    report::write_out("sweep.json", &report::results_json(&results).pretty()).unwrap();
+    println!("\nwrote out/table1.csv out/table2.csv out/table3.csv out/fig7.csv out/fig8.csv out/fig9.csv out/sweep.json");
+    println!("(fig5/fig10/fig11 series: see `cargo bench --bench fig5_telescoping`, fig10_ablation, fig11_buffers)");
+}

@@ -1,0 +1,55 @@
+//! Quickstart: simulate AlexNet on BARISTA and on the dense TPU-like
+//! baseline, print the speedup and the execution-time breakdown.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::workload::Benchmark;
+
+fn main() {
+    let benchmark = Benchmark::AlexNet;
+    println!("== BARISTA quickstart: {benchmark} ==\n");
+
+    let mut results = Vec::new();
+    for arch in [ArchKind::Dense, ArchKind::Barista, ArchKind::Ideal] {
+        let mut cfg = SimConfig::paper(arch);
+        cfg.window_cap = 512; // sampled windows per layer (scaled up)
+        let res = run_one(&RunRequest {
+            benchmark,
+            config: cfg,
+        });
+        println!(
+            "{:<10} {:>14.3e} cycles  ({:>8.3} ms @ 1 GHz)   [host {:>6.0} ms]",
+            arch.name(),
+            res.network.cycles,
+            res.network.cycles / 1e6,
+            res.host_ms
+        );
+        results.push(res);
+    }
+
+    let dense = results[0].network.cycles;
+    let barista = &results[1];
+    let ideal = results[2].network.cycles;
+    println!(
+        "\nBARISTA speedup over dense: {:.2}x   (paper: ~5.4x geomean across 5 nets)",
+        dense / barista.network.cycles
+    );
+    println!(
+        "BARISTA vs ideal: {:.1}% slower   (paper: within ~6%)",
+        100.0 * (barista.network.cycles / ideal - 1.0)
+    );
+
+    let bd = &barista.network.breakdown;
+    let t = bd.total();
+    println!("\nBARISTA time breakdown (PE-cycle attribution):");
+    println!("  nonzero compute : {:>5.1}%", 100.0 * bd.nonzero / t);
+    println!("  barrier loss    : {:>5.1}%", 100.0 * bd.barrier / t);
+    println!("  bandwidth delay : {:>5.1}%", 100.0 * bd.bandwidth / t);
+    println!("  other           : {:>5.1}%", 100.0 * bd.other / t);
+    println!(
+        "\nrefetch ratio: {:.2} refetches per fetched chunk-block (combining + snarfing at work)",
+        barista.network.refetch_ratio()
+    );
+}

@@ -1,0 +1,88 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format, not `.serialize()` — jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered with `return_tuple=True`; the Rust side unwraps
+with `to_tuple1()`.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The shapes the Rust side expects, single source of truth kept in sync
+# with rust/src/runtime/golden.rs (tested by `barista golden`).
+CHUNK_GEMM_M = 64
+CHUNK_GEMM_K = 1152  # 9 chunks of 128 (a 3×3×128 conv's vec_len)
+CHUNK_GEMM_N = 256
+SMALLCNN_BATCH = 4
+SMALLCNN_HW = 16
+SMALLCNN_C = (8, 16, 16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifacts():
+    """Name → (fn, example ShapeDtypeStructs)."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    m, k, n = CHUNK_GEMM_M, CHUNK_GEMM_K, CHUNK_GEMM_N
+    b, hw = SMALLCNN_BATCH, SMALLCNN_HW
+    c0, c1, c2, c3 = SMALLCNN_C
+    return {
+        "chunk_gemm": (
+            lambda a, am, bb, bm: (model.chunk_gemm_entry(a, am, bb, bm),),
+            [s((m, k), f32), s((m, k), f32), s((k, n), f32), s((k, n), f32)],
+        ),
+        "smallcnn": (
+            lambda x, w1, b1, w2, b2, w3, b3: (
+                model.small_cnn(x, w1, b1, w2, b2, w3, b3),
+            ),
+            [
+                s((b, hw, hw, c0), f32),
+                s((3, 3, c0, c1), f32),
+                s((c1,), f32),
+                s((3, 3, c1, c2), f32),
+                s((c2,), f32),
+                s((3, 3, c2, c3), f32),
+                s((c3,), f32),
+            ],
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build one artifact by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, (fn, specs) in artifacts().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

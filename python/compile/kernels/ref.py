@@ -1,0 +1,25 @@
+"""Pure-jnp correctness oracle for the sparse-chunk kernel.
+
+This is the ground truth the Pallas kernel (and, transitively, the AOT
+artifacts the Rust runtime executes) is pinned against by pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_gemm_ref(a, a_mask, b, b_mask):
+    """``(a ∘ a_mask) @ (b ∘ b_mask)`` — the bitmask two-sided product."""
+    return jnp.dot(a * a_mask, b * b_mask, preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(x, w, b, *, stride=1, pad=1):
+    """NHWC conv + bias + ReLU via lax — the oracle for the model layer."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jnp.maximum(y + b, 0.0)

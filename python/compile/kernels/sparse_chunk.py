@@ -1,0 +1,90 @@
+"""L1 — the bitmask sparse-chunk GEMM hot-spot as a Pallas kernel.
+
+The paper's PE datapath multiplies two bitmask-compressed 128-cell chunks
+by matching non-zero positions (AND + prefix-sum + priority-encode). On a
+TPU-like target that insight maps differently (DESIGN.md
+§Hardware-Adaptation): individual-zero skipping buys nothing on a systolic
+MXU, so the kernel keeps values dense-in-register but *masked* — computing
+``C = (A ∘ maskA) @ (B ∘ maskB)`` tile by tile — while the chunk structure
+becomes the VMEM tiling: the K dimension is walked in 128-cell chunks
+(the paper's hardware granularity), one (TM × TN) output tile resident.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU lowering is a compile-only target. Correctness is
+pinned to ``ref.py`` by pytest/hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's chunk size: 128 cells (one occupancy mask's worth).
+CHUNK = 128
+# Output tile (VMEM-resident) — multiples of the MXU's 128 edge.
+TILE_M = 64
+TILE_N = 128
+
+
+def _chunk_gemm_kernel(a_ref, am_ref, b_ref, bm_ref, o_ref, *, n_chunks: int):
+    """One (TILE_M × TILE_N) output tile: accumulate over K chunks.
+
+    a_ref:  (TILE_M, K) values      am_ref: (TILE_M, K) mask (0/1)
+    b_ref:  (K, TILE_N) values      bm_ref: (K, TILE_N) mask (0/1)
+    """
+    acc = jnp.zeros((a_ref.shape[0], o_ref.shape[1]), dtype=jnp.float32)
+    for c in range(n_chunks):
+        sl = slice(c * CHUNK, (c + 1) * CHUNK)
+        # Masked operands: the bitmask semantics of the PE datapath —
+        # only positions non-zero in *both* masks contribute.
+        a = a_ref[:, sl] * am_ref[:, sl]
+        b = b_ref[sl, :] * bm_ref[sl, :]
+        acc = acc + jnp.dot(a, b, preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+def chunk_gemm(a, a_mask, b, b_mask, *, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """Masked chunked GEMM: ``(a ∘ a_mask) @ (b ∘ b_mask)``.
+
+    a, a_mask: (M, K); b, b_mask: (K, N). K must be a multiple of CHUNK;
+    M, N must be multiples of the tile sizes (the AOT wrapper pads).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    assert k % CHUNK == 0, f"K={k} must be chunk-aligned ({CHUNK})"
+    assert m % tile_m == 0 and n % tile_n == 0, (m, n, tile_m, tile_n)
+    n_chunks = k // CHUNK
+
+    grid = (m // tile_m, n // tile_n)
+    kernel = functools.partial(_chunk_gemm_kernel, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(a, a_mask, b, b_mask)
+
+
+def chunk_gemm_padded(a, a_mask, b, b_mask):
+    """`chunk_gemm` for arbitrary shapes: zero-pads M, K, N to alignment
+    (zero padding is exact for GEMM) and slices the result back."""
+    m, k = a.shape
+    _, n = b.shape
+    pm = (-m) % TILE_M
+    pk = (-k) % CHUNK
+    pn = (-n) % TILE_N
+    a = jnp.pad(a, ((0, pm), (0, pk)))
+    a_mask = jnp.pad(a_mask, ((0, pm), (0, pk)))
+    b = jnp.pad(b, ((0, pk), (0, pn)))
+    b_mask = jnp.pad(b_mask, ((0, pk), (0, pn)))
+    out = chunk_gemm(a, a_mask, b, b_mask)
+    return out[:m, :n]

@@ -1,0 +1,70 @@
+"""L2 — the functional sparse-CNN compute graph in JAX.
+
+Conv layers are expressed the way the accelerator sees them (paper §3):
+im2col-linearized into a chunked GEMM, computed by the L1 Pallas kernel
+with explicit bitmask operands. The im2col patch order is (kh, kw, c) —
+the single linearization convention the whole stack (Rust golden model,
+simulator, kernel) agrees on.
+
+Build-time only: `aot.py` lowers these functions to HLO text; Python is
+never on the Rust request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.sparse_chunk import chunk_gemm_padded
+
+
+def im2col(x, k: int, stride: int = 1, pad: int = 1):
+    """NHWC → (batch·out_h·out_w, k²·c) patches, (kh, kw, c) order."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    out_h = (h + 2 * pad - k) // stride + 1
+    out_w = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for kh in range(k):
+        for kw in range(k):
+            sl = xp[:, kh : kh + out_h * stride : stride, kw : kw + out_w * stride : stride, :]
+            cols.append(sl)
+    # (b, oh, ow, k*k*c) with (kh, kw, c) fastest-varying order.
+    patches = jnp.concatenate(cols, axis=-1)
+    return patches.reshape(b * out_h * out_w, k * k * c), (out_h, out_w)
+
+
+def conv_layer(x, w, bias, *, stride: int = 1, pad: int = 1):
+    """One sparse conv layer: im2col → masked chunked GEMM → bias → ReLU.
+
+    x: (B, H, W, C) activations (zeros where ReLU fired upstream);
+    w: (k, k, C, N) pruned weights (zeros where pruned); bias: (N,).
+    The bitmasks are the non-zero occupancy of each operand — exactly the
+    representation the accelerator stores.
+    """
+    k = w.shape[0]
+    n = w.shape[3]
+    patches, (out_h, out_w) = im2col(x, k, stride, pad)
+    wmat = w.reshape(-1, n)  # (k²C, N), (kh, kw, c) row order matches im2col
+    a = patches
+    a_mask = (a != 0).astype(a.dtype)
+    b_mask = (wmat != 0).astype(wmat.dtype)
+    y = chunk_gemm_padded(a, a_mask, wmat, b_mask)
+    y = jnp.maximum(y + bias, 0.0)
+    bsz = x.shape[0]
+    return y.reshape(bsz, out_h, out_w, n)
+
+
+def small_cnn(x, w1, b1, w2, b2, w3, b3):
+    """The end-to-end functional model: a 3-conv-layer CNN.
+
+    Shapes (the `smallcnn` artifact): x (B,16,16,8);
+    w1 (3,3,8,16) → w2 (3,3,16,16) → w3 (3,3,16,32); all stride 1 pad 1.
+    Returns the (B,16,16,32) final activation.
+    """
+    h = conv_layer(x, w1, b1)
+    h = conv_layer(h, w2, b2)
+    return conv_layer(h, w3, b3)
+
+
+def chunk_gemm_entry(a, a_mask, b, b_mask):
+    """Standalone kernel entry (the `chunk_gemm` artifact) so Rust can
+    validate the L1 kernel numerics directly."""
+    return chunk_gemm_padded(a, a_mask, b, b_mask)

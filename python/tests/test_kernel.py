@@ -1,0 +1,100 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes, densities and dtypes; every case asserts
+allclose between the Pallas kernel (interpret mode) and ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import chunk_gemm_ref
+from compile.kernels.sparse_chunk import CHUNK, TILE_M, TILE_N, chunk_gemm, chunk_gemm_padded
+
+
+def make_operands(rng, m, k, n, da, db, dtype=np.float32):
+    a = rng.standard_normal((m, k)).astype(dtype)
+    b = rng.standard_normal((k, n)).astype(dtype)
+    a_mask = (rng.random((m, k)) < da).astype(dtype)
+    b_mask = (rng.random((k, n)) < db).astype(dtype)
+    return a, a_mask, b, b_mask
+
+
+def test_aligned_exact_shape():
+    rng = np.random.default_rng(0)
+    a, am, b, bm = make_operands(rng, TILE_M, 2 * CHUNK, TILE_N, 0.5, 0.4)
+    got = chunk_gemm(jnp.array(a), jnp.array(am), jnp.array(b), jnp.array(bm))
+    want = chunk_gemm_ref(a, am, b, bm)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-5)
+
+
+def test_multi_tile_grid():
+    rng = np.random.default_rng(1)
+    a, am, b, bm = make_operands(rng, 2 * TILE_M, CHUNK, 2 * TILE_N, 0.6, 0.6)
+    got = chunk_gemm(jnp.array(a), jnp.array(am), jnp.array(b), jnp.array(bm))
+    want = chunk_gemm_ref(a, am, b, bm)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-5)
+
+
+def test_all_zero_mask_gives_zero():
+    rng = np.random.default_rng(2)
+    a, _, b, bm = make_operands(rng, TILE_M, CHUNK, TILE_N, 1.0, 1.0)
+    am = np.zeros_like(a)
+    got = chunk_gemm(jnp.array(a), jnp.array(am), jnp.array(b), jnp.array(bm))
+    assert np.all(np.array(got) == 0.0)
+
+
+def test_full_masks_equal_plain_matmul():
+    rng = np.random.default_rng(3)
+    a, _, b, _ = make_operands(rng, TILE_M, CHUNK, TILE_N, 1.0, 1.0)
+    ones_a = np.ones_like(a)
+    ones_b = np.ones_like(b)
+    got = chunk_gemm(jnp.array(a), jnp.array(ones_a), jnp.array(b), jnp.array(ones_b))
+    np.testing.assert_allclose(np.array(got), a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_padded_arbitrary_shape():
+    rng = np.random.default_rng(4)
+    a, am, b, bm = make_operands(rng, 37, 200, 61, 0.5, 0.5)
+    got = chunk_gemm_padded(jnp.array(a), jnp.array(am), jnp.array(b), jnp.array(bm))
+    want = chunk_gemm_ref(a, am, b, bm)
+    assert got.shape == (37, 61)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 100),
+    kc=st.integers(1, 4),
+    n=st.integers(1, 150),
+    da=st.floats(0.0, 1.0),
+    db=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes_and_densities(m, kc, n, da, db, seed):
+    rng = np.random.default_rng(seed)
+    k = kc * 64 + 7  # deliberately unaligned K
+    a, am, b, bm = make_operands(rng, m, k, n, da, db)
+    got = chunk_gemm_padded(jnp.array(a), jnp.array(am), jnp.array(b), jnp.array(bm))
+    want = chunk_gemm_ref(a, am, b, bm)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    a, am, b, bm = make_operands(rng, TILE_M, CHUNK, TILE_N, 0.5, 0.5, dtype)
+    got = chunk_gemm_padded(jnp.array(a), jnp.array(am), jnp.array(b), jnp.array(bm))
+    want = chunk_gemm_ref(
+        a.astype(np.float32), am.astype(np.float32), b.astype(np.float32), bm.astype(np.float32)
+    )
+    np.testing.assert_allclose(np.array(got, np.float32), np.array(want), rtol=2e-2, atol=2e-2)
+
+
+def test_misaligned_k_requires_padding_path():
+    rng = np.random.default_rng(6)
+    a, am, b, bm = make_operands(rng, TILE_M, CHUNK + 1, TILE_N, 0.5, 0.5)
+    with pytest.raises(AssertionError):
+        chunk_gemm(jnp.array(a), jnp.array(am), jnp.array(b), jnp.array(bm))

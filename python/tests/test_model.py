@@ -1,0 +1,113 @@
+"""L2 model tests: conv-as-chunked-GEMM vs lax conv oracle, shapes, and
+the AOT artifact contract."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels.ref import conv2d_ref
+
+
+def rand_layer(rng, c_in, c_out, k=3, density=0.5):
+    w = rng.standard_normal((k, k, c_in, c_out)).astype(np.float32)
+    w *= (rng.random(w.shape) < density).astype(np.float32)  # prune
+    b = rng.standard_normal((c_out,)).astype(np.float32) * 0.1
+    return w, b
+
+
+def test_conv_layer_matches_lax():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2, 8, 8, 4)).astype(np.float32)
+    x = np.maximum(x, 0)  # ReLU'd input, as in a real layer chain
+    w, b = rand_layer(rng, 4, 8)
+    got = model.conv_layer(jnp.array(x), jnp.array(w), jnp.array(b))
+    want = conv2d_ref(jnp.array(x), jnp.array(w), jnp.array(b))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hw=st.sampled_from([4, 6, 8]),
+    cin=st.sampled_from([1, 3, 8]),
+    cout=st.sampled_from([2, 8]),
+    density=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_conv_layer(hw, cin, cout, density, seed):
+    rng = np.random.default_rng(seed)
+    x = np.maximum(rng.standard_normal((1, hw, hw, cin)).astype(np.float32), 0)
+    w, b = rand_layer(rng, cin, cout, density=density)
+    got = model.conv_layer(jnp.array(x), jnp.array(w), jnp.array(b))
+    want = conv2d_ref(jnp.array(x), jnp.array(w), jnp.array(b))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=2e-4)
+
+
+def test_im2col_order_is_kh_kw_c():
+    # 2x2 input, k=3 pad=1: window at (0,0) must place x[0,0,:] at the
+    # (kh=1, kw=1) slot → column offset (1*3+1)*c.
+    c = 2
+    x = np.arange(2 * 2 * c, dtype=np.float32).reshape(1, 2, 2, c)
+    patches, (oh, ow) = model.im2col(jnp.array(x), 3, 1, 1)
+    assert (oh, ow) == (2, 2)
+    p00 = np.array(patches)[0]
+    center = (1 * 3 + 1) * c
+    np.testing.assert_array_equal(p00[center : center + c], x[0, 0, 0])
+
+
+def test_small_cnn_shapes_and_relu():
+    rng = np.random.default_rng(1)
+    b, hw = aot.SMALLCNN_BATCH, aot.SMALLCNN_HW
+    c0, c1, c2, c3 = aot.SMALLCNN_C
+    x = rng.standard_normal((b, hw, hw, c0)).astype(np.float32)
+    w1, b1 = rand_layer(rng, c0, c1)
+    w2, b2 = rand_layer(rng, c1, c2)
+    w3, b3 = rand_layer(rng, c2, c3)
+    y = model.small_cnn(
+        jnp.array(x), jnp.array(w1), jnp.array(b1), jnp.array(w2), jnp.array(b2),
+        jnp.array(w3), jnp.array(b3),
+    )
+    assert y.shape == (b, hw, hw, c3)
+    y = np.array(y)
+    assert np.all(y >= 0), "final ReLU"
+    dens = float((y > 0).mean())
+    assert 0.05 < dens < 0.95, f"plausible activation density, got {dens}"
+
+
+def test_small_cnn_matches_lax_chain():
+    rng = np.random.default_rng(2)
+    b, hw = 2, 8
+    c0, c1, c2, c3 = aot.SMALLCNN_C
+    x = rng.standard_normal((b, hw, hw, c0)).astype(np.float32)
+    w1, b1 = rand_layer(rng, c0, c1)
+    w2, b2 = rand_layer(rng, c1, c2)
+    w3, b3 = rand_layer(rng, c2, c3)
+    got = model.small_cnn(
+        jnp.array(x), jnp.array(w1), jnp.array(b1), jnp.array(w2), jnp.array(b2),
+        jnp.array(w3), jnp.array(b3),
+    )
+    h = conv2d_ref(jnp.array(x), jnp.array(w1), jnp.array(b1))
+    h = conv2d_ref(h, jnp.array(w2), jnp.array(b2))
+    want = conv2d_ref(h, jnp.array(w3), jnp.array(b3))
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-3, atol=1e-3)
+
+
+def test_aot_artifact_registry_shapes():
+    arts = aot.artifacts()
+    assert set(arts) == {"chunk_gemm", "smallcnn"}
+    _, specs = arts["chunk_gemm"]
+    assert specs[0].shape == (aot.CHUNK_GEMM_M, aot.CHUNK_GEMM_K)
+    assert specs[2].shape == (aot.CHUNK_GEMM_K, aot.CHUNK_GEMM_N)
+    _, specs = arts["smallcnn"]
+    assert specs[0].shape == (aot.SMALLCNN_BATCH, aot.SMALLCNN_HW, aot.SMALLCNN_HW, 8)
+
+
+def test_aot_lowering_produces_hlo_text(tmp_path):
+    import jax
+
+    fn, specs = aot.artifacts()["chunk_gemm"]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[64,1152]" in text

@@ -1,0 +1,122 @@
+//! Figure 10 — isolating BARISTA's techniques: start from
+//! BARISTA-no-opts (GB-S + asynchronous refetches, like the paper) and
+//! progressively add telescoping request combining, coloring,
+//! hierarchical buffering, and dynamic round robin; SparTen plotted for
+//! reference.
+//!
+//! Paper: every technique contributes "more or less similarly" to close
+//! the gap from BARISTA-no-opts (below SparTen!) up to full BARISTA; the
+//! telescoping step is flat only on inception-v4 (low data volume).
+
+use barista::bench_harness::{bench, bench_header};
+use barista::config::{ArchKind, BaristaOpts, SimConfig};
+use barista::coordinator::{report, run_one, RunRequest};
+use barista::workload::Benchmark;
+
+fn step_configs() -> Vec<(&'static str, ArchKind, BaristaOpts)> {
+    let none = BaristaOpts::NONE; // GB-S on, everything else off
+    vec![
+        ("sparten (ref)", ArchKind::SparTen, BaristaOpts::ALL_ON),
+        ("barista-no-opts", ArchKind::BaristaNoOpts, none),
+        (
+            "+telescoping",
+            ArchKind::BaristaNoOpts,
+            BaristaOpts {
+                telescoping: true,
+                snarfing: true, // the paper folds snarfing into the bandwidth step
+                ..none
+            },
+        ),
+        (
+            "+coloring",
+            ArchKind::BaristaNoOpts,
+            BaristaOpts {
+                telescoping: true,
+                snarfing: true,
+                coloring: true,
+                ..none
+            },
+        ),
+        (
+            "+hierarchical",
+            ArchKind::BaristaNoOpts,
+            BaristaOpts {
+                telescoping: true,
+                snarfing: true,
+                coloring: true,
+                hierarchical: true,
+                ..none
+            },
+        ),
+        ("+round-robin (=BARISTA)", ArchKind::Barista, BaristaOpts::ALL_ON),
+    ]
+}
+
+fn main() {
+    bench_header("Figure 10: isolating BARISTA's techniques (speedup vs Dense)");
+    let steps = step_configs();
+    let mut csv = String::from("benchmark,step,speedup\n");
+    let mut table: Vec<Vec<f64>> = vec![Vec::new(); steps.len()];
+
+    let t = bench("fig10 ablation sweep", 0, 1, || {
+        for v in table.iter_mut() {
+            v.clear();
+        }
+        for &b in &Benchmark::ALL {
+            let mut dense_cfg = SimConfig::paper(ArchKind::Dense);
+            dense_cfg.window_cap = 512;
+            dense_cfg.batch = 32;
+            let dense = run_one(&RunRequest {
+                benchmark: b,
+                config: dense_cfg,
+            })
+            .network
+            .cycles;
+            for (i, (_, arch, opts)) in steps.iter().enumerate() {
+                let mut cfg = SimConfig::paper(*arch);
+                cfg.window_cap = 512;
+                cfg.batch = 32;
+                cfg.opts = *opts;
+                let r = run_one(&RunRequest {
+                    benchmark: b,
+                    config: cfg,
+                });
+                table[i].push(dense / r.network.cycles);
+            }
+        }
+    });
+    println!("{}", t.report());
+
+    print!("\n{:<26}", "step");
+    for b in Benchmark::ALL {
+        print!("{:>13}", b.name());
+    }
+    println!("{:>9}", "geomean");
+    for (i, (name, _, _)) in steps.iter().enumerate() {
+        print!("{name:<26}");
+        for (j, v) in table[i].iter().enumerate() {
+            print!("{v:>13.2}");
+            csv.push_str(&format!("{},{},{:.4}\n", Benchmark::ALL[j].name(), name, v));
+        }
+        println!("{:>9.2}", barista::util::geomean(&table[i]));
+    }
+
+    // The monotone-improvement property the figure shows (each added
+    // technique helps on geomean).
+    println!("\ncumulative geomean gain per step:");
+    for w in 1..steps.len() {
+        let prev = barista::util::geomean(&table[w - 1]);
+        let cur = barista::util::geomean(&table[w]);
+        if w >= 2 {
+            println!(
+                "  {:<26} {:>6.2} -> {:>6.2}  ({:+.1}%)",
+                steps[w].0,
+                prev,
+                cur,
+                100.0 * (cur / prev - 1.0)
+            );
+        }
+    }
+    let path = report::write_out("fig10.csv", &csv).expect("write fig10.csv");
+    println!("\nwrote {}", path.display());
+}

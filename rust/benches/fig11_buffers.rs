@@ -1,0 +1,87 @@
+//! Figure 11 — sensitivity to buffer size: average refetches per fetched
+//! datum, without the optimizations and with them at 4 / 6 / 8 MB of
+//! total buffering (8 MB is the default; the paper saw no performance
+//! benefit beyond it).
+//!
+//! Buffer capacity maps onto the model's depths: the paper's 7.66 MB
+//! default is 3× per-node buffering + 16-deep shared IFGC buffers
+//! (§3.4); 6 MB ≈ 2×/12-deep, 4 MB ≈ 1×/8-deep.
+
+use barista::bench_harness::{bench, bench_header};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{report, run_one, RunRequest};
+use barista::workload::Benchmark;
+
+fn main() {
+    bench_header("Figure 11: refetches vs buffer size");
+    // (label, arch, node_depth, shared_depth)
+    let variants: Vec<(&str, ArchKind, usize, usize)> = vec![
+        ("no-opts", ArchKind::BaristaNoOpts, 3, 16),
+        ("opts 4MB", ArchKind::Barista, 1, 8),
+        ("opts 6MB", ArchKind::Barista, 2, 12),
+        ("opts 8MB", ArchKind::Barista, 3, 16),
+    ];
+
+    let mut csv = String::from("benchmark,variant,refetch_ratio,speedup_vs_8mb\n");
+    let mut rows: Vec<Vec<(f64, f64)>> = vec![Vec::new(); variants.len()];
+    let t = bench("fig11 sweep", 0, 1, || {
+        for v in rows.iter_mut() {
+            v.clear();
+        }
+        for &b in &Benchmark::ALL {
+            let mut cycles8 = 0.0;
+            for (i, (_, arch, nd, sd)) in variants.iter().enumerate() {
+                let mut cfg = SimConfig::paper(*arch);
+                cfg.window_cap = 512;
+                cfg.batch = 32;
+                cfg.node_buf_depth = *nd;
+                cfg.shared_buf_depth = *sd;
+                let r = run_one(&RunRequest {
+                    benchmark: b,
+                    config: cfg,
+                });
+                if i == variants.len() - 1 {
+                    cycles8 = r.network.cycles;
+                }
+                rows[i].push((r.network.refetch_ratio(), r.network.cycles));
+            }
+            // convert cycles to slowdown vs the 8MB default
+            for v in rows.iter_mut() {
+                let last = v.last_mut().unwrap();
+                last.1 = if cycles8 > 0.0 { last.1 / cycles8 } else { 1.0 };
+            }
+        }
+    });
+    println!("{}", t.report());
+
+    print!("\n{:<12}", "variant");
+    for b in Benchmark::ALL {
+        print!("{:>14}", b.name());
+    }
+    println!();
+    for (i, (name, _, _, _)) in variants.iter().enumerate() {
+        print!("{name:<12}");
+        for (j, (refetch, slow)) in rows[i].iter().enumerate() {
+            print!("{refetch:>9.2}/{slow:<4.2}");
+            csv.push_str(&format!(
+                "{},{},{:.4},{:.4}\n",
+                Benchmark::ALL[j].name(),
+                name,
+                refetch,
+                slow
+            ));
+        }
+        println!();
+    }
+    println!("(cells are refetch-ratio / slowdown-vs-8MB)");
+
+    // Paper's claims: opts slash refetches dramatically; more buffering
+    // monotonically reduces refetches; no big performance win past 8 MB.
+    let avg = |i: usize| {
+        rows[i].iter().map(|x| x.0).sum::<f64>() / rows[i].len() as f64
+    };
+    println!("\naverage refetch ratio: no-opts {:.2} -> 4MB {:.2} -> 6MB {:.2} -> 8MB {:.2}",
+        avg(0), avg(1), avg(2), avg(3));
+    let path = report::write_out("fig11.csv", &csv).expect("write fig11.csv");
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,52 @@
+//! Figure 7 — speedup over Dense for every scheme on every benchmark
+//! (plus geomean), exactly the rows the paper plots.
+//!
+//! Paper (geomean over the 5 benchmarks): BARISTA 5.4× Dense, 2.2× over
+//! One-sided, 1.7× over SparTen, 2.5× over SparTen-Iso, within ~6% of
+//! Ideal. We reproduce the ordering and rough factors; see EXPERIMENTS.md
+//! for measured-vs-paper.
+
+use barista::bench_harness::{bench, bench_header};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{report, Coordinator};
+use barista::workload::Benchmark;
+
+fn main() {
+    bench_header("Figure 7: speedup over Dense (5 benchmarks x 8 schemes)");
+    let mut base = SimConfig::paper(ArchKind::Barista);
+    base.window_cap = 768;
+    base.batch = 32;
+
+    let coord = Coordinator::new();
+    let mut results = Vec::new();
+    let t = bench("fig7 full sweep", 0, 1, || {
+        results = coord.sweep(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    });
+    println!("{}", t.report());
+
+    let (txt, csv) = report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7);
+    println!("\n{txt}");
+    let rows = report::fig7_speedups(&results, &Benchmark::ALL, &ArchKind::FIG7);
+    let get = |a: ArchKind| rows.iter().find(|r| r.0 == a).map(|r| r.2).unwrap_or(0.0);
+    let barista = get(ArchKind::Barista);
+    println!("headline ratios (paper in parens):");
+    println!("  BARISTA vs Dense      : {:>5.2}x  (5.4x)", barista);
+    println!(
+        "  BARISTA vs One-sided  : {:>5.2}x  (2.2x)",
+        barista / get(ArchKind::OneSided)
+    );
+    println!(
+        "  BARISTA vs SparTen    : {:>5.2}x  (1.7x)",
+        barista / get(ArchKind::SparTen)
+    );
+    println!(
+        "  BARISTA vs SparTen-Iso: {:>5.2}x  (2.5x)",
+        barista / get(ArchKind::SparTenIso)
+    );
+    println!(
+        "  BARISTA vs Ideal      : {:>5.1}%  slower (paper ~6%)",
+        100.0 * (get(ArchKind::Ideal) / barista - 1.0)
+    );
+    let path = report::write_out("fig7.csv", &csv).expect("write fig7.csv");
+    println!("\nwrote {}", path.display());
+}

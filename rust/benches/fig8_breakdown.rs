@@ -1,0 +1,56 @@
+//! Figure 8 — execution-time breakdown (non-zero compute, zero compute,
+//! barrier loss, bandwidth delay, other) normalized to Dense.
+//!
+//! The paper's reading: Dense is mostly zero-compute; One-sided trades
+//! zeros for bandwidth; SCNN pays "other" (Cartesian product) + barriers;
+//! SparTen pays bandwidth (async refetches); Synchronous pays barriers
+//! (broadcasts); BARISTA keeps only residual slivers of both.
+
+use barista::bench_harness::{bench, bench_header};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{report, Coordinator};
+use barista::workload::Benchmark;
+
+fn main() {
+    bench_header("Figure 8: execution-time breakdown normalized to Dense");
+    let mut base = SimConfig::paper(ArchKind::Barista);
+    base.window_cap = 768;
+    base.batch = 32;
+
+    let coord = Coordinator::new();
+    let mut results = Vec::new();
+    let t = bench("fig8 sweep", 0, 1, || {
+        results = coord.sweep(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    });
+    println!("{}", t.report());
+
+    let (txt, csv) = report::fig8_breakdown(&results, &Benchmark::ALL, &ArchKind::FIG7);
+    println!("\n{txt}");
+
+    // The qualitative assertions the paper's Figure 8 makes:
+    let idx = report::index(&results);
+    let b = Benchmark::VggNet;
+    let frac = |a: ArchKind, f: fn(&barista::sim::Breakdown) -> f64| {
+        let bd = &idx[&(b, a)].network.breakdown;
+        f(bd) / bd.total().max(1.0)
+    };
+    println!("checks on {b}:");
+    println!(
+        "  dense zero-compute fraction      {:>5.1}% (should dominate)",
+        100.0 * frac(ArchKind::Dense, |x| x.zero)
+    );
+    println!(
+        "  synchronous barrier fraction     {:>5.1}% (its signature cost)",
+        100.0 * frac(ArchKind::Synchronous, |x| x.barrier)
+    );
+    println!(
+        "  sparten bandwidth+barrier        {:>5.1}%",
+        100.0 * frac(ArchKind::SparTen, |x| x.bandwidth + x.barrier)
+    );
+    println!(
+        "  barista bandwidth+barrier        {:>5.1}% (residual only)",
+        100.0 * frac(ArchKind::Barista, |x| x.bandwidth + x.barrier)
+    );
+    let path = report::write_out("fig8.csv", &csv).expect("write fig8.csv");
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,73 @@
+//! Figure 9 — compute and memory (DRAM) energy normalized to Dense, for
+//! Dense / One-sided / SparTen / BARISTA (the paper excludes SCNN from
+//! energy results; we follow, §5.3).
+//!
+//! Expected shape: One-sided compute energy exceeds Dense's (match
+//! circuitry on un-elided zeros + refetch access energy); SparTen /
+//! BARISTA start near Dense at the low-sparsity end and win as sparsity
+//! rises; memory energy is dominated by non-zeros everywhere and the
+//! sparse representations beat Dense modestly.
+
+use barista::bench_harness::{bench, bench_header};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{report, Coordinator};
+use barista::energy::{compute_energy, memory_energy};
+use barista::workload::Benchmark;
+
+const ENERGY_ARCHS: [ArchKind; 4] = [
+    ArchKind::Dense,
+    ArchKind::OneSided,
+    ArchKind::SparTen,
+    ArchKind::Barista,
+];
+
+fn main() {
+    bench_header("Figure 9: energy normalized to Dense (compute | DRAM)");
+    let mut base = SimConfig::paper(ArchKind::Barista);
+    base.window_cap = 768;
+    base.batch = 32;
+
+    let coord = Coordinator::new();
+    let mut results = Vec::new();
+    let t = bench("fig9 sweep", 0, 1, || {
+        results = coord.sweep(&Benchmark::ALL, &ENERGY_ARCHS, &base);
+    });
+    println!("{}", t.report());
+
+    let (txt, csv) = report::fig9_energy(&results, &Benchmark::ALL, &ENERGY_ARCHS);
+    println!("\n{txt}");
+
+    // Geomean compute-energy ratios (the paper's headline: 19% / 67% /
+    // 7% lower than Dense / One-sided / SparTen).
+    let idx = report::index(&results);
+    let mut ratios: Vec<(ArchKind, Vec<f64>)> =
+        ENERGY_ARCHS.iter().map(|&a| (a, Vec::new())).collect();
+    for &b in &Benchmark::ALL {
+        let d = compute_energy(&idx[&(b, ArchKind::Dense)].network.energy).total();
+        for (a, v) in ratios.iter_mut() {
+            let e = compute_energy(&idx[&(b, *a)].network.energy).total();
+            v.push(e / d);
+        }
+    }
+    println!("geomean compute energy vs Dense:");
+    for (a, v) in &ratios {
+        println!(
+            "  {:<10} {:>6.3}x",
+            a.name(),
+            barista::util::geomean(v)
+        );
+    }
+    let mem_barista: Vec<f64> = Benchmark::ALL
+        .iter()
+        .map(|&b| {
+            memory_energy(&idx[&(b, ArchKind::Barista)].network.energy).total()
+                / memory_energy(&idx[&(b, ArchKind::Dense)].network.energy).total()
+        })
+        .collect();
+    println!(
+        "geomean BARISTA DRAM energy vs Dense: {:.3}x",
+        barista::util::geomean(&mem_barista)
+    );
+    let path = report::write_out("fig9.csv", &csv).expect("write fig9.csv");
+    println!("\nwrote {}", path.display());
+}

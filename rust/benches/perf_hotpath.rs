@@ -1,0 +1,90 @@
+//! Simulator hot-path microbenchmarks (the §Perf deliverable's
+//! before/after instrument): pass-cost mask arithmetic, the telescoping
+//! combiner, the banked-cache queue, and one full BARISTA layer —
+//! reported as simulated-MAC-cycles per host-second.
+
+use barista::arch::pass_pe_cycles;
+use barista::barista::telescope::telescope_fetch;
+use barista::bench_harness::{bench, bench_header};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::sim::BankedCache;
+use barista::tensor::MaskMatrix;
+use barista::util::rng::Pcg32;
+use barista::workload::Benchmark;
+
+fn main() {
+    bench_header("perf: simulator hot paths");
+
+    // --- pass cost (the inner loop: u128 AND + per-part popcount) -------
+    let mut rng = Pcg32::seeded(42);
+    let filters = MaskMatrix::random(&mut rng, 64, 2304, 0.37, 0.15);
+    let windows = MaskMatrix::random(&mut rng, 256, 2304, 0.47, 0.30);
+    let mut sink = 0u64;
+    let t = bench("pass_pe_cycles 64x256 (18 chunks)", 3, 20, || {
+        for f in 0..64 {
+            let frow = filters.row(f);
+            for w in 0..256 {
+                let c = pass_pe_cycles(frow, windows.row(w), 4, w, 2);
+                sink = sink.wrapping_add(c.matched);
+            }
+        }
+    });
+    println!("{}", t.report());
+    let passes = 64.0 * 256.0;
+    println!(
+        "  -> {:.1} M passes/s ({:.0} ns/pass)",
+        passes / t.mean_s / 1e6,
+        t.mean_s / passes * 1e9
+    );
+
+    // --- telescoping combiner -------------------------------------------
+    let needs: Vec<u64> = (0..64).map(|i| 1000 + (i as u64) * 13 % 400).collect();
+    let t = bench("telescope_fetch 64 requesters", 10, 50, || {
+        let mut cache = BankedCache::new(8, 1, 20);
+        for k in 0..1000u64 {
+            let out = telescope_fetch(&mut cache, &needs, &[48, 12, 2, 1, 1], k * 16, 10);
+            sink = sink.wrapping_add(out.fetches);
+        }
+    });
+    println!("{}", t.report());
+    println!("  -> {:.2} M combines/s", 1000.0 / t.mean_s / 1e6);
+
+    // --- banked cache ----------------------------------------------------
+    let t = bench("banked cache 100k accesses", 3, 20, || {
+        let mut cache = BankedCache::new(8, 1, 20);
+        for i in 0..100_000u64 {
+            sink = sink.wrapping_add(cache.access(i / 4, i));
+        }
+    });
+    println!("{}", t.report());
+
+    // --- end-to-end layer ------------------------------------------------
+    for (name, arch) in [
+        ("barista AlexNet (cap 512)", ArchKind::Barista),
+        ("sparten AlexNet (cap 512)", ArchKind::SparTen),
+        ("dense AlexNet (analytic)", ArchKind::Dense),
+    ] {
+        let mut cfg = SimConfig::paper(arch);
+        cfg.window_cap = 512;
+        cfg.batch = 32;
+        let mut sim_cycles = 0.0;
+        let t = bench(name, 0, 3, || {
+            let r = run_one(&RunRequest {
+                benchmark: Benchmark::AlexNet,
+                config: cfg.clone(),
+            });
+            sim_cycles = r.network.cycles;
+        });
+        println!("{}", t.report());
+        let mac_cycles = sim_cycles * cfg.total_macs() as f64;
+        println!(
+            "  -> simulates {:.2e} MAC-cycles in {:.0} ms host = {:.2e} MAC-cycles/s",
+            mac_cycles,
+            t.mean_s * 1e3,
+            mac_cycles / t.mean_s
+        );
+    }
+    // keep the sink alive
+    assert!(sink != 0x5EED_DEAD_BEEF);
+}

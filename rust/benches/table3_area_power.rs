@@ -1,0 +1,89 @@
+//! Table 3 — area and power at 45 nm for BARISTA (4×8K), SparTen
+//! (1K×32) and Dense (2×16K), from the calibrated component model
+//! (constants calibrated on the BARISTA column; SparTen and Dense are
+//! model predictions — DESIGN.md §Substitutions-2).
+//!
+//! Paper totals: BARISTA 212.9 mm² / 170 W; SparTen 402.7 mm² / 214.9 W;
+//! Dense 154.1 mm² / 83 W. Headlines: SparTen ≈ 1.9× BARISTA's area;
+//! BARISTA = Dense + 38% area, 2.05× power.
+
+use barista::bench_harness::{bench, bench_header};
+use barista::coordinator::report;
+use barista::energy::area_power_table;
+
+const PAPER: [(&str, [f64; 7], f64, f64); 3] = [
+    // (arch, [buffers, prefix, priority, macs, other, cache] area, total area, total W)
+    ("barista", [73.3, 43.6, 8.7, 44.2, 20.2, 22.9, 0.0], 212.9, 170.0),
+    ("sparten", [137.7, 43.6, 8.7, 44.2, 110.8, 22.9, 0.0], 402.7, 214.9),
+    ("dense", [38.6, 0.0, 0.0, 44.2, 1.5, 69.8, 0.0], 154.1, 83.0),
+];
+
+fn main() {
+    bench_header("Table 3: area & power (45 nm component model)");
+    let mut table = Vec::new();
+    let t = bench("table3 model eval", 2, 10, || {
+        table = area_power_table();
+    });
+    println!("{}", t.report());
+
+    let mut csv = String::from(
+        "arch,component,model_mm2,paper_mm2,model_w\n",
+    );
+    println!(
+        "\n{:<10} {:>9} {:>8} {:>9} {:>7} {:>8} {:>7} | {:>9} {:>9} | {:>8} {:>8}",
+        "arch", "buffers", "prefix", "priority", "macs", "other", "cache", "total mm²",
+        "paper mm²", "total W", "paper W"
+    );
+    for ((arch, ap), (pname, pcomp, parea, pw)) in table.iter().zip(PAPER.iter()) {
+        assert_eq!(arch.name(), *pname);
+        println!(
+            "{:<10} {:>9.1} {:>8.1} {:>9.1} {:>7.1} {:>8.1} {:>7.1} | {:>9.1} {:>9.1} | {:>8.1} {:>8.1}",
+            arch.name(),
+            ap.buffers_mm2,
+            ap.prefix_mm2,
+            ap.priority_mm2,
+            ap.macs_mm2,
+            ap.other_mm2,
+            ap.cache_mm2,
+            ap.total_mm2(),
+            parea,
+            ap.total_w(),
+            pw
+        );
+        for (comp, (model, paper)) in [
+            ("buffers", (ap.buffers_mm2, pcomp[0])),
+            ("prefix", (ap.prefix_mm2, pcomp[1])),
+            ("priority", (ap.priority_mm2, pcomp[2])),
+            ("macs", (ap.macs_mm2, pcomp[3])),
+            ("other", (ap.other_mm2, pcomp[4])),
+            ("cache", (ap.cache_mm2, pcomp[5])),
+        ] {
+            csv.push_str(&format!(
+                "{},{},{:.1},{:.1},\n",
+                arch.name(),
+                comp,
+                model,
+                paper
+            ));
+        }
+    }
+
+    let barista = &table[0].1;
+    let sparten = &table[1].1;
+    let dense = &table[2].1;
+    println!("\nheadline ratios (paper in parens):");
+    println!(
+        "  SparTen / BARISTA area : {:.2}x (1.89x)",
+        sparten.total_mm2() / barista.total_mm2()
+    );
+    println!(
+        "  BARISTA / Dense area   : {:.2}x (1.38x)",
+        barista.total_mm2() / dense.total_mm2()
+    );
+    println!(
+        "  BARISTA / Dense power  : {:.2}x (2.05x)",
+        barista.total_w() / dense.total_w()
+    );
+    let path = report::write_out("table3.csv", &csv).expect("write table3.csv");
+    println!("wrote {}", path.display());
+}

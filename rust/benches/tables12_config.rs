@@ -1,0 +1,113 @@
+//! Tables 1 & 2 — benchmark statistics and hardware parameters, plus the
+//! workload generator's fidelity to Table 1 (generated mask densities vs
+//! the paper's measured averages).
+
+use barista::bench_harness::{bench, bench_header};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::report;
+use barista::workload::{network, Benchmark, NetworkWork};
+
+fn main() {
+    bench_header("Tables 1 & 2: benchmarks and hardware parameters");
+
+    println!("\nTable 1 (paper values + generated-workload verification):");
+    println!(
+        "{:<14} {:>7} {:>14} {:>14} {:>12} {:>12}",
+        "benchmark", "layers", "filter-density", "map-density", "gen-filter", "gen-map"
+    );
+    let mut csv =
+        String::from("benchmark,layers,filter_density,map_density,gen_filter,gen_map\n");
+    let mut gen_time = None;
+    for b in Benchmark::ALL {
+        let spec = network(b);
+        let mut cfg = SimConfig::paper(ArchKind::Barista);
+        cfg.window_cap = 128;
+        cfg.batch = 4;
+        let mut work = None;
+        let t = bench(&format!("generate {b}"), 0, 1, || {
+            work = Some(NetworkWork::generate(b, &cfg));
+        });
+        gen_time.get_or_insert_with(Vec::new).push(t);
+        let work = work.unwrap();
+        // Measured density of the generated masks (cell-weighted,
+        // truncation-corrected).
+        let mut f_nnz = 0u64;
+        let mut f_cells = 0u64;
+        let mut w_nnz = 0u64;
+        let mut w_cells = 0u64;
+        for l in &work.layers {
+            f_nnz += l.filters.total_nnz();
+            f_cells += (l.filters.rows * l.geom.vec_len()) as u64;
+            w_nnz += (0..l.windows.rows).map(|w| l.windows.row_nnz(w)).sum::<u64>();
+            w_cells += (l.windows.rows * l.geom.vec_len()) as u64;
+        }
+        let gf = f_nnz as f64 / f_cells as f64;
+        let gw = w_nnz as f64 / w_cells as f64;
+        println!(
+            "{:<14} {:>7} {:>14.3} {:>14.3} {:>12.3} {:>12.3}",
+            b.name(),
+            spec.layers.len(),
+            spec.filter_density,
+            spec.map_density,
+            gf,
+            gw
+        );
+        csv.push_str(&format!(
+            "{},{},{},{},{:.4},{:.4}\n",
+            b.name(),
+            spec.layers.len(),
+            spec.filter_density,
+            spec.map_density,
+            gf,
+            gw
+        ));
+    }
+    report::write_out("table1.csv", &csv).expect("table1.csv");
+
+    println!("\nTable 2 (hardware parameters):");
+    println!(
+        "{:<18} {:>12} {:>9} {:>11} {:>10} {:>6}",
+        "architecture", "MACs/cluster", "clusters", "buffer/MAC", "cache", "banks"
+    );
+    let buf_per_mac = |a: ArchKind| -> &'static str {
+        match a {
+            ArchKind::Dense => "8 B",
+            ArchKind::OneSided => "819 B",
+            ArchKind::Scnn => "1.63 KB",
+            ArchKind::SparTen | ArchKind::SparTenIso | ArchKind::Synchronous => "993 B",
+            ArchKind::UnlimitedBuffer => "inf",
+            _ => "245 B",
+        }
+    };
+    let mut csv2 = String::from("arch,macs_per_cluster,clusters,buffer_per_mac,cache_mb,banks\n");
+    for a in ArchKind::ALL {
+        let c = SimConfig::paper(a);
+        println!(
+            "{:<18} {:>12} {:>9} {:>11} {:>7} MB {:>6}",
+            a.name(),
+            c.macs_per_cluster,
+            c.clusters,
+            buf_per_mac(a),
+            c.cache_bytes >> 20,
+            c.cache_banks
+        );
+        csv2.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            a.name(),
+            c.macs_per_cluster,
+            c.clusters,
+            buf_per_mac(a),
+            c.cache_bytes >> 20,
+            c.cache_banks
+        ));
+    }
+    report::write_out("table2.csv", &csv2).expect("table2.csv");
+
+    if let Some(ts) = gen_time {
+        println!("\nworkload generation timings:");
+        for t in ts {
+            println!("  {}", t.report());
+        }
+    }
+    println!("\nwrote out/table1.csv out/table2.csv");
+}

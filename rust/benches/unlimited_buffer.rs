@@ -1,0 +1,71 @@
+//! §5.1 unlimited-buffer study — how much buffering would a broadcast
+//! scheme need to match BARISTA without telescoping?
+//!
+//! Paper: "in all the benchmarks Unlimited-buffer needs more than 24×
+//! buffering (i.e., more than 185 MB) to achieve the same performance as
+//! BARISTA" (BARISTA's default is 7.66 MB total).
+
+use barista::bench_harness::{bench, bench_header};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{report, run_one, RunRequest};
+use barista::workload::Benchmark;
+
+fn main() {
+    bench_header("Unlimited-buffer study: buffering needed to match BARISTA");
+    let barista_buffer_mb = 32768.0 * 245.0 / (1 << 20) as f64;
+    println!("BARISTA default buffering: {barista_buffer_mb:.2} MB (245 B/PE)\n");
+
+    let mut csv = String::from(
+        "benchmark,barista_cycles,unlimited_cycles,peak_buffer_mb,multiple_of_default\n",
+    );
+    println!(
+        "{:<14} {:>14} {:>14} {:>12} {:>10}",
+        "benchmark", "barista cyc", "unlimited cyc", "peak buf MB", "multiple"
+    );
+    let mut worst = 0.0f64;
+    let t = bench("unlimited-buffer sweep", 0, 1, || {
+        worst = 0.0;
+        for &b in &Benchmark::ALL {
+            let mut cfg = SimConfig::paper(ArchKind::Barista);
+            cfg.window_cap = 512;
+            cfg.batch = 32;
+            let full = run_one(&RunRequest {
+                benchmark: b,
+                config: cfg.clone(),
+            });
+            let mut ucfg = SimConfig::paper(ArchKind::UnlimitedBuffer);
+            ucfg.window_cap = 512;
+            ucfg.batch = 32;
+            let unl = run_one(&RunRequest {
+                benchmark: b,
+                config: ucfg,
+            });
+            let peak_mb = unl.network.peak_buffer_bytes as f64 / (1 << 20) as f64;
+            let mult = peak_mb / barista_buffer_mb;
+            worst = worst.max(mult);
+            println!(
+                "{:<14} {:>14.3e} {:>14.3e} {:>12.1} {:>9.1}x",
+                b.name(),
+                full.network.cycles,
+                unl.network.cycles,
+                peak_mb,
+                mult
+            );
+            csv.push_str(&format!(
+                "{},{:.4e},{:.4e},{:.2},{:.2}\n",
+                b.name(),
+                full.network.cycles,
+                unl.network.cycles,
+                peak_mb,
+                mult
+            ));
+        }
+    });
+    println!("\n{}", t.report());
+    println!(
+        "\nworst-case buffering multiple to match BARISTA without telescoping: {worst:.1}x \
+         (paper: >24x, i.e. >185 MB)"
+    );
+    let path = report::write_out("unlimited_buffer.csv", &csv).expect("write csv");
+    println!("wrote {}", path.display());
+}

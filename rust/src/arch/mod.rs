@@ -1,0 +1,57 @@
+//! Architecture-neutral compute modeling: the PE pass-cost model shared
+//! by every two-sided sparse architecture, and the [`Simulator`] trait
+//! the coordinator drives.
+
+pub mod pass;
+
+pub use pass::{pass_pe_cycles, PassCost, MAX_PARTS};
+
+use crate::config::{ArchKind, SimConfig};
+use crate::sim::LayerResult;
+use crate::workload::LayerWork;
+
+/// A cycle-level model of one architecture. Implementations live in
+/// `baselines/` and `barista/`.
+pub trait Simulator {
+    /// Which architecture this models.
+    fn arch(&self) -> ArchKind;
+
+    /// Simulate one layer (sampled windows); the returned result must
+    /// already be scaled to the full layer via `layer.scale()`.
+    fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult;
+}
+
+/// Construct the simulator for `cfg.arch`.
+pub fn simulator_for(cfg: &SimConfig) -> Box<dyn Simulator> {
+    match cfg.arch {
+        ArchKind::Dense => Box::new(crate::baselines::dense::DenseSim::new(cfg.clone())),
+        ArchKind::OneSided => {
+            Box::new(crate::baselines::one_sided::OneSidedSim::new(cfg.clone()))
+        }
+        ArchKind::Scnn => Box::new(crate::baselines::scnn::ScnnSim::new(cfg.clone())),
+        ArchKind::SparTen | ArchKind::SparTenIso => {
+            Box::new(crate::baselines::sparten::SparTenSim::new(cfg.clone()))
+        }
+        ArchKind::Ideal => Box::new(crate::baselines::ideal::IdealSim::new(cfg.clone())),
+        ArchKind::Barista
+        | ArchKind::BaristaNoOpts
+        | ArchKind::Synchronous
+        | ArchKind::UnlimitedBuffer => {
+            Box::new(crate::barista::cluster::BaristaSim::new(cfg.clone()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_covers_all_archs() {
+        for arch in ArchKind::ALL {
+            let cfg = SimConfig::paper(arch);
+            let sim = simulator_for(&cfg);
+            assert_eq!(sim.arch(), arch, "dispatch for {arch}");
+        }
+    }
+}

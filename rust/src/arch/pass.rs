@@ -1,0 +1,253 @@
+//! The pass-cost model: cycles each PE spends on one (filter, window)
+//! tensor-tensor product.
+//!
+//! A node's PEs statically partition each 128-cell chunk into
+//! `parts` sub-chunks (paper: 4 PEs × 32 cells). PE `p` processes
+//! sub-chunk `(p + rotation) % parts` of every chunk — `rotation`
+//! implements the dynamic round-robin assignment (§3.3.2): rotating by
+//! the input-map index evens out systematic sub-chunk density imbalance.
+//!
+//! Cost per chunk per PE = matched non-zeros in its sub-chunk (1 MAC per
+//! matched pair per cycle through the prefix-sum/priority-encode
+//! pipeline) + a fixed per-chunk pipeline overhead.
+
+use crate::tensor::{SparseChunk, CHUNK_BITS};
+
+/// Upper bound on PEs per node this model supports.
+pub const MAX_PARTS: usize = 8;
+
+/// Per-PE cycle cost of one pass, plus totals used by energy accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PassCost {
+    /// Cycles per PE (only the first `parts` entries are meaningful).
+    pub pe_cycles: [u64; MAX_PARTS],
+    /// Total matched MACs in the pass (all PEs).
+    pub matched: u64,
+    /// Chunk-pipeline operations performed (chunks × parts).
+    pub chunk_ops: u64,
+}
+
+impl PassCost {
+    /// The pass's critical-path compute time: max over PEs.
+    pub fn max_pe(&self, parts: usize) -> u64 {
+        self.pe_cycles[..parts].iter().copied().max().unwrap_or(0)
+    }
+
+    /// Sum over PEs (for ideal-balance bounds).
+    pub fn sum_pe(&self, parts: usize) -> u64 {
+        self.pe_cycles[..parts].iter().sum()
+    }
+}
+
+/// Compute the pass cost for filter row `f` × window row `w` (slices of
+/// chunk masks), with `parts` PEs per node, sub-chunk `rotation`, and
+/// `overhead` fixed cycles per chunk per PE.
+#[inline]
+pub fn pass_pe_cycles(
+    f: &[SparseChunk],
+    w: &[SparseChunk],
+    parts: usize,
+    rotation: usize,
+    overhead: u64,
+) -> PassCost {
+    debug_assert_eq!(f.len(), w.len());
+    debug_assert!(parts > 0 && parts <= MAX_PARTS && CHUNK_BITS % parts == 0);
+    if parts == 4 {
+        // Fast path for the paper's default geometry (hot loop: §Perf).
+        return pass_pe_cycles4(f, w, rotation, overhead);
+    }
+    let width = CHUNK_BITS / parts;
+    // Sub-chunk extraction mask (width < 128 always when parts > 1).
+    let seg_mask: u128 = if width == CHUNK_BITS {
+        u128::MAX
+    } else {
+        (1u128 << width) - 1
+    };
+    let mut pe_cycles = [0u64; MAX_PARTS];
+    let mut matched = 0u64;
+    for (fc, wc) in f.iter().zip(w.iter()) {
+        let m = fc.mask & wc.mask;
+        matched += m.count_ones() as u64;
+        for p in 0..parts {
+            let seg = (p + rotation) % parts;
+            let cnt = ((m >> (seg * width)) & seg_mask).count_ones() as u64;
+            pe_cycles[p] += cnt + overhead;
+        }
+    }
+    PassCost {
+        pe_cycles,
+        matched,
+        chunk_ops: (f.len() * parts) as u64,
+    }
+}
+
+/// `parts == 4` specialization: fixed 32-bit lane extraction (no
+/// variable-width shifts) and rotation applied once outside the chunk
+/// loop. Identical semantics to the generic path (tested below).
+#[inline]
+fn pass_pe_cycles4(f: &[SparseChunk], w: &[SparseChunk], rotation: usize, overhead: u64) -> PassCost {
+    let mut lane = [0u64; 4];
+    let mut matched = 0u64;
+    for (fc, wc) in f.iter().zip(w.iter()) {
+        let m = fc.mask & wc.mask;
+        let c0 = (m as u32).count_ones() as u64;
+        let c1 = ((m >> 32) as u32).count_ones() as u64;
+        let c2 = ((m >> 64) as u32).count_ones() as u64;
+        let c3 = ((m >> 96) as u32).count_ones() as u64;
+        matched += c0 + c1 + c2 + c3;
+        lane[0] += c0;
+        lane[1] += c1;
+        lane[2] += c2;
+        lane[3] += c3;
+    }
+    let chunks = f.len() as u64;
+    let mut pe_cycles = [0u64; MAX_PARTS];
+    let rot = rotation & 3;
+    for p in 0..4 {
+        pe_cycles[p] = lane[(p + rot) & 3] + chunks * overhead;
+    }
+    PassCost {
+        pe_cycles,
+        matched,
+        chunk_ops: chunks * 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::MaskMatrix;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Pcg32;
+
+    fn chunks(seed: u64, n: usize, d: f64) -> Vec<SparseChunk> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|_| SparseChunk::random_bernoulli(&mut rng, d))
+            .collect()
+    }
+
+    #[test]
+    fn zero_masks_cost_only_overhead() {
+        let f = vec![SparseChunk::EMPTY; 3];
+        let w = chunks(1, 3, 0.9);
+        let c = pass_pe_cycles(&f, &w, 4, 0, 2);
+        assert_eq!(c.matched, 0);
+        for p in 0..4 {
+            assert_eq!(c.pe_cycles[p], 3 * 2);
+        }
+        assert_eq!(c.chunk_ops, 12);
+    }
+
+    #[test]
+    fn pe_cycles_sum_to_matched_plus_overheads() {
+        let f = chunks(2, 5, 0.5);
+        let w = chunks(3, 5, 0.5);
+        let c = pass_pe_cycles(&f, &w, 4, 0, 2);
+        let sum: u64 = c.pe_cycles[..4].iter().sum();
+        assert_eq!(sum, c.matched + 5 * 4 * 2);
+    }
+
+    #[test]
+    fn single_part_gets_whole_chunk() {
+        let f = chunks(4, 2, 0.7);
+        let w = chunks(5, 2, 0.7);
+        let c = pass_pe_cycles(&f, &w, 1, 0, 0);
+        assert_eq!(c.pe_cycles[0], c.matched);
+    }
+
+    #[test]
+    fn rotation_permutes_pe_assignment() {
+        let f = chunks(6, 1, 0.6);
+        let w = chunks(7, 1, 0.6);
+        let c0 = pass_pe_cycles(&f, &w, 4, 0, 0);
+        let c1 = pass_pe_cycles(&f, &w, 4, 1, 0);
+        // Rotation by 1: PE p in c1 does what PE p+1 did in c0.
+        for p in 0..4 {
+            assert_eq!(c1.pe_cycles[p], c0.pe_cycles[(p + 1) % 4]);
+        }
+        assert_eq!(c0.matched, c1.matched);
+    }
+
+    #[test]
+    fn matched_agrees_with_maskmatrix() {
+        let mut rng = Pcg32::seeded(8);
+        let a = MaskMatrix::random(&mut rng, 2, 640, 0.4, 0.0);
+        let b = MaskMatrix::random(&mut rng, 2, 640, 0.6, 0.0);
+        let c = pass_pe_cycles(a.row(0), b.row(1), 4, 0, 0);
+        assert_eq!(c.matched, a.matched_row(0, &b, 1));
+    }
+
+    /// The parts==4 fast path must agree bit-for-bit with the generic
+    /// path (exercised by forcing the generic path via parts=2 composing,
+    /// and directly by re-deriving from matched_sub).
+    #[test]
+    fn prop_fast_path_matches_subchunk_ground_truth() {
+        run_prop("parts4 fast path", 0xFA57, 200, |rng| {
+            let n = 1 + rng.gen_range(24) as usize;
+            let mut f = Vec::new();
+            let mut w = Vec::new();
+            for _ in 0..n {
+                let df = rng.next_f64();
+                f.push(SparseChunk::random_bernoulli(rng, df));
+                let dw = rng.next_f64();
+                w.push(SparseChunk::random_bernoulli(rng, dw));
+            }
+            let rot = rng.gen_range(9) as usize;
+            let oh = rng.gen_range(4) as u64;
+            let got = pass_pe_cycles(&f, &w, 4, rot, oh);
+            // Ground truth from matched_sub.
+            for p in 0..4usize {
+                let want: u64 = f
+                    .iter()
+                    .zip(&w)
+                    .map(|(a, b)| a.matched_sub(b, (p + rot) % 4) as u64 + oh)
+                    .sum();
+                if got.pe_cycles[p] != want {
+                    return Err(format!("pe {p}: {} != {want}", got.pe_cycles[p]));
+                }
+            }
+            let want_matched: u64 = f.iter().zip(&w).map(|(a, b)| a.matched(b) as u64).sum();
+            if got.matched != want_matched {
+                return Err("matched mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_rotation_preserves_totals() {
+        run_prop("rotation totals", 0x2077, 150, |rng| {
+            let n = 1 + rng.gen_range(20) as usize;
+            let f = {
+                let mut v = Vec::new();
+                for _ in 0..n {
+                    let d = rng.next_f64();
+                    v.push(SparseChunk::random_bernoulli(rng, d));
+                }
+                v
+            };
+            let w = {
+                let mut v = Vec::new();
+                for _ in 0..n {
+                    let d = rng.next_f64();
+                    v.push(SparseChunk::random_bernoulli(rng, d));
+                }
+                v
+            };
+            let parts = [1usize, 2, 4, 8][rng.gen_range(4) as usize];
+            let r0 = pass_pe_cycles(&f, &w, parts, 0, 1);
+            let r1 = pass_pe_cycles(&f, &w, parts, rng.gen_range(8) as usize, 1);
+            if r0.matched != r1.matched {
+                return Err("matched changed with rotation".into());
+            }
+            if r0.sum_pe(parts) != r1.sum_pe(parts) {
+                return Err("total cycles changed with rotation".into());
+            }
+            if r0.max_pe(parts) < r0.sum_pe(parts) / parts as u64 {
+                return Err("max < mean".into());
+            }
+            Ok(())
+        });
+    }
+}

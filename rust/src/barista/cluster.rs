@@ -1,0 +1,723 @@
+//! The BARISTA cluster model (§3.1–§3.4) and its policy variants.
+//!
+//! One cluster is a grid of `fgrs × ifgcs` nodes × `pes_per_node` PEs
+//! (64 × 32 × 4 = 8K MACs). Each FGR row holds a filter pair per round
+//! (GB-S sort + alternating assignment, §3.3.3); each IFGC column owns a
+//! stream of im2col windows. Node (r, c) computes the full tensor-tensor
+//! product (one output cell) for its row's filter × its column's window,
+//! chunk by chunk, its PEs splitting each chunk into sub-chunks.
+//!
+//! Execution is *barrier-free*: every node keeps a local clock and
+//! synchronizes only through (a) the banked cache, (b) the telescoping
+//! combiner per (IFGC, window), (c) filter snarfing per FGR, and (d)
+//! hierarchical-buffer slot recycling. The same grid with different
+//! policies models the paper's Synchronous (broadcast barriers),
+//! BARISTA-no-opts (asynchronous solo refetches) and Unlimited-buffer
+//! baselines.
+//!
+//! Fidelity: node-granularity program-order simulation with local clocks
+//! (DESIGN.md §Simulator-fidelity). Windows are processed in batches of
+//! `filter_reuse`; within a batch, rounds sweep the filter dimension so
+//! each window is fetched once per batch (hierarchical buffering) and
+//! each filter pair once per (batch, round) residency.
+
+use crate::arch::{pass_pe_cycles, Simulator};
+use crate::baselines::dram_traffic;
+use crate::config::{ArchKind, SimConfig};
+use crate::sim::cache::{sparse_block_lines, LINE_BYTES};
+use crate::sim::{BankedCache, Breakdown, EnergyCounters, LayerResult, Traffic};
+use crate::util::ceil_div;
+use crate::workload::balance::gb_s_order;
+use crate::workload::LayerWork;
+
+/// Figure 5 instrumentation: capture per-node completion times for the
+/// first windows of one IFGC.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceRequest {
+    /// Layer index to trace.
+    pub layer: usize,
+    /// How many consecutive windows to capture.
+    pub windows: usize,
+}
+
+/// Captured trace: for each traced window, the completion time of every
+/// node (FGR row) in the traced IFGC.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub per_window: Vec<(usize, Vec<u64>)>,
+}
+
+pub struct BaristaSim {
+    cfg: SimConfig,
+    pub trace: Option<TraceRequest>,
+    pub last_trace: Option<Trace>,
+}
+
+/// How window/filter fetches are served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FetchPolicy {
+    Telescope,
+    Solo,
+    Broadcast,
+}
+
+impl BaristaSim {
+    pub fn new(cfg: SimConfig) -> Self {
+        assert!(matches!(
+            cfg.arch,
+            ArchKind::Barista
+                | ArchKind::BaristaNoOpts
+                | ArchKind::Synchronous
+                | ArchKind::UnlimitedBuffer
+        ));
+        BaristaSim {
+            cfg,
+            trace: None,
+            last_trace: None,
+        }
+    }
+
+    fn window_policy(&self) -> FetchPolicy {
+        match self.cfg.arch {
+            ArchKind::Synchronous | ArchKind::UnlimitedBuffer => FetchPolicy::Broadcast,
+            _ => {
+                if self.cfg.opts.telescoping {
+                    FetchPolicy::Telescope
+                } else {
+                    FetchPolicy::Solo
+                }
+            }
+        }
+    }
+
+}
+
+/// Per-cluster accumulators (PE-cycles unless noted).
+#[derive(Debug, Default, Clone, Copy)]
+struct Acc {
+    busy: f64,
+    barrier: f64,
+    bandwidth: f64,
+    matched: u64,
+    chunk_ops: u64,
+    buffer_bytes: u64,
+    window_fetch_blocks: u64,
+    filter_fetch_blocks: u64,
+    end: u64,
+    straying_slots: f64,
+}
+
+impl Simulator for BaristaSim {
+    fn arch(&self) -> ArchKind {
+        self.cfg.arch
+    }
+
+    fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
+        let cfg = self.cfg.clone();
+        let rows = cfg.fgrs;
+        let cols = cfg.ifgcs;
+        let parts = cfg.pes_per_node;
+        let chunks = layer.filters.chunks as u64;
+        let n_filters = layer.filters.rows;
+        let rounds = ceil_div(n_filters as u64, rows as u64) as usize;
+        let sync = cfg.arch == ArchKind::Synchronous;
+        let unlimited = cfg.arch == ArchKind::UnlimitedBuffer;
+        let hierarchical = cfg.opts.hierarchical || unlimited;
+
+        let order: Vec<usize> = if cfg.opts.greedy_balance {
+            gb_s_order(&layer.filters)
+        } else {
+            (0..n_filters).collect()
+        };
+
+        // The clusters are statistically identical (disjoint window
+        // quarters, private cache slices), so we simulate ONE
+        // representative cluster on as many sampled windows as possible —
+        // this preserves per-IFGC batch depth (and hence filter-residency
+        // amortization), which splitting the window sample four ways
+        // would destroy — then scale time by the real per-cluster window
+        // count and counters by the cluster count.
+        let per_cluster_real = ceil_div(layer.total_windows as u64, cfg.clusters as u64) as usize;
+        let s_rep = layer.windows.rows.min(per_cluster_real).max(1);
+        // Cache: the representative cluster sees its NUCA slice.
+        let banks = (cfg.cache_banks / cfg.clusters).max(1);
+
+        self.last_trace = None;
+        let (acc, trace) = simulate_cluster(
+            &cfg,
+            layer,
+            &order,
+            rounds,
+            &(0..s_rep).collect::<Vec<_>>(),
+            banks,
+            self.window_policy(),
+            cfg.opts.snarfing,
+            sync,
+            unlimited,
+            hierarchical,
+            self.trace,
+        );
+        if let Some(t) = trace {
+            self.last_trace = Some(t);
+        }
+
+        let time_scale = per_cluster_real as f64 / s_rep as f64;
+        let count_scale = time_scale * cfg.clusters as f64; // whole machine
+        let end = acc.end;
+        let cycles = end as f64 * time_scale;
+        let pes_total = (cfg.clusters * rows * cols * parts) as f64;
+
+        let busy = acc.busy * count_scale;
+        let barrier = acc.barrier * count_scale;
+        let bandwidth = acc.bandwidth * count_scale;
+        let matched = (acc.matched as f64 * count_scale) as u64;
+        let chunk_ops = (acc.chunk_ops as f64 * count_scale) as u64;
+        let buffer_bytes = (acc.buffer_bytes as f64 * count_scale) as u64;
+        let straying = acc.straying_slots;
+        let total_pe_cycles = cycles * pes_total;
+        let accounted = busy + barrier + bandwidth;
+        let other = (total_pe_cycles - accounted).max(0.0);
+
+        // Fetched lines (machine-wide) vs the once-per-datum ideal.
+        let w_lines = sparse_block_lines(chunks, layer.map_density);
+        let f_lines = sparse_block_lines(chunks, layer.filter_density);
+        let fetched_lines = ((acc.window_fetch_blocks * w_lines
+            + acc.filter_fetch_blocks * f_lines) as f64
+            * count_scale) as u64;
+        let ideal_lines =
+            layer.total_windows as u64 * w_lines + n_filters as u64 * f_lines;
+        let refetch_lines = fetched_lines.saturating_sub(ideal_lines);
+
+        let peak_buffer = if unlimited {
+            // Estimated bytes to absorb the observed straying without
+            // stalls: straying windows × chunk block × per-node copies.
+            ((straying * chunks as f64 * LINE_BYTES as f64) * (rows * cols) as f64
+                * cfg.clusters as f64) as u64
+        } else {
+            (cfg.total_macs() * 245) as u64 // §3.4: 245 B/PE
+        };
+
+        let mut energy = EnergyCounters {
+            matched_macs: matched,
+            chunk_ops,
+            buffer_bytes,
+            cache_bytes: fetched_lines * LINE_BYTES,
+            ..Default::default()
+        };
+        energy.add(&dram_traffic(layer, cfg.batch, true, true));
+
+        LayerResult {
+            cycles,
+            breakdown: Breakdown {
+                nonzero: busy,
+                zero: 0.0,
+                barrier,
+                bandwidth,
+                other,
+            },
+            traffic: Traffic {
+                cache_lines: ideal_lines,
+                refetch_lines,
+                dram_nz_bytes: energy.dram_nz_bytes,
+                dram_zero_bytes: energy.dram_zero_bytes,
+            },
+            energy,
+            peak_buffer_bytes: peak_buffer,
+            refetch_ratio: refetch_lines as f64 / ideal_lines.max(1) as f64,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simulate_cluster(
+    cfg: &SimConfig,
+    layer: &LayerWork,
+    order: &[usize],
+    rounds: usize,
+    windows: &[usize],
+    banks: usize,
+    window_policy: FetchPolicy,
+    snarfing: bool,
+    sync: bool,
+    unlimited: bool,
+    hierarchical: bool,
+    trace_req: Option<TraceRequest>,
+) -> (Acc, Option<Trace>) {
+    let rows = cfg.fgrs;
+    let cols = cfg.ifgcs;
+    let parts = cfg.pes_per_node;
+    let chunks = layer.filters.chunks as u64;
+    let n_filters = layer.filters.rows;
+    let batch = cfg.filter_reuse;
+    let overhead = cfg.chunk_overhead;
+    let reduce = cfg.reduce_cycles;
+    let alternate = cfg.opts.greedy_balance;
+    let rr = cfg.opts.round_robin;
+
+    let mut cache = BankedCache::new(banks, cfg.bank_service_cycles, cfg.cache_latency);
+    let mut acc = Acc::default();
+    let mut trace = trace_req.map(|_| Trace::default());
+
+    // Per-IFGC window streams.
+    let col_windows: Vec<Vec<usize>> = (0..cols)
+        .map(|c| windows.iter().copied().skip(c).step_by(cols).collect())
+        .collect();
+    let n_batches = col_windows
+        .iter()
+        .map(|cw| ceil_div(cw.len() as u64, batch as u64) as usize)
+        .max()
+        .unwrap_or(0);
+
+    // PE clocks, flattened [(row*cols + col)*parts + pe] (hot: §Perf).
+    let mut pe_clock = vec![0u64; rows * cols * parts];
+    let node_of = move |r: usize, c: usize| (r * cols + c) * parts;
+    let node_clock = move |pe_clock: &[u64], r: usize, c: usize| -> u64 {
+        let base = node_of(r, c);
+        *pe_clock[base..base + parts].iter().max().unwrap()
+    };
+
+    // Completion of window at (row, col) for the current round — used for
+    // slot recycling and the Fig. 5 trace.
+    let mut win_completion = vec![vec![0u64; cols]; rows];
+    // Running estimate of a round's duration (for snarf slack).
+    let mut round_est: u64 = (chunks * (overhead + 8)) * batch as u64 / 2;
+
+    let mut line_cursor: u64 = 0;
+    let mut pass_cycles_sum: f64 = 0.0;
+    let mut pass_count: u64 = 0;
+
+    // Double-buffered filter prefetch: the fetch for round p is issued at
+    // the clocks nodes had when round p-1 started (buffer depth 3 holds
+    // the in-use pair plus one incoming).
+    let mut filter_needs_prev: Option<Vec<Vec<u64>>> = None;
+    for b in 0..n_batches {
+        for p in 0..rounds {
+            // --- filter pair fetch per FGR row -------------------------
+            let round_t0: Vec<Vec<u64>> = (0..rows)
+                .map(|r| (0..cols).map(|c| node_clock(&pe_clock, r, c)).collect())
+                .collect();
+            let fetch_needs = filter_needs_prev.take().unwrap_or_else(|| round_t0.clone());
+            filter_needs_prev = Some(round_t0.clone());
+            let mut filter_ready = vec![vec![0u64; cols]; rows];
+            let lead_slack = (cfg.node_buf_depth.saturating_sub(1) as u64)
+                .saturating_mul(round_est)
+                .min(1 << 40);
+            for r in 0..rows {
+                // Both parity filters for this round exist on this row?
+                let has_any = p * rows + r < n_filters
+                    || (alternate && p * rows + (rows - 1 - r) < n_filters);
+                if !has_any {
+                    continue;
+                }
+                let needs = &fetch_needs[r];
+                // The pair's chunk blocks, bit-mask compressed.
+                let lines = 2 * sparse_block_lines(chunks, layer.filter_density);
+                let out = if sync || unlimited {
+                    super::telescope::broadcast_fetch(&mut cache, needs, line_cursor, lines)
+                } else if snarfing {
+                    super::snarf::snarf_fetch(&mut cache, needs, lead_slack, line_cursor, lines)
+                } else {
+                    super::telescope::solo_fetch(&mut cache, needs, line_cursor, lines)
+                };
+                line_cursor += lines;
+                acc.filter_fetch_blocks += out.fetches * 2;
+                for c in 0..cols {
+                    filter_ready[r][c] = out.ready[c];
+                }
+            }
+
+            // --- Synchronous: broadcast barrier at round start ----------
+            if sync {
+                let mut start = 0u64;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        start = start
+                            .max(node_clock(&pe_clock, r, c))
+                            .max(filter_ready[r][c]);
+                    }
+                }
+                for r in 0..rows {
+                    for c in 0..cols {
+                        for pe in 0..parts {
+                            acc.barrier += (start - pe_clock[node_of(r, c) + pe]) as f64;
+                            pe_clock[node_of(r, c) + pe] = start;
+                        }
+                        filter_ready[r][c] = start;
+                    }
+                }
+            }
+
+            // --- window sweep ------------------------------------------
+            // Slot-major across IFGCs so cache requests replay in
+            // (approximately) nondecreasing time order — the grid's
+            // columns advance slot-by-slot together, and replaying one
+            // column's whole batch first would poison the bank queues
+            // with far-future occupancy.
+            // Window prefetch: private node buffers hold `node_buf_depth`
+            // windows, so the combiner sees the clocks nodes had
+            // `node_buf_depth - 1` slots ago — fetch latency overlaps
+            // earlier passes (multi-buffering).
+            let prefetch = cfg.node_buf_depth.saturating_sub(1).max(1).min(batch);
+            let mut win_needs_hist: Vec<std::collections::VecDeque<Vec<u64>>> =
+                vec![std::collections::VecDeque::new(); cols];
+            for slot in 0..batch {
+                for c in 0..cols {
+                    let cw = &col_windows[c];
+                    let s = b * batch + slot;
+                    if s >= cw.len() || s >= (b + 1) * batch {
+                        continue;
+                    }
+                    let w = cw[s];
+                    // Retention across filter rounds: the shared IFGC
+                    // buffer keeps the first `shared_buf_depth` slots of
+                    // the batch resident (hierarchical buffering); without
+                    // it, a window survives rounds only if the private
+                    // node buffers can hold the whole batch. Leaders whose
+                    // slot was evicted simply refetch (paper §3.4) — there
+                    // is no recycle barrier.
+                    let retained = p > 0
+                        && if hierarchical {
+                            slot < cfg.shared_buf_depth
+                        } else {
+                            cfg.node_buf_depth >= batch
+                        };
+                    // Window data readiness per row.
+                    let w_lines = sparse_block_lines(chunks, layer.map_density);
+                    let mut ready = vec![0u64; rows];
+                    if !retained {
+                        let now_needs: Vec<u64> =
+                            (0..rows).map(|r| node_clock(&pe_clock, r, c)).collect();
+                        win_needs_hist[c].push_back(now_needs.clone());
+                        let needs = if win_needs_hist[c].len() > prefetch {
+                            win_needs_hist[c].pop_front().unwrap()
+                        } else {
+                            win_needs_hist[c].front().cloned().unwrap_or(now_needs)
+                        };
+                        let out = match window_policy {
+                            FetchPolicy::Broadcast => super::telescope::broadcast_fetch(
+                                &mut cache,
+                                &needs,
+                                line_cursor,
+                                w_lines,
+                            ),
+                            FetchPolicy::Telescope => super::telescope::telescope_fetch(
+                                &mut cache,
+                                &needs,
+                                &cfg.telescope_schedule,
+                                line_cursor,
+                                w_lines,
+                            ),
+                            FetchPolicy::Solo => super::telescope::solo_fetch(
+                                &mut cache,
+                                &needs,
+                                line_cursor,
+                                w_lines,
+                            ),
+                        };
+                        line_cursor += w_lines;
+                        acc.window_fetch_blocks += out.fetches;
+                        ready = out.ready;
+                        acc.buffer_bytes += out.fetches * w_lines * LINE_BYTES;
+                    }
+
+                    // Per-row pass over (filter(r, parity), window w).
+                    // Parity/rotation follow the node's *stream sequence*
+                    // (s), not the global window id — the global id is
+                    // congruent mod `cols` within one IFGC and would
+                    // never alternate.
+                    let parity = s % 2;
+                    for r in 0..rows {
+                        let rank = if alternate && parity == 1 {
+                            p * rows + (rows - 1 - r)
+                        } else {
+                            p * rows + r
+                        };
+                        if rank >= n_filters {
+                            continue; // ragged round: row idle
+                        }
+                        let fi = order[rank];
+                        let rotation = if rr { s } else { 0 };
+                        let cost = pass_pe_cycles(
+                            layer.filters.row(fi),
+                            layer.windows.row(w),
+                            parts,
+                            rotation,
+                            overhead,
+                        );
+                        acc.matched += cost.matched;
+                        acc.chunk_ops += cost.chunk_ops;
+                        acc.buffer_bytes +=
+                            cost.matched * 2 + chunks * (LINE_BYTES / parts as u64);
+                        let gate = ready[r].max(filter_ready[r][c]);
+
+                        let mut completion = 0u64;
+                        if cfg.opts.coloring && !sync {
+                            // Coloring: PEs run ahead independently,
+                            // their partial outputs separated per window
+                            // by color tags.
+                            let base = node_of(r, c);
+                            for pe in 0..parts {
+                                let t0 = pe_clock[base + pe];
+                                let start = t0.max(gate);
+                                acc.bandwidth += (start - t0) as f64;
+                                // The node's adder tree is a dedicated
+                                // pipelined unit: with coloring the
+                                // reduce of window w overlaps the PEs'
+                                // work on w+1, so it does not serialize
+                                // into PE time.
+                                let t1 = start + cost.pe_cycles[pe];
+                                acc.busy += cost.pe_cycles[pe] as f64;
+                                pe_clock[base + pe] = t1;
+                                completion = completion.max(t1 + reduce);
+                            }
+                            // Output-color exhaustion: with C colors a
+                            // PE can have at most C windows' partial
+                            // outputs in flight, so the node's PEs must
+                            // sync (drain the adder tree) every C
+                            // windows. With the paper's 16 colors this
+                            // binds once per batch.
+                            if cfg.output_colors < usize::MAX / 8
+                                && (s + 1) % cfg.output_colors == 0
+                            {
+                                let m = node_clock(&pe_clock, r, c);
+                                let base = node_of(r, c);
+                                for pe in 0..parts {
+                                    acc.barrier += (m - pe_clock[base + pe]) as f64;
+                                    pe_clock[base + pe] = m;
+                                }
+                                completion = completion.max(m);
+                            }
+                        } else {
+                            // No coloring: node-level sync per window.
+                            let sync_t = node_clock(&pe_clock, r, c);
+                            let start = sync_t.max(gate);
+                            let max_w = cost.max_pe(parts);
+                            completion = start + max_w + reduce;
+                            let base = node_of(r, c);
+                            for pe in 0..parts {
+                                let t0 = pe_clock[base + pe];
+                                acc.barrier += (sync_t - t0) as f64;
+                                acc.bandwidth += (start - sync_t) as f64;
+                                acc.busy += (cost.pe_cycles[pe] + reduce) as f64;
+                                acc.barrier +=
+                                    (max_w - cost.pe_cycles[pe]) as f64;
+                                pe_clock[base + pe] = completion;
+                            }
+                        }
+                        win_completion[r][c] = completion;
+                        pass_cycles_sum += (cost.max_pe(parts) + reduce) as f64;
+                        pass_count += 1;
+                    }
+
+                }
+                // Synchronous: each window is one broadcast — an implicit
+                // cluster-wide barrier. All nodes advance to the slowest
+                // node's completion of this slot (paper §2.2: "broadcasts
+                // ... impose (implicit) barriers").
+                if sync {
+                    let mut m = 0u64;
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            m = m.max(node_clock(&pe_clock, r, c));
+                        }
+                    }
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            for pe in 0..parts {
+                                acc.barrier += (m - pe_clock[node_of(r, c) + pe]) as f64;
+                                pe_clock[node_of(r, c) + pe] = m;
+                            }
+                        }
+                    }
+                }
+                for c in 0..cols {
+                    let cw = &col_windows[c];
+                    let s = b * batch + slot;
+                    if s >= cw.len() || s >= (b + 1) * batch {
+                        continue;
+                    }
+                    let w = cw[s];
+                    let _ = w;
+                    // Trace capture (Fig. 5): IFGC 0, first batch+round.
+                    if let (Some(req), Some(tr)) = (trace_req.as_ref(), trace.as_mut()) {
+                        if c == 0 && b == 0 && p == 0 && slot < req.windows {
+                            let comps: Vec<u64> =
+                                (0..rows).map(|r| win_completion[r][0]).collect();
+                            tr.per_window.push((w, comps));
+                        }
+                    }
+                }
+            }
+
+            // Update round duration estimate (for snarf slack).
+            if pass_count > 0 {
+                round_est = ((pass_cycles_sum / pass_count as f64) * batch as f64) as u64;
+            }
+        }
+    }
+
+    // Straying estimate (for Unlimited-buffer sizing): spread of node
+    // clocks at layer end, in units of mean pass time.
+    let mean_pass = if pass_count > 0 {
+        (pass_cycles_sum / pass_count as f64).max(1.0)
+    } else {
+        1.0
+    };
+    let mut max_t = 0u64;
+    let mut min_t = u64::MAX;
+    for r in 0..rows {
+        for c in 0..cols {
+            let t = node_clock(&pe_clock, r, c);
+            max_t = max_t.max(t);
+            min_t = min_t.min(t);
+        }
+    }
+    if min_t == u64::MAX {
+        min_t = 0;
+    }
+    acc.straying_slots = (max_t - min_t) as f64 / mean_pass;
+    acc.end = max_t;
+    // End-of-layer straggle inside the cluster.
+    for r in 0..rows {
+        for c in 0..cols {
+            let base = node_of(r, c);
+            for pe in 0..parts {
+                acc.barrier += (max_t - pe_clock[base + pe]) as f64;
+            }
+        }
+    }
+    (acc, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Benchmark, NetworkWork};
+
+    fn cfg_for(arch: ArchKind) -> SimConfig {
+        let mut cfg = SimConfig::paper(arch);
+        cfg.window_cap = 256;
+        cfg.batch = 4;
+        cfg
+    }
+
+    fn run(arch: ArchKind, li: usize) -> LayerResult {
+        let cfg = cfg_for(arch);
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        BaristaSim::new(cfg).simulate_layer(&net.layers[li])
+    }
+
+    #[test]
+    fn barista_beats_no_opts() {
+        let full = run(ArchKind::Barista, 2);
+        let none = run(ArchKind::BaristaNoOpts, 2);
+        assert!(
+            full.cycles < none.cycles,
+            "barista {:.0} should beat no-opts {:.0}",
+            full.cycles,
+            none.cycles
+        );
+    }
+
+    #[test]
+    fn barista_beats_synchronous() {
+        let full = run(ArchKind::Barista, 2);
+        let sync = run(ArchKind::Synchronous, 2);
+        assert!(
+            full.cycles < sync.cycles,
+            "barista {:.0} should beat synchronous {:.0}",
+            full.cycles,
+            sync.cycles
+        );
+    }
+
+    #[test]
+    fn synchronous_shows_barrier_no_opts_shows_bandwidth() {
+        let sync = run(ArchKind::Synchronous, 2);
+        let none = run(ArchKind::BaristaNoOpts, 2);
+        let b_frac =
+            |r: &LayerResult| r.breakdown.barrier / r.breakdown.total().max(1.0);
+        let w_frac =
+            |r: &LayerResult| r.breakdown.bandwidth / r.breakdown.total().max(1.0);
+        assert!(
+            b_frac(&sync) > b_frac(&none),
+            "sync barrier frac {} vs no-opts {}",
+            b_frac(&sync),
+            b_frac(&none)
+        );
+        assert!(
+            w_frac(&none) > w_frac(&sync),
+            "no-opts bandwidth frac {} vs sync {}",
+            w_frac(&none),
+            w_frac(&sync)
+        );
+    }
+
+    #[test]
+    fn refetch_ratio_drops_with_opts() {
+        let full = run(ArchKind::Barista, 2);
+        let none = run(ArchKind::BaristaNoOpts, 2);
+        assert!(
+            full.refetch_ratio < none.refetch_ratio / 4.0,
+            "combining should slash refetches: {} vs {}",
+            full.refetch_ratio,
+            none.refetch_ratio
+        );
+    }
+
+    #[test]
+    fn unlimited_buffer_near_or_above_barista_speed() {
+        let full = run(ArchKind::Barista, 2);
+        let unl = run(ArchKind::UnlimitedBuffer, 2);
+        assert!(
+            unl.cycles <= full.cycles * 1.15,
+            "unlimited buffering should be at least as fast: {:.0} vs {:.0}",
+            unl.cycles,
+            full.cycles
+        );
+        assert!(
+            unl.peak_buffer_bytes > full.peak_buffer_bytes,
+            "unlimited should need more buffering"
+        );
+    }
+
+    #[test]
+    fn matched_macs_match_ground_truth() {
+        let cfg = cfg_for(ArchKind::Barista);
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let l = &net.layers[1];
+        let r = BaristaSim::new(cfg).simulate_layer(l);
+        let want = (l.matched_macs_sampled() as f64 * l.scale()) as i64;
+        let got = r.energy.matched_macs as i64;
+        assert!(
+            (got - want).abs() as f64 / want as f64 == 0.0 || (got - want).abs() < want / 100,
+            "matched {got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn trace_captures_fig5_series() {
+        let cfg = cfg_for(ArchKind::Barista);
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let mut sim = BaristaSim::new(cfg.clone());
+        sim.trace = Some(TraceRequest {
+            layer: 2,
+            windows: 2,
+        });
+        sim.simulate_layer(&net.layers[2]);
+        let tr = sim.last_trace.as_ref().expect("trace captured");
+        assert_eq!(tr.per_window.len(), 2);
+        for (_, comps) in &tr.per_window {
+            assert_eq!(comps.len(), cfg.fgrs);
+            assert!(comps.iter().any(|&t| t > 0));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(ArchKind::Barista, 1);
+        let b = run(ArchKind::Barista, 1);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.traffic.refetch_lines, b.traffic.refetch_lines);
+    }
+}

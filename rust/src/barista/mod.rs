@@ -1,0 +1,21 @@
+//! BARISTA — the paper's contribution (§3).
+//!
+//! * [`telescope`] — telescoping request combining for input-map fetches
+//!   (§3.2, Figures 5/6): combine a large first group, then smaller and
+//!   smaller groups matching the tapering straggler distribution, with
+//!   MSHR-style in-flight joining.
+//! * [`snarf`] — filter-response snarfing within an FGR (§3.2): one
+//!   node's fetch opportunistically fills peers' free filter buffers.
+//! * [`cluster`] — the full cluster model: the FGR × IFGC × PE grid,
+//!   output-buffer coloring, dynamic round-robin sub-chunk assignment,
+//!   hierarchical buffering, GB-S alternating filter assignment — and the
+//!   Synchronous / BARISTA-no-opts / Unlimited-buffer variants that share
+//!   the grid with different policies.
+
+pub mod cluster;
+pub mod snarf;
+pub mod telescope;
+
+pub use cluster::BaristaSim;
+pub use snarf::snarf_fetch;
+pub use telescope::telescope_fetch;

@@ -1,0 +1,247 @@
+//! Telescoping request combining (§3.2, Figure 5/6).
+//!
+//! All nodes of an IFGC want the same window chunk-block at *about* the
+//! same time — but not exactly: a majority strays gradually, then a
+//! smaller slower group, then an even smaller one. Combining everything
+//! into one fetch would delay the leaders (an implicit barrier);
+//! combining nothing explodes bandwidth. BARISTA combines *telescoping*
+//! group sizes (e.g. 48, 12, 2, 1, 1 for 64 nodes): the first fetch
+//! issues once the 48th request arrives, later fetches serve smaller
+//! straggler groups. Requests that arrive while a fetch is outstanding
+//! join it for free (MSHR-style), which is why the example configuration
+//! averages ~3 actual fetches, not 5.
+
+use crate::sim::BankedCache;
+
+/// Result of serving one chunk-block to a set of requesters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FetchOutcome {
+    /// Per-requester data-ready time, same order as the input needs.
+    pub ready: Vec<u64>,
+    /// Number of cache fetches actually issued.
+    pub fetches: u64,
+}
+
+/// Serve one chunk-block (`lines` cache lines starting at `first_line`)
+/// to requesters with the given `needs` (absolute cycle each node wants
+/// the data). `schedule` gives the telescoping group sizes; it should sum
+/// to `needs.len()` (larger is fine — trailing entries unused; if it is
+/// exhausted, remaining stragglers fetch singly).
+pub fn telescope_fetch(
+    cache: &mut BankedCache,
+    needs: &[u64],
+    schedule: &[usize],
+    first_line: u64,
+    lines: u64,
+) -> FetchOutcome {
+    let n = needs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by_key(|&i| needs[i]);
+    let mut ready = vec![0u64; n];
+    let mut fetches = 0u64;
+    let mut i = 0usize;
+    // Cumulative group boundaries: in-flight joining may overshoot a
+    // boundary, in which case the next fetch targets the next boundary
+    // beyond the current position (the schedule describes *positions* in
+    // the straggler distribution, not fixed group sizes).
+    let boundaries: Vec<usize> = schedule
+        .iter()
+        .scan(0usize, |acc, &s| {
+            *acc += s;
+            Some(*acc)
+        })
+        .collect();
+    let mut bidx = 0usize;
+    while i < n {
+        while bidx < boundaries.len() && boundaries[bidx] <= i {
+            bidx += 1;
+        }
+        let boundary = if bidx < boundaries.len() {
+            boundaries[bidx].min(n)
+        } else {
+            i + 1
+        };
+        let target = boundary - i;
+        // The fetch issues when the target-th outstanding request arrives.
+        let issue = needs[idx[i + target - 1]];
+        let resp = cache.access_block(issue, first_line, lines);
+        fetches += 1;
+        // Everyone whose request arrives before the response joins it.
+        let mut j = i + target;
+        while j < n && needs[idx[j]] <= resp {
+            j += 1;
+        }
+        for &k in &idx[i..j] {
+            ready[k] = resp.max(needs[k]);
+        }
+        i = j;
+    }
+    FetchOutcome { ready, fetches }
+}
+
+/// Broadcast policy: a single fetch at the first need; everyone waits for
+/// it (Synchronous / Unlimited-buffer use this for the data path).
+pub fn broadcast_fetch(
+    cache: &mut BankedCache,
+    needs: &[u64],
+    first_line: u64,
+    lines: u64,
+) -> FetchOutcome {
+    let first = needs.iter().copied().min().unwrap_or(0);
+    let resp = cache.access_block(first, first_line, lines);
+    FetchOutcome {
+        ready: needs.iter().map(|&t| resp.max(t)).collect(),
+        fetches: 1,
+    }
+}
+
+/// No combining at all (BARISTA-no-opts): every requester fetches its own
+/// copy.
+pub fn solo_fetch(
+    cache: &mut BankedCache,
+    needs: &[u64],
+    first_line: u64,
+    lines: u64,
+) -> FetchOutcome {
+    let mut order: Vec<usize> = (0..needs.len()).collect();
+    order.sort_by_key(|&i| needs[i]);
+    let mut ready = vec![0u64; needs.len()];
+    for &i in &order {
+        ready[i] = cache.access_block(needs[i], first_line, lines);
+    }
+    FetchOutcome {
+        ready,
+        fetches: needs.len() as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Pcg32;
+
+    fn cache() -> BankedCache {
+        BankedCache::new(32, 2, 20)
+    }
+
+    #[test]
+    fn all_in_sync_single_fetch() {
+        // Everyone needs at t=100 — first group covers all 64.
+        let needs = vec![100u64; 64];
+        let out = telescope_fetch(&mut cache(), &needs, &[48, 12, 2, 1, 1], 0, 8);
+        assert_eq!(out.fetches, 1);
+        assert!(out.ready.iter().all(|&r| r >= 100));
+    }
+
+    #[test]
+    fn paper_example_three_fetches_with_inflight_joining() {
+        // 48 tight, 12 a bit later (within the first response window: the
+        // response takes ~22 cycles after issue), 2 later, 2 stragglers.
+        let mut needs = vec![0u64; 64];
+        for (i, n) in needs.iter_mut().enumerate() {
+            *n = match i {
+                0..=47 => 10 + i as u64 % 5,
+                48..=59 => 25,       // joins the outstanding first fetch
+                60..=61 => 300,      // second fetch
+                _ => 1000,           // third fetch
+            };
+        }
+        let out = telescope_fetch(&mut cache(), &needs, &[48, 12, 2, 1, 1], 0, 8);
+        assert_eq!(
+            out.fetches, 3,
+            "in-flight joining should cut 5 scheduled groups to 3 fetches"
+        );
+    }
+
+    #[test]
+    fn leaders_wait_for_group_boundary() {
+        // One leader at t=0, 47 others at t=500: first fetch issues at 500.
+        let mut needs = vec![500u64; 64];
+        needs[0] = 0;
+        let out = telescope_fetch(&mut cache(), &needs, &[48, 12, 2, 1, 1], 0, 4);
+        assert!(
+            out.ready[0] >= 500,
+            "leader must wait for the 48th request: ready {}",
+            out.ready[0]
+        );
+    }
+
+    #[test]
+    fn broadcast_single_fetch_everyone_waits() {
+        let needs = vec![10, 2000, 30];
+        let out = broadcast_fetch(&mut cache(), &needs, 0, 4);
+        assert_eq!(out.fetches, 1);
+        // Fetch issued at t=10; the t=2000 node sees its own need time.
+        assert_eq!(out.ready[1], 2000);
+        assert!(out.ready[0] < 100);
+    }
+
+    #[test]
+    fn solo_fetch_counts_every_requester() {
+        let needs = vec![0, 0, 0, 0];
+        let out = solo_fetch(&mut cache(), &needs, 0, 4);
+        assert_eq!(out.fetches, 4);
+    }
+
+    #[test]
+    fn solo_contends_broadcast_does_not() {
+        let needs = vec![0u64; 64];
+        let mut c1 = BankedCache::new(4, 2, 20);
+        let solo = solo_fetch(&mut c1, &needs, 0, 8);
+        let mut c2 = BankedCache::new(4, 2, 20);
+        let bc = broadcast_fetch(&mut c2, &needs, 0, 8);
+        let solo_max = *solo.ready.iter().max().unwrap();
+        let bc_max = *bc.ready.iter().max().unwrap();
+        assert!(
+            solo_max > bc_max * 4,
+            "64 solo fetches should queue heavily: {solo_max} vs {bc_max}"
+        );
+    }
+
+    #[test]
+    fn prop_ready_never_before_need_and_fetches_bounded() {
+        run_prop("telescope invariants", 0x7E1E, 150, |rng| {
+            let n = 1 + rng.gen_range(64) as usize;
+            let needs: Vec<u64> = (0..n).map(|_| rng.gen_range(5000) as u64).collect();
+            let schedule = [n.max(1) * 3 / 4, n / 8 + 1, 2, 1, 1];
+            let mut c = BankedCache::new(8, 2, 20);
+            let out = telescope_fetch(&mut c, &needs, &schedule, 0, 4);
+            if out.ready.len() != n {
+                return Err("wrong ready len".into());
+            }
+            for (i, (&r, &nd)) in out.ready.iter().zip(&needs).enumerate() {
+                if r < nd {
+                    return Err(format!("ready[{i}]={r} before need {nd}"));
+                }
+            }
+            if out.fetches == 0 || out.fetches > n as u64 {
+                return Err(format!("fetches {} out of range", out.fetches));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_telescope_never_more_fetches_than_solo() {
+        run_prop("telescope <= solo", 0x7E50, 100, |rng| {
+            let n = 1 + rng.gen_range(64) as usize;
+            let needs: Vec<u64> = (0..n).map(|_| rng.gen_range(2000) as u64).collect();
+            let mut c1 = cache();
+            let t = telescope_fetch(&mut c1, &needs, &[48, 12, 2, 1, 1], 0, 4);
+            if t.fetches > n as u64 {
+                return Err("more fetches than requesters".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_same_inputs() {
+        let mut rng = Pcg32::seeded(9);
+        let needs: Vec<u64> = (0..64).map(|_| rng.gen_range(1000) as u64).collect();
+        let a = telescope_fetch(&mut cache(), &needs, &[48, 12, 2, 1, 1], 0, 8);
+        let b = telescope_fetch(&mut cache(), &needs, &[48, 12, 2, 1, 1], 0, 8);
+        assert_eq!(a, b);
+    }
+}

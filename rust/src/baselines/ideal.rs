@@ -1,0 +1,115 @@
+//! Ideal two-sided configuration: unlimited bandwidth and buffering,
+//! perfect load balance — the performance upper bound of Figure 7.
+//!
+//! Every effectual MAC plus the unavoidable chunk-pipeline overheads are
+//! spread perfectly over all PEs; no data waits, no barriers. BARISTA's
+//! headline claim is landing within ~6% of this bound.
+
+use crate::arch::{pass_pe_cycles, Simulator};
+use crate::baselines::dram_traffic;
+use crate::config::{ArchKind, SimConfig};
+use crate::sim::{Breakdown, EnergyCounters, LayerResult, Traffic};
+use crate::workload::LayerWork;
+
+pub struct IdealSim {
+    cfg: SimConfig,
+}
+
+impl IdealSim {
+    pub fn new(cfg: SimConfig) -> Self {
+        IdealSim { cfg }
+    }
+}
+
+impl Simulator for IdealSim {
+    fn arch(&self) -> ArchKind {
+        ArchKind::Ideal
+    }
+
+    fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
+        let parts = self.cfg.pes_per_node;
+        let overhead = self.cfg.chunk_overhead;
+        let mut pe_cycle_sum = 0u64;
+        let mut matched = 0u64;
+        let mut chunk_ops = 0u64;
+        for f in 0..layer.filters.rows {
+            let frow = layer.filters.row(f);
+            for w in 0..layer.windows.rows {
+                let c = pass_pe_cycles(frow, layer.windows.row(w), parts, 0, overhead);
+                pe_cycle_sum += c.sum_pe(parts) + self.cfg.reduce_cycles;
+                matched += c.matched;
+                chunk_ops += c.chunk_ops;
+            }
+        }
+        let scale = layer.scale();
+        let total_pes = self.cfg.total_macs() as f64;
+        let cycles = pe_cycle_sum as f64 * scale / total_pes;
+
+        let line = crate::sim::cache::LINE_BYTES;
+        // Minimum traffic: every operand fetched exactly once.
+        let cache_lines = ((layer.total_windows + layer.filters.rows) * layer.filters.chunks)
+            as u64;
+        let mut energy = EnergyCounters {
+            matched_macs: (matched as f64 * scale) as u64,
+            chunk_ops: (chunk_ops as f64 * scale) as u64,
+            buffer_bytes: (matched as f64 * scale * 2.0) as u64,
+            cache_bytes: cache_lines * line,
+            ..Default::default()
+        };
+        energy.add(&dram_traffic(layer, self.cfg.batch, true, true));
+
+        LayerResult {
+            cycles,
+            breakdown: Breakdown {
+                nonzero: pe_cycle_sum as f64 * scale,
+                ..Default::default()
+            },
+            traffic: Traffic {
+                cache_lines,
+                refetch_lines: 0,
+                dram_nz_bytes: energy.dram_nz_bytes,
+                dram_zero_bytes: energy.dram_zero_bytes,
+            },
+            energy,
+            peak_buffer_bytes: u64::MAX,
+            refetch_ratio: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Benchmark, NetworkWork};
+
+    #[test]
+    fn ideal_beats_work_over_pes_bound_barely() {
+        let mut cfg = SimConfig::paper(ArchKind::Ideal);
+        cfg.window_cap = 32;
+        cfg.batch = 2;
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let l = &net.layers[2];
+        let r = IdealSim::new(cfg.clone()).simulate_layer(l);
+        let matched_bound =
+            l.matched_macs_sampled() as f64 * l.scale() / cfg.total_macs() as f64;
+        assert!(r.cycles >= matched_bound, "can't beat pure matched work");
+        assert!(
+            r.cycles < matched_bound * 3.0,
+            "overheads shouldn't triple ideal time: {} vs {matched_bound}",
+            r.cycles
+        );
+    }
+
+    #[test]
+    fn no_waits_in_breakdown() {
+        let mut cfg = SimConfig::paper(ArchKind::Ideal);
+        cfg.window_cap = 16;
+        cfg.batch = 1;
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let r = IdealSim::new(cfg).simulate_layer(&net.layers[0]);
+        assert_eq!(r.breakdown.zero, 0.0);
+        assert_eq!(r.breakdown.barrier, 0.0);
+        assert_eq!(r.breakdown.bandwidth, 0.0);
+        assert_eq!(r.traffic.refetch_lines, 0);
+    }
+}

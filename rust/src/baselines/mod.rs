@@ -1,0 +1,107 @@
+//! Baseline architecture models the paper compares against (§4, Table 2).
+//!
+//! * [`dense`] — TPU-like systolic array, 2 clusters × 16K MACs;
+//! * [`one_sided`] — Cnvlutin-like input-sparsity-only, 1K clusters × 32;
+//! * [`scnn`] — SCNN's Cartesian-product two-sided dataflow, 32 × 1K;
+//! * [`sparten`] — SparTen naively scaled to 1K clusters × 32 MACs
+//!   (and the iso-area variant with fewer clusters);
+//! * [`ideal`] — unlimited bandwidth/buffering, perfect balance.
+//!
+//! The Synchronous, BARISTA-no-opts and Unlimited-buffer baselines share
+//! BARISTA's grid and live in `barista::cluster`.
+
+pub mod dense;
+pub mod ideal;
+pub mod one_sided;
+pub mod scnn;
+pub mod sparten;
+
+use crate::sim::EnergyCounters;
+use crate::workload::LayerWork;
+
+/// DRAM traffic for one layer (full minibatch): input maps + filters +
+/// output maps, with zero/non-zero byte split. Sparse representations
+/// carry a 12.5% mask overhead (128-bit mask per 128 cells) counted as
+/// non-zero bytes; zeros travel only in dense representations.
+pub fn dram_traffic(
+    layer: &LayerWork,
+    batch: usize,
+    inputs_sparse: bool,
+    filters_sparse: bool,
+) -> EnergyCounters {
+    let g = &layer.geom;
+    let in_bytes = g.input_bytes(batch) as f64;
+    let f_bytes = g.filter_bytes() as f64;
+    let out_bytes = g.output_cells(batch) as f64;
+    // Output density after ReLU ≈ the *next* layer's map density; use
+    // this layer's map density as the stationary estimate.
+    let out_density = layer.map_density;
+
+    let mut nz = 0.0;
+    let mut zero = 0.0;
+    let overhead = 1.125; // bit-mask overhead on sparse payloads
+    if inputs_sparse {
+        nz += in_bytes * layer.map_density * overhead;
+        nz += out_bytes * out_density * overhead;
+    } else {
+        nz += in_bytes * layer.map_density + out_bytes * out_density;
+        zero += in_bytes * (1.0 - layer.map_density) + out_bytes * (1.0 - out_density);
+    }
+    if filters_sparse {
+        nz += f_bytes * layer.filter_density * overhead;
+    } else {
+        nz += f_bytes * layer.filter_density;
+        zero += f_bytes * (1.0 - layer.filter_density);
+    }
+    EnergyCounters {
+        dram_nz_bytes: nz as u64,
+        dram_zero_bytes: zero as u64,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchKind, SimConfig};
+    use crate::workload::{Benchmark, NetworkWork};
+
+    fn layer() -> LayerWork {
+        let mut cfg = SimConfig::paper(ArchKind::Barista);
+        cfg.window_cap = 32;
+        cfg.batch = 2;
+        NetworkWork::generate(Benchmark::AlexNet, &cfg)
+            .layers
+            .remove(2)
+    }
+
+    #[test]
+    fn dense_rep_carries_zeros_sparse_does_not() {
+        let l = layer();
+        let dense = dram_traffic(&l, 2, false, false);
+        let sparse = dram_traffic(&l, 2, true, true);
+        assert!(dense.dram_zero_bytes > 0);
+        assert_eq!(sparse.dram_zero_bytes, 0);
+        assert!(
+            sparse.dram_nz_bytes > dense.dram_nz_bytes,
+            "mask overhead makes sparse nz bytes slightly larger"
+        );
+        let dense_total = dense.dram_nz_bytes + dense.dram_zero_bytes;
+        let sparse_total = sparse.dram_nz_bytes;
+        assert!(
+            sparse_total < dense_total,
+            "sparse total {sparse_total} < dense total {dense_total}"
+        );
+    }
+
+    #[test]
+    fn one_sided_between_dense_and_two_sided() {
+        let l = layer();
+        let dense = dram_traffic(&l, 2, false, false);
+        let one = dram_traffic(&l, 2, true, false);
+        let two = dram_traffic(&l, 2, true, true);
+        let t = |e: &EnergyCounters| e.dram_nz_bytes + e.dram_zero_bytes;
+        assert!(t(&two) < t(&one));
+        assert!(t(&one) < t(&dense));
+    }
+}

@@ -1,0 +1,365 @@
+//! SparTen naively scaled up: 1K asynchronous clusters × 32 PEs (and the
+//! iso-area variant with ~538 clusters).
+//!
+//! Two-sided sparsity with bit-mask matching; GB-S software load
+//! balancing sorts whole filters by density and co-locates
+//! densest-with-sparsest *pairs* on one PE (serialized — the scheme the
+//! paper notes "serializes the filter pairs at a node leading to idling
+//! of nodes at larger scales"). Windows broadcast within a cluster
+//! (implicit intra-cluster barrier per tile: the broadcast can't advance
+//! until the slowest lane finishes); clusters refetch asynchronously
+//! from the shared cache, which queues on banks at this scale.
+
+use crate::arch::Simulator;
+use crate::baselines::dram_traffic;
+use crate::config::{ArchKind, SimConfig};
+use crate::sim::cache::{sparse_block_lines, LINE_BYTES};
+use crate::sim::{BankedCache, Breakdown, EnergyCounters, EventHeap, LayerResult, Traffic};
+use crate::util::ceil_div;
+use crate::workload::balance::gb_s_order;
+use crate::workload::LayerWork;
+
+/// PEs per cluster.
+const LANES: usize = 32;
+/// Filters per cluster residency: 32 PEs × 2 co-located (GB-S pairs).
+const GROUP: usize = 64;
+
+pub struct SparTenSim {
+    cfg: SimConfig,
+}
+
+impl SparTenSim {
+    pub fn new(cfg: SimConfig) -> Self {
+        SparTenSim { cfg }
+    }
+}
+
+impl Simulator for SparTenSim {
+    fn arch(&self) -> ArchKind {
+        self.cfg.arch
+    }
+
+    fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
+        let cfg = &self.cfg;
+        let chunks = layer.filters.chunks as u64;
+        let n_windows = layer.windows.rows;
+        let n_filters = layer.filters.rows;
+        let overhead = cfg.chunk_overhead;
+
+        // GB-S: density sort; pair rank i with rank (G-1-i) within each
+        // group of 64 so each PE's serialized pair has near-average work.
+        let order = gb_s_order(&layer.filters);
+        let groups = ceil_div(n_filters as u64, GROUP as u64) as usize;
+
+        // Adaptive cluster engagement (see one_sided.rs): pick the
+        // power-of-two cluster count minimizing max(compute, filter-load).
+        let mean_tile: f64 = 2.0
+            * (layer.geom.vec_len() as f64 * layer.map_density * layer.filter_density
+                + (chunks * overhead) as f64);
+        let flines_per_cluster = (GROUP as u64
+            * crate::sim::cache::sparse_block_lines(chunks, layer.filter_density))
+            as f64
+            / layer.scale();
+        let tiles_total = groups * n_windows;
+        let clusters = {
+            let mut best = cfg.clusters;
+            let mut best_cost = f64::INFINITY;
+            let mut c = cfg.clusters;
+            while c >= 32 {
+                let compute = tiles_total as f64 / c as f64 * mean_tile;
+                let load = c as f64 * flines_per_cluster / cfg.cache_banks as f64;
+                let cost = compute.max(load);
+                if cost < best_cost {
+                    best_cost = cost;
+                    best = c;
+                }
+                c /= 2;
+            }
+            best
+        };
+        let idle_clusters = cfg.clusters - clusters;
+        // pair_of[g][lane] = (filter_a, Option<filter_b>)
+        let pair_of = |g: usize, lane: usize| -> (usize, Option<usize>) {
+            let lo = g * GROUP + lane;
+            let hi = g * GROUP + (GROUP - 1 - lane);
+            let a = order[lo.min(n_filters - 1) % n_filters];
+            let b = if hi < n_filters && hi != lo {
+                Some(order[hi])
+            } else {
+                None
+            };
+            (a, b)
+        };
+
+        let tiles: Vec<(usize, usize)> = (0..groups)
+            .flat_map(|g| (0..n_windows).map(move |w| (g, w)))
+            .collect();
+        // Dynamic work dealing: clusters pull group-aligned blocks of
+        // consecutive tiles from a shared queue when idle (the clusters
+        // are asynchronous; a static partition fabricates end-of-layer
+        // straggle that dynamic assignment does not have). Blocks stay
+        // inside one filter group so residency is preserved.
+        let bs = (tiles.len() / (clusters * 3)).max(1);
+        // Per-group block queues: a cluster prefers its resident group's
+        // blocks (no filter reload); only when its group is drained does
+        // it move to the group with the most remaining work.
+        let mut group_blocks: Vec<std::collections::VecDeque<(usize, usize)>> = (0..groups)
+            .map(|g| {
+                let base = g * n_windows;
+                let mut q = std::collections::VecDeque::new();
+                let mut off = 0;
+                while off < n_windows {
+                    q.push_back((base + off, base + (off + bs).min(n_windows)));
+                    off += bs;
+                }
+                q
+            })
+            .collect();
+        let pull = move |cur: Option<usize>,
+                             group_blocks: &mut Vec<std::collections::VecDeque<(usize, usize)>>|
+              -> Option<(usize, usize)> {
+            if let Some(g) = cur {
+                if let Some(b) = group_blocks[g].pop_front() {
+                    return Some(b);
+                }
+            }
+            let g = (0..group_blocks.len()).max_by_key(|&g| group_blocks[g].len())?;
+            group_blocks[g].pop_front()
+        };
+
+        let mut cache =
+            BankedCache::new(cfg.cache_banks, cfg.bank_service_cycles, cfg.cache_latency);
+        let mut heap: EventHeap<usize> = EventHeap::new();
+        struct ClusterState {
+            time: u64,
+            issue_time: u64,
+            next_tile: usize,
+            end_tile: usize,
+            cur_group: Option<usize>,
+            bw_wait: u64,
+            barrier_wait: u64,
+        }
+        let mut cs: Vec<ClusterState> = (0..clusters)
+            .map(|_| {
+                let (s, e) = pull(None, &mut group_blocks).unwrap_or((0, 0));
+                ClusterState {
+                    time: 0,
+                    issue_time: 0,
+                    next_tile: s,
+                    end_tile: e,
+                    cur_group: None,
+                    bw_wait: 0,
+                    barrier_wait: 0,
+                }
+            })
+            .collect();
+        for (c, st) in cs.iter().enumerate() {
+            if st.next_tile < st.end_tile {
+                heap.push(0, c);
+            }
+        }
+
+        let mut line_cursor: u64 = 0;
+        let mut matched_total = 0u64;
+        let mut chunk_ops = 0u64;
+        let mut fetched_lines = 0u64;
+        let first_fetch_lines = n_windows as u64 * sparse_block_lines(chunks, layer.map_density)
+            + n_filters as u64 * sparse_block_lines(chunks, layer.filter_density);
+        while let Some((t, c)) = heap.pop() {
+            let st = &mut cs[c];
+            let now = t.max(st.time);
+            let (g, w) = tiles[st.next_tile];
+            st.next_tile += 1;
+            // Filter residency amortizes over scale()× more tiles in the
+            // unsampled run — charge scale-corrected (see one_sided.rs).
+            // Both operands travel in the bit-mask sparse representation.
+            let mut lines = sparse_block_lines(chunks, layer.map_density);
+            if st.cur_group != Some(g) {
+                st.cur_group = Some(g);
+                let filter_lines =
+                    GROUP as u64 * sparse_block_lines(chunks, layer.filter_density);
+                lines += (filter_lines as f64 / layer.scale()).ceil() as u64;
+            }
+            let ready = cache.access_block(st.issue_time, line_cursor, lines);
+            line_cursor += lines;
+            fetched_lines += lines;
+            let start = now.max(ready);
+            st.bw_wait += start - now;
+            st.issue_time = start;
+
+            // Per-lane work: both co-located filters, serialized.
+            let mut max_lane = 0u64;
+            let mut sum_lane = 0u64;
+            for lane in 0..LANES {
+                let (a, b) = pair_of(g, lane);
+                if g * GROUP + lane >= n_filters {
+                    continue; // ragged tail: idle lane
+                }
+                let mut t_lane =
+                    layer.filters.matched_row(a, &layer.windows, w) + chunks * overhead;
+                chunk_ops += chunks;
+                matched_total += layer.filters.matched_row(a, &layer.windows, w);
+                if let Some(b) = b {
+                    let mb = layer.filters.matched_row(b, &layer.windows, w);
+                    t_lane += mb + chunks * overhead;
+                    matched_total += mb;
+                    chunk_ops += chunks;
+                }
+                max_lane = max_lane.max(t_lane);
+                sum_lane += t_lane;
+            }
+            // Broadcast barrier: all lanes advance together per tile.
+            st.barrier_wait += LANES as u64 * max_lane - sum_lane;
+            st.time = start + max_lane;
+            if st.next_tile >= st.end_tile {
+                if let Some((bs_, be_)) = pull(st.cur_group, &mut group_blocks) {
+                    st.next_tile = bs_;
+                    st.end_tile = be_;
+                }
+            }
+            if st.next_tile < st.end_tile {
+                heap.push(st.time, c);
+            }
+        }
+
+        // End-of-layer straggle correction: per-cluster work sums over the
+        // *sampled* tiles have 1/sqrt(scale) more relative variance than
+        // the real (unsampled) run, so shrink the max-over-clusters
+        // excursion accordingly before scaling (DESIGN.md
+        // §Substitutions-4).
+        let scale = layer.scale();
+        let end_raw: u64 = cs.iter().map(|c| c.time).max().unwrap_or(0);
+        let mean_t: f64 = if cs.is_empty() {
+            0.0
+        } else {
+            cs.iter().map(|c| c.time as f64).sum::<f64>() / cs.len() as f64
+        };
+        let end = (mean_t + (end_raw as f64 - mean_t) / scale.sqrt()).round() as u64;
+        let cycles = end as f64 * scale;
+
+        let pes = (clusters * LANES) as f64;
+        let nonzero = matched_total as f64 + (chunk_ops * overhead) as f64;
+        let bandwidth: f64 =
+            cs.iter().map(|c| c.bw_wait as f64).sum::<f64>() * LANES as f64;
+        let barrier_intra: f64 = cs.iter().map(|c| c.barrier_wait as f64).sum();
+        let barrier_end: f64 = cs
+            .iter()
+            .map(|c| (end as f64 - c.time as f64).max(0.0))
+            .sum::<f64>()
+            * LANES as f64;
+        let barrier = barrier_intra + barrier_end;
+        let accounted = nonzero + bandwidth + barrier;
+        let pes_idle = (idle_clusters * LANES) as f64;
+        let other = (end as f64 * (pes + pes_idle) - accounted).max(0.0);
+
+        let refetch = fetched_lines.saturating_sub(first_fetch_lines);
+        let mut energy = EnergyCounters {
+            matched_macs: (matched_total as f64 * scale) as u64,
+            chunk_ops: (chunk_ops as f64 * scale) as u64,
+            buffer_bytes: ((fetched_lines * LINE_BYTES) as f64 * scale
+                + matched_total as f64 * 2.0 * scale) as u64,
+            cache_bytes: ((fetched_lines * LINE_BYTES) as f64 * scale) as u64,
+            ..Default::default()
+        };
+        energy.add(&dram_traffic(layer, cfg.batch, true, true));
+
+        LayerResult {
+            cycles,
+            breakdown: Breakdown {
+                nonzero: nonzero * scale,
+                zero: 0.0,
+                barrier: barrier * scale,
+                bandwidth: bandwidth * scale,
+                other: other * scale,
+            },
+            traffic: Traffic {
+                cache_lines: (first_fetch_lines as f64 * scale) as u64,
+                refetch_lines: (refetch as f64 * scale) as u64,
+                dram_nz_bytes: energy.dram_nz_bytes,
+                dram_zero_bytes: energy.dram_zero_bytes,
+            },
+            energy,
+            peak_buffer_bytes: (clusters * LANES) as u64 * 993, // Table 2
+            refetch_ratio: refetch as f64 / first_fetch_lines.max(1) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::one_sided::OneSidedSim;
+    use crate::workload::{Benchmark, NetworkWork};
+
+    fn cfg_with(arch: ArchKind) -> SimConfig {
+        let mut cfg = SimConfig::paper(arch);
+        cfg.window_cap = 384;
+        cfg.batch = 32;
+        cfg
+    }
+
+    #[test]
+    fn two_sided_beats_one_sided_on_time() {
+        let cfg = cfg_with(ArchKind::SparTen);
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let l = &net.layers[2];
+        let sp = SparTenSim::new(cfg.clone()).simulate_layer(l);
+
+        let cfg1 = cfg_with(ArchKind::OneSided);
+        let net1 = NetworkWork::generate(Benchmark::AlexNet, &cfg1);
+        let os = OneSidedSim::new(cfg1).simulate_layer(&net1.layers[2]);
+        assert!(
+            sp.cycles < os.cycles,
+            "sparten {:.0} should beat one-sided {:.0}",
+            sp.cycles,
+            os.cycles
+        );
+    }
+
+    #[test]
+    fn no_zero_compute() {
+        let cfg = cfg_with(ArchKind::SparTen);
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let r = SparTenSim::new(cfg).simulate_layer(&net.layers[2]);
+        assert_eq!(r.breakdown.zero, 0.0);
+        assert_eq!(r.energy.zero_macs, 0);
+    }
+
+    #[test]
+    fn iso_area_is_slower() {
+        let cfg = cfg_with(ArchKind::SparTen);
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let full = SparTenSim::new(cfg).simulate_layer(&net.layers[2]);
+
+        let cfg_iso = cfg_with(ArchKind::SparTenIso);
+        let net_iso = NetworkWork::generate(Benchmark::AlexNet, &cfg_iso);
+        let iso = SparTenSim::new(cfg_iso).simulate_layer(&net_iso.layers[2]);
+        assert!(
+            iso.cycles > full.cycles,
+            "iso-area (fewer MACs) must be slower: {:.0} vs {:.0}",
+            iso.cycles,
+            full.cycles
+        );
+    }
+
+    #[test]
+    fn barrier_and_bandwidth_present() {
+        let cfg = cfg_with(ArchKind::SparTen);
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let r = SparTenSim::new(cfg).simulate_layer(&net.layers[2]);
+        assert!(r.breakdown.barrier > 0.0, "intra-cluster broadcast barrier");
+        assert!(r.breakdown.bandwidth > 0.0, "async refetch queuing");
+    }
+
+    #[test]
+    fn matched_macs_equal_layer_ground_truth() {
+        let cfg = cfg_with(ArchKind::SparTen);
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let l = &net.layers[1];
+        let r = SparTenSim::new(cfg).simulate_layer(l);
+        let want = (l.matched_macs_sampled() as f64 * l.scale()) as u64;
+        let got = r.energy.matched_macs;
+        let rel = (got as f64 - want as f64).abs() / want as f64;
+        assert!(rel < 0.01, "matched {got} vs ground truth {want}");
+    }
+}

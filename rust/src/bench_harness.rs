@@ -1,0 +1,85 @@
+//! Minimal benchmark harness (criterion is not in the vendored crate
+//! set). Used by every `rust/benches/*.rs` target (`harness = false`).
+//!
+//! Provides wall-clock measurement with warmup and repetition statistics,
+//! and a uniform "rows the paper reports" output convention: each bench
+//! prints its table/figure to stdout and writes CSV to `out/`.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Result of timing one closure.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.3} ms/iter (±{:.3} ms, n={}, min {:.3}, max {:.3})",
+            self.name,
+            self.mean_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters,
+            self.min_s * 1e3,
+            self.max_s * 1e3
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_s: s.mean(),
+        stddev_s: s.stddev(),
+        min_s: s.min(),
+        max_s: s.max(),
+    }
+}
+
+/// Standard header every bench prints (keeps outputs greppable in
+/// bench_output.txt).
+pub fn bench_header(what: &str) {
+    println!("================================================================");
+    println!("BENCH {what}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0u32;
+        let t = bench("counter", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0);
+        assert!(t.min_s <= t.max_s);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let t = bench("xyz", 0, 1, || {});
+        assert!(t.report().contains("xyz"));
+    }
+}

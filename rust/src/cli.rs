@@ -1,0 +1,139 @@
+//! Hand-rolled CLI argument parsing (no clap in the vendored set).
+//!
+//! Grammar: `barista <command> [--key value]... [--flag]...`
+//! Commands are defined by `main.rs`; this module provides the generic
+//! option parser plus typed accessors with good error messages.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a command word plus `--key value` options and
+/// bare `--flag`s.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments after the command.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with('-') {
+                return Err(format!("expected a command, got option '{cmd}'"));
+            }
+            out.command = cmd;
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} expects an integer, got '{v}': {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} expects an integer, got '{v}': {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_opts_flags_positional() {
+        let a = parse("simulate out.json --network alexnet --window-cap 64 --verbose");
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get("network"), Some("alexnet"));
+        assert_eq!(a.get_usize("window-cap", 0).unwrap(), 64);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.json"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --seed=42");
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_or("arch", "barista"), "barista");
+        assert_eq!(a.get_usize("batch", 32).unwrap(), 32);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = parse("run --batch nope");
+        assert!(a.get_usize("batch", 1).is_err());
+    }
+
+    #[test]
+    fn option_before_command_is_error() {
+        assert!(Args::parse(vec!["--x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --fast --verbose");
+        assert!(a.flag("fast") && a.flag("verbose"));
+    }
+}

@@ -1,0 +1,369 @@
+//! Simulation configuration: the hardware parameters of Table 2 plus
+//! every knob the paper's ablations turn (telescoping schedule, buffer
+//! depths, coloring, round-robin, GB-S).
+//!
+//! All defaults reproduce the paper's evaluated configurations; the
+//! design-space example and the sensitivity benches sweep them.
+
+use std::fmt;
+
+/// Which architecture to simulate (paper §4, Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchKind {
+    /// TPU-like dense systolic accelerator: 2 clusters × 16K MACs.
+    Dense,
+    /// One-sided (input-map) sparsity, Cnvlutin-like: 1K clusters × 32.
+    OneSided,
+    /// SCNN: Cartesian-product two-sided sparsity, 32 clusters × 1K.
+    Scnn,
+    /// SparTen naively scaled up: 1K clusters × 32 MACs, async refetches.
+    SparTen,
+    /// SparTen scaled to equal area with BARISTA (~1.9× fewer MACs).
+    SparTenIso,
+    /// BARISTA organization with synchronous intra-cluster broadcasts —
+    /// isolates the barrier cost of broadcasts.
+    Synchronous,
+    /// BARISTA organization without its optimizations (async refetches).
+    BaristaNoOpts,
+    /// Full BARISTA.
+    Barista,
+    /// Broadcast scheme with unlimited buffering (buffering study).
+    UnlimitedBuffer,
+    /// Unlimited bandwidth and buffering — the performance upper bound.
+    Ideal,
+}
+
+impl ArchKind {
+    pub const ALL: [ArchKind; 10] = [
+        ArchKind::Dense,
+        ArchKind::OneSided,
+        ArchKind::Scnn,
+        ArchKind::SparTen,
+        ArchKind::SparTenIso,
+        ArchKind::Synchronous,
+        ArchKind::BaristaNoOpts,
+        ArchKind::Barista,
+        ArchKind::UnlimitedBuffer,
+        ArchKind::Ideal,
+    ];
+
+    /// The set Figure 7 plots (plus Dense as the baseline).
+    pub const FIG7: [ArchKind; 8] = [
+        ArchKind::Dense,
+        ArchKind::OneSided,
+        ArchKind::Scnn,
+        ArchKind::SparTen,
+        ArchKind::SparTenIso,
+        ArchKind::Synchronous,
+        ArchKind::Barista,
+        ArchKind::Ideal,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArchKind::Dense => "dense",
+            ArchKind::OneSided => "one-sided",
+            ArchKind::Scnn => "scnn",
+            ArchKind::SparTen => "sparten",
+            ArchKind::SparTenIso => "sparten-iso",
+            ArchKind::Synchronous => "synchronous",
+            ArchKind::BaristaNoOpts => "barista-no-opts",
+            ArchKind::Barista => "barista",
+            ArchKind::UnlimitedBuffer => "unlimited-buffer",
+            ArchKind::Ideal => "ideal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArchKind> {
+        Self::ALL.iter().copied().find(|a| a.name() == s)
+    }
+}
+
+impl fmt::Display for ArchKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// BARISTA optimization toggles (Figure 10's ablation axes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BaristaOpts {
+    /// Telescoping request combining for input-map fetches (§3.2).
+    pub telescoping: bool,
+    /// Filter-response snarfing within an FGR (§3.2).
+    pub snarfing: bool,
+    /// Output-buffer coloring: overlap consecutive input maps (§3.3.1).
+    pub coloring: bool,
+    /// Dynamic round-robin sub-chunk assignment to PEs (§3.3.2).
+    pub round_robin: bool,
+    /// Hierarchical (shared + private) input-map buffering (§3.4).
+    pub hierarchical: bool,
+    /// GB-S inter-filter balancing variant: density sort + alternating
+    /// assignment order (§3.3.3). On for both BARISTA and no-opts, like
+    /// the paper's BARISTA-no-opts baseline.
+    pub greedy_balance: bool,
+}
+
+impl BaristaOpts {
+    pub const ALL_ON: BaristaOpts = BaristaOpts {
+        telescoping: true,
+        snarfing: true,
+        coloring: true,
+        round_robin: true,
+        hierarchical: true,
+        greedy_balance: true,
+    };
+
+    /// BARISTA-no-opts still includes GB-S (paper §5.4) but none of the
+    /// four scale optimizations.
+    pub const NONE: BaristaOpts = BaristaOpts {
+        telescoping: false,
+        snarfing: false,
+        coloring: false,
+        round_robin: false,
+        hierarchical: false,
+        greedy_balance: true,
+    };
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub arch: ArchKind,
+
+    // ---- scale (Table 2) ----
+    /// MACs (PEs) per cluster.
+    pub macs_per_cluster: usize,
+    /// Number of clusters.
+    pub clusters: usize,
+    /// BARISTA grid: filter-group rows per cluster.
+    pub fgrs: usize,
+    /// BARISTA grid: input-map group columns per cluster.
+    pub ifgcs: usize,
+    /// PEs per node (sub-chunks per chunk).
+    pub pes_per_node: usize,
+
+    // ---- buffering ----
+    /// Per-node double/triple buffering depth for filters and inputs
+    /// (paper: 3× per-node buffering, §3.4).
+    pub node_buf_depth: usize,
+    /// IFGC shared input-map buffer depth, in chunks (paper: 16).
+    pub shared_buf_depth: usize,
+    /// Output-buffer colors per PE (paper: 16 input maps in flight).
+    pub output_colors: usize,
+    /// Temporal filter reuse: input maps processed per filter residency
+    /// (paper: e.g. 16 times in each FGR node).
+    pub filter_reuse: usize,
+
+    // ---- on-chip cache ----
+    /// Cache banks (Table 2: 32 sparse / 8 dense).
+    pub cache_banks: usize,
+    /// Cycles a bank is busy per chunk-line access (service time).
+    pub bank_service_cycles: u64,
+    /// Pipelined access latency (request → data), cycles.
+    pub cache_latency: u64,
+    /// Cache capacity in bytes (Table 2: 10 MB sparse / 24 MB dense).
+    pub cache_bytes: u64,
+
+    // ---- timing details ----
+    /// Fixed per-chunk pipeline overhead in a PE (mask AND + prefix-sum
+    /// + priority-encode issue), cycles.
+    pub chunk_overhead: u64,
+    /// Cycles for the node's adder tree + output write per pass.
+    pub reduce_cycles: u64,
+    /// Telescoping schedule: group sizes that sum to the IFGC node count
+    /// (paper example for 64: [48, 12, 2, 1, 1]).
+    pub telescope_schedule: Vec<usize>,
+
+    // ---- workload sampling ----
+    /// Cap on simulated im2col windows per layer (scaled up afterwards);
+    /// keeps full-network simulation tractable. 0 = no cap.
+    pub window_cap: usize,
+    /// Minibatch size (paper: 32).
+    pub batch: usize,
+    /// RNG seed for workload synthesis.
+    pub seed: u64,
+
+    /// BARISTA optimization toggles.
+    pub opts: BaristaOpts,
+}
+
+impl SimConfig {
+    /// The paper's configuration for a given architecture (Table 2).
+    pub fn paper(arch: ArchKind) -> SimConfig {
+        let mut c = SimConfig {
+            arch,
+            macs_per_cluster: 8192,
+            clusters: 4,
+            fgrs: 64,
+            ifgcs: 32,
+            pes_per_node: 4,
+            node_buf_depth: 3,
+            shared_buf_depth: 16,
+            output_colors: 16,
+            filter_reuse: 16,
+            cache_banks: 32,
+            bank_service_cycles: 1,
+            cache_latency: 20,
+            cache_bytes: 10 << 20,
+            chunk_overhead: 2,
+            reduce_cycles: 4,
+            telescope_schedule: vec![48, 12, 2, 1, 1],
+            window_cap: 1024,
+            batch: 32,
+            seed: 0xBA757A,
+            opts: BaristaOpts::ALL_ON,
+        };
+        match arch {
+            ArchKind::Dense => {
+                c.macs_per_cluster = 16384;
+                c.clusters = 2;
+                c.cache_banks = 8;
+                c.cache_bytes = 24 << 20;
+            }
+            ArchKind::OneSided => {
+                c.macs_per_cluster = 32;
+                c.clusters = 1024;
+            }
+            ArchKind::Scnn => {
+                c.macs_per_cluster = 1024;
+                c.clusters = 32;
+            }
+            ArchKind::SparTen => {
+                c.macs_per_cluster = 32;
+                c.clusters = 1024;
+            }
+            ArchKind::SparTenIso => {
+                // Iso-area with BARISTA: SparTen is 1.9× larger at equal
+                // MACs, so the equal-area budget fits ~1/1.9 the clusters.
+                c.macs_per_cluster = 32;
+                c.clusters = 538;
+            }
+            ArchKind::Synchronous => {
+                c.opts = BaristaOpts::NONE;
+            }
+            ArchKind::BaristaNoOpts => {
+                c.opts = BaristaOpts::NONE;
+            }
+            ArchKind::Barista => {}
+            ArchKind::UnlimitedBuffer => {
+                c.node_buf_depth = usize::MAX / 4;
+                c.shared_buf_depth = usize::MAX / 4;
+                c.output_colors = usize::MAX / 4;
+                c.opts = BaristaOpts {
+                    telescoping: false,
+                    ..BaristaOpts::ALL_ON
+                };
+            }
+            ArchKind::Ideal => {}
+        }
+        c
+    }
+
+    /// Total MAC count.
+    pub fn total_macs(&self) -> usize {
+        self.macs_per_cluster * self.clusters
+    }
+
+    /// Nodes per BARISTA cluster.
+    pub fn nodes_per_cluster(&self) -> usize {
+        self.fgrs * self.ifgcs
+    }
+
+    /// Validate internal consistency; returns a description of the first
+    /// violated constraint.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clusters == 0 || self.macs_per_cluster == 0 {
+            return Err("zero-size machine".into());
+        }
+        match self.arch {
+            ArchKind::Barista
+            | ArchKind::BaristaNoOpts
+            | ArchKind::Synchronous
+            | ArchKind::UnlimitedBuffer
+            | ArchKind::Ideal => {
+                if self.fgrs * self.ifgcs * self.pes_per_node != self.macs_per_cluster {
+                    return Err(format!(
+                        "grid {}x{}x{} != {} MACs/cluster",
+                        self.fgrs, self.ifgcs, self.pes_per_node, self.macs_per_cluster
+                    ));
+                }
+                let sched: usize = self.telescope_schedule.iter().sum();
+                if self.opts.telescoping && sched != self.fgrs {
+                    return Err(format!(
+                        "telescope schedule sums to {sched}, expected fgrs={}",
+                        self.fgrs
+                    ));
+                }
+                if self.pes_per_node == 0
+                    || crate::tensor::CHUNK_BITS % self.pes_per_node != 0
+                {
+                    return Err("pes_per_node must divide 128".into());
+                }
+            }
+            _ => {}
+        }
+        if self.cache_banks == 0 {
+            return Err("cache_banks == 0".into());
+        }
+        if self.batch == 0 {
+            return Err("batch == 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_validate() {
+        for arch in ArchKind::ALL {
+            let c = SimConfig::paper(arch);
+            c.validate().unwrap_or_else(|e| panic!("{arch}: {e}"));
+        }
+    }
+
+    #[test]
+    fn paper_scale_matches_table2() {
+        let b = SimConfig::paper(ArchKind::Barista);
+        assert_eq!(b.total_macs(), 32768);
+        assert_eq!(b.nodes_per_cluster(), 2048);
+        let d = SimConfig::paper(ArchKind::Dense);
+        assert_eq!(d.total_macs(), 32768);
+        assert_eq!(d.cache_banks, 8);
+        let s = SimConfig::paper(ArchKind::SparTen);
+        assert_eq!(s.total_macs(), 32768);
+        assert_eq!(s.clusters, 1024);
+    }
+
+    #[test]
+    fn telescope_schedule_sums_to_fgrs() {
+        let c = SimConfig::paper(ArchKind::Barista);
+        let total: usize = c.telescope_schedule.iter().sum();
+        assert_eq!(total, c.fgrs);
+    }
+
+    #[test]
+    fn arch_name_roundtrip() {
+        for arch in ArchKind::ALL {
+            assert_eq!(ArchKind::parse(arch.name()), Some(arch));
+        }
+        assert_eq!(ArchKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn invalid_grid_rejected() {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        c.fgrs = 63;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn invalid_telescope_rejected() {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        c.telescope_schedule = vec![1, 2, 3];
+        assert!(c.validate().is_err());
+    }
+}

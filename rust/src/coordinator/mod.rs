@@ -1,0 +1,229 @@
+//! Run coordinator: the leader/worker orchestration layer (L3).
+//!
+//! A [`Coordinator`] owns a pool of worker threads (std threads + mpsc
+//! channels — the vendored crate set has no tokio) and executes
+//! benchmark × architecture sweeps: the leader enqueues [`RunRequest`]s,
+//! workers generate the workload, drive the per-architecture simulator
+//! layer by layer, and send back [`RunResult`]s. Results are
+//! deterministic per seed regardless of worker count or scheduling.
+//!
+//! [`report`] renders sweep results into the paper's tables and figures
+//! (CSV series + aligned text tables), shared by the CLI, the examples
+//! and the benches.
+
+pub mod report;
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::arch::simulator_for;
+use crate::config::{ArchKind, SimConfig};
+use crate::sim::NetworkResult;
+use crate::workload::{Benchmark, NetworkWork};
+
+/// One simulation job.
+#[derive(Debug, Clone)]
+pub struct RunRequest {
+    pub benchmark: Benchmark,
+    pub config: SimConfig,
+}
+
+/// One finished job.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub benchmark: Benchmark,
+    pub arch: ArchKind,
+    pub network: NetworkResult,
+    /// Host-side wall time for the simulation (perf accounting).
+    pub host_ms: f64,
+}
+
+/// Execute one request synchronously (workers call this; also usable
+/// directly for single runs and tests).
+pub fn run_one(req: &RunRequest) -> RunResult {
+    let t0 = std::time::Instant::now();
+    req.config
+        .validate()
+        .unwrap_or_else(|e| panic!("invalid config for {}: {e}", req.config.arch));
+    let work = NetworkWork::generate(req.benchmark, &req.config);
+    let mut sim = simulator_for(&req.config);
+    let layers = work
+        .layers
+        .iter()
+        .map(|l| sim.simulate_layer(l))
+        .collect::<Vec<_>>();
+    let network = NetworkResult::from_layers(
+        req.config.arch.name(),
+        req.benchmark.name(),
+        layers,
+    );
+    RunResult {
+        benchmark: req.benchmark,
+        arch: req.config.arch,
+        network,
+        host_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// Execute a request from a pre-generated workload (the end-to-end driver
+/// injects measured densities this way).
+pub fn run_with_work(config: &SimConfig, work: &NetworkWork) -> RunResult {
+    let t0 = std::time::Instant::now();
+    let mut sim = simulator_for(config);
+    let layers = work
+        .layers
+        .iter()
+        .map(|l| sim.simulate_layer(l))
+        .collect::<Vec<_>>();
+    let network = NetworkResult::from_layers(
+        config.arch.name(),
+        work.spec.benchmark.name(),
+        layers,
+    );
+    RunResult {
+        benchmark: work.spec.benchmark,
+        arch: config.arch,
+        network,
+        host_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }
+}
+
+/// Thread-pool coordinator.
+pub struct Coordinator {
+    workers: usize,
+}
+
+impl Coordinator {
+    /// A coordinator with one worker per available core (capped).
+    pub fn new() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        Coordinator { workers }
+    }
+
+    pub fn with_workers(workers: usize) -> Self {
+        Coordinator {
+            workers: workers.max(1),
+        }
+    }
+
+    /// Run all requests, preserving input order in the output.
+    pub fn run_all(&self, requests: Vec<RunRequest>) -> Vec<RunResult> {
+        if requests.is_empty() {
+            return Vec::new();
+        }
+        let n = requests.len();
+        let queue = Arc::new(Mutex::new(
+            requests.into_iter().enumerate().collect::<Vec<_>>(),
+        ));
+        let (tx, rx) = mpsc::channel::<(usize, RunResult)>();
+        let mut handles = Vec::new();
+        for _ in 0..self.workers.min(n) {
+            let queue = queue.clone();
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((i, req)) => {
+                        let res = run_one(&req);
+                        if tx.send((i, res)).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            }));
+        }
+        drop(tx);
+        let mut out: Vec<Option<RunResult>> = (0..n).map(|_| None).collect();
+        for (i, res) in rx {
+            out[i] = Some(res);
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        out.into_iter().map(|r| r.expect("missing result")).collect()
+    }
+
+    /// The full Figure-7 sweep: every benchmark × every compared
+    /// architecture, plus the extras needed by Figures 8-10.
+    pub fn sweep(
+        &self,
+        benchmarks: &[Benchmark],
+        archs: &[ArchKind],
+        base: &SimConfig,
+    ) -> Vec<RunResult> {
+        let mut reqs = Vec::new();
+        for &b in benchmarks {
+            for &a in archs {
+                let mut cfg = SimConfig::paper(a);
+                cfg.window_cap = base.window_cap;
+                cfg.batch = base.batch;
+                cfg.seed = base.seed;
+                reqs.push(RunRequest {
+                    benchmark: b,
+                    config: cfg,
+                });
+            }
+        }
+        self.run_all(reqs)
+    }
+}
+
+impl Default for Coordinator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(arch: ArchKind) -> SimConfig {
+        let mut c = SimConfig::paper(arch);
+        c.window_cap = 32;
+        c.batch = 1;
+        c
+    }
+
+    #[test]
+    fn run_one_produces_layers() {
+        let r = run_one(&RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: small(ArchKind::Dense),
+        });
+        assert_eq!(r.network.layers.len(), 5);
+        assert!(r.network.cycles > 0.0);
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let reqs: Vec<RunRequest> = [ArchKind::Dense, ArchKind::Barista, ArchKind::SparTen]
+            .iter()
+            .map(|&a| RunRequest {
+                benchmark: Benchmark::AlexNet,
+                config: small(a),
+            })
+            .collect();
+        let serial: Vec<f64> = reqs.iter().map(|r| run_one(r).network.cycles).collect();
+        let parallel = Coordinator::with_workers(3).run_all(reqs);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(*s, p.network.cycles, "order + determinism preserved");
+        }
+    }
+
+    #[test]
+    fn sweep_covers_matrix() {
+        let res = Coordinator::with_workers(2).sweep(
+            &[Benchmark::AlexNet],
+            &[ArchKind::Dense, ArchKind::Ideal],
+            &small(ArchKind::Dense),
+        );
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].arch, ArchKind::Dense);
+        assert_eq!(res[1].arch, ArchKind::Ideal);
+    }
+}

@@ -1,0 +1,278 @@
+//! Table/figure renderers: turn sweep results into the paper's artifacts.
+//!
+//! Every bench target and the `paper_tables` example call these; output
+//! is both human-readable aligned text and machine-readable CSV/JSON
+//! written under `out/`.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::config::ArchKind;
+use crate::coordinator::RunResult;
+use crate::util::{geomean, Json};
+use crate::workload::Benchmark;
+
+/// Index sweep results by (benchmark, arch).
+pub fn index(results: &[RunResult]) -> HashMap<(Benchmark, ArchKind), &RunResult> {
+    results.iter().map(|r| ((r.benchmark, r.arch), r)).collect()
+}
+
+/// Speedup of each architecture over Dense per benchmark + geomean
+/// (Figure 7). Returns (arch, per-benchmark speedups, geomean) rows.
+pub fn fig7_speedups(
+    results: &[RunResult],
+    benchmarks: &[Benchmark],
+    archs: &[ArchKind],
+) -> Vec<(ArchKind, Vec<f64>, f64)> {
+    let idx = index(results);
+    let mut rows = Vec::new();
+    for &a in archs {
+        let mut per = Vec::new();
+        for &b in benchmarks {
+            let dense = idx
+                .get(&(b, ArchKind::Dense))
+                .unwrap_or_else(|| panic!("missing dense result for {b}"));
+            let r = idx
+                .get(&(b, a))
+                .unwrap_or_else(|| panic!("missing {a} result for {b}"));
+            per.push(dense.network.cycles / r.network.cycles);
+        }
+        let g = geomean(&per);
+        rows.push((a, per, g));
+    }
+    rows
+}
+
+/// Render Figure 7 as an aligned text table + CSV.
+pub fn fig7_table(
+    results: &[RunResult],
+    benchmarks: &[Benchmark],
+    archs: &[ArchKind],
+) -> (String, String) {
+    let rows = fig7_speedups(results, benchmarks, archs);
+    let mut txt = String::new();
+    let mut csv = String::from("arch");
+    for b in benchmarks {
+        let _ = write!(csv, ",{b}");
+    }
+    csv.push_str(",geomean\n");
+    let _ = writeln!(
+        txt,
+        "{:<18} {}  geomean",
+        "speedup vs dense",
+        benchmarks
+            .iter()
+            .map(|b| format!("{:>12}", b.name()))
+            .collect::<String>()
+    );
+    for (a, per, g) in &rows {
+        let _ = write!(txt, "{:<18}", a.name());
+        let _ = write!(csv, "{}", a.name());
+        for v in per {
+            let _ = write!(txt, "{v:>12.2}");
+            let _ = write!(csv, ",{v:.4}");
+        }
+        let _ = writeln!(txt, "  {g:>7.2}");
+        let _ = writeln!(csv, ",{g:.4}");
+    }
+    (txt, csv)
+}
+
+/// Figure 8: execution-time breakdown normalized to Dense's total, per
+/// benchmark per architecture. Components ordered as the paper's legend.
+pub fn fig8_breakdown(
+    results: &[RunResult],
+    benchmarks: &[Benchmark],
+    archs: &[ArchKind],
+) -> (String, String) {
+    let idx = index(results);
+    let mut txt = String::new();
+    let mut csv =
+        String::from("benchmark,arch,nonzero,zero,barrier,bandwidth,other,total_vs_dense\n");
+    let _ = writeln!(
+        txt,
+        "{:<14} {:<18} {:>8} {:>8} {:>8} {:>9} {:>8} {:>8}",
+        "benchmark", "arch", "nonzero", "zero", "barrier", "bandwidth", "other", "total"
+    );
+    for &b in benchmarks {
+        let dense_total = idx[&(b, ArchKind::Dense)].network.breakdown.total();
+        for &a in archs {
+            let r = &idx[&(b, a)].network;
+            // Normalize each arch's PE-cycle components by ITS pe count ×
+            // dense cycle total so bars are comparable in time units.
+            let bd = &r.breakdown;
+            let t = bd.total().max(1.0);
+            let time_vs_dense = r.cycles / idx[&(b, ArchKind::Dense)].network.cycles;
+            let f = |x: f64| x / t * time_vs_dense;
+            let _ = writeln!(
+                txt,
+                "{:<14} {:<18} {:>8.3} {:>8.3} {:>8.3} {:>9.3} {:>8.3} {:>8.3}",
+                b.name(),
+                a.name(),
+                f(bd.nonzero),
+                f(bd.zero),
+                f(bd.barrier),
+                f(bd.bandwidth),
+                f(bd.other),
+                time_vs_dense
+            );
+            let _ = writeln!(
+                csv,
+                "{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
+                b.name(),
+                a.name(),
+                f(bd.nonzero),
+                f(bd.zero),
+                f(bd.barrier),
+                f(bd.bandwidth),
+                f(bd.other),
+                time_vs_dense
+            );
+            let _ = dense_total;
+        }
+    }
+    (txt, csv)
+}
+
+/// Figure 9: compute + memory energy normalized to Dense.
+pub fn fig9_energy(
+    results: &[RunResult],
+    benchmarks: &[Benchmark],
+    archs: &[ArchKind],
+) -> (String, String) {
+    let idx = index(results);
+    let mut txt = String::new();
+    let mut csv = String::from(
+        "benchmark,arch,compute_zero,compute_nonzero,compute_access,compute_total,mem_zero,mem_nonzero,mem_total\n",
+    );
+    let _ = writeln!(
+        txt,
+        "{:<14} {:<12} {:>9} {:>10} {:>9} {:>9} | {:>8} {:>9} {:>8}",
+        "benchmark", "arch", "c.zero", "c.nonzero", "c.access", "c.total", "m.zero", "m.nonzero",
+        "m.total"
+    );
+    for &b in benchmarks {
+        let dref = &idx[&(b, ArchKind::Dense)].network.energy;
+        let dc = crate::energy::compute_energy(dref).total().max(1e-30);
+        let dm = crate::energy::memory_energy(dref).total().max(1e-30);
+        for &a in archs {
+            let e = &idx[&(b, a)].network.energy;
+            let c = crate::energy::compute_energy(e);
+            let m = crate::energy::memory_energy(e);
+            let _ = writeln!(
+                txt,
+                "{:<14} {:<12} {:>9.3} {:>10.3} {:>9.3} {:>9.3} | {:>8.3} {:>9.3} {:>8.3}",
+                b.name(),
+                a.name(),
+                c.zero_j / dc,
+                c.nonzero_j / dc,
+                c.data_access_j / dc,
+                c.total() / dc,
+                m.zero_j / dm,
+                m.nonzero_j / dm,
+                m.total() / dm
+            );
+            let _ = writeln!(
+                csv,
+                "{},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4}",
+                b.name(),
+                a.name(),
+                c.zero_j / dc,
+                c.nonzero_j / dc,
+                c.data_access_j / dc,
+                c.total() / dc,
+                m.zero_j / dm,
+                m.nonzero_j / dm,
+                m.total() / dm
+            );
+        }
+    }
+    (txt, csv)
+}
+
+/// Serialize a sweep to JSON (one object per run).
+pub fn results_json(results: &[RunResult]) -> Json {
+    Json::Arr(results.iter().map(|r| r.network.to_json()).collect())
+}
+
+/// Write a report file under `out/`, creating the directory.
+pub fn write_out(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::coordinator::{run_one, RunRequest};
+
+    fn mini_sweep() -> Vec<RunResult> {
+        [ArchKind::Dense, ArchKind::Barista, ArchKind::Ideal]
+            .iter()
+            .map(|&a| {
+                let mut cfg = SimConfig::paper(a);
+                cfg.window_cap = 32;
+                cfg.batch = 1;
+                run_one(&RunRequest {
+                    benchmark: Benchmark::AlexNet,
+                    config: cfg,
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fig7_dense_speedup_is_one() {
+        let res = mini_sweep();
+        let rows = fig7_speedups(&res, &[Benchmark::AlexNet], &[ArchKind::Dense]);
+        assert!((rows[0].2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig7_table_renders_csv_header() {
+        let res = mini_sweep();
+        let (txt, csv) = fig7_table(
+            &res,
+            &[Benchmark::AlexNet],
+            &[ArchKind::Dense, ArchKind::Barista],
+        );
+        assert!(txt.contains("barista"));
+        assert!(csv.starts_with("arch,alexnet,geomean"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn fig8_components_sum_to_total() {
+        let res = mini_sweep();
+        let (_, csv) = fig8_breakdown(
+            &res,
+            &[Benchmark::AlexNet],
+            &[ArchKind::Dense, ArchKind::Barista],
+        );
+        for line in csv.lines().skip(1) {
+            let f: Vec<f64> = line
+                .split(',')
+                .skip(2)
+                .map(|x| x.parse().unwrap())
+                .collect();
+            let sum: f64 = f[..5].iter().sum();
+            assert!(
+                (sum - f[5]).abs() < 0.02,
+                "components {sum} vs total {}",
+                f[5]
+            );
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let res = mini_sweep();
+        let j = results_json(&res);
+        let back = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,283 @@
+//! Area/power model — reproduces Table 3 from component inventories.
+//!
+//! Each architecture is described by an [`Inventory`] (how many PEs,
+//! SRAM arrays, buffer bytes, clusters, nodes, cache MB and style); the
+//! model multiplies by the calibrated 45-nm constants in [`super::params`].
+//! The BARISTA column calibrates the constants; the SparTen and Dense
+//! columns are predictions (tests assert they land near the paper's).
+
+use super::params as p;
+use crate::config::{ArchKind, SimConfig};
+use crate::util::Json;
+
+/// Buffer organization style.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferStyle {
+    /// Distributed SRAM arrays (sparse architectures).
+    Sram,
+    /// Per-MAC register files (dense systolic).
+    RegFile,
+}
+
+/// Component inventory of one architecture at a given scale.
+#[derive(Debug, Clone)]
+pub struct Inventory {
+    pub arch: ArchKind,
+    pub pes: u64,
+    /// Two-sided/one-sided match circuitry present?
+    pub has_match_circuitry: bool,
+    pub buffer_style: BufferStyle,
+    /// Number of physically separate buffer arrays.
+    pub sram_arrays: u64,
+    /// Total buffer capacity in bytes.
+    pub buffer_bytes: u64,
+    pub clusters: u64,
+    /// Grid nodes (BARISTA organization), 0 otherwise.
+    pub nodes: u64,
+    pub cache_mb: f64,
+    pub cache_dense_style: bool,
+    /// Cache power density override (W/MB), None = style default.
+    pub cache_w_per_mb: Option<f64>,
+}
+
+impl Inventory {
+    /// Inventory from a simulation config (Table 2 scales).
+    pub fn from_config(cfg: &SimConfig) -> Inventory {
+        let pes = cfg.total_macs() as u64;
+        let clusters = cfg.clusters as u64;
+        match cfg.arch {
+            ArchKind::Dense => Inventory {
+                arch: cfg.arch,
+                pes,
+                has_match_circuitry: false,
+                buffer_style: BufferStyle::RegFile,
+                sram_arrays: 0,
+                buffer_bytes: pes * 8, // Table 2: 8 B/MAC
+                clusters,
+                nodes: 0,
+                cache_mb: (cfg.cache_bytes >> 20) as f64,
+                cache_dense_style: true,
+                cache_w_per_mb: None,
+            },
+            ArchKind::SparTen | ArchKind::SparTenIso | ArchKind::OneSided => Inventory {
+                arch: cfg.arch,
+                pes,
+                has_match_circuitry: true,
+                buffer_style: BufferStyle::Sram,
+                // One array per PE (filter+input+output unified per lane).
+                sram_arrays: pes,
+                buffer_bytes: pes * 993, // Table 2: 993 B/MAC
+                clusters,
+                nodes: 0,
+                cache_mb: (cfg.cache_bytes >> 20) as f64,
+                cache_dense_style: false,
+                cache_w_per_mb: Some(p::P_CACHE_SPARTEN_W_PER_MB),
+            },
+            _ => {
+                // BARISTA family: per-node private arrays (filter + input
+                // + output) plus per-IFGC shared arrays.
+                let nodes = (cfg.nodes_per_cluster() * cfg.clusters) as u64;
+                let shared = (cfg.ifgcs * cfg.clusters) as u64;
+                Inventory {
+                    arch: cfg.arch,
+                    pes,
+                    has_match_circuitry: true,
+                    buffer_style: BufferStyle::Sram,
+                    sram_arrays: nodes * 3 + shared,
+                    buffer_bytes: pes * 245, // §3.4: 245 B per PE
+                    clusters,
+                    nodes,
+                    cache_mb: (cfg.cache_bytes >> 20) as f64,
+                    cache_dense_style: false,
+                    cache_w_per_mb: None,
+                }
+            }
+        }
+    }
+}
+
+/// One Table 3 column: per-component area (mm²) and power (W).
+#[derive(Debug, Clone, Default)]
+pub struct AreaPower {
+    pub buffers_mm2: f64,
+    pub buffers_w: f64,
+    pub prefix_mm2: f64,
+    pub prefix_w: f64,
+    pub priority_mm2: f64,
+    pub priority_w: f64,
+    pub macs_mm2: f64,
+    pub macs_w: f64,
+    pub other_mm2: f64,
+    pub other_w: f64,
+    pub cache_mm2: f64,
+    pub cache_w: f64,
+}
+
+impl AreaPower {
+    pub fn total_mm2(&self) -> f64 {
+        self.buffers_mm2
+            + self.prefix_mm2
+            + self.priority_mm2
+            + self.macs_mm2
+            + self.other_mm2
+            + self.cache_mm2
+    }
+
+    pub fn total_w(&self) -> f64 {
+        self.buffers_w + self.prefix_w + self.priority_w + self.macs_w + self.other_w + self.cache_w
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("buffers_mm2", self.buffers_mm2)
+            .set("buffers_w", self.buffers_w)
+            .set("prefix_mm2", self.prefix_mm2)
+            .set("prefix_w", self.prefix_w)
+            .set("priority_mm2", self.priority_mm2)
+            .set("priority_w", self.priority_w)
+            .set("macs_mm2", self.macs_mm2)
+            .set("macs_w", self.macs_w)
+            .set("other_mm2", self.other_mm2)
+            .set("other_w", self.other_w)
+            .set("cache_mm2", self.cache_mm2)
+            .set("cache_w", self.cache_w)
+            .set("total_mm2", self.total_mm2())
+            .set("total_w", self.total_w());
+        j
+    }
+}
+
+/// Evaluate the model for one inventory.
+pub fn area_power(inv: &Inventory) -> AreaPower {
+    let mut out = AreaPower::default();
+    // MACs.
+    out.macs_mm2 = inv.pes as f64 * p::A_MAC_MM2;
+    out.macs_w = inv.pes as f64 * p::P_MAC_W;
+    // Match circuitry.
+    if inv.has_match_circuitry {
+        out.prefix_mm2 = inv.pes as f64 * p::A_PREFIX_MM2;
+        out.prefix_w = inv.pes as f64 * p::P_PREFIX_W;
+        out.priority_mm2 = inv.pes as f64 * p::A_PRIORITY_MM2;
+        out.priority_w = inv.pes as f64 * p::P_PRIORITY_W;
+    }
+    // Buffers.
+    match inv.buffer_style {
+        BufferStyle::Sram => {
+            out.buffers_mm2 = inv.sram_arrays as f64 * p::A_SRAM_ARRAY_MM2
+                + inv.buffer_bytes as f64 * p::A_SRAM_MM2_PER_B;
+            out.buffers_w = inv.sram_arrays as f64 * p::P_SRAM_ARRAY_W
+                + inv.buffer_bytes as f64 * p::P_SRAM_W_PER_B;
+        }
+        BufferStyle::RegFile => {
+            out.buffers_mm2 = inv.buffer_bytes as f64 * p::A_REGFILE_MM2_PER_B;
+            out.buffers_w = inv.buffer_bytes as f64 * p::P_REGFILE_W_PER_B;
+        }
+    }
+    // Control / interconnect.
+    if inv.arch == ArchKind::Dense {
+        out.other_mm2 = p::A_DENSE_OTHER_MM2;
+        out.other_w = p::P_DENSE_OTHER_W;
+    } else {
+        out.other_mm2 =
+            inv.clusters as f64 * p::A_CTRL_PER_CLUSTER_MM2 + inv.nodes as f64 * p::A_GRID_PER_NODE_MM2;
+        out.other_w =
+            inv.clusters as f64 * p::P_CTRL_PER_CLUSTER_W + inv.nodes as f64 * p::P_GRID_PER_NODE_W;
+    }
+    // Cache.
+    out.cache_mm2 = inv.cache_mb
+        * if inv.cache_dense_style {
+            p::A_CACHE_DENSE_MM2_PER_MB
+        } else {
+            p::A_CACHE_SPARSE_MM2_PER_MB
+        };
+    out.cache_w = inv.cache_mb
+        * inv.cache_w_per_mb.unwrap_or(if inv.cache_dense_style {
+            p::P_CACHE_DENSE_W_PER_MB
+        } else {
+            p::P_CACHE_SPARSE_W_PER_MB
+        });
+    out
+}
+
+/// The full Table 3: (BARISTA, SparTen, Dense) columns at paper scale.
+pub fn area_power_table() -> Vec<(ArchKind, AreaPower)> {
+    [ArchKind::Barista, ArchKind::SparTen, ArchKind::Dense]
+        .iter()
+        .map(|&a| {
+            let cfg = SimConfig::paper(a);
+            (a, area_power(&Inventory::from_config(&cfg)))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(got: f64, want: f64, tol_frac: f64, what: &str) {
+        let tol = want.abs() * tol_frac;
+        assert!(
+            (got - want).abs() <= tol,
+            "{what}: got {got:.1}, paper {want:.1} (tol {tol:.1})"
+        );
+    }
+
+    #[test]
+    fn barista_column_matches_table3() {
+        let cfg = SimConfig::paper(ArchKind::Barista);
+        let ap = area_power(&Inventory::from_config(&cfg));
+        close(ap.macs_mm2, 44.2, 0.02, "barista mac area");
+        close(ap.prefix_mm2, 43.6, 0.02, "barista prefix area");
+        close(ap.priority_mm2, 8.7, 0.02, "barista priority area");
+        close(ap.buffers_mm2, 73.3, 0.10, "barista buffer area");
+        close(ap.other_mm2, 20.2, 0.10, "barista other area");
+        close(ap.cache_mm2, 22.9, 0.02, "barista cache area");
+        close(ap.total_mm2(), 212.9, 0.06, "barista total area");
+        close(ap.total_w(), 170.0, 0.08, "barista total power");
+    }
+
+    #[test]
+    fn sparten_column_predicted() {
+        let cfg = SimConfig::paper(ArchKind::SparTen);
+        let ap = area_power(&Inventory::from_config(&cfg));
+        close(ap.buffers_mm2, 137.7, 0.15, "sparten buffer area");
+        close(ap.other_mm2, 110.8, 0.15, "sparten other area");
+        close(ap.total_mm2(), 402.7, 0.12, "sparten total area");
+        close(ap.total_w(), 214.9, 0.12, "sparten total power");
+    }
+
+    #[test]
+    fn dense_column_predicted() {
+        let cfg = SimConfig::paper(ArchKind::Dense);
+        let ap = area_power(&Inventory::from_config(&cfg));
+        assert_eq!(ap.prefix_mm2, 0.0);
+        assert_eq!(ap.priority_mm2, 0.0);
+        close(ap.buffers_mm2, 38.6, 0.05, "dense buffer area");
+        close(ap.cache_mm2, 69.8, 0.05, "dense cache area");
+        close(ap.total_mm2(), 154.1, 0.08, "dense total area");
+        close(ap.total_w(), 83.0, 0.12, "dense total power");
+    }
+
+    #[test]
+    fn headline_ratios_hold() {
+        let t = area_power_table();
+        let barista = &t[0].1;
+        let sparten = &t[1].1;
+        let dense = &t[2].1;
+        // Paper: BARISTA area/power 89%/26% smaller than SparTen's...
+        // (SparTen ≈ 1.9× BARISTA area); 38% more area, 2.05× power vs
+        // Dense.
+        let area_ratio = sparten.total_mm2() / barista.total_mm2();
+        assert!(
+            (1.7..2.1).contains(&area_ratio),
+            "SparTen/BARISTA area ratio {area_ratio}"
+        );
+        let vs_dense = barista.total_mm2() / dense.total_mm2();
+        assert!(
+            (1.25..1.55).contains(&vs_dense),
+            "BARISTA/Dense area ratio {vs_dense}"
+        );
+        let pw = barista.total_w() / dense.total_w();
+        assert!((1.8..2.3).contains(&pw), "BARISTA/Dense power ratio {pw}");
+    }
+}

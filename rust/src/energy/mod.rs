@@ -1,0 +1,17 @@
+//! 45-nm energy and area/power models.
+//!
+//! The paper's numbers come from Synopsys DC + FreePDK45 for logic and
+//! CACTI 6.5 for SRAM. Neither toolchain exists in this environment, so
+//! [`params`] holds per-event energy and per-component area/power
+//! constants *calibrated to the paper's Table 3 BARISTA column*, and the
+//! models then predict every other quantity (SparTen/Dense columns of
+//! Table 3, all of Figure 9) from the simulator's event counts and the
+//! architectures' component inventories. The cross-architecture
+//! comparisons are genuine model outputs. See DESIGN.md §Substitutions-2/3.
+
+pub mod area;
+pub mod model;
+pub mod params;
+
+pub use area::{area_power_table, AreaPower};
+pub use model::{compute_energy, memory_energy, ComputeEnergy, MemoryEnergy};

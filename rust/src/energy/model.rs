@@ -1,0 +1,132 @@
+//! Energy integration: simulator event counts → joules (Figure 9).
+//!
+//! The paper splits (a) compute energy into zero, non-zero, and data
+//! access (cache + buffers), and (b) memory (DRAM) energy into zero and
+//! non-zero bytes. DRAM is reported separately because the paper's RTL
+//! toolchain could not normalize DRAM energy against the accelerator's
+//! (§5.3); we follow the same split.
+
+use super::params as p;
+use crate::sim::EnergyCounters;
+
+/// Compute-side energy (joules).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ComputeEnergy {
+    /// Multiplying zeros (dense / one-sided architectures only).
+    pub zero_j: f64,
+    /// Effectual MACs + match circuitry.
+    pub nonzero_j: f64,
+    /// Cache + buffer accesses.
+    pub data_access_j: f64,
+}
+
+impl ComputeEnergy {
+    pub fn total(&self) -> f64 {
+        self.zero_j + self.nonzero_j + self.data_access_j
+    }
+}
+
+/// DRAM energy (joules).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MemoryEnergy {
+    pub zero_j: f64,
+    pub nonzero_j: f64,
+}
+
+impl MemoryEnergy {
+    pub fn total(&self) -> f64 {
+        self.zero_j + self.nonzero_j
+    }
+}
+
+/// Integrate compute energy from event counts.
+pub fn compute_energy(c: &EnergyCounters) -> ComputeEnergy {
+    let pj = |x: f64| x * 1e-12;
+    let zero_j = pj(c.zero_macs as f64 * p::E_MAC_PJ);
+    // Two-sided effectual ops pay MAC + pairwise match; one-sided chunk
+    // ops pay the cheaper single-tensor offset decode, counted per
+    // executed (non-skipped) MAC via chunk_ops_one_sided.
+    let nonzero_j = pj(c.matched_macs as f64 * (p::E_MAC_PJ + p::E_MATCH_TWO_SIDED_PJ)
+        + c.plain_macs as f64 * p::E_MAC_PJ
+        + c.chunk_ops as f64 * p::E_CHUNK_OP_PJ
+        + c.chunk_ops_one_sided as f64 * p::E_MATCH_ONE_SIDED_PJ);
+    let data_access_j = pj(
+        c.buffer_bytes as f64 * p::E_BUFFER_PJ_PER_B + c.cache_bytes as f64 * p::E_CACHE_PJ_PER_B,
+    );
+    ComputeEnergy {
+        zero_j,
+        nonzero_j,
+        data_access_j,
+    }
+}
+
+/// Integrate DRAM energy from traffic counts.
+pub fn memory_energy(c: &EnergyCounters) -> MemoryEnergy {
+    MemoryEnergy {
+        zero_j: c.dram_zero_bytes as f64 * p::E_DRAM_PJ_PER_B * 1e-12,
+        nonzero_j: c.dram_nz_bytes as f64 * p::E_DRAM_PJ_PER_B * 1e-12,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_counters_zero_energy() {
+        let c = EnergyCounters::default();
+        assert_eq!(compute_energy(&c).total(), 0.0);
+        assert_eq!(memory_energy(&c).total(), 0.0);
+    }
+
+    #[test]
+    fn matched_mac_costs_more_than_dense_mac() {
+        let dense = EnergyCounters {
+            zero_macs: 1000,
+            ..Default::default()
+        };
+        let sparse = EnergyCounters {
+            matched_macs: 1000,
+            ..Default::default()
+        };
+        let ed = compute_energy(&dense);
+        let es = compute_energy(&sparse);
+        assert!(es.nonzero_j > ed.zero_j, "match circuitry adds energy");
+    }
+
+    #[test]
+    fn sparse_wins_when_matched_fraction_low() {
+        // Dense does 1000 MACs; two-sided does the 170 effectual ones.
+        let dense = EnergyCounters {
+            zero_macs: 830,
+            matched_macs: 170,
+            ..Default::default()
+        };
+        // For the dense arch all MACs cost E_MAC only; model that via
+        // zero_macs bucket + matched at dense price: approximate by
+        // comparing total MAC-only energy.
+        let two_sided = EnergyCounters {
+            matched_macs: 170,
+            chunk_ops: 40,
+            ..Default::default()
+        };
+        let dense_j = 1000.0 * super::p::E_MAC_PJ * 1e-12;
+        let sparse_j = compute_energy(&two_sided).total();
+        assert!(
+            sparse_j < dense_j,
+            "sparse {sparse_j} should beat dense {dense_j} at 17% density product"
+        );
+        let _ = dense;
+    }
+
+    #[test]
+    fn dram_split_scales_linearly() {
+        let c = EnergyCounters {
+            dram_nz_bytes: 1_000_000,
+            dram_zero_bytes: 500_000,
+            ..Default::default()
+        };
+        let m = memory_energy(&c);
+        assert!((m.nonzero_j / m.zero_j - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,45 @@
+//! # BARISTA — Barrier-Free Large-Scale Sparse Tensor Accelerator
+//!
+//! A full reproduction of *"Barrier-Free Large-Scale Sparse Tensor
+//! Accelerator (BARISTA) For Convolutional Neural Networks"* (Gondimalla,
+//! Gundabolu, Vijaykumar, Thottethodi — Purdue, 2021) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the cycle-level accelerator simulator and
+//!   run coordinator: the BARISTA compute grid (FGRs × IFGCs × PEs),
+//!   telescoping request combining, filter snarfing, output-buffer
+//!   coloring, dynamic round-robin sub-chunk assignment, hierarchical
+//!   buffering, GB-S inter-filter balancing — plus every baseline the
+//!   paper evaluates (Dense/TPU, One-sided/Cnvlutin, SCNN, SparTen,
+//!   Synchronous, BARISTA-no-opts, Unlimited-buffer, Ideal), a banked
+//!   on-chip cache model, and 45-nm energy/area models.
+//! * **Layer 2 (python/compile/model.py)** — the functional sparse-CNN
+//!   compute graph in JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — the bitmask sparse-chunk
+//!   GEMM hot-spot as a Pallas kernel (interpret mode on CPU), verified
+//!   against a pure-jnp oracle.
+//!
+//! The Rust binary is self-contained after `make artifacts`; Python never
+//! runs on the simulation/request path. The [`runtime`] module loads the
+//! AOT artifacts via the PJRT CPU client to compute *real* feature-map
+//! sparsity for the end-to-end driver and to cross-check functional
+//! numerics against an independent Rust conv implementation.
+//!
+//! See `DESIGN.md` for the paper-to-module inventory and `EXPERIMENTS.md`
+//! for reproduced tables/figures.
+
+pub mod arch;
+pub mod baselines;
+pub mod barista;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub use config::{ArchKind, SimConfig};

@@ -1,0 +1,214 @@
+//! `barista` — leader entrypoint.
+//!
+//! Commands:
+//!   simulate   simulate one benchmark on one architecture
+//!   sweep      full benchmark × architecture sweep (Figure 7 data)
+//!   report     regenerate a named table/figure into out/
+//!   golden     run the AOT artifacts through PJRT and cross-check vs the
+//!              native Rust reference (requires `make artifacts`)
+//!   info       print Table 1 / Table 2 style configuration info
+//!
+//! Examples:
+//!   barista simulate --network alexnet --arch barista --window-cap 512
+//!   barista sweep --window-cap 256 --out out/sweep.json
+//!   barista report --figure fig7
+//!   barista golden --artifacts artifacts
+
+use barista::cli::Args;
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{report, run_one, Coordinator, RunRequest};
+use barista::workload::{network, Benchmark};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "report" => cmd_report(&args),
+        "golden" => cmd_golden(&args),
+        "info" => cmd_info(&args),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try 'barista help')")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "barista — Barrier-Free Large-Scale Sparse Tensor Accelerator simulator\n\
+         \n\
+         USAGE: barista <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 simulate  --network <name> --arch <name> [--window-cap N] [--batch N] [--seed N]\n\
+         \x20 sweep     [--window-cap N] [--batch N] [--seed N] [--out FILE]\n\
+         \x20 report    --figure <fig7|fig8|fig9> [--window-cap N]\n\
+         \x20 golden    [--artifacts DIR]\n\
+         \x20 info      [--network <name>]\n\
+         \n\
+         NETWORKS: alexnet resnet18 inception-v4 vggnet resnet50\n\
+         ARCHS:    dense one-sided scnn sparten sparten-iso synchronous\n\
+         \x20         barista-no-opts barista unlimited-buffer ideal"
+    );
+}
+
+fn parse_common(args: &Args, arch: ArchKind) -> Result<SimConfig, String> {
+    let mut cfg = SimConfig::paper(arch);
+    cfg.window_cap = args.get_usize("window-cap", cfg.window_cap)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn parse_benchmark(args: &Args) -> Result<Benchmark, String> {
+    let name = args.get_or("network", "alexnet");
+    Benchmark::parse(name).ok_or_else(|| format!("unknown network '{name}'"))
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let arch_name = args.get_or("arch", "barista");
+    let arch = ArchKind::parse(arch_name).ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
+    let cfg = parse_common(args, arch)?;
+    let benchmark = parse_benchmark(args)?;
+    let res = run_one(&RunRequest {
+        benchmark,
+        config: cfg,
+    });
+    println!(
+        "{} on {}: {:.3e} cycles ({:.3} ms @1GHz), host {:.0} ms",
+        benchmark,
+        arch,
+        res.network.cycles,
+        res.network.cycles / 1e6,
+        res.host_ms
+    );
+    let bd = &res.network.breakdown;
+    let t = bd.total().max(1.0);
+    println!(
+        "breakdown: nonzero {:.1}%  zero {:.1}%  barrier {:.1}%  bandwidth {:.1}%  other {:.1}%",
+        100.0 * bd.nonzero / t,
+        100.0 * bd.zero / t,
+        100.0 * bd.barrier / t,
+        100.0 * bd.bandwidth / t,
+        100.0 * bd.other / t
+    );
+    println!(
+        "traffic: {} cache lines + {} refetch lines (ratio {:.2})",
+        res.network.traffic.cache_lines,
+        res.network.traffic.refetch_lines,
+        res.network.refetch_ratio()
+    );
+    if args.flag("json") {
+        println!("{}", res.network.to_json().pretty());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let base = parse_common(args, ArchKind::Barista)?;
+    let coord = Coordinator::new();
+    let results = coord.sweep(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    let (txt, _csv) = report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7);
+    println!("{txt}");
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report::results_json(&results).pretty())
+            .map_err(|e| format!("write {out}: {e}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<(), String> {
+    let base = parse_common(args, ArchKind::Barista)?;
+    let fig = args.get_or("figure", "fig7");
+    let coord = Coordinator::new();
+    let results = coord.sweep(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    let (txt, csv) = match fig {
+        "fig7" => report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7),
+        "fig8" => report::fig8_breakdown(&results, &Benchmark::ALL, &ArchKind::FIG7),
+        "fig9" => report::fig9_energy(
+            &results,
+            &Benchmark::ALL,
+            &[
+                ArchKind::Dense,
+                ArchKind::OneSided,
+                ArchKind::SparTen,
+                ArchKind::Barista,
+            ],
+        ),
+        other => return Err(format!("unknown figure '{other}'")),
+    };
+    println!("{txt}");
+    let path = report::write_out(&format!("{fig}.csv"), &csv)
+        .map_err(|e| format!("write out/{fig}.csv: {e}"))?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<(), String> {
+    let dir = args.get_or("artifacts", "artifacts");
+    barista::runtime::golden_check(dir).map_err(|e| format!("{e:#}"))
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    if let Some(name) = args.get("network") {
+        let b = Benchmark::parse(name).ok_or_else(|| format!("unknown network '{name}'"))?;
+        let spec = network(b);
+        println!(
+            "{}: {} conv layers, filter density {:.3}, map density {:.3} (Table 1)",
+            b,
+            spec.layers.len(),
+            spec.filter_density,
+            spec.map_density
+        );
+        for (i, (g, (fd, md))) in spec
+            .layers
+            .iter()
+            .zip(spec.layer_densities())
+            .enumerate()
+        {
+            println!(
+                "  L{i:<3} {}x{}x{} k{} s{} n{} | chunks {:>3} | df {:.3} dm {:.3}",
+                g.h,
+                g.w,
+                g.d,
+                g.k,
+                g.stride,
+                g.n,
+                g.chunks(),
+                fd,
+                md
+            );
+        }
+    } else {
+        println!("architectures (Table 2):");
+        for arch in ArchKind::ALL {
+            let c = SimConfig::paper(arch);
+            println!(
+                "  {:<18} {:>6} MACs/cluster × {:>4} clusters = {:>6} MACs, {} banks, {} MB cache",
+                arch.name(),
+                c.macs_per_cluster,
+                c.clusters,
+                c.total_macs(),
+                c.cache_banks,
+                c.cache_bytes >> 20
+            );
+        }
+    }
+    Ok(())
+}

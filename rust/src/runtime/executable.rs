@@ -1,0 +1,112 @@
+//! Loading + executing AOT HLO-text artifacts on the PJRT CPU client.
+//!
+//! Pattern follows `/opt/xla-example/load_hlo`: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True` on the Python side, so
+//! every result is unwrapped with `to_tuple1`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// One compiled artifact, ready to execute.
+pub struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (file stem), for diagnostics.
+    pub name: String,
+}
+
+impl LoadedExec {
+    /// Execute on f32 input buffers with the given shapes. Returns the
+    /// flattened f32 output (first tuple element).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .with_context(|| format!("reshape input to {shape:?} for {}", self.name))?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrap result tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Cache of compiled artifacts, keyed by file stem. Compiling an HLO
+/// module is expensive (~10-100 ms), so executables are compiled once and
+/// reused across the run — this is the "one compiled executable per model
+/// variant" rule from the architecture.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedExec>>>,
+}
+
+impl ArtifactStore {
+    /// Open a store over `dir` (usually `artifacts/`) with a fresh PJRT
+    /// CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(ArtifactStore {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// PJRT platform name (e.g. "cpu"), for diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names (file stems) of all `.hlo.txt` artifacts present on disk.
+    pub fn available(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for e in entries.flatten() {
+                let p = e.path();
+                if let Some(s) = p.file_name().and_then(|s| s.to_str()) {
+                    if let Some(stem) = s.strip_suffix(".hlo.txt") {
+                        names.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+
+    /// Load (compile-once, cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedExec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {name}"))?;
+        let loaded = std::sync::Arc::new(LoadedExec {
+            exe,
+            name: name.to_string(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+}

@@ -1,0 +1,175 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! Python runs only at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the JAX/Pallas functional model to **HLO text** (text, not
+//! serialized proto — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids). This
+//! module loads those artifacts with the `xla` crate's PJRT CPU client
+//! and executes them from Rust — Python is never on the request path.
+//!
+//! Used by the end-to-end driver to (a) run the real functional CNN and
+//! harvest *measured* ReLU sparsity per layer, and (b) cross-check the
+//! XLA numerics against [`golden`], an independent Rust implementation.
+
+pub mod executable;
+pub mod golden;
+
+pub use executable::{ArtifactStore, LoadedExec};
+pub use golden::{conv_gemm_ref, relu_inplace, GoldenCnn};
+
+use crate::tensor::LayerGeom;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+
+// ---------------------------------------------------------------------
+// Artifact contract — kept in sync with python/compile/aot.py (tested by
+// `barista golden` and the end_to_end example).
+// ---------------------------------------------------------------------
+
+/// `chunk_gemm` artifact shapes: (M, K, N).
+pub const CHUNK_GEMM_SHAPE: (usize, usize, usize) = (64, 1152, 256);
+/// `smallcnn` artifact: batch, spatial, and the channel chain.
+pub const SMALLCNN_BATCH: usize = 4;
+pub const SMALLCNN_HW: usize = 16;
+pub const SMALLCNN_C: [usize; 4] = [8, 16, 16, 32];
+
+/// Geometry of the small CNN's three layers.
+pub fn smallcnn_geoms() -> [LayerGeom; 3] {
+    let g = |d: usize, n: usize| LayerGeom {
+        h: SMALLCNN_HW,
+        w: SMALLCNN_HW,
+        d,
+        k: 3,
+        n,
+        stride: 1,
+        pad: 1,
+    };
+    [
+        g(SMALLCNN_C[0], SMALLCNN_C[1]),
+        g(SMALLCNN_C[1], SMALLCNN_C[2]),
+        g(SMALLCNN_C[2], SMALLCNN_C[3]),
+    ]
+}
+
+/// Build a deterministic pruned small CNN (weights ~`density` non-zero).
+pub fn smallcnn_golden(seed: u64, density: f64) -> GoldenCnn {
+    let mut rng = Pcg32::new(seed, 0x901D);
+    let layers = smallcnn_geoms()
+        .into_iter()
+        .map(|geom| {
+            let weights: Vec<f32> = (0..geom.vec_len() * geom.n)
+                .map(|_| {
+                    if rng.gen_bool(density) {
+                        (rng.next_f64() as f32 - 0.5) * 0.4
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let bias: Vec<f32> = (0..geom.n)
+                .map(|_| (rng.next_f64() as f32 - 0.5) * 0.1)
+                .collect();
+            golden::GoldenLayer {
+                geom,
+                weights,
+                bias,
+            }
+        })
+        .collect();
+    GoldenCnn { layers }
+}
+
+/// Max |a-b| over two slices (shape-checked).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Cross-check the AOT artifacts against the native Rust reference:
+/// 1. `chunk_gemm` (the L1 Pallas kernel) vs `conv_gemm_ref`;
+/// 2. `smallcnn` (the L2 model) vs `GoldenCnn::forward`.
+///
+/// Prints a summary; errors if any artifact is missing or the numerics
+/// diverge beyond f32 tolerance.
+pub fn golden_check(artifacts_dir: &str) -> Result<()> {
+    let store = ArtifactStore::open(artifacts_dir)?;
+    println!(
+        "PJRT platform: {}; artifacts: {:?}",
+        store.platform(),
+        store.available()
+    );
+
+    // --- L1 kernel numerics -------------------------------------------
+    let (m, k, n) = CHUNK_GEMM_SHAPE;
+    let mut rng = Pcg32::new(0xA07, 1);
+    let gen = |rng: &mut Pcg32, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.next_f64() as f32 - 0.5).collect()
+    };
+    let gen_mask = |rng: &mut Pcg32, len: usize, d: f64| -> Vec<f32> {
+        (0..len)
+            .map(|_| if rng.gen_bool(d) { 1.0 } else { 0.0 })
+            .collect()
+    };
+    let a = gen(&mut rng, m * k);
+    let am = gen_mask(&mut rng, m * k, 0.37); // ~Table 1 filter density
+    let b = gen(&mut rng, k * n);
+    let bm = gen_mask(&mut rng, k * n, 0.47); // ~Table 1 map density
+    let exe = store.load("chunk_gemm").context("load chunk_gemm")?;
+    let got = exe.run_f32(&[
+        (&a, &[m as i64, k as i64]),
+        (&am, &[m as i64, k as i64]),
+        (&b, &[k as i64, n as i64]),
+        (&bm, &[k as i64, n as i64]),
+    ])?;
+    let masked_a: Vec<f32> = a.iter().zip(&am).map(|(x, m)| x * m).collect();
+    let masked_b: Vec<f32> = b.iter().zip(&bm).map(|(x, m)| x * m).collect();
+    let want = conv_gemm_ref(m, k, n, &masked_a, &masked_b);
+    let diff = max_abs_diff(&got, &want);
+    println!("chunk_gemm: PJRT vs rust-ref max|Δ| = {diff:.2e} over {} cells", got.len());
+    if diff > 1e-3 {
+        bail!("chunk_gemm numerics diverge: max|Δ| = {diff}");
+    }
+
+    // --- L2 model numerics --------------------------------------------
+    let cnn = smallcnn_golden(0xBEEF, 0.5);
+    let bsz = SMALLCNN_BATCH;
+    let x: Vec<f32> = {
+        let mut r = Pcg32::new(0xBEEF, 7);
+        (0..bsz * SMALLCNN_HW * SMALLCNN_HW * SMALLCNN_C[0])
+            .map(|_| r.next_f64() as f32 - 0.5)
+            .collect()
+    };
+    let exe = store.load("smallcnn").context("load smallcnn")?;
+    let hw = SMALLCNN_HW as i64;
+    let mut inputs: Vec<(&[f32], Vec<i64>)> = vec![(
+        &x,
+        vec![bsz as i64, hw, hw, SMALLCNN_C[0] as i64],
+    )];
+    for l in &cnn.layers {
+        inputs.push((
+            &l.weights,
+            vec![3, 3, l.geom.d as i64, l.geom.n as i64],
+        ));
+        inputs.push((&l.bias, vec![l.geom.n as i64]));
+    }
+    let input_refs: Vec<(&[f32], &[i64])> =
+        inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+    let got = exe.run_f32(&input_refs)?;
+    let (want, obs) = cnn.forward(&x, bsz);
+    let diff = max_abs_diff(&got, &want);
+    println!("smallcnn: PJRT vs rust-ref max|Δ| = {diff:.2e} over {} cells", got.len());
+    for (i, o) in obs.iter().enumerate() {
+        println!(
+            "  layer {i}: measured output density {:.3}, filter density {:.3}",
+            o.output_density, o.filter_density
+        );
+    }
+    if diff > 1e-2 {
+        bail!("smallcnn numerics diverge: max|Δ| = {diff}");
+    }
+    println!("golden check OK — JAX/Pallas AOT path and native Rust reference agree");
+    Ok(())
+}

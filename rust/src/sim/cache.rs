@@ -1,0 +1,185 @@
+//! Banked on-chip cache timing model (Table 2: 32 banks sparse, 8 dense).
+//!
+//! Each bank serves one chunk-line (144 B: 128 B values + 16 B mask) per
+//! `service` cycles; concurrent requests to the same bank queue FIFO.
+//! Every access additionally sees a pipelined `latency`. This is where
+//! SparTen's bursty asynchronous refetches turn into the
+//! bandwidth-imposed delay of Figure 8: bursts of requests conflict on
+//! banks and queue (paper §5.3 — "The bursts cause significant queuing
+//! due to cache bank conflicts which BARISTA avoids by controlling the
+//! refetches").
+
+/// Bytes per chunk line (128 B int8 values + 128-bit mask).
+pub const LINE_BYTES: u64 = 144;
+
+/// Cache lines for a `chunks`-chunk block stored in the bit-mask sparse
+/// representation: each chunk carries `density × 128` value bytes plus a
+/// 16-byte mask, packed into 144-byte lines.
+pub fn sparse_block_lines(chunks: u64, density: f64) -> u64 {
+    let bytes = (chunks as f64 * (density.clamp(0.0, 1.0) * 128.0 + 16.0)).ceil() as u64;
+    crate::util::ceil_div(bytes.max(1), LINE_BYTES)
+}
+
+/// Cache lines for a dense (no-mask) `chunks`-chunk block.
+pub fn dense_block_lines(chunks: u64) -> u64 {
+    crate::util::ceil_div(chunks * 128, LINE_BYTES)
+}
+
+#[derive(Debug, Clone)]
+pub struct BankedCache {
+    /// Next cycle each bank is free.
+    bank_free: Vec<u64>,
+    /// Cycles a bank is occupied per line.
+    pub service: u64,
+    /// Pipelined access latency added to every response.
+    pub latency: u64,
+    /// Lines served (for traffic accounting).
+    pub lines_served: u64,
+    /// Total cycles requests spent queued behind busy banks.
+    pub queue_delay: u64,
+}
+
+impl BankedCache {
+    pub fn new(banks: usize, service: u64, latency: u64) -> Self {
+        assert!(banks > 0);
+        BankedCache {
+            bank_free: vec![0; banks],
+            service,
+            latency,
+            lines_served: 0,
+            queue_delay: 0,
+        }
+    }
+
+    pub fn banks(&self) -> usize {
+        self.bank_free.len()
+    }
+
+    /// Request one line at absolute time `now`; `line` selects the bank
+    /// (consecutive chunk lines of a tensor stripe across banks).
+    /// Returns the cycle the data is available to the requester.
+    pub fn access(&mut self, now: u64, line: u64) -> u64 {
+        let b = (line % self.bank_free.len() as u64) as usize;
+        let start = now.max(self.bank_free[b]);
+        self.queue_delay += start - now;
+        self.bank_free[b] = start + self.service;
+        self.lines_served += 1;
+        start + self.service + self.latency
+    }
+
+    /// Request `lines` consecutive lines starting at `first_line` (a
+    /// chunk-block fetch, e.g. all chunks of one window). Lines stripe
+    /// across banks and can be served in parallel; returns when the
+    /// *last* line arrives.
+    pub fn access_block(&mut self, now: u64, first_line: u64, lines: u64) -> u64 {
+        let mut ready = now;
+        for i in 0..lines {
+            ready = ready.max(self.access(now, first_line + i));
+        }
+        ready
+    }
+
+    /// An idealized access (unlimited bandwidth): latency only, no bank
+    /// occupancy. Used by the Ideal configuration.
+    pub fn access_ideal(&mut self, now: u64) -> u64 {
+        self.lines_served += 1;
+        now + self.latency
+    }
+
+    /// Reset timing state between layers (traffic counters persist).
+    pub fn new_layer(&mut self) {
+        for b in &mut self.bank_free {
+            *b = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_lines_scale_with_density() {
+        // 18 chunks at density 1.0: 18*144 B = 18 lines.
+        assert_eq!(sparse_block_lines(18, 1.0), 18);
+        // At density ~0.44: 18*(56.3+16)=1302 B → 10 lines.
+        assert_eq!(sparse_block_lines(18, 0.44), 10);
+        // Mask overhead floors it above zero.
+        assert!(sparse_block_lines(18, 0.0) >= 2);
+        assert_eq!(dense_block_lines(18), 16);
+    }
+
+    #[test]
+    fn uncontended_access_is_service_plus_latency() {
+        let mut c = BankedCache::new(4, 2, 20);
+        assert_eq!(c.access(100, 0), 122);
+        assert_eq!(c.queue_delay, 0);
+    }
+
+    #[test]
+    fn same_bank_queues_fifo() {
+        let mut c = BankedCache::new(4, 2, 20);
+        let r1 = c.access(0, 0);
+        let r2 = c.access(0, 4); // same bank (4 % 4 == 0)
+        let r3 = c.access(0, 8);
+        assert_eq!(r1, 22);
+        assert_eq!(r2, 24);
+        assert_eq!(r3, 26);
+        assert_eq!(c.queue_delay, 2 + 4);
+    }
+
+    #[test]
+    fn different_banks_parallel() {
+        let mut c = BankedCache::new(4, 2, 20);
+        let r1 = c.access(0, 0);
+        let r2 = c.access(0, 1);
+        assert_eq!(r1, r2);
+        assert_eq!(c.queue_delay, 0);
+    }
+
+    #[test]
+    fn block_fetch_stripes() {
+        let mut c = BankedCache::new(8, 2, 20);
+        // 8 lines over 8 banks: all parallel.
+        assert_eq!(c.access_block(0, 0, 8), 22);
+        c.new_layer();
+        // 16 lines over 8 banks: two rounds on each bank.
+        assert_eq!(c.access_block(0, 0, 16), 24);
+    }
+
+    #[test]
+    fn fewer_banks_increase_delay() {
+        let mut narrow = BankedCache::new(2, 2, 20);
+        let mut wide = BankedCache::new(32, 2, 20);
+        let n = narrow.access_block(0, 0, 32);
+        let w = wide.access_block(0, 0, 32);
+        assert!(n > w, "2 banks {n} should be slower than 32 banks {w}");
+    }
+
+    #[test]
+    fn new_layer_resets_timing_not_traffic() {
+        let mut c = BankedCache::new(2, 2, 20);
+        c.access(0, 0);
+        c.access(0, 2);
+        assert_eq!(c.lines_served, 2);
+        c.new_layer();
+        assert_eq!(c.access(0, 0), 22, "bank free again");
+        assert_eq!(c.lines_served, 3, "traffic persists");
+    }
+
+    #[test]
+    fn ideal_access_never_queues() {
+        let mut c = BankedCache::new(1, 100, 20);
+        assert_eq!(c.access_ideal(0), 20);
+        assert_eq!(c.access_ideal(0), 20);
+        assert_eq!(c.queue_delay, 0);
+    }
+
+    #[test]
+    fn request_after_bank_free_no_delay() {
+        let mut c = BankedCache::new(1, 2, 20);
+        c.access(0, 0);
+        assert_eq!(c.access(10, 0), 32);
+        assert_eq!(c.queue_delay, 0);
+    }
+}

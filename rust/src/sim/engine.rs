@@ -1,0 +1,234 @@
+//! Discrete-event utilities: a stable min-time event heap and the
+//! slack-window request grouper shared by filter snarfing and the
+//! broadcast models.
+//!
+//! The architecture models advance per-node *local clocks* in program
+//! order and synchronize only through shared resources; whenever multiple
+//! nodes contend for a resource, their requests are replayed in event-time
+//! order through these utilities (conservative, deterministic: ties break
+//! by sequence number).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A min-heap of timestamped events with FIFO tie-breaking.
+#[derive(Debug)]
+pub struct EventHeap<T> {
+    heap: BinaryHeap<Reverse<(u64, u64, EventEntry<T>)>>,
+    seq: u64,
+}
+
+/// Wrapper so `T` needs no `Ord` — ordering is by (time, seq) only.
+#[derive(Debug)]
+struct EventEntry<T>(T);
+
+impl<T> PartialEq for EventEntry<T> {
+    fn eq(&self, _: &Self) -> bool {
+        true
+    }
+}
+impl<T> Eq for EventEntry<T> {}
+impl<T> PartialOrd for EventEntry<T> {
+    fn partial_cmp(&self, _: &Self) -> Option<std::cmp::Ordering> {
+        Some(std::cmp::Ordering::Equal)
+    }
+}
+impl<T> Ord for EventEntry<T> {
+    fn cmp(&self, _: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+
+impl<T> EventHeap<T> {
+    pub fn new() -> Self {
+        EventHeap {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, time: u64, item: T) {
+        self.heap.push(Reverse((time, self.seq, EventEntry(item))));
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        self.heap.pop().map(|Reverse((t, _, e))| (t, e.0))
+    }
+
+    pub fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T> Default for EventHeap<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A group of requests served by one shared fetch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestGroup {
+    /// Time the fetch is issued (when the group closes: the latest join).
+    pub issue_time: u64,
+    /// Indices (into the caller's request list) of the members.
+    pub members: Vec<usize>,
+}
+
+/// Group time-sorted requests by a slack window: a request joins the
+/// current group if it arrives within `slack` cycles of the group's
+/// *first* request; otherwise it opens a new group. This models snarfing
+/// (a response can be placed in peers' buffers only if they are close
+/// enough behind to have a free buffer) and simple broadcast combining.
+///
+/// `requests` are `(need_time, id)` pairs; they do not have to be sorted.
+/// Returns groups in issue order; `members` hold positions in the
+/// *sorted* request order mapped back to the caller's `id`s.
+pub fn group_requests(requests: &[(u64, usize)], slack: u64) -> Vec<(RequestGroup, Vec<usize>)> {
+    if requests.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted: Vec<(u64, usize)> = requests.to_vec();
+    sorted.sort_unstable();
+    let mut out: Vec<(RequestGroup, Vec<usize>)> = Vec::new();
+    let mut start = sorted[0].0;
+    let mut members: Vec<usize> = Vec::new();
+    let mut ids: Vec<usize> = Vec::new();
+    let mut last = start;
+    for (i, &(t, id)) in sorted.iter().enumerate() {
+        if t.saturating_sub(start) > slack {
+            out.push((
+                RequestGroup {
+                    issue_time: last,
+                    members: std::mem::take(&mut members),
+                },
+                std::mem::take(&mut ids),
+            ));
+            start = t;
+        }
+        members.push(i);
+        ids.push(id);
+        last = t;
+    }
+    out.push((
+        RequestGroup {
+            issue_time: last,
+            members,
+        },
+        ids,
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn heap_orders_by_time_then_fifo() {
+        let mut h = EventHeap::new();
+        h.push(10, "b");
+        h.push(5, "a");
+        h.push(10, "c");
+        assert_eq!(h.pop(), Some((5, "a")));
+        assert_eq!(h.pop(), Some((10, "b")));
+        assert_eq!(h.pop(), Some((10, "c")));
+        assert_eq!(h.pop(), None);
+    }
+
+    #[test]
+    fn heap_peek_and_len() {
+        let mut h: EventHeap<u32> = EventHeap::new();
+        assert!(h.is_empty());
+        h.push(3, 1);
+        h.push(1, 2);
+        assert_eq!(h.peek_time(), Some(1));
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn grouping_by_slack() {
+        // Requests at 0, 5, 8, 100, 101: slack 10 → {0,5,8}, {100,101}.
+        let reqs = vec![(0, 0), (5, 1), (8, 2), (100, 3), (101, 4)];
+        let gs = group_requests(&reqs, 10);
+        assert_eq!(gs.len(), 2);
+        assert_eq!(gs[0].1, vec![0, 1, 2]);
+        assert_eq!(gs[0].0.issue_time, 8);
+        assert_eq!(gs[1].1, vec![3, 4]);
+    }
+
+    #[test]
+    fn zero_slack_groups_identical_times_only() {
+        let reqs = vec![(5, 0), (5, 1), (6, 2)];
+        let gs = group_requests(&reqs, 0);
+        assert_eq!(gs.len(), 2);
+        assert_eq!(gs[0].1, vec![0, 1]);
+        assert_eq!(gs[1].1, vec![2]);
+    }
+
+    #[test]
+    fn unsorted_input_handled() {
+        let reqs = vec![(100, 0), (1, 1), (2, 2)];
+        let gs = group_requests(&reqs, 5);
+        assert_eq!(gs.len(), 2);
+        assert_eq!(gs[0].1, vec![1, 2]);
+        assert_eq!(gs[1].1, vec![0]);
+    }
+
+    #[test]
+    fn prop_groups_partition_requests() {
+        run_prop("groups partition", 0x9A0, 200, |rng| {
+            let n = 1 + rng.gen_range(100) as usize;
+            let reqs: Vec<(u64, usize)> = (0..n)
+                .map(|i| (rng.gen_range(1000) as u64, i))
+                .collect();
+            let slack = rng.gen_range(50) as u64;
+            let gs = group_requests(&reqs, slack);
+            let mut seen: Vec<usize> = gs.iter().flat_map(|(_, ids)| ids.clone()).collect();
+            seen.sort_unstable();
+            if seen != (0..n).collect::<Vec<_>>() {
+                return Err("ids not a partition".into());
+            }
+            // Each group spans ≤ slack from its first member's time.
+            for (_, ids) in &gs {
+                let times: Vec<u64> = ids.iter().map(|&id| reqs[id].0).collect();
+                let lo = *times.iter().min().unwrap();
+                let hi = *times.iter().max().unwrap();
+                if hi - lo > slack {
+                    return Err(format!("group spans {} > slack {slack}", hi - lo));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_heap_pops_sorted() {
+        run_prop("heap sorted", 0x4EAD, 100, |rng| {
+            let mut h = EventHeap::new();
+            let n = 1 + rng.gen_range(200) as usize;
+            for i in 0..n {
+                h.push(rng.gen_range(1000) as u64, i);
+            }
+            let mut last = 0;
+            while let Some((t, _)) = h.pop() {
+                if t < last {
+                    return Err("out of order".into());
+                }
+                last = t;
+            }
+            Ok(())
+        });
+    }
+}

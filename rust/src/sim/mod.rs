@@ -1,0 +1,24 @@
+//! Simulation core shared by all architecture models.
+//!
+//! * [`stats`] — execution-time breakdown accounting (Figure 8's five
+//!   components), traffic and energy counters, per-layer/per-network
+//!   results;
+//! * [`cache`] — the banked on-chip cache: per-bank service time, FIFO
+//!   queuing, pipelined latency (Table 2: 32 banks sparse / 8 dense);
+//! * [`engine`] — discrete-event utilities: the event heap and the
+//!   time-ordered request grouping used by the telescoping combiner and
+//!   filter snarfing.
+//!
+//! Fidelity model (see DESIGN.md §Simulator-fidelity): node-granularity
+//! conservative simulation. Every (filter, window) pass's compute time is
+//! exact per-PE mask arithmetic; fetches interact through the shared
+//! banked cache; nodes keep asynchronous local clocks that only
+//! synchronize where the architecture under test says they must.
+
+pub mod cache;
+pub mod engine;
+pub mod stats;
+
+pub use cache::BankedCache;
+pub use engine::{group_requests, EventHeap};
+pub use stats::{Breakdown, EnergyCounters, LayerResult, NetworkResult, Traffic};

@@ -1,0 +1,277 @@
+//! Result accounting: execution-time breakdown, traffic, energy counters.
+//!
+//! The paper's Figure 8 decomposes execution time into five components:
+//! non-zero computation, zero computation, barrier loss, bandwidth-imposed
+//! delay, and "other" (SCNN's Cartesian-product overheads). We account in
+//! *PE-cycles* (cycles × PEs involved) so components add up exactly to
+//! `cycles × total_PEs` and normalize cleanly across architectures with
+//! different PE counts.
+
+use crate::util::Json;
+
+/// Execution-time components, in PE-cycles.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    /// Effectual multiply-accumulate work (+ the sparse pipeline's fixed
+    /// per-chunk overheads, which exist exactly when work exists).
+    pub nonzero: f64,
+    /// Cycles spent multiplying zeros (dense and one-sided architectures).
+    pub zero: f64,
+    /// Waiting imposed by (implicit) barriers: broadcast syncs, intra-node
+    /// PE syncs without coloring, buffer-full waits on laggards.
+    pub barrier: f64,
+    /// Waiting for data: cache queueing + latency beyond overlap.
+    pub bandwidth: f64,
+    /// Architecture-specific overheads (SCNN Cartesian product, output
+    /// crossbar serialization).
+    pub other: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.nonzero + self.zero + self.barrier + self.bandwidth + self.other
+    }
+
+    pub fn add(&mut self, o: &Breakdown) {
+        self.nonzero += o.nonzero;
+        self.zero += o.zero;
+        self.barrier += o.barrier;
+        self.bandwidth += o.bandwidth;
+        self.other += o.other;
+    }
+
+    pub fn scaled(&self, s: f64) -> Breakdown {
+        Breakdown {
+            nonzero: self.nonzero * s,
+            zero: self.zero * s,
+            barrier: self.barrier * s,
+            bandwidth: self.bandwidth * s,
+            other: self.other * s,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("nonzero", self.nonzero)
+            .set("zero", self.zero)
+            .set("barrier", self.barrier)
+            .set("bandwidth", self.bandwidth)
+            .set("other", self.other);
+        j
+    }
+}
+
+/// On-chip and off-chip traffic counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Traffic {
+    /// Chunk-lines fetched from the on-chip cache (first fetches).
+    pub cache_lines: u64,
+    /// Chunk-lines re-fetched (the waste BARISTA's combining/snarfing
+    /// eliminates — Figure 11's Y axis is refetches per datum).
+    pub refetch_lines: u64,
+    /// DRAM bytes that are non-zero payload (values + masks/pointers).
+    pub dram_nz_bytes: u64,
+    /// DRAM bytes that are zeros (dense representations only).
+    pub dram_zero_bytes: u64,
+}
+
+impl Traffic {
+    pub fn add(&mut self, o: &Traffic) {
+        self.cache_lines += o.cache_lines;
+        self.refetch_lines += o.refetch_lines;
+        self.dram_nz_bytes += o.dram_nz_bytes;
+        self.dram_zero_bytes += o.dram_zero_bytes;
+    }
+
+    pub fn scaled(&self, s: f64) -> Traffic {
+        Traffic {
+            cache_lines: (self.cache_lines as f64 * s) as u64,
+            refetch_lines: (self.refetch_lines as f64 * s) as u64,
+            dram_nz_bytes: (self.dram_nz_bytes as f64 * s) as u64,
+            dram_zero_bytes: (self.dram_zero_bytes as f64 * s) as u64,
+        }
+    }
+}
+
+/// Raw event counts the energy model integrates (see `energy::model`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyCounters {
+    /// Effectual (matched) MACs executed through two-sided match circuitry.
+    pub matched_macs: u64,
+    /// Effectual MACs executed without two-sided matching (dense
+    /// architectures' non-zero work, one-sided effectual ops).
+    pub plain_macs: u64,
+    /// Zero-operand MACs executed (dense / one-sided).
+    pub zero_macs: u64,
+    /// Sparse chunk pipeline operations (mask AND + prefix sum +
+    /// priority encode), one per chunk per PE pass.
+    pub chunk_ops: u64,
+    /// One-sided chunk ops (cheaper match: single-operand offsets).
+    pub chunk_ops_one_sided: u64,
+    /// Bytes moved through on-chip buffers (reads + writes).
+    pub buffer_bytes: u64,
+    /// Bytes read from the on-chip cache.
+    pub cache_bytes: u64,
+    /// Non-zero DRAM bytes.
+    pub dram_nz_bytes: u64,
+    /// Zero DRAM bytes.
+    pub dram_zero_bytes: u64,
+}
+
+impl EnergyCounters {
+    pub fn add(&mut self, o: &EnergyCounters) {
+        self.matched_macs += o.matched_macs;
+        self.plain_macs += o.plain_macs;
+        self.zero_macs += o.zero_macs;
+        self.chunk_ops += o.chunk_ops;
+        self.chunk_ops_one_sided += o.chunk_ops_one_sided;
+        self.buffer_bytes += o.buffer_bytes;
+        self.cache_bytes += o.cache_bytes;
+        self.dram_nz_bytes += o.dram_nz_bytes;
+        self.dram_zero_bytes += o.dram_zero_bytes;
+    }
+
+    pub fn scaled(&self, s: f64) -> EnergyCounters {
+        let f = |x: u64| (x as f64 * s) as u64;
+        EnergyCounters {
+            matched_macs: f(self.matched_macs),
+            plain_macs: f(self.plain_macs),
+            zero_macs: f(self.zero_macs),
+            chunk_ops: f(self.chunk_ops),
+            chunk_ops_one_sided: f(self.chunk_ops_one_sided),
+            buffer_bytes: f(self.buffer_bytes),
+            cache_bytes: f(self.cache_bytes),
+            dram_nz_bytes: f(self.dram_nz_bytes),
+            dram_zero_bytes: f(self.dram_zero_bytes),
+        }
+    }
+}
+
+/// One layer's simulation outcome (already scaled to the full layer if
+/// windows were sampled).
+#[derive(Debug, Clone, Default)]
+pub struct LayerResult {
+    /// End-to-end cycles for the layer.
+    pub cycles: f64,
+    pub breakdown: Breakdown,
+    pub traffic: Traffic,
+    pub energy: EnergyCounters,
+    /// Peak buffering observed (bytes) — the Unlimited-buffer study.
+    pub peak_buffer_bytes: u64,
+    /// Average refetches per fetched datum (Figure 11).
+    pub refetch_ratio: f64,
+}
+
+/// A network's aggregated result.
+#[derive(Debug, Clone, Default)]
+pub struct NetworkResult {
+    pub arch: String,
+    pub benchmark: String,
+    pub layers: Vec<LayerResult>,
+    pub cycles: f64,
+    pub breakdown: Breakdown,
+    pub traffic: Traffic,
+    pub energy: EnergyCounters,
+    pub peak_buffer_bytes: u64,
+}
+
+impl NetworkResult {
+    pub fn from_layers(arch: &str, benchmark: &str, layers: Vec<LayerResult>) -> NetworkResult {
+        let mut r = NetworkResult {
+            arch: arch.to_string(),
+            benchmark: benchmark.to_string(),
+            ..Default::default()
+        };
+        for l in &layers {
+            r.cycles += l.cycles;
+            r.breakdown.add(&l.breakdown);
+            r.traffic.add(&l.traffic);
+            r.energy.add(&l.energy);
+            r.peak_buffer_bytes = r.peak_buffer_bytes.max(l.peak_buffer_bytes);
+        }
+        r.layers = layers;
+        r
+    }
+
+    /// Mean refetch ratio across layers (Figure 11 reports the average).
+    pub fn refetch_ratio(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.refetch_ratio).sum::<f64>() / self.layers.len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("arch", self.arch.as_str())
+            .set("benchmark", self.benchmark.as_str())
+            .set("cycles", self.cycles)
+            .set("breakdown", self.breakdown.to_json())
+            .set("cache_lines", self.traffic.cache_lines)
+            .set("refetch_lines", self.traffic.refetch_lines)
+            .set("refetch_ratio", self.refetch_ratio())
+            .set("peak_buffer_bytes", self.peak_buffer_bytes);
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_and_add() {
+        let mut a = Breakdown {
+            nonzero: 1.0,
+            zero: 2.0,
+            barrier: 3.0,
+            bandwidth: 4.0,
+            other: 5.0,
+        };
+        assert_eq!(a.total(), 15.0);
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.total(), 30.0);
+        assert_eq!(a.scaled(0.5).total(), 15.0);
+    }
+
+    #[test]
+    fn network_aggregates_layers() {
+        let l1 = LayerResult {
+            cycles: 100.0,
+            peak_buffer_bytes: 10,
+            refetch_ratio: 2.0,
+            ..Default::default()
+        };
+        let l2 = LayerResult {
+            cycles: 50.0,
+            peak_buffer_bytes: 30,
+            refetch_ratio: 4.0,
+            ..Default::default()
+        };
+        let n = NetworkResult::from_layers("barista", "alexnet", vec![l1, l2]);
+        assert_eq!(n.cycles, 150.0);
+        assert_eq!(n.peak_buffer_bytes, 30);
+        assert_eq!(n.refetch_ratio(), 3.0);
+    }
+
+    #[test]
+    fn counters_scale() {
+        let e = EnergyCounters {
+            matched_macs: 100,
+            cache_bytes: 50,
+            ..Default::default()
+        };
+        let s = e.scaled(2.0);
+        assert_eq!(s.matched_macs, 200);
+        assert_eq!(s.cache_bytes, 100);
+    }
+
+    #[test]
+    fn json_shape() {
+        let n = NetworkResult::from_layers("x", "y", vec![]);
+        let j = n.to_json();
+        assert_eq!(j.get("arch").unwrap().as_str().unwrap(), "x");
+        assert!(j.get("breakdown").unwrap().get("nonzero").is_some());
+    }
+}

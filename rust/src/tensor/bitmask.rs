@@ -1,0 +1,330 @@
+//! Bit-mask sparse chunks (`u128` masks, 32-bit sub-chunks).
+//!
+//! Timing simulation only needs masks (how many positions match), not
+//! values: a PE's work on a chunk pair is `popcount(maskF & maskI)`
+//! multiply-accumulates. The functional path (PJRT golden check and the
+//! Pallas kernel) carries real values; see `runtime::golden` and
+//! `python/compile/kernels/`.
+
+use crate::util::rng::Pcg32;
+
+/// Cells per chunk — the paper's hardware granularity (128 `int8` cells,
+/// one 128-bit occupancy mask).
+pub const CHUNK_BITS: usize = 128;
+
+/// Cells per sub-chunk — the slice of a chunk one PE processes. With 4
+/// PEs per node a 128-cell chunk splits into four 32-cell sub-chunks,
+/// which also shrinks the prefix-sum/priority-encode circuitry (paper
+/// §3.1, §5.6).
+pub const SUBCHUNK_BITS: usize = 32;
+
+/// Sub-chunks per chunk.
+pub const SUBCHUNKS: usize = CHUNK_BITS / SUBCHUNK_BITS;
+
+/// A single chunk occupancy mask.
+pub type ChunkMask = u128;
+
+/// One sparse chunk: occupancy mask + non-zero count cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparseChunk {
+    pub mask: ChunkMask,
+}
+
+impl SparseChunk {
+    pub const EMPTY: SparseChunk = SparseChunk { mask: 0 };
+
+    pub fn new(mask: ChunkMask) -> Self {
+        SparseChunk { mask }
+    }
+
+    /// Number of non-zero cells in this chunk.
+    #[inline]
+    pub fn nnz(&self) -> u32 {
+        self.mask.count_ones()
+    }
+
+    /// Density in [0,1].
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / CHUNK_BITS as f64
+    }
+
+    /// Number of matching non-zero positions against another chunk — the
+    /// number of effectual multiplies a two-sided sparse PE performs.
+    #[inline]
+    pub fn matched(&self, other: &SparseChunk) -> u32 {
+        (self.mask & other.mask).count_ones()
+    }
+
+    /// Mask of sub-chunk `i` (0..SUBCHUNKS), shifted down to the low bits.
+    #[inline]
+    pub fn subchunk(&self, i: usize) -> u32 {
+        debug_assert!(i < SUBCHUNKS);
+        ((self.mask >> (i * SUBCHUNK_BITS)) & 0xFFFF_FFFF) as u32
+    }
+
+    /// Matched count restricted to sub-chunk `i` of both chunks.
+    #[inline]
+    pub fn matched_sub(&self, other: &SparseChunk, i: usize) -> u32 {
+        (self.subchunk(i) & other.subchunk(i)).count_ones()
+    }
+
+    /// Random chunk with an *exact* number of non-zeros (hypergeometric
+    /// position draw), for workloads with tightly controlled density.
+    pub fn random_exact(rng: &mut Pcg32, nnz: u32) -> Self {
+        let nnz = nnz.min(CHUNK_BITS as u32);
+        // Floyd's algorithm for sampling nnz distinct positions.
+        let mut mask: u128 = 0;
+        let n = CHUNK_BITS as u32;
+        for j in (n - nnz)..n {
+            let t = rng.gen_range(j + 1);
+            let bit = 1u128 << t;
+            if mask & bit != 0 {
+                mask |= 1u128 << j;
+            } else {
+                mask |= bit;
+            }
+        }
+        SparseChunk { mask }
+    }
+
+    /// Random chunk where each cell is non-zero with probability `p`
+    /// (Bernoulli draw — models natural density variation across chunks).
+    pub fn random_bernoulli(rng: &mut Pcg32, p: f64) -> Self {
+        let mut mask: u128 = 0;
+        // Draw 128 bits from 4 u32s thresholded per-bit is slow; draw per
+        // bit only when p is not 0/1.
+        if p >= 1.0 {
+            return SparseChunk { mask: u128::MAX };
+        }
+        if p <= 0.0 {
+            return SparseChunk::EMPTY;
+        }
+        for i in 0..CHUNK_BITS {
+            if rng.gen_bool(p) {
+                mask |= 1u128 << i;
+            }
+        }
+        SparseChunk { mask }
+    }
+
+    /// Restrict the mask to the first `valid` cells (for the tail chunk of
+    /// a vector whose length is not a multiple of 128).
+    pub fn truncate(&self, valid: usize) -> Self {
+        if valid >= CHUNK_BITS {
+            return *self;
+        }
+        let keep = if valid == 0 {
+            0
+        } else {
+            (1u128 << valid) - 1
+        };
+        SparseChunk {
+            mask: self.mask & keep,
+        }
+    }
+}
+
+/// A matrix of sparse chunks: `rows` sparse vectors (filters or input-map
+/// windows), each of `chunks` chunks. Flat storage, row-major.
+#[derive(Debug, Clone)]
+pub struct MaskMatrix {
+    pub rows: usize,
+    pub chunks: usize,
+    data: Vec<SparseChunk>,
+}
+
+impl MaskMatrix {
+    pub fn zeroed(rows: usize, chunks: usize) -> Self {
+        MaskMatrix {
+            rows,
+            chunks,
+            data: vec![SparseChunk::EMPTY; rows * chunks],
+        }
+    }
+
+    /// Generate `rows` vectors of `vec_len` cells at mean density
+    /// `density`, with per-row lognormal-ish jitter of relative stddev
+    /// `row_jitter` (models the density spread across filters / windows
+    /// that drives load imbalance in the paper).
+    pub fn random(
+        rng: &mut Pcg32,
+        rows: usize,
+        vec_len: usize,
+        density: f64,
+        row_jitter: f64,
+    ) -> Self {
+        let chunks = crate::util::ceil_div(vec_len as u64, CHUNK_BITS as u64) as usize;
+        let mut m = MaskMatrix::zeroed(rows, chunks);
+        for r in 0..rows {
+            // Per-row density: clamp a jittered draw into (0, 1).
+            let d = (density * (1.0 + row_jitter * rng.gen_normal())).clamp(0.005, 0.995);
+            for c in 0..chunks {
+                let mut ch = SparseChunk::random_bernoulli(rng, d);
+                let valid = (vec_len - c * CHUNK_BITS).min(CHUNK_BITS);
+                ch = ch.truncate(valid);
+                m.set(r, c, ch);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, chunk: usize) -> SparseChunk {
+        self.data[row * self.chunks + chunk]
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, chunk: usize, v: SparseChunk) {
+        self.data[row * self.chunks + chunk] = v;
+    }
+
+    /// Slice of one row's chunks.
+    #[inline]
+    pub fn row(&self, row: usize) -> &[SparseChunk] {
+        &self.data[row * self.chunks..(row + 1) * self.chunks]
+    }
+
+    /// Total non-zeros in a row.
+    pub fn row_nnz(&self, row: usize) -> u64 {
+        self.row(row).iter().map(|c| c.nnz() as u64).sum()
+    }
+
+    /// Total non-zeros in the matrix.
+    pub fn total_nnz(&self) -> u64 {
+        (0..self.rows).map(|r| self.row_nnz(r)).sum()
+    }
+
+    /// Overall density relative to `rows * chunks * CHUNK_BITS` cells.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.chunks == 0 {
+            return 0.0;
+        }
+        self.total_nnz() as f64 / (self.rows * self.chunks * CHUNK_BITS) as f64
+    }
+
+    /// Effectual multiplies between row `a` of `self` and row `b` of
+    /// `other` (sum of per-chunk matched counts). Rows must have equal
+    /// chunk counts.
+    pub fn matched_row(&self, a: usize, other: &MaskMatrix, b: usize) -> u64 {
+        debug_assert_eq!(self.chunks, other.chunks);
+        self.row(a)
+            .iter()
+            .zip(other.row(b))
+            .map(|(x, y)| x.matched(y) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn matched_is_intersection_popcount() {
+        let a = SparseChunk::new(0b1011);
+        let b = SparseChunk::new(0b0110);
+        assert_eq!(a.matched(&b), 1);
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(b.nnz(), 2);
+    }
+
+    #[test]
+    fn subchunk_partition_covers_chunk() {
+        let mut rng = Pcg32::seeded(1);
+        let c = SparseChunk::random_bernoulli(&mut rng, 0.5);
+        let total: u32 = (0..SUBCHUNKS).map(|i| c.subchunk(i).count_ones()).sum();
+        assert_eq!(total, c.nnz());
+    }
+
+    #[test]
+    fn exact_nnz() {
+        let mut rng = Pcg32::seeded(2);
+        for nnz in [0u32, 1, 7, 64, 128] {
+            let c = SparseChunk::random_exact(&mut rng, nnz);
+            assert_eq!(c.nnz(), nnz);
+        }
+    }
+
+    #[test]
+    fn truncate_kills_high_bits() {
+        let c = SparseChunk::new(u128::MAX);
+        assert_eq!(c.truncate(5).nnz(), 5);
+        assert_eq!(c.truncate(0).nnz(), 0);
+        assert_eq!(c.truncate(128).nnz(), 128);
+        assert_eq!(c.truncate(200).nnz(), 128);
+    }
+
+    #[test]
+    fn bernoulli_density_tracks_p() {
+        let mut rng = Pcg32::seeded(3);
+        let mut total = 0u32;
+        let n = 500;
+        for _ in 0..n {
+            total += SparseChunk::random_bernoulli(&mut rng, 0.4).nnz();
+        }
+        let d = total as f64 / (n * 128) as f64;
+        assert!((d - 0.4).abs() < 0.02, "density {d}");
+    }
+
+    #[test]
+    fn matrix_density_tracks_request() {
+        let mut rng = Pcg32::seeded(4);
+        let m = MaskMatrix::random(&mut rng, 64, 1152, 0.35, 0.1);
+        assert_eq!(m.chunks, 9);
+        let d = m.density();
+        assert!((d - 0.35).abs() < 0.05, "density {d}");
+    }
+
+    #[test]
+    fn matrix_tail_chunk_truncated() {
+        let mut rng = Pcg32::seeded(5);
+        // vec_len = 150 → chunk 1 has only 22 valid cells.
+        let m = MaskMatrix::random(&mut rng, 8, 150, 0.9, 0.0);
+        for r in 0..8 {
+            assert!(m.get(r, 1).nnz() <= 22);
+        }
+    }
+
+    #[test]
+    fn matched_row_symmetric() {
+        let mut rng = Pcg32::seeded(6);
+        let a = MaskMatrix::random(&mut rng, 4, 512, 0.5, 0.0);
+        let b = MaskMatrix::random(&mut rng, 4, 512, 0.5, 0.0);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(a.matched_row(i, &b, j), b.matched_row(j, &a, i));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_matched_bounded_by_min_nnz() {
+        run_prop("matched<=min(nnz)", 0xBA1157A, 200, |rng| {
+            let da = rng.next_f64();
+            let a = SparseChunk::random_bernoulli(rng, da);
+            let db = rng.next_f64();
+            let b = SparseChunk::random_bernoulli(rng, db);
+            let m = a.matched(&b);
+            if m > a.nnz().min(b.nnz()) {
+                return Err(format!("matched {m} > min nnz"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_subchunk_matched_sums_to_chunk_matched() {
+        run_prop("sum(matched_sub)==matched", 0xC0FFEE, 200, |rng| {
+            let da = rng.next_f64();
+            let a = SparseChunk::random_bernoulli(rng, da);
+            let db = rng.next_f64();
+            let b = SparseChunk::random_bernoulli(rng, db);
+            let total: u32 = (0..SUBCHUNKS).map(|i| a.matched_sub(&b, i)).sum();
+            if total != a.matched(&b) {
+                return Err(format!("{total} != {}", a.matched(&b)));
+            }
+            Ok(())
+        });
+    }
+}

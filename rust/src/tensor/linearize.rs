@@ -1,0 +1,165 @@
+//! Convolution → chunked-GEMM linearization (the paper's interface:
+//! "The interface linearizes tensors, which may be laid out
+//! non-contiguously in memory, into vectors for the relevant operations",
+//! §3).
+//!
+//! A conv layer with `n` filters of `k×k×d` over an `h×w×d` input at
+//! stride `s` becomes a sparse matrix-matrix product:
+//! `filters[n, k²d] × windows[k²d, out_h*out_w*batch]` where each column
+//! is one im2col window. Both operands are chunked into 128-cell chunks.
+
+/// Geometry of one convolutional layer, as the accelerator sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerGeom {
+    /// Input feature map height.
+    pub h: usize,
+    /// Input feature map width.
+    pub w: usize,
+    /// Input channels (depth).
+    pub d: usize,
+    /// Filter spatial size (k × k).
+    pub k: usize,
+    /// Number of filters (output channels).
+    pub n: usize,
+    /// Convolution stride.
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+}
+
+impl LayerGeom {
+    /// Output spatial height.
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Output spatial width.
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Linearized vector length per window / per filter: k²·d.
+    pub fn vec_len(&self) -> usize {
+        self.k * self.k * self.d
+    }
+
+    /// Chunks per linearized vector.
+    pub fn chunks(&self) -> usize {
+        crate::util::ceil_div(self.vec_len() as u64, super::CHUNK_BITS as u64) as usize
+    }
+
+    /// Number of im2col windows (output positions) per image.
+    pub fn windows_per_image(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// Total windows for a minibatch.
+    pub fn windows(&self, batch: usize) -> usize {
+        self.windows_per_image() * batch
+    }
+
+    /// Dense multiply-accumulate count for a minibatch — the work a dense
+    /// accelerator performs (every cell, zero or not).
+    pub fn dense_macs(&self, batch: usize) -> u64 {
+        self.windows(batch) as u64 * self.vec_len() as u64 * self.n as u64
+    }
+
+    /// Dense output cells for a minibatch.
+    pub fn output_cells(&self, batch: usize) -> u64 {
+        self.windows(batch) as u64 * self.n as u64
+    }
+
+    /// Dense input-map bytes for a minibatch (int8).
+    pub fn input_bytes(&self, batch: usize) -> u64 {
+        (self.h * self.w * self.d * batch) as u64
+    }
+
+    /// Dense filter bytes (int8).
+    pub fn filter_bytes(&self) -> u64 {
+        (self.vec_len() * self.n) as u64
+    }
+}
+
+/// Dimensions of the im2col GEMM for a layer: `(M, K, N_cols)` =
+/// `(filters, k²d, windows·batch)`.
+pub fn im2col_dims(g: &LayerGeom, batch: usize) -> (usize, usize, usize) {
+    (g.n, g.vec_len(), g.windows(batch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alexnet_l3() -> LayerGeom {
+        // AlexNet conv3: 13x13x256 input, 3x3x256 filters, 384 outputs.
+        LayerGeom {
+            h: 13,
+            w: 13,
+            d: 256,
+            k: 3,
+            n: 384,
+            stride: 1,
+            pad: 1,
+        }
+    }
+
+    #[test]
+    fn alexnet_l3_geometry() {
+        let g = alexnet_l3();
+        assert_eq!(g.out_h(), 13);
+        assert_eq!(g.out_w(), 13);
+        assert_eq!(g.vec_len(), 2304);
+        assert_eq!(g.chunks(), 18);
+        assert_eq!(g.windows_per_image(), 169);
+    }
+
+    #[test]
+    fn dense_mac_count() {
+        let g = alexnet_l3();
+        // 169 windows * 2304 * 384 per image.
+        assert_eq!(g.dense_macs(1), 169 * 2304 * 384);
+        assert_eq!(g.dense_macs(32), 32 * 169 * 2304 * 384);
+    }
+
+    #[test]
+    fn stride_and_pad() {
+        // AlexNet conv1: 224x224x3, 11x11, stride 4, no pad → 55x55? With
+        // pad 2: (224+4-11)/4+1 = 55.
+        let g = LayerGeom {
+            h: 224,
+            w: 224,
+            d: 3,
+            k: 11,
+            n: 96,
+            stride: 4,
+            pad: 2,
+        };
+        assert_eq!(g.out_h(), 55);
+        assert_eq!(g.out_w(), 55);
+    }
+
+    #[test]
+    fn im2col_shape() {
+        let g = alexnet_l3();
+        let (m, k, n) = im2col_dims(&g, 32);
+        assert_eq!(m, 384);
+        assert_eq!(k, 2304);
+        assert_eq!(n, 169 * 32);
+    }
+
+    #[test]
+    fn tail_chunk_counts() {
+        // vec_len 2304 is exactly 18 chunks; 1x1x100 conv is 1 chunk.
+        let g = LayerGeom {
+            h: 7,
+            w: 7,
+            d: 100,
+            k: 1,
+            n: 10,
+            stride: 1,
+            pad: 0,
+        };
+        assert_eq!(g.vec_len(), 100);
+        assert_eq!(g.chunks(), 1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Sparse tensor representation used throughout the simulator and the
+//! functional model.
+//!
+//! The paper (following SparTen [20]) represents a sparse vector as a
+//! sequence of fixed-size *chunks*: a 128-bit occupancy mask plus a
+//! packed vector of the non-zero `int8` values. The key timing quantity
+//! for two-sided sparse compute is the number of *matching* non-zero
+//! positions between a filter chunk and an input-map chunk —
+//! `popcount(maskF & maskI)` — which is exactly what [`bitmask`] computes
+//! with `u128` words.
+//!
+//! [`linearize`] implements the paper's interface contract: convolutions
+//! are linearized (im2col) into chunked vectors so the accelerator only
+//! ever sees matrix-vector / matrix-matrix products over chunked sparse
+//! vectors.
+
+pub mod bitmask;
+pub mod linearize;
+
+pub use bitmask::{ChunkMask, MaskMatrix, SparseChunk, CHUNK_BITS, SUBCHUNK_BITS, SUBCHUNKS};
+pub use linearize::{im2col_dims, LayerGeom};

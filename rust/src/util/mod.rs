@@ -1,0 +1,58 @@
+//! Small self-contained utilities that replace crates unavailable in the
+//! offline vendored build (`rand`, `serde_json`, `proptest`, `criterion`).
+//!
+//! Everything here is deterministic and dependency-free so simulation
+//! results are exactly reproducible from a seed.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Pcg32;
+pub use stats::Summary;
+
+/// Geometric mean of a slice of positive values. Returns 0.0 on empty input.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_empty_is_zero() {
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_single() {
+        assert!((geomean(&[7.5]) - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ceil_div_exact_and_inexact() {
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(ceil_div(9, 4), 3);
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+}

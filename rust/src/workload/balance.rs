@@ -1,0 +1,177 @@
+//! GB-S inter-filter load balancing, BARISTA's variant (paper §3.3.3).
+//!
+//! SparTen's software Greedy Balancing sorts whole filters by density and
+//! co-locates densest-with-sparsest pairs on one PE. BARISTA keeps the
+//! density *sort* but drops co-location (which serializes pairs and idles
+//! nodes at scale); instead it alternates the filter-to-node assignment
+//! between increasing and decreasing density order on consecutive input
+//! maps, so a node that got a dense filter for map `t` gets a sparse one
+//! for map `t+1` — only two fixed output-channel permutations, undone by
+//! a 2-1 multiplexor in the conversion unit (vs GB-H's full permutation
+//! network).
+
+use crate::tensor::MaskMatrix;
+
+/// Filters sorted by descending density (total nnz). Returns the
+/// permutation: `order[rank] = original_filter_index`. Ties break by
+/// index so the order is deterministic.
+pub fn gb_s_order(filters: &MaskMatrix) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..filters.rows).collect();
+    let nnz: Vec<u64> = (0..filters.rows).map(|r| filters.row_nnz(r)).collect();
+    idx.sort_by(|&a, &b| nnz[b].cmp(&nnz[a]).then(a.cmp(&b)));
+    idx
+}
+
+/// The filter each node position receives for input map `map_idx`, given
+/// the density-sorted order. Even maps walk the order forward
+/// (descending density), odd maps backward (ascending): consecutive maps
+/// see mutually-reverse orderings (the paper's two fixed permutations).
+///
+/// `positions` is the number of node slots being filled (e.g. one FGR
+/// round = `fgrs` filters). Returns `positions` filter indices starting
+/// at `round * positions` into the sorted order, wrapping filters that
+/// run out (callers bound `round` so this only happens on the ragged
+/// tail).
+pub fn alternating_assignment(
+    order: &[usize],
+    positions: usize,
+    round: usize,
+    map_idx: usize,
+    alternate: bool,
+) -> Vec<usize> {
+    let base = round * positions;
+    (0..positions)
+        .map(|slot| {
+            let rank = if alternate && map_idx % 2 == 1 {
+                base + (positions - 1 - slot)
+            } else {
+                base + slot
+            };
+            order[rank % order.len()]
+        })
+        .collect()
+}
+
+/// Work spread metric: coefficient of variation of per-position total
+/// work when assigning `order` across `positions` nodes. Used by tests
+/// and the ablation bench to show GB-S + alternation lowers the spread.
+pub fn assignment_cv(filters: &MaskMatrix, assignment: &[Vec<usize>]) -> f64 {
+    // assignment[map_idx][slot] = filter index
+    let positions = assignment.first().map(|a| a.len()).unwrap_or(0);
+    if positions == 0 {
+        return 0.0;
+    }
+    let mut per_slot = vec![0u64; positions];
+    for round in assignment {
+        for (slot, &f) in round.iter().enumerate() {
+            per_slot[slot] += filters.row_nnz(f);
+        }
+    }
+    let mut s = crate::util::stats::Summary::new();
+    for w in &per_slot {
+        s.add(*w as f64);
+    }
+    s.cv()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Pcg32;
+
+    fn filters(seed: u64, rows: usize) -> MaskMatrix {
+        let mut rng = Pcg32::seeded(seed);
+        MaskMatrix::random(&mut rng, rows, 1024, 0.4, 0.3)
+    }
+
+    #[test]
+    fn order_is_descending_density() {
+        let f = filters(1, 64);
+        let order = gb_s_order(&f);
+        for w in order.windows(2) {
+            assert!(f.row_nnz(w[0]) >= f.row_nnz(w[1]));
+        }
+    }
+
+    #[test]
+    fn order_is_permutation() {
+        let f = filters(2, 100);
+        let mut order = gb_s_order(&f);
+        order.sort_unstable();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn alternation_reverses_consecutive_maps() {
+        let f = filters(3, 64);
+        let order = gb_s_order(&f);
+        let even = alternating_assignment(&order, 64, 0, 0, true);
+        let odd = alternating_assignment(&order, 64, 0, 1, true);
+        let mut rev = even.clone();
+        rev.reverse();
+        assert_eq!(odd, rev);
+    }
+
+    #[test]
+    fn no_alternation_is_stable() {
+        let f = filters(4, 64);
+        let order = gb_s_order(&f);
+        let a = alternating_assignment(&order, 64, 0, 0, false);
+        let b = alternating_assignment(&order, 64, 0, 5, false);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn alternation_reduces_systematic_imbalance() {
+        let f = filters(5, 64);
+        let order = gb_s_order(&f);
+        // 16 consecutive maps, one round of 64 filters.
+        let with: Vec<Vec<usize>> = (0..16)
+            .map(|m| alternating_assignment(&order, 64, 0, m, true))
+            .collect();
+        let without: Vec<Vec<usize>> = (0..16)
+            .map(|m| alternating_assignment(&order, 64, 0, m, false))
+            .collect();
+        let cv_with = assignment_cv(&f, &with);
+        let cv_without = assignment_cv(&f, &without);
+        assert!(
+            cv_with < cv_without * 0.5,
+            "alternation should halve the spread: {cv_with} vs {cv_without}"
+        );
+    }
+
+    #[test]
+    fn rounds_cover_all_filters() {
+        let f = filters(6, 128);
+        let order = gb_s_order(&f);
+        let mut seen = vec![false; 128];
+        for round in 0..2 {
+            for &fi in &alternating_assignment(&order, 64, round, 0, true) {
+                seen[fi] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn prop_assignment_is_valid_slice_of_order() {
+        run_prop("assignment validity", 0x6B5, 100, |rng| {
+            let rows = 8 + rng.gen_range(120) as usize;
+            let positions = 1 + rng.gen_range(64) as usize;
+            let f = filters(rng.next_u64(), rows);
+            let order = gb_s_order(&f);
+            let rounds = (rows + positions - 1) / positions;
+            let round = rng.gen_range(rounds as u32) as usize;
+            let m = rng.gen_range(32) as usize;
+            let a = alternating_assignment(&order, positions, round, m, true);
+            if a.len() != positions {
+                return Err("wrong length".into());
+            }
+            if a.iter().any(|&fi| fi >= rows) {
+                return Err("out of range filter".into());
+            }
+            Ok(())
+        });
+    }
+}

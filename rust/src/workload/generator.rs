@@ -1,0 +1,260 @@
+//! Synthesizes the chunked bitmask tensors the simulator consumes.
+//!
+//! For each layer we generate:
+//! * `filters` — `n` chunked mask vectors at the layer's filter density
+//!   with per-filter jitter (pruning leaves filters unevenly dense — the
+//!   inter-filter imbalance GB-S addresses);
+//! * `windows` — a *sample* of the im2col windows at the layer's map
+//!   density with per-window jitter (feature-map sparsity is dynamic and
+//!   bursty — the imbalance telescoping/coloring absorb). The sample is
+//!   capped (`SimConfig::window_cap`) and results are scaled by
+//!   `scale()`; window statistics are stationary so sampling preserves
+//!   comparative timing (DESIGN.md §Substitutions-4).
+
+use crate::config::SimConfig;
+use crate::tensor::{LayerGeom, MaskMatrix};
+use crate::util::rng::Pcg32;
+use crate::workload::networks::{network, Benchmark, NetworkSpec};
+
+/// Relative density spread across filters (pruned-filter variation).
+pub const FILTER_JITTER: f64 = 0.15;
+/// Relative density spread across windows (dynamic ReLU variation,
+/// larger than filter spread — paper §3.2: maps stray more than filters).
+pub const WINDOW_JITTER: f64 = 0.30;
+
+/// One layer's simulated workload.
+#[derive(Debug, Clone)]
+pub struct LayerWork {
+    pub index: usize,
+    pub geom: LayerGeom,
+    /// Chunked filter masks, `n × chunks`.
+    pub filters: MaskMatrix,
+    /// Chunked window masks, `sampled × chunks`.
+    pub windows: MaskMatrix,
+    /// Total windows in the full minibatch (before sampling).
+    pub total_windows: usize,
+    /// Filter density used for this layer.
+    pub filter_density: f64,
+    /// Input-map density used for this layer.
+    pub map_density: f64,
+}
+
+impl LayerWork {
+    /// Multiplier to scale sampled-window counts up to the full layer.
+    pub fn scale(&self) -> f64 {
+        self.total_windows as f64 / self.windows.rows.max(1) as f64
+    }
+
+    /// Dense MACs for the full layer (minibatch), the Dense baseline's
+    /// work and the normalization everything is compared against.
+    pub fn dense_macs(&self, batch: usize) -> u64 {
+        self.geom.dense_macs(batch)
+    }
+
+    /// Total effectual (two-sided matched) MACs across the *sampled*
+    /// windows — the lower bound on two-sided sparse compute.
+    pub fn matched_macs_sampled(&self) -> u64 {
+        let mut total = 0u64;
+        for f in 0..self.filters.rows {
+            for w in 0..self.windows.rows {
+                total += self.filters.matched_row(f, &self.windows, w);
+            }
+        }
+        total
+    }
+
+    /// One-sided effectual MACs (input-map zeros skipped, filter zeros
+    /// not) across sampled windows.
+    pub fn one_sided_macs_sampled(&self) -> u64 {
+        let wnnz: u64 = (0..self.windows.rows)
+            .map(|w| self.windows.row_nnz(w))
+            .sum();
+        wnnz * self.filters.rows as u64
+    }
+}
+
+/// A full network's workload.
+#[derive(Debug, Clone)]
+pub struct NetworkWork {
+    pub spec: NetworkSpec,
+    pub layers: Vec<LayerWork>,
+    pub batch: usize,
+}
+
+impl NetworkWork {
+    /// Generate the workload for `benchmark` under `cfg` (deterministic
+    /// in `cfg.seed`).
+    pub fn generate(benchmark: Benchmark, cfg: &SimConfig) -> NetworkWork {
+        let spec = network(benchmark);
+        Self::from_spec(spec, cfg)
+    }
+
+    /// Generate from an explicit spec (used by the end-to-end driver to
+    /// inject *measured* densities).
+    pub fn from_spec(spec: NetworkSpec, cfg: &SimConfig) -> NetworkWork {
+        let densities = spec.layer_densities();
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        for (i, (geom, (fd, md))) in spec.layers.iter().zip(densities).enumerate() {
+            layers.push(Self::layer(i, geom, fd, md, cfg));
+        }
+        NetworkWork {
+            spec,
+            layers,
+            batch: cfg.batch,
+        }
+    }
+
+    /// Generate a single layer's workload (also used directly by tests
+    /// and microbenches).
+    pub fn layer(
+        index: usize,
+        geom: &LayerGeom,
+        filter_density: f64,
+        map_density: f64,
+        cfg: &SimConfig,
+    ) -> LayerWork {
+        // Independent streams per (seed, layer, role) so changing the
+        // window cap does not perturb filter masks.
+        let mut frng = Pcg32::new(cfg.seed ^ 0xF11F, (index as u64) * 2 + 1);
+        let mut wrng = Pcg32::new(cfg.seed ^ 0x3A95, (index as u64) * 2 + 2);
+        let total_windows = geom.windows(cfg.batch);
+        let sampled = if cfg.window_cap == 0 {
+            total_windows
+        } else {
+            total_windows.min(cfg.window_cap)
+        };
+        let filters = MaskMatrix::random(
+            &mut frng,
+            geom.n,
+            geom.vec_len(),
+            filter_density,
+            FILTER_JITTER,
+        );
+        let windows = MaskMatrix::random(
+            &mut wrng,
+            sampled,
+            geom.vec_len(),
+            map_density,
+            WINDOW_JITTER,
+        );
+        LayerWork {
+            index,
+            geom: *geom,
+            filters,
+            windows,
+            total_windows,
+            filter_density,
+            map_density,
+        }
+    }
+
+    /// Total dense MACs for the minibatch.
+    pub fn dense_macs(&self) -> u64 {
+        self.spec.dense_macs(self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchKind;
+
+    fn small_cfg() -> SimConfig {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        c.window_cap = 64;
+        c.batch = 2;
+        c
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = small_cfg();
+        let a = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let b = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.filters.get(0, 0), y.filters.get(0, 0));
+            assert_eq!(x.windows.get(0, 0), y.windows.get(0, 0));
+            assert_eq!(x.matched_macs_sampled(), y.matched_macs_sampled());
+        }
+    }
+
+    #[test]
+    fn seed_changes_workload() {
+        let cfg = small_cfg();
+        let mut cfg2 = small_cfg();
+        cfg2.seed ^= 1;
+        let a = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let b = NetworkWork::generate(Benchmark::AlexNet, &cfg2);
+        assert_ne!(
+            a.layers[0].windows.get(0, 0),
+            b.layers[0].windows.get(0, 0)
+        );
+    }
+
+    #[test]
+    fn window_cap_respected_and_scaled() {
+        let cfg = small_cfg();
+        let w = NetworkWork::generate(Benchmark::VggNet, &cfg);
+        for l in &w.layers {
+            assert!(l.windows.rows <= 64);
+            let scale = l.scale();
+            assert!(
+                (scale - l.total_windows as f64 / l.windows.rows as f64).abs() < 1e-9
+            );
+            assert!(scale >= 1.0);
+        }
+    }
+
+    #[test]
+    fn densities_near_target() {
+        let cfg = small_cfg();
+        let w = NetworkWork::generate(Benchmark::ResNet18, &cfg);
+        for l in &w.layers {
+            // Skip tiny layers where sampling noise dominates.
+            if l.filters.rows * l.filters.chunks < 100 {
+                continue;
+            }
+            let fd = l.filters.density();
+            // Matrix density is per *allocated* cell, so the tail chunk's
+            // truncation scales the target by vec_len / (chunks*128).
+            let trunc = l.geom.vec_len() as f64
+                / (l.filters.chunks * crate::tensor::CHUNK_BITS) as f64;
+            let want = l.filter_density * trunc;
+            assert!(
+                (fd - want).abs() < 0.08,
+                "layer {}: filter density {fd} vs truncation-adjusted target {want}",
+                l.index,
+            );
+        }
+    }
+
+    #[test]
+    fn matched_leq_one_sided_leq_dense() {
+        let cfg = small_cfg();
+        let w = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        for l in &w.layers {
+            let matched = l.matched_macs_sampled();
+            let onesided = l.one_sided_macs_sampled();
+            let dense = l.windows.rows as u64 * l.geom.vec_len() as u64 * l.geom.n as u64;
+            assert!(matched <= onesided, "layer {}", l.index);
+            assert!(onesided <= dense, "layer {}", l.index);
+            assert!(matched > 0, "layer {} produced no work", l.index);
+        }
+    }
+
+    #[test]
+    fn filters_independent_of_window_cap() {
+        let cfg = small_cfg();
+        let mut cfg2 = small_cfg();
+        cfg2.window_cap = 32;
+        let a = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let b = NetworkWork::generate(Benchmark::AlexNet, &cfg2);
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            for f in 0..x.filters.rows {
+                for c in 0..x.filters.chunks {
+                    assert_eq!(x.filters.get(f, c), y.filters.get(f, c));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! CNN benchmark workloads (paper Table 1).
+//!
+//! [`networks`] holds the conv-layer tables of the five benchmarks with
+//! the paper's measured network-average filter / input-map densities.
+//! [`generator`] synthesizes the chunked bitmask tensors the simulator
+//! consumes (see DESIGN.md §Substitutions for why masks at matched
+//! densities preserve the paper's behaviour). [`balance`] implements the
+//! GB-S inter-filter load-balancing variant (§3.3.3).
+
+pub mod balance;
+pub mod generator;
+pub mod networks;
+
+pub use balance::{alternating_assignment, gb_s_order};
+pub use generator::{LayerWork, NetworkWork};
+pub use networks::{network, Benchmark, NetworkSpec};

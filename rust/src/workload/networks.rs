@@ -1,0 +1,353 @@
+//! Conv-layer tables for the paper's five benchmarks (Table 1).
+//!
+//! Layer geometries are the standard published architectures; densities
+//! are the paper's network averages (filter density from magnitude
+//! pruning + retraining [23], input-map density from ReLU statistics),
+//! with deterministic per-layer modulation: early layers are denser,
+//! deep layers sparser — the universally observed profile (e.g. SparTen
+//! Fig. 12, Cnvlutin Table 1) — normalized so the *network average*
+//! matches Table 1 exactly.
+
+use crate::tensor::LayerGeom;
+
+/// The five benchmarks of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    AlexNet,
+    ResNet18,
+    InceptionV4,
+    VggNet,
+    ResNet50,
+}
+
+impl Benchmark {
+    /// Ordered by increasing sparsity opportunity, as Figure 7's X axis.
+    pub const ALL: [Benchmark; 5] = [
+        Benchmark::AlexNet,
+        Benchmark::ResNet18,
+        Benchmark::InceptionV4,
+        Benchmark::VggNet,
+        Benchmark::ResNet50,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Benchmark::AlexNet => "alexnet",
+            Benchmark::ResNet18 => "resnet18",
+            Benchmark::InceptionV4 => "inception-v4",
+            Benchmark::VggNet => "vggnet",
+            Benchmark::ResNet50 => "resnet50",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Benchmark> {
+        Self::ALL.iter().copied().find(|b| b.name() == s)
+    }
+}
+
+impl std::fmt::Display for Benchmark {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A benchmark's full conv-layer specification.
+#[derive(Debug, Clone)]
+pub struct NetworkSpec {
+    pub benchmark: Benchmark,
+    pub layers: Vec<LayerGeom>,
+    /// Network-average filter density (Table 1).
+    pub filter_density: f64,
+    /// Network-average input-map density (Table 1).
+    pub map_density: f64,
+}
+
+impl NetworkSpec {
+    /// Per-layer (filter, map) densities: a deterministic depth profile
+    /// normalized so averages match Table 1. Input maps of layer 0 are
+    /// raw images (density ≈ 1.0 conceptually, but the paper reports the
+    /// network average including layer 0 — we use the same profile for
+    /// simplicity and normalize across all layers).
+    pub fn layer_densities(&self) -> Vec<(f64, f64)> {
+        profile(self.layers.len(), self.filter_density, self.map_density)
+    }
+
+    /// Total dense MACs for a minibatch.
+    pub fn dense_macs(&self, batch: usize) -> u64 {
+        self.layers.iter().map(|g| g.dense_macs(batch)).sum()
+    }
+}
+
+/// Depth-decaying density profile with average pinned to `avg`:
+/// raw_i = clamp(avg * (1.25 - 0.5 * i/(L-1)), lo, hi), then rescaled.
+fn profile(layers: usize, filter_avg: f64, map_avg: f64) -> Vec<(f64, f64)> {
+    let shape = |i: usize, avg: f64| -> f64 {
+        let t = if layers <= 1 {
+            0.5
+        } else {
+            i as f64 / (layers - 1) as f64
+        };
+        (avg * (1.25 - 0.5 * t)).clamp(0.02, 0.98)
+    };
+    let mut fs: Vec<f64> = (0..layers).map(|i| shape(i, filter_avg)).collect();
+    let mut ms: Vec<f64> = (0..layers).map(|i| shape(i, map_avg)).collect();
+    // Pin the mean exactly (scaling preserves the monotone profile).
+    let rescale = |v: &mut Vec<f64>, avg: f64| {
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let s = avg / mean;
+        for x in v.iter_mut() {
+            *x = (*x * s).clamp(0.02, 0.98);
+        }
+    };
+    rescale(&mut fs, filter_avg);
+    rescale(&mut ms, map_avg);
+    fs.into_iter().zip(ms).collect()
+}
+
+fn conv(h: usize, w: usize, d: usize, k: usize, n: usize, stride: usize, pad: usize) -> LayerGeom {
+    LayerGeom {
+        h,
+        w,
+        d,
+        k,
+        n,
+        stride,
+        pad,
+    }
+}
+
+/// Build the layer table for a benchmark.
+pub fn network(b: Benchmark) -> NetworkSpec {
+    match b {
+        Benchmark::AlexNet => NetworkSpec {
+            benchmark: b,
+            // The classic 5 conv layers (224×224 ImageNet input).
+            layers: vec![
+                conv(224, 224, 3, 11, 96, 4, 2),
+                conv(27, 27, 96, 5, 256, 1, 2),
+                conv(13, 13, 256, 3, 384, 1, 1),
+                conv(13, 13, 384, 3, 384, 1, 1),
+                conv(13, 13, 384, 3, 256, 1, 1),
+            ],
+            filter_density: 0.368,
+            map_density: 0.473,
+        },
+        Benchmark::VggNet => NetworkSpec {
+            benchmark: b,
+            // VGG-16's 13 conv layers.
+            layers: vec![
+                conv(224, 224, 3, 3, 64, 1, 1),
+                conv(224, 224, 64, 3, 64, 1, 1),
+                conv(112, 112, 64, 3, 128, 1, 1),
+                conv(112, 112, 128, 3, 128, 1, 1),
+                conv(56, 56, 128, 3, 256, 1, 1),
+                conv(56, 56, 256, 3, 256, 1, 1),
+                conv(56, 56, 256, 3, 256, 1, 1),
+                conv(28, 28, 256, 3, 512, 1, 1),
+                conv(28, 28, 512, 3, 512, 1, 1),
+                conv(28, 28, 512, 3, 512, 1, 1),
+                conv(14, 14, 512, 3, 512, 1, 1),
+                conv(14, 14, 512, 3, 512, 1, 1),
+                conv(14, 14, 512, 3, 512, 1, 1),
+            ],
+            filter_density: 0.334,
+            map_density: 0.446,
+        },
+        Benchmark::ResNet18 => NetworkSpec {
+            benchmark: b,
+            // conv1 + 8 basic blocks × 2 convs = 17 layers (Table 1).
+            layers: {
+                let mut v = vec![conv(224, 224, 3, 7, 64, 2, 3)];
+                // stage 1: 56×56, 64ch
+                for _ in 0..2 {
+                    v.push(conv(56, 56, 64, 3, 64, 1, 1));
+                    v.push(conv(56, 56, 64, 3, 64, 1, 1));
+                }
+                // stage 2: first block downsamples 56→28, 64→128
+                v.push(conv(56, 56, 64, 3, 128, 2, 1));
+                v.push(conv(28, 28, 128, 3, 128, 1, 1));
+                v.push(conv(28, 28, 128, 3, 128, 1, 1));
+                v.push(conv(28, 28, 128, 3, 128, 1, 1));
+                // stage 3: 28→14, 128→256
+                v.push(conv(28, 28, 128, 3, 256, 2, 1));
+                v.push(conv(14, 14, 256, 3, 256, 1, 1));
+                v.push(conv(14, 14, 256, 3, 256, 1, 1));
+                v.push(conv(14, 14, 256, 3, 256, 1, 1));
+                // stage 4: 14→7, 256→512
+                v.push(conv(14, 14, 256, 3, 512, 2, 1));
+                v.push(conv(7, 7, 512, 3, 512, 1, 1));
+                v.push(conv(7, 7, 512, 3, 512, 1, 1));
+                v.push(conv(7, 7, 512, 3, 512, 1, 1));
+                v
+            },
+            filter_density: 0.336,
+            map_density: 0.486,
+        },
+        Benchmark::ResNet50 => NetworkSpec {
+            benchmark: b,
+            // conv1 + 16 bottleneck blocks × 3 convs = 49 layers.
+            layers: {
+                let mut v = vec![conv(224, 224, 3, 7, 64, 2, 3)];
+                let stage = |v: &mut Vec<LayerGeom>,
+                             blocks: usize,
+                             hw: usize,
+                             cin: usize,
+                             cmid: usize,
+                             first_stride: usize| {
+                    let mut in_c = cin;
+                    let mut cur = hw;
+                    for blk in 0..blocks {
+                        let s = if blk == 0 { first_stride } else { 1 };
+                        // 1×1 reduce (stride on the 3×3 per torchvision).
+                        v.push(conv(cur, cur, in_c, 1, cmid, 1, 0));
+                        v.push(conv(cur, cur, cmid, 3, cmid, s, 1));
+                        if s == 2 {
+                            cur /= 2;
+                        }
+                        v.push(conv(cur, cur, cmid, 1, cmid * 4, 1, 0));
+                        in_c = cmid * 4;
+                    }
+                };
+                stage(&mut v, 3, 56, 64, 64, 1);
+                stage(&mut v, 4, 56, 256, 128, 2);
+                stage(&mut v, 6, 28, 512, 256, 2);
+                stage(&mut v, 3, 14, 1024, 512, 2);
+                v
+            },
+            filter_density: 0.421,
+            map_density: 0.384,
+        },
+        Benchmark::InceptionV4 => NetworkSpec {
+            benchmark: b,
+            // Table 1: "20* (* 2 inception C modules)": two Inception-C
+            // modules (8×8 grid, 1536 input channels), 10 convs each.
+            layers: {
+                let mut v = Vec::new();
+                for _ in 0..2 {
+                    // branch 1: avgpool → 1×1 256
+                    v.push(conv(8, 8, 1536, 1, 256, 1, 0));
+                    // branch 2: 1×1 256
+                    v.push(conv(8, 8, 1536, 1, 256, 1, 0));
+                    // branch 3: 1×1 384 → {1×3 256, 3×1 256}
+                    v.push(conv(8, 8, 1536, 1, 384, 1, 0));
+                    v.push(conv(8, 8, 384, 3, 256, 1, 1)); // 1×3 ≈ 3 (sep.)
+                    v.push(conv(8, 8, 384, 3, 256, 1, 1)); // 3×1
+                    // branch 4: 1×1 384 → 3×1 448 → 1×3 512 → {1×3,3×1} 256
+                    v.push(conv(8, 8, 1536, 1, 384, 1, 0));
+                    v.push(conv(8, 8, 384, 3, 448, 1, 1));
+                    v.push(conv(8, 8, 448, 3, 512, 1, 1));
+                    v.push(conv(8, 8, 512, 3, 256, 1, 1));
+                    v.push(conv(8, 8, 512, 3, 256, 1, 1));
+                }
+                v
+            },
+            filter_density: 0.570,
+            map_density: 0.317,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_match_table1() {
+        assert_eq!(network(Benchmark::AlexNet).layers.len(), 5);
+        assert_eq!(network(Benchmark::ResNet18).layers.len(), 17);
+        assert_eq!(network(Benchmark::InceptionV4).layers.len(), 20);
+        assert_eq!(network(Benchmark::VggNet).layers.len(), 13);
+        assert_eq!(network(Benchmark::ResNet50).layers.len(), 49);
+    }
+
+    #[test]
+    fn densities_match_table1() {
+        let checks = [
+            (Benchmark::AlexNet, 0.368, 0.473),
+            (Benchmark::ResNet18, 0.336, 0.486),
+            (Benchmark::InceptionV4, 0.570, 0.317),
+            (Benchmark::VggNet, 0.334, 0.446),
+            (Benchmark::ResNet50, 0.421, 0.384),
+        ];
+        for (b, f, m) in checks {
+            let n = network(b);
+            assert_eq!(n.filter_density, f);
+            assert_eq!(n.map_density, m);
+        }
+    }
+
+    #[test]
+    fn per_layer_densities_average_to_table1() {
+        for b in Benchmark::ALL {
+            let n = network(b);
+            let d = n.layer_densities();
+            let favg = d.iter().map(|x| x.0).sum::<f64>() / d.len() as f64;
+            let mavg = d.iter().map(|x| x.1).sum::<f64>() / d.len() as f64;
+            assert!(
+                (favg - n.filter_density).abs() < 0.01,
+                "{b}: filter avg {favg} vs {}",
+                n.filter_density
+            );
+            assert!(
+                (mavg - n.map_density).abs() < 0.01,
+                "{b}: map avg {mavg} vs {}",
+                n.map_density
+            );
+        }
+    }
+
+    #[test]
+    fn density_profile_decays_with_depth() {
+        let n = network(Benchmark::VggNet);
+        let d = n.layer_densities();
+        assert!(d.first().unwrap().0 > d.last().unwrap().0);
+        assert!(d.first().unwrap().1 > d.last().unwrap().1);
+    }
+
+    #[test]
+    fn geometry_chains_are_consistent() {
+        // Each layer's input depth must equal some producer's output
+        // count for the sequential nets (AlexNet, VGG).
+        for b in [Benchmark::AlexNet, Benchmark::VggNet] {
+            let n = network(b);
+            for w in n.layers.windows(2) {
+                assert_eq!(
+                    w[1].d, w[0].n,
+                    "{b}: layer depth mismatch {:?} -> {:?}",
+                    w[0], w[1]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resnet50_shapes_flow() {
+        let n = network(Benchmark::ResNet50);
+        // All 1x1/3x3 layers must have positive output dims.
+        for g in &n.layers {
+            assert!(g.out_h() > 0 && g.out_w() > 0, "{g:?}");
+        }
+        // Final stage operates at 7×7×512 mid-channels.
+        let last = n.layers.last().unwrap();
+        assert_eq!(last.n, 2048);
+        assert_eq!(last.out_h(), 7);
+    }
+
+    #[test]
+    fn vgg_dense_macs_order_of_magnitude() {
+        // VGG-16 convs ≈ 15.3 GMACs per image.
+        let n = network(Benchmark::VggNet);
+        let macs = n.dense_macs(1) as f64;
+        assert!(
+            (1.4e10..1.6e10).contains(&macs),
+            "VGG MACs {macs:.3e} out of expected range"
+        );
+    }
+
+    #[test]
+    fn benchmark_name_roundtrip() {
+        for b in Benchmark::ALL {
+            assert_eq!(Benchmark::parse(b.name()), Some(b));
+        }
+    }
+}

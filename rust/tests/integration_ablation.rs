@@ -1,0 +1,183 @@
+//! Integration: the paper's ablation claims (Figure 10/11) as invariants,
+//! plus property tests over the optimization toggles and failure
+//! injection on degenerate workloads.
+
+use barista::config::{ArchKind, BaristaOpts, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::tensor::LayerGeom;
+use barista::util::prop::run_prop;
+use barista::workload::{Benchmark, NetworkWork};
+
+fn cfg_with(opts: BaristaOpts) -> SimConfig {
+    let mut c = SimConfig::paper(ArchKind::BaristaNoOpts);
+    c.window_cap = 256;
+    c.batch = 8;
+    c.opts = opts;
+    c
+}
+
+fn cycles(b: Benchmark, opts: BaristaOpts) -> f64 {
+    run_one(&RunRequest {
+        benchmark: b,
+        config: cfg_with(opts),
+    })
+    .network
+    .cycles
+}
+
+#[test]
+fn each_technique_individually_helps_or_is_neutral() {
+    let b = Benchmark::AlexNet;
+    let base = cycles(b, BaristaOpts::NONE);
+    let with = |f: fn(&mut BaristaOpts)| {
+        let mut o = BaristaOpts::NONE;
+        f(&mut o);
+        cycles(b, o)
+    };
+    let tel = with(|o| {
+        o.telescoping = true;
+        o.snarfing = true;
+    });
+    let col = with(|o| o.coloring = true);
+    let rr = with(|o| o.round_robin = true);
+    assert!(tel < base * 1.02, "telescoping+snarfing helps: {tel} vs {base}");
+    assert!(col < base * 1.02, "coloring helps: {col} vs {base}");
+    assert!(rr < base * 1.02, "round robin helps: {rr} vs {base}");
+}
+
+#[test]
+fn full_stack_beats_every_single_omission() {
+    let b = Benchmark::VggNet;
+    let full = cycles(b, BaristaOpts::ALL_ON);
+    for (name, f) in [
+        ("no telescoping", (|o: &mut BaristaOpts| o.telescoping = false) as fn(&mut _)),
+        ("no snarfing", |o: &mut BaristaOpts| o.snarfing = false),
+        ("no coloring", |o: &mut BaristaOpts| o.coloring = false),
+        ("no hierarchical", |o: &mut BaristaOpts| o.hierarchical = false),
+    ] {
+        let mut o = BaristaOpts::ALL_ON;
+        f(&mut o);
+        let c = cycles(b, o);
+        assert!(
+            full <= c * 1.05,
+            "{name} should not beat the full stack: full {full:.0} vs {c:.0}"
+        );
+    }
+}
+
+#[test]
+fn more_buffering_means_fewer_refetches() {
+    let b = Benchmark::ResNet18;
+    let mut prev = f64::INFINITY;
+    for (nd, sd) in [(1usize, 8usize), (2, 12), (3, 16)] {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        c.window_cap = 256;
+        c.batch = 8;
+        c.node_buf_depth = nd;
+        c.shared_buf_depth = sd;
+        let r = run_one(&RunRequest {
+            benchmark: b,
+            config: c,
+        })
+        .network
+        .refetch_ratio();
+        assert!(
+            r <= prev * 1.05,
+            "refetches must not rise with more buffering: {r} after {prev}"
+        );
+        prev = r;
+    }
+}
+
+#[test]
+fn unlimited_buffer_needs_multiples_of_default() {
+    let mut c = SimConfig::paper(ArchKind::UnlimitedBuffer);
+    c.window_cap = 256;
+    c.batch = 8;
+    let r = run_one(&RunRequest {
+        benchmark: Benchmark::AlexNet,
+        config: c,
+    });
+    let default_bytes = 32768u64 * 245;
+    assert!(
+        r.network.peak_buffer_bytes > default_bytes,
+        "unlimited buffering observes straying beyond the default budget"
+    );
+}
+
+// ---- failure injection / degenerate workloads --------------------------
+
+fn degenerate_layer(density_f: f64, density_m: f64) -> NetworkWork {
+    let mut cfg = SimConfig::paper(ArchKind::Barista);
+    cfg.window_cap = 64;
+    cfg.batch = 1;
+    let spec = barista::workload::networks::NetworkSpec {
+        benchmark: Benchmark::AlexNet,
+        layers: vec![LayerGeom {
+            h: 8,
+            w: 8,
+            d: 128,
+            k: 3,
+            n: 96,
+            stride: 1,
+            pad: 1,
+        }],
+        filter_density: density_f,
+        map_density: density_m,
+    };
+    NetworkWork::from_spec(spec, &cfg)
+}
+
+#[test]
+fn all_zero_feature_maps_do_not_hang() {
+    // ReLU killed everything: zero matched work everywhere.
+    let work = degenerate_layer(0.5, 0.0);
+    for arch in [ArchKind::Barista, ArchKind::SparTen, ArchKind::Ideal] {
+        let mut cfg = SimConfig::paper(arch);
+        cfg.window_cap = 64;
+        cfg.batch = 1;
+        let r = barista::coordinator::run_with_work(&cfg, &work);
+        assert!(r.network.cycles.is_finite());
+        assert!(r.network.cycles >= 0.0);
+    }
+}
+
+#[test]
+fn fully_dense_masks_match_dense_work() {
+    // Density 1.0: two-sided matched == dense MAC count.
+    let work = degenerate_layer(1.0, 1.0);
+    let l = &work.layers[0];
+    // Density clamps (0.98 cap) and per-row jitter pull the effective
+    // density below 1; matched fraction ≈ df_eff × dm_eff ≈ 0.9² — it
+    // must still be far above any sparse regime.
+    let frac = l.matched_macs_sampled() as f64
+        / (l.windows.rows * l.filters.rows * l.geom.vec_len()) as f64;
+    assert!(frac > 0.75, "matched fraction at density 1: {frac}");
+}
+
+#[test]
+fn prop_opts_monotonicity_random_densities() {
+    run_prop("opts never hurt", 0xAB1A7E, 8, |rng| {
+        let df = 0.15 + 0.7 * rng.next_f64();
+        let dm = 0.15 + 0.7 * rng.next_f64();
+        let work = degenerate_layer(df, dm);
+        let mut cfg_full = SimConfig::paper(ArchKind::Barista);
+        cfg_full.window_cap = 64;
+        cfg_full.batch = 1;
+        let full = barista::coordinator::run_with_work(&cfg_full, &work)
+            .network
+            .cycles;
+        let mut cfg_none = SimConfig::paper(ArchKind::BaristaNoOpts);
+        cfg_none.window_cap = 64;
+        cfg_none.batch = 1;
+        let none = barista::coordinator::run_with_work(&cfg_none, &work)
+            .network
+            .cycles;
+        if full > none * 1.1 {
+            return Err(format!(
+                "opts hurt at df={df:.2} dm={dm:.2}: {full:.0} vs {none:.0}"
+            ));
+        }
+        Ok(())
+    });
+}

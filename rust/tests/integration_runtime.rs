@@ -1,0 +1,105 @@
+//! Integration: the PJRT runtime path (AOT artifacts → Rust execution),
+//! cross-checked against the native Rust reference.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! visible message) when the artifacts are absent so `cargo test` works
+//! in a fresh checkout, while `make test` always exercises them.
+
+use barista::runtime::{self, ArtifactStore};
+use barista::util::rng::Pcg32;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/chunk_gemm.hlo.txt").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn golden_check_passes() {
+    let Some(dir) = artifacts_dir() else { return };
+    runtime::golden_check(dir).expect("golden check");
+}
+
+#[test]
+fn artifact_store_lists_and_caches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(dir).expect("open");
+    let names = store.available();
+    assert!(names.contains(&"chunk_gemm".to_string()), "{names:?}");
+    assert!(names.contains(&"smallcnn".to_string()), "{names:?}");
+    // Loading twice returns the cached executable (same Arc).
+    let a = store.load("chunk_gemm").unwrap();
+    let b = store.load("chunk_gemm").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn chunk_gemm_respects_masks() {
+    // Masking out everything must zero the product even with non-zero
+    // values — the bitmask semantics end-to-end through XLA.
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(dir).expect("open");
+    let exe = store.load("chunk_gemm").unwrap();
+    let (m, k, n) = runtime::CHUNK_GEMM_SHAPE;
+    let a = vec![1.0f32; m * k];
+    let am = vec![0.0f32; m * k];
+    let b = vec![1.0f32; k * n];
+    let bm = vec![1.0f32; k * n];
+    let out = exe
+        .run_f32(&[
+            (&a, &[m as i64, k as i64]),
+            (&am, &[m as i64, k as i64]),
+            (&b, &[k as i64, n as i64]),
+            (&bm, &[k as i64, n as i64]),
+        ])
+        .unwrap();
+    assert!(out.iter().all(|&x| x == 0.0), "masked-out product must be 0");
+}
+
+#[test]
+fn smallcnn_relu_and_shape() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(dir).expect("open");
+    let exe = store.load("smallcnn").unwrap();
+    let cnn = runtime::smallcnn_golden(7, 0.5);
+    let bsz = runtime::SMALLCNN_BATCH;
+    let hw = runtime::SMALLCNN_HW as i64;
+    let mut rng = Pcg32::seeded(3);
+    let x: Vec<f32> = (0..bsz * (hw * hw) as usize * runtime::SMALLCNN_C[0])
+        .map(|_| rng.next_f64() as f32 - 0.5)
+        .collect();
+    let mut inputs: Vec<(&[f32], Vec<i64>)> = vec![(&x, vec![bsz as i64, hw, hw, 8])];
+    for l in &cnn.layers {
+        inputs.push((&l.weights, vec![3, 3, l.geom.d as i64, l.geom.n as i64]));
+        inputs.push((&l.bias, vec![l.geom.n as i64]));
+    }
+    let refs: Vec<(&[f32], &[i64])> = inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+    let out = exe.run_f32(&refs).unwrap();
+    assert_eq!(
+        out.len(),
+        bsz * (hw * hw) as usize * runtime::SMALLCNN_C[3]
+    );
+    assert!(out.iter().all(|&v| v >= 0.0), "final ReLU output");
+    // And it matches the native Rust forward exactly (fp tolerance).
+    let (want, _) = cnn.forward(&x, bsz);
+    assert!(runtime::max_abs_diff(&out, &want) < 1e-2);
+}
+
+#[test]
+fn golden_cnn_density_measurement_sane() {
+    // No artifacts needed: the native model alone.
+    let cnn = runtime::smallcnn_golden(11, 0.4);
+    let mut rng = Pcg32::seeded(4);
+    let x: Vec<f32> = (0..runtime::SMALLCNN_BATCH * 16 * 16 * 8)
+        .map(|_| rng.next_f64() as f32 - 0.5)
+        .collect();
+    let (_, obs) = cnn.forward(&x, runtime::SMALLCNN_BATCH);
+    assert_eq!(obs.len(), 3);
+    for o in &obs {
+        assert!((0.3..0.6).contains(&o.filter_density), "{o:?}");
+        assert!((0.1..0.9).contains(&o.output_density), "{o:?}");
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration: whole-stack simulation sweeps — the paper's comparative
+//! claims as executable invariants.
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, Coordinator, RunRequest, RunResult};
+use barista::workload::Benchmark;
+
+fn cfg(arch: ArchKind) -> SimConfig {
+    let mut c = SimConfig::paper(arch);
+    c.window_cap = 384;
+    c.batch = 16;
+    c
+}
+
+fn run(b: Benchmark, arch: ArchKind) -> RunResult {
+    run_one(&RunRequest {
+        benchmark: b,
+        config: cfg(arch),
+    })
+}
+
+#[test]
+fn figure7_ordering_holds_on_alexnet() {
+    let b = Benchmark::AlexNet;
+    let dense = run(b, ArchKind::Dense).network.cycles;
+    let sparten = run(b, ArchKind::SparTen).network.cycles;
+    let sync = run(b, ArchKind::Synchronous).network.cycles;
+    let barista = run(b, ArchKind::Barista).network.cycles;
+    let ideal = run(b, ArchKind::Ideal).network.cycles;
+
+    assert!(barista < sparten, "BARISTA beats SparTen");
+    assert!(barista < sync, "BARISTA beats Synchronous");
+    assert!(barista < dense / 3.0, "BARISTA >3x over Dense on AlexNet");
+    assert!(ideal <= barista, "nothing beats Ideal");
+    assert!(
+        barista < ideal * 2.0,
+        "BARISTA within 2x of ideal: {barista:.0} vs {ideal:.0}"
+    );
+}
+
+#[test]
+fn two_sided_beats_one_sided_beats_dense_on_vgg() {
+    let b = Benchmark::VggNet;
+    let dense = run(b, ArchKind::Dense).network.cycles;
+    let one = run(b, ArchKind::OneSided).network.cycles;
+    let sparten = run(b, ArchKind::SparTen).network.cycles;
+    assert!(one < dense, "one-sided beats dense on VGG");
+    assert!(sparten < one, "two-sided beats one-sided on VGG");
+}
+
+#[test]
+fn iso_area_sparten_is_slower_than_full() {
+    let b = Benchmark::AlexNet;
+    let full = run(b, ArchKind::SparTen).network.cycles;
+    let iso = run(b, ArchKind::SparTenIso).network.cycles;
+    assert!(iso > full, "fewer MACs at iso-area must cost time");
+}
+
+#[test]
+fn barista_no_opts_slower_than_barista() {
+    let b = Benchmark::ResNet18;
+    let full = run(b, ArchKind::Barista).network.cycles;
+    let none = run(b, ArchKind::BaristaNoOpts).network.cycles;
+    assert!(
+        none > full * 1.2,
+        "the optimizations must matter: {none:.0} vs {full:.0}"
+    );
+}
+
+#[test]
+fn breakdown_components_cover_total_time() {
+    for arch in [
+        ArchKind::Dense,
+        ArchKind::OneSided,
+        ArchKind::SparTen,
+        ArchKind::Synchronous,
+        ArchKind::Barista,
+    ] {
+        let r = run(Benchmark::AlexNet, arch);
+        let total_pe_cycles = r.network.cycles * cfg(arch).total_macs() as f64;
+        let sum = r.network.breakdown.total();
+        let rel = (sum - total_pe_cycles).abs() / total_pe_cycles;
+        assert!(
+            rel < 0.35,
+            "{arch}: breakdown {sum:.3e} vs cycles*pes {total_pe_cycles:.3e} (rel {rel:.3})"
+        );
+    }
+}
+
+#[test]
+fn energy_counters_consistent_across_two_sided_archs() {
+    // All two-sided architectures perform the same effectual MACs.
+    let b = Benchmark::AlexNet;
+    let sp = run(b, ArchKind::SparTen).network.energy.matched_macs as f64;
+    let ba = run(b, ArchKind::Barista).network.energy.matched_macs as f64;
+    let rel = (sp - ba).abs() / ba;
+    assert!(rel < 0.05, "matched MACs disagree: sparten {sp} vs barista {ba}");
+}
+
+#[test]
+fn coordinator_parallel_sweep_is_deterministic() {
+    let reqs: Vec<RunRequest> = [ArchKind::Barista, ArchKind::SparTen, ArchKind::Dense]
+        .iter()
+        .map(|&a| RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: cfg(a),
+        })
+        .collect();
+    let one = Coordinator::with_workers(1).run_all(reqs.clone());
+    let many = Coordinator::with_workers(8).run_all(reqs);
+    for (a, b) in one.iter().zip(&many) {
+        assert_eq!(a.network.cycles, b.network.cycles);
+        assert_eq!(a.network.traffic.refetch_lines, b.network.traffic.refetch_lines);
+    }
+}
+
+#[test]
+fn refetch_ratio_barista_far_below_no_opts() {
+    let b = Benchmark::AlexNet;
+    let full = run(b, ArchKind::Barista).network.refetch_ratio();
+    let none = run(b, ArchKind::BaristaNoOpts).network.refetch_ratio();
+    assert!(
+        full < none / 5.0,
+        "combining+snarfing must slash refetches: {full:.2} vs {none:.2}"
+    );
+}
+
+#[test]
+fn dense_insensitive_to_sparsity_sparse_archs_not() {
+    // Dense time is the same regardless of density; BARISTA's is not.
+    let r18 = run(Benchmark::ResNet18, ArchKind::Dense);
+    let ba18 = run(Benchmark::ResNet18, ArchKind::Barista);
+    // Per-MAC-normalized times:
+    let d_norm = r18.network.cycles / r18.network.breakdown.total();
+    assert!(d_norm.is_finite());
+    let speedup = r18.network.cycles / ba18.network.cycles;
+    assert!(
+        speedup > 3.0,
+        "ResNet18 (high sparsity) should show >3x: {speedup:.2}"
+    );
+}
