@@ -1,0 +1,29 @@
+# Top-level driver. The Rust crate lives in rust/ (zero external deps);
+# `make artifacts` is the only step that needs Python/JAX, and the
+# simulator + service never require it.
+
+.PHONY: build test fmt bench artifacts serve clean
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+fmt:
+	cd rust && cargo fmt --check
+
+bench:
+	cd rust && cargo bench
+
+# AOT-lower the JAX/Pallas functional model to HLO-text artifacts for
+# the PJRT path (`barista golden`, `--features pjrt`).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+serve: build
+	./rust/target/release/barista serve
+
+clean:
+	cd rust && cargo clean
+	rm -rf out

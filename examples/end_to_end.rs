@@ -11,121 +11,141 @@
 //!
 //! Run: `make artifacts && cargo run --release --example end_to_end`
 
-use barista::config::{ArchKind, SimConfig};
-use barista::coordinator::{run_with_work, RunResult};
-use barista::runtime::{self, ArtifactStore};
-use barista::util::rng::Pcg32;
-use barista::workload::networks::NetworkSpec;
-use barista::workload::{Benchmark, NetworkWork};
-
+// The PJRT path needs the vendored `xla` + `anyhow` crates (`pjrt`
+// feature); without it this example explains how to enable it instead
+// of failing to link.
+#[cfg(not(feature = "pjrt"))]
 fn main() {
-    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    eprintln!(
+        "end_to_end requires the PJRT runtime: rebuild with `--features pjrt` \
+         (vendored `xla` + `anyhow` crates) after `make artifacts`."
+    );
+    std::process::exit(1);
+}
 
-    // ---- 1 + 2: PJRT artifacts vs native Rust reference ----------------
-    println!("== Step 1/3: functional check (PJRT vs native Rust) ==");
-    if let Err(e) = runtime::golden_check(&dir) {
-        eprintln!(
-            "golden check failed ({e:#}).\nDid you run `make artifacts`?"
-        );
-        std::process::exit(1);
-    }
+#[cfg(feature = "pjrt")]
+fn main() {
+    pjrt::main();
+}
 
-    // ---- 3: measure real activation sparsity ---------------------------
-    println!("\n== Step 2/3: measure real ReLU sparsity through the artifacts ==");
-    let store = ArtifactStore::open(&dir).expect("open artifact store");
-    let exe = store.load("smallcnn").expect("load smallcnn");
-    let cnn = runtime::smallcnn_golden(0xE2E, 0.45); // ~paper-like pruning
-    let bsz = runtime::SMALLCNN_BATCH;
-    let hw = runtime::SMALLCNN_HW;
-    let mut rng = Pcg32::new(0xE2E, 99);
-    let x: Vec<f32> = (0..bsz * hw * hw * runtime::SMALLCNN_C[0])
-        .map(|_| rng.next_f64() as f32 - 0.5)
-        .collect();
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use barista::config::{ArchKind, SimConfig};
+    use barista::coordinator::{run_with_work, RunResult};
+    use barista::runtime::{self, ArtifactStore};
+    use barista::util::rng::Pcg32;
+    use barista::workload::networks::NetworkSpec;
+    use barista::workload::{Benchmark, NetworkWork};
 
-    // PJRT inference (the request path: Rust only).
-    let mut inputs: Vec<(&[f32], Vec<i64>)> =
-        vec![(&x, vec![bsz as i64, hw as i64, hw as i64, 8])];
-    for l in &cnn.layers {
-        inputs.push((&l.weights, vec![3, 3, l.geom.d as i64, l.geom.n as i64]));
-        inputs.push((&l.bias, vec![l.geom.n as i64]));
-    }
-    let refs: Vec<(&[f32], &[i64])> = inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
-    let t0 = std::time::Instant::now();
-    let pjrt_out = exe.run_f32(&refs).expect("pjrt inference");
-    let pjrt_ms = t0.elapsed().as_secs_f64() * 1e3;
+    pub fn main() {
+        let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
 
-    // Independent Rust forward for the densities + agreement check.
-    let (rust_out, obs) = cnn.forward(&x, bsz);
-    let diff = runtime::max_abs_diff(&pjrt_out, &rust_out);
-    println!("PJRT inference: {pjrt_ms:.1} ms, max|Δ| vs Rust ref {diff:.2e}");
-    assert!(diff < 1e-2, "functional divergence");
-    for (i, o) in obs.iter().enumerate() {
+        // ---- 1 + 2: PJRT artifacts vs native Rust reference ----------------
+        println!("== Step 1/3: functional check (PJRT vs native Rust) ==");
+        if let Err(e) = runtime::golden_check(&dir) {
+            eprintln!(
+                "golden check failed ({e:#}).\nDid you run `make artifacts`?"
+            );
+            std::process::exit(1);
+        }
+
+        // ---- 3: measure real activation sparsity ---------------------------
+        println!("\n== Step 2/3: measure real ReLU sparsity through the artifacts ==");
+        let store = ArtifactStore::open(&dir).expect("open artifact store");
+        let exe = store.load("smallcnn").expect("load smallcnn");
+        let cnn = runtime::smallcnn_golden(0xE2E, 0.45); // ~paper-like pruning
+        let bsz = runtime::SMALLCNN_BATCH;
+        let hw = runtime::SMALLCNN_HW;
+        let mut rng = Pcg32::new(0xE2E, 99);
+        let x: Vec<f32> = (0..bsz * hw * hw * runtime::SMALLCNN_C[0])
+            .map(|_| rng.next_f64() as f32 - 0.5)
+            .collect();
+
+        // PJRT inference (the request path: Rust only).
+        let mut inputs: Vec<(&[f32], Vec<i64>)> =
+            vec![(&x, vec![bsz as i64, hw as i64, hw as i64, 8])];
+        for l in &cnn.layers {
+            inputs.push((&l.weights, vec![3, 3, l.geom.d as i64, l.geom.n as i64]));
+            inputs.push((&l.bias, vec![l.geom.n as i64]));
+        }
+        let refs: Vec<(&[f32], &[i64])> = inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        let t0 = std::time::Instant::now();
+        let pjrt_out = exe.run_f32(&refs).expect("pjrt inference");
+        let pjrt_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Independent Rust forward for the densities + agreement check.
+        let (rust_out, obs) = cnn.forward(&x, bsz);
+        let diff = runtime::max_abs_diff(&pjrt_out, &rust_out);
+        println!("PJRT inference: {pjrt_ms:.1} ms, max|Δ| vs Rust ref {diff:.2e}");
+        assert!(diff < 1e-2, "functional divergence");
+        for (i, o) in obs.iter().enumerate() {
+            println!(
+                "  layer {i}: filter density {:.3}, MEASURED output density {:.3}",
+                o.filter_density, o.output_density
+            );
+        }
+
+        // ---- 4: simulate the accelerators on the measured workload ---------
+        println!("\n== Step 3/3: cycle-level simulation with measured densities ==");
+        // Build a NetworkSpec from the small CNN's geometry with measured
+        // densities injected (input density of layer i = output density of
+        // layer i-1; layer 0 sees the dense input image).
+        let mut fdens = 0.0;
+        let mut mdens = 0.0;
+        let geoms = runtime::smallcnn_geoms();
+        for (i, o) in obs.iter().enumerate() {
+            fdens += o.filter_density;
+            mdens += if i == 0 { 1.0 } else { obs[i - 1].output_density };
+        }
+        fdens /= obs.len() as f64;
+        mdens /= obs.len() as f64;
+        let spec = NetworkSpec {
+            benchmark: Benchmark::AlexNet, // label only; geometry is ours
+            layers: geoms.to_vec(),
+            filter_density: fdens,
+            map_density: mdens,
+        };
         println!(
-            "  layer {i}: filter density {:.3}, MEASURED output density {:.3}",
-            o.filter_density, o.output_density
+            "measured network averages: filter density {fdens:.3}, map density {mdens:.3}"
         );
-    }
 
-    // ---- 4: simulate the accelerators on the measured workload ---------
-    println!("\n== Step 3/3: cycle-level simulation with measured densities ==");
-    // Build a NetworkSpec from the small CNN's geometry with measured
-    // densities injected (input density of layer i = output density of
-    // layer i-1; layer 0 sees the dense input image).
-    let mut fdens = 0.0;
-    let mut mdens = 0.0;
-    let geoms = runtime::smallcnn_geoms();
-    for (i, o) in obs.iter().enumerate() {
-        fdens += o.filter_density;
-        mdens += if i == 0 { 1.0 } else { obs[i - 1].output_density };
-    }
-    fdens /= obs.len() as f64;
-    mdens /= obs.len() as f64;
-    let spec = NetworkSpec {
-        benchmark: Benchmark::AlexNet, // label only; geometry is ours
-        layers: geoms.to_vec(),
-        filter_density: fdens,
-        map_density: mdens,
-    };
-    println!(
-        "measured network averages: filter density {fdens:.3}, map density {mdens:.3}"
-    );
-
-    let archs = [
-        ArchKind::Dense,
-        ArchKind::OneSided,
-        ArchKind::SparTen,
-        ArchKind::Synchronous,
-        ArchKind::Barista,
-        ArchKind::Ideal,
-    ];
-    let mut results: Vec<RunResult> = Vec::new();
-    for arch in archs {
-        let mut cfg = SimConfig::paper(arch);
-        cfg.window_cap = 512;
-        cfg.batch = 32;
-        let work = NetworkWork::from_spec(spec.clone(), &cfg);
-        results.push(run_with_work(&cfg, &work));
-    }
-    let dense = results[0].network.cycles;
-    println!("\n{:<14} {:>14} {:>10}", "arch", "cycles", "vs dense");
-    for r in &results {
+        let archs = [
+            ArchKind::Dense,
+            ArchKind::OneSided,
+            ArchKind::SparTen,
+            ArchKind::Synchronous,
+            ArchKind::Barista,
+            ArchKind::Ideal,
+        ];
+        let mut results: Vec<RunResult> = Vec::new();
+        for arch in archs {
+            let mut cfg = SimConfig::paper(arch);
+            cfg.window_cap = 512;
+            cfg.batch = 32;
+            let work = NetworkWork::from_spec(spec.clone(), &cfg);
+            results.push(run_with_work(&cfg, &work));
+        }
+        let dense = results[0].network.cycles;
+        println!("\n{:<14} {:>14} {:>10}", "arch", "cycles", "vs dense");
+        for r in &results {
+            println!(
+                "{:<14} {:>14.3e} {:>9.2}x",
+                r.arch.name(),
+                r.network.cycles,
+                dense / r.network.cycles
+            );
+        }
+        let barista = results.iter().find(|r| r.arch == ArchKind::Barista).unwrap();
+        let ideal = results.iter().find(|r| r.arch == ArchKind::Ideal).unwrap();
         println!(
-            "{:<14} {:>14.3e} {:>9.2}x",
-            r.arch.name(),
-            r.network.cycles,
-            dense / r.network.cycles
+            "\nBARISTA at {:.1}% of ideal on the measured workload",
+            100.0 * ideal.network.cycles / barista.network.cycles
         );
+        println!(
+            "(the toy CNN has only {} filters — a 64-FGR grid is structurally ragged on it;\n \
+             paper-scale layers sit much closer to ideal, see `cargo bench --bench fig7_speedup`)",
+            runtime::SMALLCNN_C[1]
+        );
+        println!("\nend_to_end OK — artifacts, runtime, golden model and simulator agree");
     }
-    let barista = results.iter().find(|r| r.arch == ArchKind::Barista).unwrap();
-    let ideal = results.iter().find(|r| r.arch == ArchKind::Ideal).unwrap();
-    println!(
-        "\nBARISTA at {:.1}% of ideal on the measured workload",
-        100.0 * ideal.network.cycles / barista.network.cycles
-    );
-    println!(
-        "(the toy CNN has only {} filters — a 64-FGR grid is structurally ragged on it;\n \
-         paper-scale layers sit much closer to ideal, see `cargo bench --bench fig7_speedup`)",
-        runtime::SMALLCNN_C[1]
-    );
-    println!("\nend_to_end OK — artifacts, runtime, golden model and simulator agree");
 }

@@ -1,0 +1,82 @@
+//! Service scheduler throughput: jobs/sec through the cache-aware
+//! sharded scheduler at worker counts {1, 4, 16}, for a 0% cache-hit
+//! workload (all distinct jobs, cold cache) and a 100% cache-hit
+//! workload (the same jobs resubmitted). The gap is the service layer's
+//! amortization headroom; the cold scaling curve is the worker-pool
+//! speedup. Prints one JSON summary line (`service_throughput_summary`)
+//! for the perf trajectory.
+
+use std::time::Instant;
+
+use barista::bench_harness::bench_header;
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::RunRequest;
+use barista::service::{Scheduler, SchedulerConfig};
+use barista::util::Json;
+use barista::workload::Benchmark;
+
+const JOBS: usize = 32;
+
+fn job(seed: u64) -> RunRequest {
+    let mut c = SimConfig::paper(ArchKind::Dense);
+    c.window_cap = 32;
+    c.batch = 1;
+    c.seed = seed;
+    RunRequest {
+        benchmark: Benchmark::AlexNet,
+        config: c,
+    }
+}
+
+fn main() {
+    bench_header("service throughput: scheduler jobs/sec (cold vs cached)");
+    let reqs: Vec<RunRequest> = (0..JOBS as u64).map(job).collect();
+
+    let mut rows = Vec::new();
+    println!(
+        "{:<8} {:>12} {:>12} {:>10}",
+        "workers", "cold j/s", "cached j/s", "speedup"
+    );
+    for &workers in &[1usize, 4, 16] {
+        let sched = Scheduler::new(SchedulerConfig {
+            workers,
+            shards: 4,
+            queue_cap: 256,
+            cache_bytes: 64 << 20,
+        });
+
+        // 0% hit: every job distinct, cache cold.
+        let t0 = Instant::now();
+        let cold = sched.run_results(&reqs).expect("cold batch");
+        let cold_s = t0.elapsed().as_secs_f64();
+        assert_eq!(cold.len(), JOBS);
+
+        // 100% hit: identical batch resubmitted.
+        let t0 = Instant::now();
+        let warm = sched.run_results(&reqs).expect("warm batch");
+        let warm_s = t0.elapsed().as_secs_f64();
+        assert_eq!(warm.len(), JOBS);
+
+        let st = sched.stats();
+        assert_eq!(st.executed as usize, JOBS, "warm pass must not simulate");
+
+        let cold_jps = JOBS as f64 / cold_s.max(1e-9);
+        let warm_jps = JOBS as f64 / warm_s.max(1e-9);
+        println!(
+            "{workers:<8} {cold_jps:>12.1} {warm_jps:>12.1} {:>9.1}x",
+            warm_jps / cold_jps.max(1e-9)
+        );
+        let mut row = Json::obj();
+        row.set("workers", workers)
+            .set("jobs", JOBS)
+            .set("cold_jobs_per_s", cold_jps)
+            .set("cached_jobs_per_s", warm_jps);
+        rows.push(row);
+    }
+
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "service_throughput")
+        .set("rows", Json::Arr(rows));
+    println!("service_throughput_summary {}", summary.to_string());
+}

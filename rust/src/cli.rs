@@ -86,6 +86,49 @@ impl Args {
                 .map_err(|e| format!("--{name} expects an integer, got '{v}': {e}")),
         }
     }
+
+    /// Reject anything not in the command's vocabulary — the
+    /// silent-typo guard. Every `cmd_*` calls this after pulling its
+    /// options, so `--windowcap 64` errors instead of silently running
+    /// defaults. Options and flags are separate namespaces: a known
+    /// *option* given with no value (`--figure --window-cap 64` parses
+    /// 'figure' as a bare flag) errors with "requires a value" instead
+    /// of silently falling back to the default.
+    pub fn finish(&self, known_opts: &[&str], known_flags: &[&str]) -> Result<(), String> {
+        for k in self.opts.keys() {
+            if known_opts.contains(&k.as_str()) {
+                continue;
+            }
+            if known_flags.contains(&k.as_str()) {
+                return Err(format!("flag '--{k}' does not take a value"));
+            }
+            return Err(format!(
+                "unrecognized option '--{k}' (known: {})",
+                known_list(known_opts, known_flags)
+            ));
+        }
+        for f in &self.flags {
+            if known_flags.contains(&f.as_str()) {
+                continue;
+            }
+            if known_opts.contains(&f.as_str()) {
+                return Err(format!("option '--{f}' requires a value"));
+            }
+            return Err(format!(
+                "unrecognized flag '--{f}' (known: {})",
+                known_list(known_opts, known_flags)
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn known_list(opts: &[&str], flags: &[&str]) -> String {
+    opts.iter()
+        .chain(flags)
+        .map(|k| format!("--{k}"))
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 #[cfg(test)]
@@ -135,5 +178,44 @@ mod tests {
     fn flag_followed_by_flag() {
         let a = parse("run --fast --verbose");
         assert!(a.flag("fast") && a.flag("verbose"));
+    }
+
+    #[test]
+    fn finish_accepts_known() {
+        let a = parse("report --figure fig7 --json");
+        assert!(a.finish(&["figure"], &["json"]).is_ok());
+    }
+
+    #[test]
+    fn finish_rejects_unknown_option() {
+        // The motivating footgun: `--windowcap 64` must not silently run
+        // paper defaults.
+        let a = parse("report --windowcap 64");
+        let err = a.finish(&["window-cap", "figure"], &[]).unwrap_err();
+        assert!(err.contains("windowcap"), "{err}");
+        assert!(err.contains("--window-cap"), "{err}");
+    }
+
+    #[test]
+    fn finish_rejects_unknown_flag() {
+        let a = parse("report --verbos");
+        assert!(a.finish(&[], &["verbose"]).is_err());
+    }
+
+    #[test]
+    fn finish_rejects_option_missing_its_value() {
+        // `--figure --window-cap 64` parses 'figure' as a bare flag;
+        // that must be "requires a value", not a silent default.
+        let a = parse("report --figure --window-cap 64");
+        let err = a.finish(&["figure", "window-cap"], &[]).unwrap_err();
+        assert!(err.contains("requires a value"), "{err}");
+        assert!(err.contains("figure"), "{err}");
+    }
+
+    #[test]
+    fn finish_rejects_flag_given_a_value() {
+        let a = parse("simulate --json yes");
+        let err = a.finish(&["network"], &["json"]).unwrap_err();
+        assert!(err.contains("does not take a value"), "{err}");
     }
 }

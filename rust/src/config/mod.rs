@@ -7,6 +7,8 @@
 
 use std::fmt;
 
+use crate::util::Json;
+
 /// Which architecture to simulate (paper §4, Table 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArchKind {
@@ -124,6 +126,40 @@ impl BaristaOpts {
         hierarchical: false,
         greedy_balance: true,
     };
+
+    /// Canonical JSON form (stable key order via `Json::Obj`'s BTreeMap).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("coloring", self.coloring)
+            .set("greedy_balance", self.greedy_balance)
+            .set("hierarchical", self.hierarchical)
+            .set("round_robin", self.round_robin)
+            .set("snarfing", self.snarfing)
+            .set("telescoping", self.telescoping);
+        j
+    }
+
+    /// Apply toggle overrides from a JSON object; unknown keys are errors
+    /// (the service protocol's silent-typo guard, mirroring
+    /// `cli::Args::finish`).
+    pub fn apply_overrides(&mut self, j: &Json) -> Result<(), String> {
+        let obj = j.as_obj().ok_or("'opts' expects an object")?;
+        for (k, v) in obj {
+            let b = v
+                .as_bool()
+                .ok_or_else(|| format!("opts.{k} expects a bool"))?;
+            match k.as_str() {
+                "telescoping" => self.telescoping = b,
+                "snarfing" => self.snarfing = b,
+                "coloring" => self.coloring = b,
+                "round_robin" => self.round_robin = b,
+                "hierarchical" => self.hierarchical = b,
+                "greedy_balance" => self.greedy_balance = b,
+                other => return Err(format!("unknown opts key '{other}'")),
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Full simulation configuration.
@@ -270,6 +306,104 @@ impl SimConfig {
         self.fgrs * self.ifgcs
     }
 
+    /// Canonical JSON form: every field, stable key order (the `Json`
+    /// object is a BTreeMap). Two configs produce identical canonical
+    /// JSON iff they are semantically identical, so this string is the
+    /// basis of the service layer's content-addressed cache key.
+    /// Integers ride through [`int_json`] so values above 2^53 (e.g.
+    /// the unlimited-buffer depths) stay exact rather than collapsing
+    /// to the same f64.
+    pub fn canonical_json(&self) -> Json {
+        let sched = Json::Arr(
+            self.telescope_schedule
+                .iter()
+                .map(|&x| int_json(x as u64))
+                .collect(),
+        );
+        let mut j = Json::obj();
+        j.set("arch", self.arch.name())
+            .set("bank_service_cycles", int_json(self.bank_service_cycles))
+            .set("batch", int_json(self.batch as u64))
+            .set("cache_banks", int_json(self.cache_banks as u64))
+            .set("cache_bytes", int_json(self.cache_bytes))
+            .set("cache_latency", int_json(self.cache_latency))
+            .set("chunk_overhead", int_json(self.chunk_overhead))
+            .set("clusters", int_json(self.clusters as u64))
+            .set("fgrs", int_json(self.fgrs as u64))
+            .set("filter_reuse", int_json(self.filter_reuse as u64))
+            .set("ifgcs", int_json(self.ifgcs as u64))
+            .set("macs_per_cluster", int_json(self.macs_per_cluster as u64))
+            .set("node_buf_depth", int_json(self.node_buf_depth as u64))
+            .set("opts", self.opts.to_json())
+            .set("output_colors", int_json(self.output_colors as u64))
+            .set("pes_per_node", int_json(self.pes_per_node as u64))
+            .set("reduce_cycles", int_json(self.reduce_cycles))
+            .set("seed", int_json(self.seed))
+            .set("shared_buf_depth", int_json(self.shared_buf_depth as u64))
+            .set("telescope_schedule", sched)
+            .set("window_cap", int_json(self.window_cap as u64));
+        j
+    }
+
+    /// Stable 64-bit content hash of the canonical JSON (FNV-1a).
+    /// Deterministic across processes and runs — usable as an on-disk or
+    /// over-the-wire cache key component.
+    pub fn content_hash(&self) -> u64 {
+        crate::util::fnv1a64(
+            self.canonical_json().to_string().as_bytes(),
+            crate::util::FNV_OFFSET_BASIS,
+        )
+    }
+
+    /// Apply field overrides from a JSON object (the service protocol's
+    /// `config` payload). Unknown keys are errors so typos can't silently
+    /// run paper defaults.
+    pub fn apply_overrides(&mut self, j: &Json) -> Result<(), String> {
+        let obj = j.as_obj().ok_or("'config' expects an object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "macs_per_cluster" => self.macs_per_cluster = usize_field(k, v)?,
+                "clusters" => self.clusters = usize_field(k, v)?,
+                "fgrs" => self.fgrs = usize_field(k, v)?,
+                "ifgcs" => self.ifgcs = usize_field(k, v)?,
+                "pes_per_node" => self.pes_per_node = usize_field(k, v)?,
+                "node_buf_depth" => self.node_buf_depth = usize_field(k, v)?,
+                "shared_buf_depth" => self.shared_buf_depth = usize_field(k, v)?,
+                "output_colors" => self.output_colors = usize_field(k, v)?,
+                "filter_reuse" => self.filter_reuse = usize_field(k, v)?,
+                "cache_banks" => self.cache_banks = usize_field(k, v)?,
+                "bank_service_cycles" => self.bank_service_cycles = u64_field(k, v)?,
+                "cache_latency" => self.cache_latency = u64_field(k, v)?,
+                "cache_bytes" => self.cache_bytes = u64_field(k, v)?,
+                "chunk_overhead" => self.chunk_overhead = u64_field(k, v)?,
+                "reduce_cycles" => self.reduce_cycles = u64_field(k, v)?,
+                "window_cap" => self.window_cap = usize_field(k, v)?,
+                "batch" => self.batch = usize_field(k, v)?,
+                "seed" => self.seed = u64_field(k, v)?,
+                "telescope_schedule" => {
+                    let arr = v
+                        .as_arr()
+                        .ok_or_else(|| format!("'{k}' expects an array of integers"))?;
+                    let mut sched = Vec::with_capacity(arr.len());
+                    for x in arr {
+                        sched.push(
+                            parse_int(x)
+                                .map(|n| n as usize)
+                                .ok_or_else(|| format!("'{k}' expects integers"))?,
+                        );
+                    }
+                    self.telescope_schedule = sched;
+                }
+                "opts" => self.opts.apply_overrides(v)?,
+                "arch" => {
+                    return Err("set 'arch' at the job level, not inside 'config'".into())
+                }
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        Ok(())
+    }
+
     /// Validate internal consistency; returns a description of the first
     /// violated constraint.
     pub fn validate(&self) -> Result<(), String> {
@@ -311,6 +445,47 @@ impl SimConfig {
         }
         Ok(())
     }
+}
+
+/// First integer f64 cannot be trusted with: 2^53 is both exactly
+/// representable *and* the rounding target of 2^53±1, so from 2^53 up
+/// the canonical form is a decimal string — distinct values never
+/// collapse to one float (and hence one cache key).
+const JSON_EXACT_INT_LIMIT: u64 = 1 << 53;
+
+fn int_json(x: u64) -> Json {
+    if x < JSON_EXACT_INT_LIMIT {
+        Json::from(x)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+/// Accept both canonical integer forms: a JSON number strictly below
+/// 2^53 (still exact in f64 — anything at or above it may already have
+/// been rounded by the time we see it, and silently simulating a
+/// different value than requested is exactly what this module guards
+/// against) or a decimal string (the lossless form).
+fn parse_int(v: &Json) -> Option<u64> {
+    match v {
+        Json::Num(_) => v.as_u64().filter(|&x| x < JSON_EXACT_INT_LIMIT),
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+fn usize_field(k: &str, v: &Json) -> Result<usize, String> {
+    parse_int(v)
+        .map(|x| x as usize)
+        .ok_or_else(|| int_field_err(k))
+}
+
+fn u64_field(k: &str, v: &Json) -> Result<u64, String> {
+    parse_int(v).ok_or_else(|| int_field_err(k))
+}
+
+fn int_field_err(k: &str) -> String {
+    format!("'{k}' expects a non-negative integer (as a decimal string above 2^53)")
 }
 
 #[cfg(test)]
@@ -365,5 +540,100 @@ mod tests {
         let mut c = SimConfig::paper(ArchKind::Barista);
         c.telescope_schedule = vec![1, 2, 3];
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_sensitive() {
+        let a = SimConfig::paper(ArchKind::Barista);
+        let b = a.clone();
+        assert_eq!(a.content_hash(), b.content_hash());
+        let mut c = a.clone();
+        c.seed = a.seed + 1;
+        assert_ne!(a.content_hash(), c.content_hash());
+        let mut d = a.clone();
+        d.opts.telescoping = false;
+        assert_ne!(a.content_hash(), d.content_hash());
+        // Above 2^53 distinct integers must not collapse to one f64
+        // (and hence one cache key).
+        let mut e = a.clone();
+        e.seed = (1u64 << 53) + 1;
+        let mut f = a.clone();
+        f.seed = (1u64 << 53) + 2;
+        assert_ne!(
+            e.canonical_json().to_string(),
+            f.canonical_json().to_string()
+        );
+        assert_ne!(e.content_hash(), f.content_hash());
+        // Different architectures never collide on the canonical string.
+        assert_ne!(
+            SimConfig::paper(ArchKind::Dense).canonical_json().to_string(),
+            SimConfig::paper(ArchKind::Scnn).canonical_json().to_string()
+        );
+    }
+
+    #[test]
+    fn overrides_roundtrip_canonical_json() {
+        // paper(arch) + full canonical overrides reproduces the config
+        // exactly — the wire format is lossless. UnlimitedBuffer's
+        // usize::MAX/4 buffer depths exercise the string integer form.
+        for arch in [ArchKind::Barista, ArchKind::UnlimitedBuffer] {
+            let mut src = SimConfig::paper(arch);
+            src.window_cap = 77;
+            src.seed = (1u64 << 60) + 123; // also above 2^53
+            src.opts.snarfing = false;
+            let mut wire = src.canonical_json();
+            if let Json::Obj(m) = &mut wire {
+                m.remove("arch");
+            }
+            let mut back = SimConfig::paper(arch);
+            back.apply_overrides(&wire).unwrap();
+            assert_eq!(
+                src.canonical_json().to_string(),
+                back.canonical_json().to_string()
+            );
+            assert_eq!(src.content_hash(), back.content_hash());
+            assert_eq!(src.seed, back.seed);
+            assert_eq!(src.node_buf_depth, back.node_buf_depth);
+        }
+    }
+
+    #[test]
+    fn overrides_reject_lossy_big_numbers() {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        // 2^53+1 as a plain JSON number has already been rounded to
+        // 2^53 by the f64 parse — reject instead of silently running a
+        // different seed.
+        let j = Json::parse(r#"{"seed": 9007199254740993}"#).unwrap();
+        assert!(c.apply_overrides(&j).is_err());
+        // The decimal-string form is lossless and accepted.
+        let j = Json::parse(r#"{"seed": "9007199254740993"}"#).unwrap();
+        c.apply_overrides(&j).unwrap();
+        assert_eq!(c.seed, 9007199254740993);
+    }
+
+    #[test]
+    fn overrides_reject_unknown_keys() {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        let j = Json::parse(r#"{"windowcap": 64}"#).unwrap();
+        let err = c.apply_overrides(&j).unwrap_err();
+        assert!(err.contains("windowcap"), "{err}");
+        let j = Json::parse(r#"{"opts": {"telescopin": true}}"#).unwrap();
+        assert!(c.apply_overrides(&j).is_err());
+        let j = Json::parse(r#"{"arch": "dense"}"#).unwrap();
+        assert!(c.apply_overrides(&j).is_err());
+    }
+
+    #[test]
+    fn overrides_apply_values() {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        let j = Json::parse(
+            r#"{"window_cap": 64, "batch": 2, "seed": 9, "opts": {"coloring": false}}"#,
+        )
+        .unwrap();
+        c.apply_overrides(&j).unwrap();
+        assert_eq!(c.window_cap, 64);
+        assert_eq!(c.batch, 2);
+        assert_eq!(c.seed, 9);
+        assert!(!c.opts.coloring);
     }
 }

@@ -88,6 +88,32 @@ pub fn run_with_work(config: &SimConfig, work: &NetworkWork) -> RunResult {
     }
 }
 
+/// Build the request matrix for a benchmark × architecture sweep: each
+/// architecture uses its paper configuration with the shared workload
+/// knobs (window cap, batch, seed) taken from `base`. Shared by
+/// [`Coordinator::sweep`] and the cache-aware service scheduler so both
+/// paths hash to identical job keys.
+pub fn sweep_requests(
+    benchmarks: &[Benchmark],
+    archs: &[ArchKind],
+    base: &SimConfig,
+) -> Vec<RunRequest> {
+    let mut reqs = Vec::new();
+    for &b in benchmarks {
+        for &a in archs {
+            let mut cfg = SimConfig::paper(a);
+            cfg.window_cap = base.window_cap;
+            cfg.batch = base.batch;
+            cfg.seed = base.seed;
+            reqs.push(RunRequest {
+                benchmark: b,
+                config: cfg,
+            });
+        }
+    }
+    reqs
+}
+
 /// Thread-pool coordinator.
 pub struct Coordinator {
     workers: usize,
@@ -155,20 +181,7 @@ impl Coordinator {
         archs: &[ArchKind],
         base: &SimConfig,
     ) -> Vec<RunResult> {
-        let mut reqs = Vec::new();
-        for &b in benchmarks {
-            for &a in archs {
-                let mut cfg = SimConfig::paper(a);
-                cfg.window_cap = base.window_cap;
-                cfg.batch = base.batch;
-                cfg.seed = base.seed;
-                reqs.push(RunRequest {
-                    benchmark: b,
-                    config: cfg,
-                });
-            }
-        }
-        self.run_all(reqs)
+        self.run_all(sweep_requests(benchmarks, archs, base))
     }
 }
 

@@ -12,7 +12,10 @@
 //!   buffering, GB-S inter-filter balancing — plus every baseline the
 //!   paper evaluates (Dense/TPU, One-sided/Cnvlutin, SCNN, SparTen,
 //!   Synchronous, BARISTA-no-opts, Unlimited-buffer, Ideal), a banked
-//!   on-chip cache model, and 45-nm energy/area models.
+//!   on-chip cache model, and 45-nm energy/area models. The [`service`]
+//!   layer turns the simulator into a persistent job server (NDJSON over
+//!   TCP) with a content-addressed result cache, request deduplication
+//!   and backpressure — see DESIGN.md §Service.
 //! * **Layer 2 (python/compile/model.py)** — the functional sparse-CNN
 //!   compute graph in JAX, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — the bitmask sparse-chunk
@@ -37,6 +40,7 @@ pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod tensor;
 pub mod util;

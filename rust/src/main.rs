@@ -3,7 +3,12 @@
 //! Commands:
 //!   simulate   simulate one benchmark on one architecture
 //!   sweep      full benchmark × architecture sweep (Figure 7 data)
-//!   report     regenerate a named table/figure into out/
+//!   report     regenerate named tables/figures into out/ — accepts a
+//!              comma list or `all`; figures share one result cache, so
+//!              fig7,fig8,fig9 in one process simulates each job once
+//!   serve      run the persistent job server (NDJSON over TCP)
+//!   submit     submit one job to a running server
+//!   batch      submit a benchmark × architecture matrix to a server
 //!   golden     run the AOT artifacts through PJRT and cross-check vs the
 //!              native Rust reference (requires `make artifacts`)
 //!   info       print Table 1 / Table 2 style configuration info
@@ -11,12 +16,19 @@
 //! Examples:
 //!   barista simulate --network alexnet --arch barista --window-cap 512
 //!   barista sweep --window-cap 256 --out out/sweep.json
-//!   barista report --figure fig7
+//!   barista report --figure all
+//!   barista serve --addr 127.0.0.1:7077 --workers 8
+//!   barista submit --network resnet50 --arch barista
+//!   barista batch --networks alexnet,vggnet --archs dense,barista
 //!   barista golden --artifacts artifacts
+
+use std::time::Instant;
 
 use barista::cli::Args;
 use barista::config::{ArchKind, SimConfig};
-use barista::coordinator::{report, run_one, Coordinator, RunRequest};
+use barista::coordinator::{self, report, run_one, RunRequest};
+use barista::service::{Client, JobSpec, Scheduler, SchedulerConfig, Server, DEFAULT_ADDR};
+use barista::util::Json;
 use barista::workload::{network, Benchmark};
 
 fn main() {
@@ -31,6 +43,9 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "batch" => cmd_batch(&args),
         "golden" => cmd_golden(&args),
         "info" => cmd_info(&args),
         "" | "help" | "--help" => {
@@ -55,8 +70,11 @@ fn print_help() {
          \n\
          COMMANDS:\n\
          \x20 simulate  --network <name> --arch <name> [--window-cap N] [--batch N] [--seed N]\n\
-         \x20 sweep     [--window-cap N] [--batch N] [--seed N] [--out FILE]\n\
-         \x20 report    --figure <fig7|fig8|fig9> [--window-cap N]\n\
+         \x20 sweep     [--window-cap N] [--batch N] [--seed N] [--out FILE] [--workers N]\n\
+         \x20 report    --figure <fig7|fig8|fig9|all|comma,list> [--window-cap N] [--workers N]\n\
+         \x20 serve     [--addr HOST:PORT] [--workers N] [--shards N] [--queue-cap N] [--cache-mb N]\n\
+         \x20 submit    [--addr HOST:PORT] --network <name> [--arch <name>] [--window-cap N] [--json]\n\
+         \x20 batch     [--addr HOST:PORT] [--networks a,b|all] [--archs x,y|fig7] [--window-cap N]\n\
          \x20 golden    [--artifacts DIR]\n\
          \x20 info      [--network <name>]\n\
          \n\
@@ -65,6 +83,15 @@ fn print_help() {
          \x20         barista-no-opts barista unlimited-buffer ideal"
     );
 }
+
+/// The arch subset Figure 9 plots (all inside FIG7, so a cached FIG7
+/// sweep serves it without new simulation).
+const FIG9_ARCHS: [ArchKind; 4] = [
+    ArchKind::Dense,
+    ArchKind::OneSided,
+    ArchKind::SparTen,
+    ArchKind::Barista,
+];
 
 fn parse_common(args: &Args, arch: ArchKind) -> Result<SimConfig, String> {
     let mut cfg = SimConfig::paper(arch);
@@ -80,7 +107,31 @@ fn parse_benchmark(args: &Args) -> Result<Benchmark, String> {
     Benchmark::parse(name).ok_or_else(|| format!("unknown network '{name}'"))
 }
 
+/// Scheduler sizing from the shared `--workers`/`--shards`/`--queue-cap`
+/// /`--cache-mb` options (0 / absent keeps the default).
+fn scheduler_config(args: &Args) -> Result<SchedulerConfig, String> {
+    let mut cfg = SchedulerConfig::default();
+    let workers = args.get_usize("workers", 0)?;
+    if workers > 0 {
+        cfg.workers = workers;
+    }
+    let shards = args.get_usize("shards", 0)?;
+    if shards > 0 {
+        cfg.shards = shards;
+    }
+    let queue_cap = args.get_usize("queue-cap", 0)?;
+    if queue_cap > 0 {
+        cfg.queue_cap = queue_cap;
+    }
+    let cache_mb = args.get_usize("cache-mb", 0)?;
+    if cache_mb > 0 {
+        cfg.cache_bytes = cache_mb << 20;
+    }
+    Ok(cfg)
+}
+
 fn cmd_simulate(args: &Args) -> Result<(), String> {
+    args.finish(&["network", "arch", "window-cap", "batch", "seed"], &["json"])?;
     let arch_name = args.get_or("arch", "barista");
     let arch = ArchKind::parse(arch_name).ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
     let cfg = parse_common(args, arch)?;
@@ -120,9 +171,11 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
+    args.finish(&["window-cap", "batch", "seed", "out", "workers"], &[])?;
     let base = parse_common(args, ArchKind::Barista)?;
-    let coord = Coordinator::new();
-    let results = coord.sweep(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    let sched = Scheduler::new(scheduler_config(args)?);
+    let reqs = coordinator::sweep_requests(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    let results = sched.run_results(&reqs).map_err(|e| e.to_string())?;
     let (txt, _csv) = report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7);
     println!("{txt}");
     if let Some(out) = args.get("out") {
@@ -134,38 +187,216 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_report(args: &Args) -> Result<(), String> {
+    args.finish(
+        &[
+            "figure",
+            "window-cap",
+            "batch",
+            "seed",
+            "workers",
+            "shards",
+            "queue-cap",
+            "cache-mb",
+        ],
+        &[],
+    )?;
     let base = parse_common(args, ArchKind::Barista)?;
-    let fig = args.get_or("figure", "fig7");
-    let coord = Coordinator::new();
-    let results = coord.sweep(&Benchmark::ALL, &ArchKind::FIG7, &base);
-    let (txt, csv) = match fig {
-        "fig7" => report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7),
-        "fig8" => report::fig8_breakdown(&results, &Benchmark::ALL, &ArchKind::FIG7),
-        "fig9" => report::fig9_energy(
-            &results,
-            &Benchmark::ALL,
-            &[
-                ArchKind::Dense,
-                ArchKind::OneSided,
-                ArchKind::SparTen,
-                ArchKind::Barista,
-            ],
-        ),
-        other => return Err(format!("unknown figure '{other}'")),
+    let figure = args.get_or("figure", "fig7");
+    let figures: Vec<&str> = if figure == "all" {
+        vec!["fig7", "fig8", "fig9"]
+    } else {
+        figure.split(',').map(str::trim).collect()
     };
-    println!("{txt}");
-    let path = report::write_out(&format!("{fig}.csv"), &csv)
-        .map_err(|e| format!("write out/{fig}.csv: {e}"))?;
-    println!("wrote {}", path.display());
+    for fig in &figures {
+        if !matches!(*fig, "fig7" | "fig8" | "fig9") {
+            return Err(format!("unknown figure '{fig}' (expected fig7|fig8|fig9|all)"));
+        }
+    }
+    // One cache-aware scheduler for the whole invocation: every figure
+    // needs the same benchmark × FIG7 sweep, so after the first figure
+    // the rest are pure cache hits (no simulation work).
+    let sched = Scheduler::new(scheduler_config(args)?);
+    let reqs = coordinator::sweep_requests(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    for fig in &figures {
+        let before = sched.stats();
+        let t0 = Instant::now();
+        let results = sched.run_results(&reqs).map_err(|e| e.to_string())?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let after = sched.stats();
+        let (txt, csv) = match *fig {
+            "fig7" => report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7),
+            "fig8" => report::fig8_breakdown(&results, &Benchmark::ALL, &ArchKind::FIG7),
+            _ => report::fig9_energy(&results, &Benchmark::ALL, &FIG9_ARCHS),
+        };
+        println!("{txt}");
+        let path = report::write_out(&format!("{fig}.csv"), &csv)
+            .map_err(|e| format!("write out/{fig}.csv: {e}"))?;
+        println!("wrote {}", path.display());
+        println!(
+            "[{fig}] {} jobs: {} simulated, {} cache hits, {} deduped — {:.0} ms wall",
+            reqs.len(),
+            after.executed - before.executed,
+            after.cache_hits - before.cache_hits,
+            after.deduped - before.deduped,
+            wall_ms
+        );
+    }
+    println!("scheduler totals: {}", sched.stats().to_json().to_string());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    args.finish(&["addr", "workers", "shards", "queue-cap", "cache-mb"], &[])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let cfg = scheduler_config(args)?;
+    let (workers, shards, queue_cap, cache_mb) =
+        (cfg.workers, cfg.shards, cfg.queue_cap, cfg.cache_bytes >> 20);
+    let server = Server::bind(addr, cfg).map_err(|e| format!("bind {addr}: {e}"))?;
+    println!(
+        "barista serve: listening on {} ({workers} workers, {shards} shards, queue cap {queue_cap}, cache {cache_mb} MB)",
+        server.local_addr()
+    );
+    server.run().map_err(|e| format!("serve: {e}"))
+}
+
+/// Build a `JobSpec` from the shared job options.
+fn job_from_args(args: &Args) -> Result<JobSpec, String> {
+    let arch_name = args.get_or("arch", "barista");
+    let arch = ArchKind::parse(arch_name).ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
+    let config = parse_common(args, arch)?;
+    let benchmark = parse_benchmark(args)?;
+    Ok(JobSpec { benchmark, config })
+}
+
+fn response_err(resp: &Json) -> Option<String> {
+    if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+        return None;
+    }
+    let msg = resp
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("malformed response")
+        .to_string();
+    match resp.get("retry_after_ms").and_then(Json::as_u64) {
+        Some(ms) => Some(format!("{msg} (retry after {ms} ms)")),
+        None => Some(msg),
+    }
+}
+
+fn print_job_line(label: &str, body: &Json) {
+    let cycles = body
+        .get("result")
+        .and_then(|r| r.get("cycles"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let source = body.get("source").and_then(Json::as_str).unwrap_or("?");
+    let host_ms = body.get("host_ms").and_then(Json::as_f64).unwrap_or(0.0);
+    println!("{label:<32} {cycles:>12.3e} cycles  [{source:>8}]  host {host_ms:>7.0} ms");
+}
+
+fn cmd_submit(args: &Args) -> Result<(), String> {
+    args.finish(
+        &["addr", "network", "arch", "window-cap", "batch", "seed"],
+        &["json"],
+    )?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let spec = job_from_args(args)?;
+    let mut client = Client::connect(addr)?;
+    let resp = client.submit(&spec)?;
+    if let Some(e) = response_err(&resp) {
+        return Err(e);
+    }
+    print_job_line(
+        &format!("{} on {}", spec.benchmark, spec.config.arch),
+        &resp,
+    );
+    if args.flag("json") {
+        println!("{}", resp.pretty());
+    }
+    Ok(())
+}
+
+fn parse_network_list(s: &str) -> Result<Vec<Benchmark>, String> {
+    if s == "all" {
+        return Ok(Benchmark::ALL.to_vec());
+    }
+    s.split(',')
+        .map(str::trim)
+        .map(|n| Benchmark::parse(n).ok_or_else(|| format!("unknown network '{n}'")))
+        .collect()
+}
+
+fn parse_arch_list(s: &str) -> Result<Vec<ArchKind>, String> {
+    match s {
+        "all" => Ok(ArchKind::ALL.to_vec()),
+        "fig7" => Ok(ArchKind::FIG7.to_vec()),
+        _ => s
+            .split(',')
+            .map(str::trim)
+            .map(|n| ArchKind::parse(n).ok_or_else(|| format!("unknown arch '{n}'")))
+            .collect(),
+    }
+}
+
+fn cmd_batch(args: &Args) -> Result<(), String> {
+    args.finish(
+        &["addr", "networks", "archs", "window-cap", "batch", "seed"],
+        &["json"],
+    )?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let benchmarks = parse_network_list(args.get_or("networks", "all"))?;
+    let archs = parse_arch_list(args.get_or("archs", "fig7"))?;
+    let base = parse_common(args, ArchKind::Barista)?;
+    let specs: Vec<JobSpec> = coordinator::sweep_requests(&benchmarks, &archs, &base)
+        .into_iter()
+        .map(|r| JobSpec {
+            benchmark: r.benchmark,
+            config: r.config,
+        })
+        .collect();
+    let mut client = Client::connect(addr)?;
+    let t0 = Instant::now();
+    let resp = client.batch(&specs)?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    if let Some(e) = response_err(&resp) {
+        return Err(e);
+    }
+    let results = resp
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or("batch response missing 'results'")?;
+    if results.len() != specs.len() {
+        return Err(format!(
+            "batch returned {} results for {} jobs",
+            results.len(),
+            specs.len()
+        ));
+    }
+    for (spec, body) in specs.iter().zip(results) {
+        print_job_line(
+            &format!("{} on {}", spec.benchmark, spec.config.arch),
+            body,
+        );
+    }
+    println!("{} jobs in {wall_ms:.0} ms wall", specs.len());
+    let stats = client.stats()?;
+    if let Some(s) = stats.get("scheduler") {
+        println!("server stats: {}", s.to_string());
+    }
+    if args.flag("json") {
+        println!("{}", resp.pretty());
+    }
     Ok(())
 }
 
 fn cmd_golden(args: &Args) -> Result<(), String> {
+    args.finish(&["artifacts"], &[])?;
     let dir = args.get_or("artifacts", "artifacts");
     barista::runtime::golden_check(dir).map_err(|e| format!("{e:#}"))
 }
 
 fn cmd_info(args: &Args) -> Result<(), String> {
+    args.finish(&["network"], &[])?;
     if let Some(name) = args.get("network") {
         let b = Benchmark::parse(name).ok_or_else(|| format!("unknown network '{name}'"))?;
         let spec = network(b);

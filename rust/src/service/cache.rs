@@ -1,0 +1,327 @@
+//! Content-addressed result cache.
+//!
+//! Keyed by a stable 128-bit hash of the canonicalized job (benchmark +
+//! [`SimConfig::canonical_json`] — the seed is part of the config), so an
+//! identical `(benchmark, config, seed)` job always maps to the same key
+//! regardless of which client, figure, or process submitted it. Entries
+//! store both the structured [`RunResult`] (for in-process callers) and
+//! its compact `network.to_json()` string (for byte-identical wire
+//! responses); the serialized size is the unit of the LRU byte budget.
+//!
+//! This is the host-layer analogue of BARISTA's own thesis: amortize
+//! shared requests (telescoping/snarfing combine identical chunk
+//! fetches) instead of redundantly recomputing them. See DESIGN.md
+//! §Service.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{RunRequest, RunResult};
+use crate::util::{fnv1a64, Json, FNV_OFFSET_BASIS};
+
+/// Second FNV basis (the golden-ratio constant) — two independent 64-bit
+/// hashes over the same canonical string form a 128-bit composite key,
+/// making accidental collisions across the job space negligible.
+const FNV_BASIS_2: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// 128-bit content-addressed job key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct JobKey(pub u64, pub u64);
+
+impl JobKey {
+    /// Hex form, for logs and the wire protocol.
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.0, self.1)
+    }
+}
+
+/// The canonical string a job hashes to (also usable as a debug label).
+pub fn canonical_job_string(req: &RunRequest) -> String {
+    format!(
+        "{}|{}",
+        req.benchmark.name(),
+        req.config.canonical_json().to_string()
+    )
+}
+
+/// Content-addressed key for one simulation job.
+pub fn job_key(req: &RunRequest) -> JobKey {
+    let canon = canonical_job_string(req);
+    JobKey(
+        fnv1a64(canon.as_bytes(), FNV_OFFSET_BASIS),
+        fnv1a64(canon.as_bytes(), FNV_BASIS_2),
+    )
+}
+
+/// One cached simulation outcome: the structured result, its JSON tree
+/// (what responses embed — cloned, never re-parsed, on the hit path),
+/// and the compact serialization (the byte-identical wire payload and
+/// the unit of the byte budget).
+#[derive(Debug)]
+pub struct CachedEntry {
+    pub result: RunResult,
+    pub network: Json,
+    pub network_json: String,
+}
+
+impl CachedEntry {
+    pub fn new(result: RunResult) -> CachedEntry {
+        let network = result.network.to_json();
+        let network_json = network.to_string();
+        CachedEntry {
+            result,
+            network,
+            network_json,
+        }
+    }
+
+    /// Budget cost of this entry: serialized bytes plus a fixed
+    /// allowance for the structured result and bookkeeping.
+    pub fn cost(&self) -> usize {
+        self.network_json.len() + 64 * self.result.network.layers.len() + 256
+    }
+}
+
+/// Cache statistics snapshot.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub bytes: usize,
+    pub budget_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Entries skipped because a single entry exceeded the whole budget.
+    pub oversize_skips: u64,
+}
+
+impl CacheStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("entries", self.entries)
+            .set("bytes", self.bytes)
+            .set("budget_bytes", self.budget_bytes)
+            .set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("insertions", self.insertions)
+            .set("evictions", self.evictions)
+            .set("oversize_skips", self.oversize_skips);
+        j
+    }
+}
+
+struct Slot {
+    entry: Arc<CachedEntry>,
+    stamp: u64,
+}
+
+struct Inner {
+    map: HashMap<JobKey, Slot>,
+    /// LRU order: recency stamp → key (BTreeMap's first entry is the
+    /// least recently used).
+    lru: BTreeMap<u64, JobKey>,
+    stamp: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    oversize_skips: u64,
+}
+
+/// Thread-safe LRU result cache with a byte budget.
+pub struct ResultCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ResultCache {
+    pub fn new(budget_bytes: usize) -> ResultCache {
+        ResultCache {
+            budget: budget_bytes,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                lru: BTreeMap::new(),
+                stamp: 0,
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                insertions: 0,
+                evictions: 0,
+                oversize_skips: 0,
+            }),
+        }
+    }
+
+    /// Look up a key, counting a hit or miss and refreshing LRU recency.
+    pub fn get(&self, key: &JobKey) -> Option<Arc<CachedEntry>> {
+        let mut g = self.inner.lock().unwrap();
+        match self.touch(&mut g, key) {
+            Some(e) => {
+                g.hits += 1;
+                Some(e)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Like [`get`](Self::get) but without touching the hit/miss
+    /// counters — used for the scheduler's under-lock double-check so a
+    /// single logical lookup isn't double-counted.
+    pub fn peek(&self, key: &JobKey) -> Option<Arc<CachedEntry>> {
+        let mut g = self.inner.lock().unwrap();
+        self.touch(&mut g, key)
+    }
+
+    fn touch(&self, g: &mut Inner, key: &JobKey) -> Option<Arc<CachedEntry>> {
+        let (entry, old_stamp) = match g.map.get(key) {
+            Some(slot) => (slot.entry.clone(), slot.stamp),
+            None => return None,
+        };
+        g.lru.remove(&old_stamp);
+        g.stamp += 1;
+        let stamp = g.stamp;
+        g.lru.insert(stamp, *key);
+        if let Some(slot) = g.map.get_mut(key) {
+            slot.stamp = stamp;
+        }
+        Some(entry)
+    }
+
+    /// Insert (or refresh) an entry, evicting least-recently-used
+    /// entries until the byte budget holds. An entry bigger than the
+    /// whole budget is not stored (counted in `oversize_skips`).
+    pub fn insert(&self, key: JobKey, entry: Arc<CachedEntry>) {
+        let cost = entry.cost();
+        let mut g = self.inner.lock().unwrap();
+        if cost > self.budget {
+            g.oversize_skips += 1;
+            return;
+        }
+        // Replace an existing slot (double-execution race) cleanly.
+        if let Some(old) = g.map.remove(&key) {
+            g.lru.remove(&old.stamp);
+            g.bytes -= old.entry.cost().min(g.bytes);
+        }
+        while g.bytes + cost > self.budget {
+            let (&oldest, &victim) = match g.lru.iter().next() {
+                Some(kv) => kv,
+                None => break,
+            };
+            g.lru.remove(&oldest);
+            if let Some(slot) = g.map.remove(&victim) {
+                g.bytes -= slot.entry.cost().min(g.bytes);
+                g.evictions += 1;
+            }
+        }
+        g.stamp += 1;
+        let stamp = g.stamp;
+        g.lru.insert(stamp, key);
+        g.map.insert(key, Slot { entry, stamp });
+        g.bytes += cost;
+        g.insertions += 1;
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            entries: g.map.len(),
+            bytes: g.bytes,
+            budget_bytes: self.budget,
+            hits: g.hits,
+            misses: g.misses,
+            insertions: g.insertions,
+            evictions: g.evictions,
+            oversize_skips: g.oversize_skips,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchKind, SimConfig};
+    use crate::coordinator::run_one;
+    use crate::workload::Benchmark;
+
+    fn small_req(seed: u64) -> RunRequest {
+        let mut c = SimConfig::paper(ArchKind::Dense);
+        c.window_cap = 16;
+        c.batch = 1;
+        c.seed = seed;
+        RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: c,
+        }
+    }
+
+    #[test]
+    fn job_key_deterministic_and_distinct() {
+        let a = job_key(&small_req(1));
+        let b = job_key(&small_req(1));
+        let c = job_key(&small_req(2));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.hex().len(), 32);
+    }
+
+    #[test]
+    fn hit_miss_and_lru_refresh() {
+        let cache = ResultCache::new(1 << 20);
+        let req = small_req(1);
+        let key = job_key(&req);
+        assert!(cache.get(&key).is_none());
+        cache.insert(key, Arc::new(CachedEntry::new(run_one(&req))));
+        assert!(cache.get(&key).is_some());
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.entries, 1);
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn lru_evicts_under_byte_budget() {
+        // Budget sized for ~2 entries; inserting 4 must evict the oldest.
+        let probe = CachedEntry::new(run_one(&small_req(0)));
+        let budget = probe.cost() * 2 + probe.cost() / 2;
+        let cache = ResultCache::new(budget);
+        let keys: Vec<JobKey> = (0..4)
+            .map(|s| {
+                let req = small_req(s);
+                let key = job_key(&req);
+                cache.insert(key, Arc::new(CachedEntry::new(run_one(&req))));
+                key
+            })
+            .collect();
+        let s = cache.stats();
+        assert!(s.bytes <= budget, "bytes {} > budget {}", s.bytes, budget);
+        assert!(s.evictions >= 2, "evictions {}", s.evictions);
+        // The most recent entry must have survived.
+        assert!(cache.peek(&keys[3]).is_some());
+        // The oldest must be gone.
+        assert!(cache.peek(&keys[0]).is_none());
+    }
+
+    #[test]
+    fn oversize_entry_skipped() {
+        let cache = ResultCache::new(8);
+        let req = small_req(5);
+        cache.insert(job_key(&req), Arc::new(CachedEntry::new(run_one(&req))));
+        let s = cache.stats();
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.oversize_skips, 1);
+    }
+
+    #[test]
+    fn cached_json_matches_direct_run() {
+        let req = small_req(9);
+        let entry = CachedEntry::new(run_one(&req));
+        let direct = run_one(&req).network.to_json().to_string();
+        assert_eq!(entry.network_json, direct);
+    }
+}

@@ -1,0 +1,37 @@
+//! Simulation-as-a-service: a persistent, shardable job server with a
+//! content-addressed result cache.
+//!
+//! The CLI's figure/table commands historically recomputed identical
+//! `(benchmark, config, seed)` jobs from a cold process for every
+//! figure. This subsystem makes the simulator a long-running service
+//! instead, applying BARISTA's own amortize-shared-requests thesis
+//! (telescoping/snarfing) at the host layer:
+//!
+//! * [`protocol`] — newline-delimited JSON request/response types
+//!   (`submit`, `batch`, `status`, `stats`, `shutdown`);
+//! * [`cache`] — content-addressed LRU result cache keyed by the
+//!   canonicalized job (stable hash of benchmark + [`SimConfig`]
+//!   canonical JSON, seed included) with a byte budget;
+//! * [`scheduler`] — sharded bounded work queues over simulation
+//!   workers, with per-job deduplication (concurrent identical
+//!   submissions share one execution) and reject-with-retry-after
+//!   backpressure;
+//! * [`server`] — `std::net::TcpListener` thread-per-connection front
+//!   end plus the blocking [`Client`], shared by `barista serve`,
+//!   `barista submit`/`batch` and the integration tests.
+//!
+//! In-process callers (`barista report`, `barista sweep`, benches) use
+//! [`Scheduler`] directly — same cache, no socket. See DESIGN.md
+//! §Service for the wire format and guarantees.
+//!
+//! [`SimConfig`]: crate::config::SimConfig
+
+pub mod cache;
+pub mod protocol;
+pub mod scheduler;
+pub mod server;
+
+pub use cache::{job_key, CacheStats, CachedEntry, JobKey, ResultCache};
+pub use protocol::{JobSpec, Request, DEFAULT_ADDR};
+pub use scheduler::{Outcome, Scheduler, SchedulerConfig, SchedulerStats, Source, SubmitError};
+pub use server::{Client, Server};

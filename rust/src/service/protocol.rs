@@ -1,0 +1,274 @@
+//! Newline-delimited JSON request/response protocol.
+//!
+//! One request per line, one response per line, over any byte stream
+//! (the TCP server in [`super::server`] or an in-process loopback).
+//! Built on `util::json` — no serde in the vendored set.
+//!
+//! Requests (`op` selects the verb):
+//!
+//! ```text
+//! {"op":"submit","job":{"network":"alexnet","arch":"barista","config":{...}}}
+//! {"op":"batch","jobs":[{...},{...}]}
+//! {"op":"status"}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! `job.config` takes [`SimConfig`] field overrides on top of the
+//! architecture's paper configuration; unknown keys (and unknown
+//! top-level job keys) are protocol errors, never silently ignored.
+//! Responses always carry `"ok"`; failures carry `"error"` and, for
+//! backpressure, `"retry_after_ms"`. See DESIGN.md §Service.
+
+use crate::config::{ArchKind, SimConfig};
+use crate::coordinator::RunRequest;
+use crate::util::Json;
+use crate::workload::Benchmark;
+
+/// Default service address for `barista serve`/`submit`/`batch`.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7077";
+
+/// One job: a benchmark on a fully resolved configuration.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub benchmark: Benchmark,
+    pub config: SimConfig,
+}
+
+impl JobSpec {
+    pub fn to_request(&self) -> RunRequest {
+        RunRequest {
+            benchmark: self.benchmark,
+            config: self.config.clone(),
+        }
+    }
+
+    /// Wire form: `network` + `arch` + full `config` overrides (the
+    /// round-trip through [`Self::from_json`] is lossless).
+    pub fn to_json(&self) -> Json {
+        let mut cfg = self.config.canonical_json();
+        if let Json::Obj(m) = &mut cfg {
+            // `arch` travels at the job level; `config` keys are
+            // overrides only.
+            m.remove("arch");
+        }
+        let mut j = Json::obj();
+        j.set("network", self.benchmark.name())
+            .set("arch", self.config.arch.name())
+            .set("config", cfg);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobSpec, String> {
+        let obj = j.as_obj().ok_or("job must be an object")?;
+        for k in obj.keys() {
+            if !matches!(k.as_str(), "network" | "arch" | "config") {
+                return Err(format!("unknown job key '{k}'"));
+            }
+        }
+        let network = j
+            .get("network")
+            .and_then(Json::as_str)
+            .ok_or("job missing 'network'")?;
+        let benchmark =
+            Benchmark::parse(network).ok_or_else(|| format!("unknown network '{network}'"))?;
+        let arch_name = j.get("arch").and_then(Json::as_str).unwrap_or("barista");
+        let arch =
+            ArchKind::parse(arch_name).ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
+        let mut config = SimConfig::paper(arch);
+        if let Some(c) = j.get("config") {
+            config.apply_overrides(c)?;
+        }
+        config.validate()?;
+        Ok(JobSpec { benchmark, config })
+    }
+}
+
+/// A parsed protocol request.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Submit(JobSpec),
+    Batch(Vec<JobSpec>),
+    Status,
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    /// Parse one NDJSON line.
+    pub fn parse_line(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line.trim()).map_err(|e| format!("bad request JSON: {e}"))?;
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or("request missing 'op'")?;
+        match op {
+            "submit" => {
+                let job = j.get("job").ok_or("submit missing 'job'")?;
+                Ok(Request::Submit(JobSpec::from_json(job)?))
+            }
+            "batch" => {
+                let jobs = j
+                    .get("jobs")
+                    .and_then(Json::as_arr)
+                    .ok_or("batch missing 'jobs' array")?;
+                if jobs.is_empty() {
+                    return Err("batch with no jobs".into());
+                }
+                jobs.iter()
+                    .map(JobSpec::from_json)
+                    .collect::<Result<Vec<_>, _>>()
+                    .map(Request::Batch)
+            }
+            "status" => Ok(Request::Status),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+
+    /// Wire form (client side).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            Request::Submit(spec) => {
+                j.set("op", "submit").set("job", spec.to_json());
+            }
+            Request::Batch(specs) => {
+                j.set("op", "batch").set(
+                    "jobs",
+                    Json::Arr(specs.iter().map(|s| s.to_json()).collect()),
+                );
+            }
+            Request::Status => {
+                j.set("op", "status");
+            }
+            Request::Stats => {
+                j.set("op", "stats");
+            }
+            Request::Shutdown => {
+                j.set("op", "shutdown");
+            }
+        }
+        j
+    }
+}
+
+/// Error response.
+pub fn response_error(msg: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", false).set("error", msg);
+    j
+}
+
+/// Backpressure response: try again after `retry_after_ms`.
+pub fn response_busy(retry_after_ms: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", false)
+        .set("error", "busy")
+        .set("retry_after_ms", retry_after_ms);
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_roundtrip_preserves_config() {
+        let mut config = SimConfig::paper(ArchKind::Barista);
+        config.window_cap = 99;
+        config.seed = 5;
+        config.opts.coloring = false;
+        let spec = JobSpec {
+            benchmark: Benchmark::ResNet50,
+            config,
+        };
+        let line = Request::Submit(spec.clone()).to_json().to_string();
+        match Request::parse_line(&line).unwrap() {
+            Request::Submit(back) => {
+                assert_eq!(back.benchmark, spec.benchmark);
+                assert_eq!(
+                    back.config.canonical_json().to_string(),
+                    spec.config.canonical_json().to_string()
+                );
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let specs: Vec<JobSpec> = [ArchKind::Dense, ArchKind::Ideal]
+            .iter()
+            .map(|&a| JobSpec {
+                benchmark: Benchmark::AlexNet,
+                config: SimConfig::paper(a),
+            })
+            .collect();
+        let line = Request::Batch(specs.clone()).to_json().to_string();
+        match Request::parse_line(&line).unwrap() {
+            Request::Batch(back) => {
+                assert_eq!(back.len(), 2);
+                assert_eq!(back[1].config.arch, ArchKind::Ideal);
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_ops_parse() {
+        for (line, want) in [
+            (r#"{"op":"status"}"#, "status"),
+            (r#"{"op":"stats"}"#, "stats"),
+            (r#"{"op":"shutdown"}"#, "shutdown"),
+        ] {
+            let req = Request::parse_line(line).unwrap();
+            assert_eq!(
+                req.to_json().get("op").unwrap().as_str().unwrap(),
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_errors() {
+        assert!(Request::parse_line("not json").is_err());
+        assert!(Request::parse_line(r#"{"no_op":1}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"frobnicate"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"submit"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"batch","jobs":[]}"#).is_err());
+    }
+
+    #[test]
+    fn unknown_job_and_config_keys_rejected() {
+        let e = Request::parse_line(
+            r#"{"op":"submit","job":{"network":"alexnet","windowcap":64}}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("windowcap"), "{e}");
+        let e = Request::parse_line(
+            r#"{"op":"submit","job":{"network":"alexnet","config":{"windowcap":64}}}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("windowcap"), "{e}");
+    }
+
+    #[test]
+    fn invalid_config_rejected_at_parse() {
+        // fgrs=63 breaks the barista grid constraint.
+        let e = Request::parse_line(
+            r#"{"op":"submit","job":{"network":"alexnet","arch":"barista","config":{"fgrs":63}}}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("grid"), "{e}");
+    }
+
+    #[test]
+    fn error_responses_shape() {
+        let j = response_error("nope");
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        let j = response_busy(25);
+        assert_eq!(j.get("retry_after_ms").unwrap().as_u64(), Some(25));
+    }
+}

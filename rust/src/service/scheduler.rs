@@ -1,0 +1,588 @@
+//! Cache-aware sharded job scheduler.
+//!
+//! Sits between the front ends (TCP server, CLI) and the simulation
+//! workers ([`coordinator::run_one`]):
+//!
+//! * **sharding** — jobs hash (by content key) onto one of N shard
+//!   queues; workers have a home shard and steal from the others, so any
+//!   worker/shard ratio makes progress;
+//! * **deduplication** — concurrent submissions of an identical job
+//!   share one execution: later submitters attach as waiters to the
+//!   in-flight job instead of enqueuing a duplicate;
+//! * **backpressure** — each shard queue is bounded; a full queue
+//!   rejects with a retry-after hint instead of buffering unboundedly;
+//! * **caching** — finished jobs land in the content-addressed
+//!   [`ResultCache`]; repeat submissions return without simulating.
+//!
+//! Determinism: results come from [`run_one`], which is deterministic
+//! per (benchmark, config, seed), so a cached result is byte-identical
+//! to a fresh execution.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{run_one, RunRequest, RunResult};
+use crate::service::cache::{job_key, CachedEntry, CacheStats, JobKey, ResultCache};
+use crate::util::Json;
+
+/// Scheduler sizing knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Worker threads executing simulations.
+    pub workers: usize,
+    /// Independent work queues (dedup domains are global; queues shard).
+    pub shards: usize,
+    /// Per-shard pending-job bound; beyond it submissions are rejected
+    /// with a retry-after hint.
+    pub queue_cap: usize,
+    /// Result-cache byte budget.
+    pub cache_bytes: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16);
+        SchedulerConfig {
+            workers,
+            shards: 4,
+            queue_cap: 256,
+            cache_bytes: 256 << 20,
+        }
+    }
+}
+
+/// Where a job's result came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    /// This submission triggered the simulation.
+    Executed,
+    /// Attached to an identical in-flight job (one execution shared).
+    Deduped,
+    /// Served from the content-addressed cache.
+    CacheHit,
+}
+
+impl Source {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Source::Executed => "executed",
+            Source::Deduped => "dedup",
+            Source::CacheHit => "cache",
+        }
+    }
+}
+
+/// A completed submission.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub entry: Arc<CachedEntry>,
+    pub source: Source,
+}
+
+/// Why a submission did not complete.
+#[derive(Debug, Clone)]
+pub enum SubmitError {
+    /// Queue full — backpressure. Retry after the hinted delay.
+    Busy { retry_after_ms: u64 },
+    /// The job's configuration failed validation.
+    Invalid(String),
+    /// The scheduler stopped before the job finished.
+    Shutdown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Busy { retry_after_ms } => {
+                write!(f, "busy: queue full, retry after {retry_after_ms} ms")
+            }
+            SubmitError::Invalid(e) => write!(f, "invalid job: {e}"),
+            SubmitError::Shutdown => f.write_str("scheduler is shutting down"),
+        }
+    }
+}
+
+/// Counter snapshot (plus live queue depth) for `stats` requests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedulerStats {
+    pub submitted: u64,
+    pub executed: u64,
+    pub deduped: u64,
+    pub cache_hits: u64,
+    pub rejected: u64,
+    pub queued: usize,
+    pub workers: usize,
+    pub shards: usize,
+    pub cache: CacheStats,
+}
+
+impl SchedulerStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("submitted", self.submitted)
+            .set("executed", self.executed)
+            .set("deduped", self.deduped)
+            .set("cache_hits", self.cache_hits)
+            .set("rejected", self.rejected)
+            .set("queued", self.queued)
+            .set("workers", self.workers)
+            .set("shards", self.shards)
+            .set("cache", self.cache.to_json());
+        j
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    executed: AtomicU64,
+    deduped: AtomicU64,
+    cache_hits: AtomicU64,
+    rejected: AtomicU64,
+}
+
+struct Job {
+    req: RunRequest,
+    waiters: Vec<mpsc::Sender<Arc<CachedEntry>>>,
+}
+
+struct ShardState {
+    /// Keys awaiting a worker (each key appears at most once).
+    queue: VecDeque<JobKey>,
+    /// Pending *and* in-flight jobs — present until the result is
+    /// cached, so identical submissions dedup onto them.
+    jobs: HashMap<JobKey, Job>,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    ready: Condvar,
+}
+
+enum Enqueued {
+    Ready(Outcome),
+    Pending(mpsc::Receiver<Arc<CachedEntry>>, Source),
+}
+
+/// The scheduler. Cheap to share behind an `Arc`; dropping it stops the
+/// workers (pending waiters then observe [`SubmitError::Shutdown`]).
+pub struct Scheduler {
+    shards: Vec<Arc<Shard>>,
+    cache: Arc<ResultCache>,
+    counters: Arc<Counters>,
+    stop: Arc<AtomicBool>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    queue_cap: usize,
+    workers: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        let workers = cfg.workers.max(1);
+        let nshards = cfg.shards.max(1);
+        let shards: Vec<Arc<Shard>> = (0..nshards)
+            .map(|_| {
+                Arc::new(Shard {
+                    state: Mutex::new(ShardState {
+                        queue: VecDeque::new(),
+                        jobs: HashMap::new(),
+                    }),
+                    ready: Condvar::new(),
+                })
+            })
+            .collect();
+        let cache = Arc::new(ResultCache::new(cfg.cache_bytes));
+        let counters = Arc::new(Counters::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let shards = shards.clone();
+            let cache = cache.clone();
+            let counters = counters.clone();
+            let stop = stop.clone();
+            let home = i % nshards;
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("barista-worker-{i}"))
+                    .spawn(move || worker_loop(&shards, home, &cache, &counters, &stop))
+                    .expect("spawn worker"),
+            );
+        }
+        Scheduler {
+            shards,
+            cache,
+            counters,
+            stop,
+            handles: Mutex::new(handles),
+            queue_cap: cfg.queue_cap.max(1),
+            workers,
+        }
+    }
+
+    /// Submit without blocking on execution: either an immediate cached
+    /// outcome or a receiver for the eventual result.
+    fn enqueue(&self, req: &RunRequest) -> Result<Enqueued, SubmitError> {
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        if self.stop.load(Ordering::SeqCst) {
+            return Err(SubmitError::Shutdown);
+        }
+        req.config.validate().map_err(SubmitError::Invalid)?;
+        let key = job_key(req);
+        if let Some(entry) = self.cache.get(&key) {
+            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Enqueued::Ready(Outcome {
+                entry,
+                source: Source::CacheHit,
+            }));
+        }
+        let shard = &self.shards[(key.0 % self.shards.len() as u64) as usize];
+        let mut st = shard.state.lock().unwrap();
+        // Re-check stop under the shard lock: shutdown() drains the
+        // shards after joining the workers, and its drain serializes
+        // with this critical section — so either we observe stop here,
+        // or our insert happens before the drain and is cleaned up by
+        // it. Without this a job enqueued during shutdown would have no
+        // worker and its waiter would block forever.
+        if self.stop.load(Ordering::SeqCst) {
+            return Err(SubmitError::Shutdown);
+        }
+        // Double-check under the shard lock: a worker inserts into the
+        // cache *before* removing the job entry, so a job absent from
+        // `jobs` that finished since our miss is now visible here.
+        if let Some(entry) = self.cache.peek(&key) {
+            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Enqueued::Ready(Outcome {
+                entry,
+                source: Source::CacheHit,
+            }));
+        }
+        if let Some(job) = st.jobs.get_mut(&key) {
+            let (tx, rx) = mpsc::channel();
+            job.waiters.push(tx);
+            self.counters.deduped.fetch_add(1, Ordering::Relaxed);
+            return Ok(Enqueued::Pending(rx, Source::Deduped));
+        }
+        if st.queue.len() >= self.queue_cap {
+            self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Busy {
+                retry_after_ms: 10 + 2 * st.queue.len() as u64,
+            });
+        }
+        let (tx, rx) = mpsc::channel();
+        st.jobs.insert(
+            key,
+            Job {
+                req: req.clone(),
+                waiters: vec![tx],
+            },
+        );
+        st.queue.push_back(key);
+        drop(st);
+        shard.ready.notify_one();
+        Ok(Enqueued::Pending(rx, Source::Executed))
+    }
+
+    /// Submit one job and block until its result is available.
+    pub fn execute(&self, req: &RunRequest) -> Result<Outcome, SubmitError> {
+        wait(self.enqueue(req)?)
+    }
+
+    /// Total time a `run_all` submission may spend retrying a full
+    /// queue before the Busy bubbles up to the caller.
+    const MAX_ENQUEUE_WAIT_MS: u64 = 10_000;
+
+    /// Run a batch, preserving input order. All jobs are enqueued before
+    /// any result is awaited so independent jobs run concurrently.
+    /// Backpressure rejections are retried (workers are draining the
+    /// queue, so waiting usually resolves), but only up to
+    /// `MAX_ENQUEUE_WAIT_MS` per job — beyond that the Busy error
+    /// propagates so a loaded server answers instead of blocking the
+    /// connection indefinitely.
+    pub fn run_all(&self, reqs: &[RunRequest]) -> Result<Vec<Outcome>, SubmitError> {
+        let mut slots = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let mut waited_ms = 0u64;
+            loop {
+                match self.enqueue(req) {
+                    Ok(e) => {
+                        slots.push(e);
+                        break;
+                    }
+                    Err(SubmitError::Busy { retry_after_ms }) => {
+                        if waited_ms >= Self::MAX_ENQUEUE_WAIT_MS {
+                            return Err(SubmitError::Busy { retry_after_ms });
+                        }
+                        let nap = retry_after_ms.min(50);
+                        std::thread::sleep(Duration::from_millis(nap));
+                        waited_ms += nap;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        slots.into_iter().map(wait).collect()
+    }
+
+    /// Batch helper returning plain results (report/CLI path).
+    pub fn run_results(&self, reqs: &[RunRequest]) -> Result<Vec<RunResult>, SubmitError> {
+        Ok(self
+            .run_all(reqs)?
+            .into_iter()
+            .map(|o| o.entry.result.clone())
+            .collect())
+    }
+
+    pub fn stats(&self) -> SchedulerStats {
+        let queued: usize = self
+            .shards
+            .iter()
+            .map(|s| s.state.lock().unwrap().queue.len())
+            .sum();
+        SchedulerStats {
+            submitted: self.counters.submitted.load(Ordering::Relaxed),
+            executed: self.counters.executed.load(Ordering::Relaxed),
+            deduped: self.counters.deduped.load(Ordering::Relaxed),
+            cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
+            rejected: self.counters.rejected.load(Ordering::Relaxed),
+            queued,
+            workers: self.workers,
+            shards: self.shards.len(),
+            cache: self.cache.stats(),
+        }
+    }
+
+    /// Stop the workers. Jobs still queued are abandoned; their waiters
+    /// observe [`SubmitError::Shutdown`]. Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for shard in &self.shards {
+            shard.ready.notify_all();
+        }
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        // Drain anything that raced past the pre-lock stop check:
+        // dropping the jobs drops their waiters' senders, so blocked
+        // `recv`s error out as Shutdown instead of hanging.
+        for shard in &self.shards {
+            let mut st = shard.state.lock().unwrap();
+            st.queue.clear();
+            st.jobs.clear();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Resolve an enqueued submission to its outcome, blocking on the
+/// worker when the job is pending (shared by `execute` and `run_all`).
+fn wait(e: Enqueued) -> Result<Outcome, SubmitError> {
+    match e {
+        Enqueued::Ready(o) => Ok(o),
+        Enqueued::Pending(rx, source) => rx
+            .recv()
+            .map(|entry| Outcome { entry, source })
+            .map_err(|_| SubmitError::Shutdown),
+    }
+}
+
+fn worker_loop(
+    shards: &[Arc<Shard>],
+    home: usize,
+    cache: &ResultCache,
+    counters: &Counters,
+    stop: &AtomicBool,
+) {
+    let n = shards.len();
+    loop {
+        // Home shard first, then steal in ring order.
+        let mut found: Option<(usize, JobKey, RunRequest)> = None;
+        for off in 0..n {
+            let idx = (home + off) % n;
+            let mut st = shards[idx].state.lock().unwrap();
+            if let Some(key) = st.queue.pop_front() {
+                let req = st
+                    .jobs
+                    .get(&key)
+                    .expect("queued key has a job entry")
+                    .req
+                    .clone();
+                found = Some((idx, key, req));
+                break;
+            }
+        }
+        match found {
+            Some((idx, key, req)) => {
+                let entry = Arc::new(CachedEntry::new(run_one(&req)));
+                // Cache first, then retire the job entry: submitters
+                // re-check the cache under the shard lock, so there is
+                // no window where a job is neither in-flight nor cached.
+                cache.insert(key, entry.clone());
+                let waiters = {
+                    let mut st = shards[idx].state.lock().unwrap();
+                    st.jobs.remove(&key).map(|j| j.waiters).unwrap_or_default()
+                };
+                counters.executed.fetch_add(1, Ordering::Relaxed);
+                for w in waiters {
+                    let _ = w.send(entry.clone());
+                }
+            }
+            None => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let shard = &shards[home];
+                let st = shard.state.lock().unwrap();
+                // Timed wait so steals and shutdown are observed even
+                // when only other shards receive work.
+                let _ = shard
+                    .ready
+                    .wait_timeout(st, Duration::from_millis(20))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchKind, SimConfig};
+    use crate::workload::Benchmark;
+
+    fn small_req(arch: ArchKind, seed: u64) -> RunRequest {
+        let mut c = SimConfig::paper(arch);
+        c.window_cap = 16;
+        c.batch = 1;
+        c.seed = seed;
+        RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: c,
+        }
+    }
+
+    fn small_sched(workers: usize) -> Scheduler {
+        Scheduler::new(SchedulerConfig {
+            workers,
+            shards: 2,
+            queue_cap: 64,
+            cache_bytes: 16 << 20,
+        })
+    }
+
+    #[test]
+    fn second_submission_is_a_cache_hit() {
+        let s = small_sched(2);
+        let req = small_req(ArchKind::Dense, 1);
+        let a = s.execute(&req).unwrap();
+        assert_eq!(a.source, Source::Executed);
+        let b = s.execute(&req).unwrap();
+        assert_eq!(b.source, Source::CacheHit);
+        assert_eq!(a.entry.network_json, b.entry.network_json);
+        let st = s.stats();
+        assert_eq!(st.executed, 1);
+        assert_eq!(st.cache_hits, 1);
+    }
+
+    #[test]
+    fn concurrent_identical_jobs_share_one_execution() {
+        let s = Arc::new(small_sched(4));
+        let req = small_req(ArchKind::Dense, 2);
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let s = s.clone();
+            let req = req.clone();
+            joins.push(std::thread::spawn(move || s.execute(&req).unwrap()));
+        }
+        let outcomes: Vec<Outcome> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        let first = &outcomes[0].entry.network_json;
+        assert!(outcomes.iter().all(|o| &o.entry.network_json == first));
+        let st = s.stats();
+        assert_eq!(st.executed, 1, "identical jobs simulated once: {st:?}");
+        assert_eq!(st.deduped + st.cache_hits, 7, "{st:?}");
+    }
+
+    #[test]
+    fn run_all_preserves_order_and_dedups() {
+        let s = small_sched(4);
+        let a = small_req(ArchKind::Dense, 3);
+        let b = small_req(ArchKind::Ideal, 3);
+        let reqs = vec![a.clone(), b.clone(), a.clone(), b.clone(), a.clone()];
+        let out = s.run_all(&reqs).unwrap();
+        assert_eq!(out.len(), 5);
+        for (o, r) in out.iter().zip(&reqs) {
+            assert_eq!(o.entry.result.arch, r.config.arch);
+        }
+        let st = s.stats();
+        assert_eq!(st.executed, 2, "{st:?}");
+        assert_eq!(st.submitted, 5);
+    }
+
+    #[test]
+    fn invalid_config_is_rejected_not_paniced() {
+        let s = small_sched(1);
+        let mut req = small_req(ArchKind::Barista, 1);
+        req.config.fgrs = 63; // breaks the grid constraint
+        match s.execute(&req) {
+            Err(SubmitError::Invalid(e)) => assert!(e.contains("grid"), "{e}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        // No workers consuming fast enough: 1 worker, queue cap 1.
+        let s = Scheduler::new(SchedulerConfig {
+            workers: 1,
+            shards: 1,
+            queue_cap: 1,
+            cache_bytes: 1 << 20,
+        });
+        // Enqueue distinct jobs without waiting until one is rejected.
+        let mut rejected = false;
+        let mut pending = Vec::new();
+        for seed in 0..64 {
+            match s.enqueue(&small_req(ArchKind::Dense, 1000 + seed)) {
+                Ok(e) => pending.push(e),
+                Err(SubmitError::Busy { retry_after_ms }) => {
+                    assert!(retry_after_ms > 0);
+                    rejected = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(rejected, "queue_cap=1 must reject a burst of 64 jobs");
+        assert!(s.stats().rejected >= 1);
+        // Drain what was accepted so shutdown is clean.
+        for e in pending {
+            if let Enqueued::Pending(rx, _) = e {
+                let _ = rx.recv();
+            }
+        }
+    }
+
+    #[test]
+    fn results_identical_to_direct_run_one() {
+        let s = small_sched(2);
+        let req = small_req(ArchKind::Barista, 7);
+        let via_sched = s.execute(&req).unwrap();
+        let direct = run_one(&req);
+        assert_eq!(
+            via_sched.entry.network_json,
+            direct.network.to_json().to_string(),
+            "scheduler result must be byte-identical to run_one"
+        );
+    }
+}

@@ -1,0 +1,264 @@
+//! TCP front end and client for the job service.
+//!
+//! `std::net::TcpListener`, thread-per-connection (the vendored crate
+//! set has no tokio; simulation jobs are seconds-long, so connection
+//! concurrency — not I/O multiplexing — is the bottleneck that matters).
+//! Every connection speaks the NDJSON protocol from [`super::protocol`];
+//! all connections share one [`Scheduler`], so deduplication and the
+//! content-addressed cache span clients.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::service::protocol::{self, JobSpec, Request};
+use crate::service::scheduler::{Outcome, Scheduler, SchedulerConfig, SubmitError};
+use crate::util::Json;
+
+/// A running (not yet accepting) job server.
+pub struct Server {
+    listener: TcpListener,
+    local: SocketAddr,
+    scheduler: Arc<Scheduler>,
+    stop: Arc<AtomicBool>,
+    started: Instant,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and build the
+    /// shared scheduler. Call [`run`](Self::run) to start accepting.
+    pub fn bind(addr: &str, cfg: SchedulerConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            local,
+            scheduler: Arc::new(Scheduler::new(cfg)),
+            stop: Arc::new(AtomicBool::new(false)),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.scheduler
+    }
+
+    /// Accept loop: one thread per connection, until a `shutdown`
+    /// request arrives. Returns after the scheduler has drained.
+    pub fn run(&self) -> std::io::Result<()> {
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let scheduler = self.scheduler.clone();
+            let stop = self.stop.clone();
+            let local = self.local;
+            let started = self.started;
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &scheduler, &stop, local, started);
+            });
+        }
+        self.scheduler.shutdown();
+        Ok(())
+    }
+
+    /// Bind and serve on a background thread — the test/embedding
+    /// harness. Returns the bound address and the serving thread.
+    pub fn spawn(
+        addr: &str,
+        cfg: SchedulerConfig,
+    ) -> std::io::Result<(SocketAddr, std::thread::JoinHandle<std::io::Result<()>>)> {
+        let server = Server::bind(addr, cfg)?;
+        let local = server.local_addr();
+        let handle = std::thread::spawn(move || server.run());
+        Ok((local, handle))
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    scheduler: &Scheduler,
+    stop: &AtomicBool,
+    local: SocketAddr,
+    started: Instant,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, quit) = respond(&line, scheduler, started);
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if quit {
+            stop.store(true, Ordering::SeqCst);
+            // The accept loop is blocked in `accept`; poke it awake so
+            // it observes the stop flag. A wildcard bind address
+            // (0.0.0.0 / ::) is not connectable everywhere — poke via
+            // loopback on the same port instead.
+            let mut wake = local;
+            if wake.ip().is_unspecified() {
+                let loopback: std::net::IpAddr = match wake.ip() {
+                    std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                    std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+                };
+                wake.set_ip(loopback);
+            }
+            let _ = TcpStream::connect(wake);
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Handle one request line; returns the response and whether the server
+/// should shut down. Public so an in-process client can speak the same
+/// protocol without a socket.
+pub fn respond(line: &str, scheduler: &Scheduler, started: Instant) -> (Json, bool) {
+    match Request::parse_line(line) {
+        Err(e) => (protocol::response_error(&e), false),
+        Ok(Request::Submit(spec)) => (submit_response(scheduler, &spec), false),
+        Ok(Request::Batch(specs)) => (batch_response(scheduler, &specs), false),
+        Ok(Request::Status) => (status_response(scheduler, started), false),
+        Ok(Request::Stats) => {
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("op", "stats")
+                .set("scheduler", scheduler.stats().to_json());
+            (j, false)
+        }
+        Ok(Request::Shutdown) => {
+            let mut j = Json::obj();
+            j.set("ok", true).set("op", "shutdown");
+            (j, true)
+        }
+    }
+}
+
+/// The per-job response body shared by `submit` and `batch` entries.
+fn outcome_json(outcome: &Outcome) -> Json {
+    let mut j = Json::obj();
+    j.set("source", outcome.source.name())
+        .set("host_ms", outcome.entry.result.host_ms)
+        .set("result", outcome.entry.network.clone());
+    j
+}
+
+fn submit_response(scheduler: &Scheduler, spec: &JobSpec) -> Json {
+    match scheduler.execute(&spec.to_request()) {
+        Ok(outcome) => {
+            let mut j = outcome_json(&outcome);
+            j.set("ok", true).set("op", "submit");
+            j
+        }
+        Err(SubmitError::Busy { retry_after_ms }) => protocol::response_busy(retry_after_ms),
+        Err(e) => protocol::response_error(&e.to_string()),
+    }
+}
+
+fn batch_response(scheduler: &Scheduler, specs: &[JobSpec]) -> Json {
+    let reqs: Vec<_> = specs.iter().map(|s| s.to_request()).collect();
+    match scheduler.run_all(&reqs) {
+        Ok(outcomes) => {
+            let mut j = Json::obj();
+            j.set("ok", true).set("op", "batch").set(
+                "results",
+                Json::Arr(outcomes.iter().map(outcome_json).collect()),
+            );
+            j
+        }
+        Err(SubmitError::Busy { retry_after_ms }) => protocol::response_busy(retry_after_ms),
+        Err(e) => protocol::response_error(&e.to_string()),
+    }
+}
+
+fn status_response(scheduler: &Scheduler, started: Instant) -> Json {
+    let stats = scheduler.stats();
+    let mut j = Json::obj();
+    j.set("ok", true)
+        .set("op", "status")
+        .set("uptime_ms", started.elapsed().as_millis() as u64)
+        .set("workers", stats.workers)
+        .set("shards", stats.shards)
+        .set("queued", stats.queued)
+        .set("cache_entries", stats.cache.entries)
+        .set("cache_bytes", stats.cache.bytes);
+    j
+}
+
+/// Blocking NDJSON client over TCP, used by `barista submit`/`batch`
+/// and the integration tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .map_err(|e| format!("clone stream: {e}"))?,
+        );
+        Ok(Client {
+            reader,
+            writer: stream,
+        })
+    }
+
+    /// Send one request line, read one response line.
+    pub fn roundtrip(&mut self, req: &Json) -> Result<Json, String> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .map_err(|e| format!("send: {e}"))?;
+        self.writer.flush().map_err(|e| format!("flush: {e}"))?;
+        let mut buf = String::new();
+        let n = self
+            .reader
+            .read_line(&mut buf)
+            .map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Err("server closed the connection".into());
+        }
+        Json::parse(buf.trim_end()).map_err(|e| format!("bad response JSON: {e}"))
+    }
+
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<Json, String> {
+        self.roundtrip(&Request::Submit(spec.clone()).to_json())
+    }
+
+    pub fn batch(&mut self, specs: &[JobSpec]) -> Result<Json, String> {
+        self.roundtrip(&Request::Batch(specs.to_vec()).to_json())
+    }
+
+    pub fn status(&mut self) -> Result<Json, String> {
+        self.roundtrip(&Request::Status.to_json())
+    }
+
+    pub fn stats(&mut self) -> Result<Json, String> {
+        self.roundtrip(&Request::Stats.to_json())
+    }
+
+    pub fn shutdown(&mut self) -> Result<Json, String> {
+        self.roundtrip(&Request::Shutdown.to_json())
+    }
+}

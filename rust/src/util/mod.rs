@@ -28,6 +28,20 @@ pub fn ceil_div(a: u64, b: u64) -> u64 {
     (a + b - 1) / b
 }
 
+/// Standard FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit hash with a caller-chosen basis (two different bases
+/// give two independent-enough hashes for a 128-bit composite key).
+pub fn fnv1a64(bytes: &[u8], basis: u64) -> u64 {
+    let mut h = basis;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -54,5 +68,15 @@ mod tests {
         assert_eq!(ceil_div(9, 4), 3);
         assert_eq!(ceil_div(0, 4), 0);
         assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn fnv1a_known_vector_and_sensitivity() {
+        // FNV-1a("") with the standard basis is the basis itself.
+        assert_eq!(fnv1a64(b"", FNV_OFFSET_BASIS), FNV_OFFSET_BASIS);
+        // Known test vector: FNV-1a("a") = 0xaf63dc4c8601ec8c.
+        assert_eq!(fnv1a64(b"a", FNV_OFFSET_BASIS), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"ab", FNV_OFFSET_BASIS), fnv1a64(b"ba", FNV_OFFSET_BASIS));
+        assert_ne!(fnv1a64(b"x", FNV_OFFSET_BASIS), fnv1a64(b"x", 0x9e37_79b9_7f4a_7c15));
     }
 }

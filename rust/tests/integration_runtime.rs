@@ -3,11 +3,17 @@
 //!
 //! These tests need `make artifacts` to have run; they skip (with a
 //! visible message) when the artifacts are absent so `cargo test` works
-//! in a fresh checkout, while `make test` always exercises them.
+//! in a fresh checkout, while `make test` always exercises them. The
+//! PJRT-executing tests additionally need the `pjrt` feature (vendored
+//! `xla` crate); the native-model tests always run.
 
-use barista::runtime::{self, ArtifactStore};
+use barista::runtime;
 use barista::util::rng::Pcg32;
 
+#[cfg(feature = "pjrt")]
+use barista::runtime::ArtifactStore;
+
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<&'static str> {
     if std::path::Path::new("artifacts/chunk_gemm.hlo.txt").exists() {
         Some("artifacts")
@@ -17,12 +23,14 @@ fn artifacts_dir() -> Option<&'static str> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn golden_check_passes() {
     let Some(dir) = artifacts_dir() else { return };
     runtime::golden_check(dir).expect("golden check");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn artifact_store_lists_and_caches() {
     let Some(dir) = artifacts_dir() else { return };
@@ -36,6 +44,7 @@ fn artifact_store_lists_and_caches() {
     assert!(std::sync::Arc::ptr_eq(&a, &b));
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn chunk_gemm_respects_masks() {
     // Masking out everything must zero the product even with non-zero
@@ -59,6 +68,7 @@ fn chunk_gemm_respects_masks() {
     assert!(out.iter().all(|&x| x == 0.0), "masked-out product must be 0");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn smallcnn_relu_and_shape() {
     let Some(dir) = artifacts_dir() else { return };

@@ -1,0 +1,233 @@
+//! Integration: the job service end-to-end over a real TCP socket.
+//!
+//! Boots `Server` on an ephemeral port, fires concurrent clients with
+//! overlapping job sets, and checks the service's three guarantees:
+//! every submission gets a response, responses are byte-identical to a
+//! direct `run_one`, and identical jobs are simulated exactly once
+//! (dedup + cache, visible in the stats counters).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::service::{Client, JobSpec, Scheduler, SchedulerConfig, Server};
+use barista::util::Json;
+use barista::workload::Benchmark;
+
+fn small_cfg(arch: ArchKind, seed: u64) -> SimConfig {
+    let mut c = SimConfig::paper(arch);
+    c.window_cap = 16;
+    c.batch = 1;
+    c.seed = seed;
+    c
+}
+
+fn small_spec(benchmark: Benchmark, arch: ArchKind, seed: u64) -> JobSpec {
+    JobSpec {
+        benchmark,
+        config: small_cfg(arch, seed),
+    }
+}
+
+fn test_server() -> (std::net::SocketAddr, std::thread::JoinHandle<std::io::Result<()>>) {
+    Server::spawn(
+        "127.0.0.1:0",
+        SchedulerConfig {
+            workers: 4,
+            shards: 2,
+            queue_cap: 128,
+            cache_bytes: 32 << 20,
+        },
+    )
+    .expect("bind ephemeral port")
+}
+
+#[test]
+fn concurrent_clients_dedup_and_match_run_one() {
+    let (addr, server) = test_server();
+    let addr_s = addr.to_string();
+
+    // 4 distinct jobs shared by 8 clients × 3 submissions = 24
+    // submissions with heavy overlap.
+    let pool: Vec<JobSpec> = vec![
+        small_spec(Benchmark::AlexNet, ArchKind::Dense, 1),
+        small_spec(Benchmark::AlexNet, ArchKind::Ideal, 1),
+        small_spec(Benchmark::ResNet18, ArchKind::Dense, 1),
+        small_spec(Benchmark::AlexNet, ArchKind::Dense, 2),
+    ];
+    let pool = Arc::new(pool);
+
+    let mut joins = Vec::new();
+    for client_id in 0..8usize {
+        let pool = pool.clone();
+        let addr_s = addr_s.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr_s).expect("connect");
+            let mut got: Vec<(usize, String)> = Vec::new();
+            for k in 0..3usize {
+                let idx = (client_id + k) % pool.len();
+                let resp = client.submit(&pool[idx]).expect("submit");
+                assert_eq!(
+                    resp.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "client {client_id} job {idx}: {resp:?}"
+                );
+                let result = resp.get("result").expect("result present");
+                got.push((idx, result.to_string()));
+            }
+            got
+        }));
+    }
+    let mut responses: Vec<(usize, String)> = Vec::new();
+    for j in joins {
+        responses.extend(j.join().expect("client thread"));
+    }
+    assert_eq!(responses.len(), 24, "all responses arrived");
+
+    // (b) byte-identical to a direct run_one of the same job.
+    let mut direct: HashMap<usize, String> = HashMap::new();
+    for (i, spec) in pool.iter().enumerate() {
+        let r = run_one(&RunRequest {
+            benchmark: spec.benchmark,
+            config: spec.config.clone(),
+        });
+        direct.insert(i, r.network.to_json().to_string());
+    }
+    for (idx, body) in &responses {
+        assert_eq!(
+            body, &direct[idx],
+            "service result for job {idx} differs from direct run_one"
+        );
+    }
+
+    // (c) stats prove deduplication: 4 distinct jobs, 24 submissions.
+    let mut client = Client::connect(&addr_s).expect("connect for stats");
+    let stats = client.stats().expect("stats");
+    let sched = stats.get("scheduler").expect("scheduler stats");
+    let executed = sched.get("executed").and_then(Json::as_u64).unwrap();
+    let deduped = sched.get("deduped").and_then(Json::as_u64).unwrap();
+    let cache_hits = sched.get("cache_hits").and_then(Json::as_u64).unwrap();
+    let submitted = sched.get("submitted").and_then(Json::as_u64).unwrap();
+    assert_eq!(executed, 4, "each distinct job simulated exactly once");
+    assert_eq!(submitted, 24);
+    assert_eq!(deduped + cache_hits, 20, "the other 20 submissions reused");
+
+    let resp = client.shutdown().expect("shutdown");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    server.join().expect("server thread").expect("server io");
+}
+
+#[test]
+fn batch_roundtrip_preserves_order_and_sources() {
+    let (addr, server) = test_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+
+    let specs = vec![
+        small_spec(Benchmark::AlexNet, ArchKind::Dense, 3),
+        small_spec(Benchmark::AlexNet, ArchKind::Ideal, 3),
+        small_spec(Benchmark::AlexNet, ArchKind::Dense, 3), // duplicate of [0]
+    ];
+    let resp = client.batch(&specs).expect("batch");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    let results = resp.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), 3);
+    // Order preserved: entries 0 and 2 are the same job, entry 1 differs.
+    let body = |i: usize| results[i].get("result").unwrap().to_string();
+    assert_eq!(body(0), body(2));
+    assert_ne!(body(0), body(1));
+    let arch = |i: usize| {
+        results[i]
+            .get("result")
+            .and_then(|r| r.get("arch"))
+            .and_then(Json::as_str)
+            .unwrap()
+            .to_string()
+    };
+    assert_eq!(arch(0), "dense");
+    assert_eq!(arch(1), "ideal");
+
+    // A second identical batch is served entirely from cache.
+    let resp2 = client.batch(&specs).expect("batch 2");
+    let results2 = resp2.get("results").and_then(Json::as_arr).unwrap();
+    for (i, r) in results2.iter().enumerate() {
+        assert_eq!(
+            r.get("source").and_then(Json::as_str),
+            Some("cache"),
+            "second-batch job {i} must be a cache hit"
+        );
+    }
+
+    client.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("server io");
+}
+
+#[test]
+fn protocol_errors_do_not_kill_the_connection() {
+    let (addr, server) = test_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+
+    // Garbage, unknown op, unknown config key: each gets an error
+    // response and the connection stays usable.
+    let r = client.roundtrip(&Json::Str("not an object".into())).unwrap();
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+
+    let bad_op = Json::parse(r#"{"op":"frobnicate"}"#).unwrap();
+    let r = client.roundtrip(&bad_op).unwrap();
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+
+    let typo = Json::parse(
+        r#"{"op":"submit","job":{"network":"alexnet","config":{"windowcap":64}}}"#,
+    )
+    .unwrap();
+    let r = client.roundtrip(&typo).unwrap();
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(
+        r.get("error").and_then(Json::as_str).unwrap().contains("windowcap"),
+        "typo'd key must be named: {r:?}"
+    );
+
+    // Still alive: a valid submit succeeds.
+    let ok = client
+        .submit(&small_spec(Benchmark::AlexNet, ArchKind::Ideal, 4))
+        .unwrap();
+    assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+
+    let status = client.status().unwrap();
+    assert_eq!(status.get("ok").and_then(Json::as_bool), Some(true));
+    assert!(status.get("uptime_ms").and_then(Json::as_u64).is_some());
+
+    client.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("server io");
+}
+
+#[test]
+fn in_process_scheduler_reuses_sweep_results_across_figures() {
+    // The `barista report --figure all` path without the CLI: the same
+    // sweep submitted twice against one scheduler simulates only once.
+    let sched = Scheduler::new(SchedulerConfig {
+        workers: 4,
+        shards: 2,
+        queue_cap: 64,
+        cache_bytes: 32 << 20,
+    });
+    let base = small_cfg(ArchKind::Barista, 5);
+    let reqs = barista::coordinator::sweep_requests(
+        &[Benchmark::AlexNet],
+        &[ArchKind::Dense, ArchKind::Barista, ArchKind::Ideal],
+        &base,
+    );
+    let first = sched.run_results(&reqs).expect("first sweep");
+    let s1 = sched.stats();
+    assert_eq!(s1.executed, 3);
+    let second = sched.run_results(&reqs).expect("second sweep");
+    let s2 = sched.stats();
+    assert_eq!(s2.executed, 3, "second figure does zero simulation work");
+    assert_eq!(s2.cache_hits, s1.cache_hits + 3);
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(
+            a.network.to_json().to_string(),
+            b.network.to_json().to_string()
+        );
+    }
+}
