@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt bench artifacts serve clean
+.PHONY: build test fmt bench bench-smoke bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -13,7 +13,17 @@ test:
 fmt:
 	cd rust && cargo fmt --check
 
+# Perf benches: writes BENCH_hotpath.json / BENCH_service.json at the
+# repo root (machine-readable before/after numbers for DESIGN.md §Perf).
 bench:
+	cd rust && cargo bench --bench perf_hotpath --bench service_throughput
+
+# CI-sized variant of the perf benches (same JSON artifacts, tiny sizes).
+bench-smoke:
+	cd rust && BENCH_SMOKE=1 cargo bench --bench perf_hotpath --bench service_throughput
+
+# The full paper figure/table bench suite.
+bench-figs:
 	cd rust && cargo bench
 
 # AOT-lower the JAX/Pallas functional model to HLO-text artifacts for

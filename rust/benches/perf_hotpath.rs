@@ -1,42 +1,85 @@
 //! Simulator hot-path microbenchmarks (the §Perf deliverable's
-//! before/after instrument): pass-cost mask arithmetic, the telescoping
-//! combiner, the banked-cache queue, and one full BARISTA layer —
-//! reported as simulated-MAC-cycles per host-second.
+//! before/after instrument): pass-cost mask arithmetic vs the shared
+//! pass table, the telescoping combiner, the banked-cache queue, and
+//! full end-to-end layers — the optimized `run_one` against the
+//! pre-§Perf reference path, reported as simulated-MAC-cycles per
+//! host-second and written machine-readably to `BENCH_hotpath.json` at
+//! the repo root.
+//!
+//! `BENCH_SMOKE=1` shrinks sizes/iterations for CI.
 
-use barista::arch::pass_pe_cycles;
+use barista::arch::{pass_pe_cycles, PassTable};
 use barista::barista::telescope::telescope_fetch;
 use barista::bench_harness::{bench, bench_header};
 use barista::config::{ArchKind, SimConfig};
-use barista::coordinator::{run_one, RunRequest};
+use barista::coordinator::{run_one, run_one_reference, RunRequest};
 use barista::sim::BankedCache;
 use barista::tensor::MaskMatrix;
 use barista::util::rng::Pcg32;
+use barista::util::Json;
 use barista::workload::Benchmark;
 
 fn main() {
-    bench_header("perf: simulator hot paths");
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    bench_header(if smoke {
+        "perf: simulator hot paths (smoke)"
+    } else {
+        "perf: simulator hot paths"
+    });
+    let mut rows: Vec<Json> = Vec::new();
 
     // --- pass cost (the inner loop: u128 AND + per-part popcount) -------
+    let (nf, nw) = if smoke { (16, 64) } else { (64, 256) };
     let mut rng = Pcg32::seeded(42);
-    let filters = MaskMatrix::random(&mut rng, 64, 2304, 0.37, 0.15);
-    let windows = MaskMatrix::random(&mut rng, 256, 2304, 0.47, 0.30);
+    let filters = MaskMatrix::random(&mut rng, nf, 2304, 0.37, 0.15);
+    let windows = MaskMatrix::random(&mut rng, nw, 2304, 0.47, 0.30);
     let mut sink = 0u64;
-    let t = bench("pass_pe_cycles 64x256 (18 chunks)", 3, 20, || {
-        for f in 0..64 {
+    let t = bench(&format!("pass_pe_cycles {nf}x{nw} (18 chunks)"), 3, 20, || {
+        for f in 0..nf {
             let frow = filters.row(f);
-            for w in 0..256 {
+            for w in 0..nw {
                 let c = pass_pe_cycles(frow, windows.row(w), 4, w, 2);
                 sink = sink.wrapping_add(c.matched);
             }
         }
     });
     println!("{}", t.report());
-    let passes = 64.0 * 256.0;
+    let passes = (nf * nw) as f64;
     println!(
         "  -> {:.1} M passes/s ({:.0} ns/pass)",
         passes / t.mean_s / 1e6,
         t.mean_s / passes * 1e9
     );
+    let direct_ns_per_pass = t.mean_s / passes * 1e9;
+
+    // --- shared pass table: one build amortized over lookups ------------
+    let tb = bench(&format!("pass table build {nf}x{nw}"), 1, 10, || {
+        let table = PassTable::build(&filters, &windows, 4).expect("tabulates");
+        sink = sink.wrapping_add(table.total_matched());
+    });
+    println!("{}", tb.report());
+    let table = PassTable::build(&filters, &windows, 4).unwrap();
+    let tl = bench(&format!("pass table lookup {nf}x{nw}"), 3, 20, || {
+        for f in 0..nf {
+            for w in 0..nw {
+                let c = table.cost(f, w, w, 2);
+                sink = sink.wrapping_add(c.matched);
+            }
+        }
+    });
+    println!("{}", tl.report());
+    println!(
+        "  -> build {:.0} ns/pass once, then {:.1} ns/pass lookups (direct: {:.0} ns/pass)",
+        tb.mean_s / passes * 1e9,
+        tl.mean_s / passes * 1e9,
+        direct_ns_per_pass
+    );
+    let mut row = Json::obj();
+    row.set("name", "pass_table")
+        .set("direct_ns_per_pass", direct_ns_per_pass)
+        .set("build_ns_per_pass", tb.mean_s / passes * 1e9)
+        .set("lookup_ns_per_pass", tl.mean_s / passes * 1e9);
+    rows.push(row);
 
     // --- telescoping combiner -------------------------------------------
     let needs: Vec<u64> = (0..64).map(|i| 1000 + (i as u64) * 13 % 400).collect();
@@ -59,32 +102,89 @@ fn main() {
     });
     println!("{}", t.report());
 
-    // --- end-to-end layer ------------------------------------------------
-    for (name, arch) in [
-        ("barista AlexNet (cap 512)", ArchKind::Barista),
-        ("sparten AlexNet (cap 512)", ArchKind::SparTen),
-        ("dense AlexNet (analytic)", ArchKind::Dense),
+    // --- end-to-end layers: optimized vs pre-§Perf reference -------------
+    let cap = if smoke { 96 } else { 512 };
+    let iters = if smoke { 1 } else { 3 };
+    for (name, arch, compare_reference) in [
+        ("barista_alexnet", ArchKind::Barista, true),
+        ("sparten_alexnet", ArchKind::SparTen, true),
+        ("dense_alexnet", ArchKind::Dense, false),
     ] {
         let mut cfg = SimConfig::paper(arch);
-        cfg.window_cap = 512;
+        cfg.window_cap = cap;
         cfg.batch = 32;
-        let mut sim_cycles = 0.0;
-        let t = bench(name, 0, 3, || {
-            let r = run_one(&RunRequest {
-                benchmark: Benchmark::AlexNet,
-                config: cfg.clone(),
+        let req = RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: cfg.clone(),
+        };
+        let mac_cycles_of = |cycles: f64| cycles * cfg.total_macs() as f64;
+
+        // Baseline: the pre-optimization path — serial layers, direct
+        // mask arithmetic, fresh workload generation every run (exactly
+        // what the old `run_one` did).
+        let mut base_cycles = 0.0;
+        let tb = if compare_reference {
+            let t = bench(&format!("{name} cap {cap} [reference]"), 0, iters, || {
+                base_cycles = run_one_reference(&req).network.cycles;
             });
-            sim_cycles = r.network.cycles;
+            println!("{}", t.report());
+            Some(t)
+        } else {
+            None
+        };
+
+        // Optimized: shared pass tables + memoized workload +
+        // layer-parallel reduce. One warmup run populates the memo, as
+        // it is populated in any real sweep/service process.
+        let mut sim_cycles = 0.0;
+        let t = bench(&format!("{name} cap {cap} [optimized]"), 1, iters.max(2), || {
+            sim_cycles = run_one(&req).network.cycles;
         });
         println!("{}", t.report());
-        let mac_cycles = sim_cycles * cfg.total_macs() as f64;
+        let opt_rate = mac_cycles_of(sim_cycles) / t.mean_s;
         println!(
             "  -> simulates {:.2e} MAC-cycles in {:.0} ms host = {:.2e} MAC-cycles/s",
-            mac_cycles,
+            mac_cycles_of(sim_cycles),
             t.mean_s * 1e3,
-            mac_cycles / t.mean_s
+            opt_rate
         );
+        let mut row = Json::obj();
+        row.set("name", name)
+            .set("window_cap", cap)
+            .set("cycles", sim_cycles)
+            .set("optimized_ms", t.mean_s * 1e3)
+            .set("optimized_mac_cycles_per_s", opt_rate);
+        if let Some(tb) = tb {
+            assert_eq!(
+                base_cycles, sim_cycles,
+                "{name}: reference and optimized paths must agree bit-for-bit"
+            );
+            let base_rate = mac_cycles_of(base_cycles) / tb.mean_s;
+            let speedup = tb.mean_s / t.mean_s;
+            println!(
+                "  -> baseline {:.2e} MAC-cycles/s, speedup {speedup:.2}x",
+                base_rate
+            );
+            row.set("baseline_ms", tb.mean_s * 1e3)
+                .set("baseline_mac_cycles_per_s", base_rate)
+                .set("speedup", speedup);
+        }
+        rows.push(row);
     }
+
+    // --- machine-readable summary (repo root) -----------------------------
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "perf_hotpath")
+        .set("smoke", smoke)
+        .set("rows", Json::Arr(rows));
+    println!("perf_hotpath_summary {}", summary.to_string());
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    match std::fs::write(out, format!("{}\n", summary.pretty())) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
+
     // keep the sink alive
     assert!(sink != 0x5EED_DEAD_BEEF);
 }

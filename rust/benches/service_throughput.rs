@@ -15,8 +15,6 @@ use barista::service::{Scheduler, SchedulerConfig};
 use barista::util::Json;
 use barista::workload::Benchmark;
 
-const JOBS: usize = 32;
-
 fn job(seed: u64) -> RunRequest {
     let mut c = SimConfig::paper(ArchKind::Dense);
     c.window_cap = 32;
@@ -29,15 +27,18 @@ fn job(seed: u64) -> RunRequest {
 }
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
     bench_header("service throughput: scheduler jobs/sec (cold vs cached)");
-    let reqs: Vec<RunRequest> = (0..JOBS as u64).map(job).collect();
+    let jobs: usize = if smoke { 8 } else { 32 };
+    let worker_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 16] };
+    let reqs: Vec<RunRequest> = (0..jobs as u64).map(job).collect();
 
     let mut rows = Vec::new();
     println!(
         "{:<8} {:>12} {:>12} {:>10}",
         "workers", "cold j/s", "cached j/s", "speedup"
     );
-    for &workers in &[1usize, 4, 16] {
+    for &workers in worker_counts {
         let sched = Scheduler::new(SchedulerConfig {
             workers,
             shards: 4,
@@ -49,26 +50,26 @@ fn main() {
         let t0 = Instant::now();
         let cold = sched.run_results(&reqs).expect("cold batch");
         let cold_s = t0.elapsed().as_secs_f64();
-        assert_eq!(cold.len(), JOBS);
+        assert_eq!(cold.len(), jobs);
 
         // 100% hit: identical batch resubmitted.
         let t0 = Instant::now();
         let warm = sched.run_results(&reqs).expect("warm batch");
         let warm_s = t0.elapsed().as_secs_f64();
-        assert_eq!(warm.len(), JOBS);
+        assert_eq!(warm.len(), jobs);
 
         let st = sched.stats();
-        assert_eq!(st.executed as usize, JOBS, "warm pass must not simulate");
+        assert_eq!(st.executed as usize, jobs, "warm pass must not simulate");
 
-        let cold_jps = JOBS as f64 / cold_s.max(1e-9);
-        let warm_jps = JOBS as f64 / warm_s.max(1e-9);
+        let cold_jps = jobs as f64 / cold_s.max(1e-9);
+        let warm_jps = jobs as f64 / warm_s.max(1e-9);
         println!(
             "{workers:<8} {cold_jps:>12.1} {warm_jps:>12.1} {:>9.1}x",
             warm_jps / cold_jps.max(1e-9)
         );
         let mut row = Json::obj();
         row.set("workers", workers)
-            .set("jobs", JOBS)
+            .set("jobs", jobs)
             .set("cold_jobs_per_s", cold_jps)
             .set("cached_jobs_per_s", warm_jps);
         rows.push(row);
@@ -77,6 +78,12 @@ fn main() {
     let mut summary = Json::obj();
     summary
         .set("bench", "service_throughput")
+        .set("smoke", smoke)
         .set("rows", Json::Arr(rows));
     println!("service_throughput_summary {}", summary.to_string());
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_service.json");
+    match std::fs::write(out, format!("{}\n", summary.pretty())) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("warn: could not write {out}: {e}"),
+    }
 }

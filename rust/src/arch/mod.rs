@@ -4,7 +4,7 @@
 
 pub mod pass;
 
-pub use pass::{pass_pe_cycles, PassCost, MAX_PARTS};
+pub use pass::{pass_pe_cycles, PassCost, PassSource, PassTable, MAX_PARTS};
 
 use crate::config::{ArchKind, SimConfig};
 use crate::sim::LayerResult;
@@ -19,6 +19,12 @@ pub trait Simulator {
     /// Simulate one layer (sampled windows); the returned result must
     /// already be scaled to the full layer via `layer.scale()`.
     fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult;
+
+    /// Route pass costs through the pre-§Perf direct-arithmetic path
+    /// instead of the shared pass tables. Results are bit-identical
+    /// either way (the equivalence tests prove it); this exists so the
+    /// old path stays exercised and benchmarkable.
+    fn set_reference_mode(&mut self, _on: bool) {}
 }
 
 /// Construct the simulator for `cfg.arch`.

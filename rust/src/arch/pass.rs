@@ -11,7 +11,7 @@
 //! matched pair per cycle through the prefix-sum/priority-encode
 //! pipeline) + a fixed per-chunk pipeline overhead.
 
-use crate::tensor::{SparseChunk, CHUNK_BITS};
+use crate::tensor::{MaskMatrix, SparseChunk, CHUNK_BITS};
 
 /// Upper bound on PEs per node this model supports.
 pub const MAX_PARTS: usize = 8;
@@ -110,6 +110,173 @@ fn pass_pe_cycles4(f: &[SparseChunk], w: &[SparseChunk], rotation: usize, overhe
         pe_cycles,
         matched,
         chunk_ops: chunks * 4,
+    }
+}
+
+/// Precomputed per-(filter, window) sub-chunk lane popcounts for one
+/// layer (DESIGN.md §Perf).
+///
+/// The cost of a pass at any rotation is a pure function of the
+/// `parts` per-lane matched counts: rotation merely permutes which PE
+/// reads which lane, and the fixed overhead adds `chunks × overhead`
+/// to every PE. Precomputing the lane counts once into a flat,
+/// SIMD-friendly `u16` array turns the simulator's innermost popcount
+/// loop into an 8-byte table read — and one table serves every
+/// rotation, all four BARISTA policy variants, and the matched-MAC
+/// accounting of the SparTen/one-sided baselines.
+#[derive(Debug, Clone)]
+pub struct PassTable {
+    filters: usize,
+    windows: usize,
+    chunks: u64,
+    parts: usize,
+    /// Lane counts, indexed `[(w * filters + f) * parts + lane]` —
+    /// window-major because the cluster loop sweeps filters (rows) at a
+    /// fixed window, so its reads are contiguous.
+    lanes: Vec<u16>,
+}
+
+impl PassTable {
+    /// Build the table for `parts` PEs per node. Returns `None` when
+    /// the geometry cannot be tabulated: unsupported `parts`, or lane
+    /// counts that could overflow `u16` (vectors beyond ~64 K cells per
+    /// lane — far past any paper workload). Callers fall back to
+    /// [`pass_pe_cycles`], which is bit-identical.
+    pub fn build(filters: &MaskMatrix, windows: &MaskMatrix, parts: usize) -> Option<PassTable> {
+        if parts == 0 || parts > MAX_PARTS || CHUNK_BITS % parts != 0 {
+            return None;
+        }
+        debug_assert_eq!(filters.chunks, windows.chunks);
+        let width = CHUNK_BITS / parts;
+        if filters.chunks * width > u16::MAX as usize {
+            return None;
+        }
+        let nf = filters.rows;
+        let nw = windows.rows;
+        let seg_mask: u128 = if width == CHUNK_BITS {
+            u128::MAX
+        } else {
+            (1u128 << width) - 1
+        };
+        let mut lanes = vec![0u16; nf * nw * parts];
+        // Window-outer, filter-inner: the window row stays hot while the
+        // (small) filter matrix streams from L1, and the lane writes are
+        // sequential in the window-major layout.
+        for w in 0..nw {
+            let wrow = windows.row(w);
+            let out = &mut lanes[w * nf * parts..(w + 1) * nf * parts];
+            for f in 0..nf {
+                let frow = filters.row(f);
+                let o = &mut out[f * parts..(f + 1) * parts];
+                if parts == 4 {
+                    let mut l = [0u32; 4];
+                    for (fc, wc) in frow.iter().zip(wrow.iter()) {
+                        let m = fc.mask & wc.mask;
+                        l[0] += (m as u32).count_ones();
+                        l[1] += ((m >> 32) as u32).count_ones();
+                        l[2] += ((m >> 64) as u32).count_ones();
+                        l[3] += ((m >> 96) as u32).count_ones();
+                    }
+                    for (op, lv) in o.iter_mut().zip(l.iter()) {
+                        *op = *lv as u16;
+                    }
+                } else {
+                    for (fc, wc) in frow.iter().zip(wrow.iter()) {
+                        let m = fc.mask & wc.mask;
+                        for (p, op) in o.iter_mut().enumerate() {
+                            *op += ((m >> (p * width)) & seg_mask).count_ones() as u16;
+                        }
+                    }
+                }
+            }
+        }
+        Some(PassTable {
+            filters: nf,
+            windows: nw,
+            chunks: filters.chunks as u64,
+            parts,
+            lanes,
+        })
+    }
+
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// Table size in bytes (for cache budgeting and diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.lanes.len() * std::mem::size_of::<u16>()
+    }
+
+    /// Identical to `pass_pe_cycles(filters.row(f), windows.row(w),
+    /// parts, rotation, overhead)` — tested bit-for-bit below.
+    #[inline]
+    pub fn cost(&self, f: usize, w: usize, rotation: usize, overhead: u64) -> PassCost {
+        let l = &self.lanes[(w * self.filters + f) * self.parts..][..self.parts];
+        let oh = self.chunks * overhead;
+        let mut pe_cycles = [0u64; MAX_PARTS];
+        for (p, pc) in pe_cycles[..self.parts].iter_mut().enumerate() {
+            *pc = l[(p + rotation) % self.parts] as u64 + oh;
+        }
+        let matched = l.iter().map(|&x| x as u64).sum();
+        PassCost {
+            pe_cycles,
+            matched,
+            chunk_ops: self.chunks * self.parts as u64,
+        }
+    }
+
+    /// Matched MACs of one (filter, window) pass (lane sum).
+    #[inline]
+    pub fn matched(&self, f: usize, w: usize) -> u64 {
+        self.lanes[(w * self.filters + f) * self.parts..][..self.parts]
+            .iter()
+            .map(|&x| x as u64)
+            .sum()
+    }
+
+    /// Total matched MACs over every (filter, window) pair — equals
+    /// `LayerWork::matched_macs_sampled` exactly.
+    pub fn total_matched(&self) -> u64 {
+        self.lanes.iter().map(|&x| x as u64).sum()
+    }
+}
+
+/// Where a simulator obtains pass costs: the shared precomputed table
+/// (the §Perf fast path) or direct mask arithmetic (the pre-§Perf
+/// reference path, kept for equivalence testing). Both produce
+/// bit-identical [`PassCost`]s.
+pub enum PassSource<'a> {
+    Table(&'a PassTable),
+    Direct {
+        filters: &'a MaskMatrix,
+        windows: &'a MaskMatrix,
+        parts: usize,
+    },
+}
+
+impl PassSource<'_> {
+    #[inline]
+    pub fn cost(&self, f: usize, w: usize, rotation: usize, overhead: u64) -> PassCost {
+        match self {
+            PassSource::Table(t) => t.cost(f, w, rotation, overhead),
+            PassSource::Direct {
+                filters,
+                windows,
+                parts,
+            } => pass_pe_cycles(filters.row(f), windows.row(w), *parts, rotation, overhead),
+        }
+    }
+
+    /// Matched MACs of one (filter, window) pair.
+    #[inline]
+    pub fn matched(&self, f: usize, w: usize) -> u64 {
+        match self {
+            PassSource::Table(t) => t.matched(f, w),
+            PassSource::Direct {
+                filters, windows, ..
+            } => filters.matched_row(f, windows, w),
+        }
     }
 }
 
@@ -249,5 +416,89 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The table must agree bit-for-bit with `pass_pe_cycles` for every
+    /// supported partition count, rotation and overhead.
+    #[test]
+    fn prop_table_matches_direct_pass() {
+        run_prop("pass table == direct", 0x7AB1E, 60, |rng| {
+            let nf = 1 + rng.gen_range(6) as usize;
+            let nw = 1 + rng.gen_range(6) as usize;
+            let chunks = 1 + rng.gen_range(20) as usize;
+            let vec_len = chunks * CHUNK_BITS - rng.gen_range(CHUNK_BITS as u32) as usize;
+            let df = rng.next_f64();
+            let filters = MaskMatrix::random(rng, nf, vec_len, df, 0.2);
+            let dw = rng.next_f64();
+            let windows = MaskMatrix::random(rng, nw, vec_len, dw, 0.2);
+            for parts in [1usize, 2, 4, 8] {
+                let table = match PassTable::build(&filters, &windows, parts) {
+                    Some(t) => t,
+                    None => return Err(format!("table build failed for parts={parts}")),
+                };
+                let rot = rng.gen_range(9) as usize;
+                let oh = rng.gen_range(4) as u64;
+                for f in 0..nf {
+                    for w in 0..nw {
+                        let want =
+                            pass_pe_cycles(filters.row(f), windows.row(w), parts, rot, oh);
+                        let got = table.cost(f, w, rot, oh);
+                        if got != want {
+                            return Err(format!(
+                                "parts={parts} f={f} w={w}: {got:?} != {want:?}"
+                            ));
+                        }
+                        if table.matched(f, w) != want.matched {
+                            return Err("matched mismatch".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn table_total_matched_equals_pairwise_sum() {
+        let mut rng = Pcg32::seeded(0x70AD);
+        let filters = MaskMatrix::random(&mut rng, 5, 700, 0.4, 0.1);
+        let windows = MaskMatrix::random(&mut rng, 7, 700, 0.6, 0.2);
+        let t = PassTable::build(&filters, &windows, 4).unwrap();
+        let mut want = 0u64;
+        for f in 0..5 {
+            want += (0..7).map(|w| filters.matched_row(f, &windows, w)).sum::<u64>();
+        }
+        assert_eq!(t.total_matched(), want);
+        assert_eq!(t.parts(), 4);
+        assert_eq!(t.bytes(), 5 * 7 * 4 * 2);
+    }
+
+    #[test]
+    fn table_build_rejects_bad_parts() {
+        let mut rng = Pcg32::seeded(0x0BAD);
+        let m = MaskMatrix::random(&mut rng, 2, 256, 0.5, 0.0);
+        assert!(PassTable::build(&m, &m, 0).is_none());
+        assert!(PassTable::build(&m, &m, 3).is_none());
+        assert!(PassTable::build(&m, &m, 16).is_none());
+    }
+
+    #[test]
+    fn pass_source_dispatch_agrees() {
+        let mut rng = Pcg32::seeded(0xD15);
+        let filters = MaskMatrix::random(&mut rng, 3, 512, 0.5, 0.1);
+        let windows = MaskMatrix::random(&mut rng, 4, 512, 0.5, 0.1);
+        let table = PassTable::build(&filters, &windows, 4).unwrap();
+        let via_table = PassSource::Table(&table);
+        let direct = PassSource::Direct {
+            filters: &filters,
+            windows: &windows,
+            parts: 4,
+        };
+        for f in 0..3 {
+            for w in 0..4 {
+                assert_eq!(via_table.cost(f, w, w, 2), direct.cost(f, w, w, 2));
+                assert_eq!(via_table.matched(f, w), direct.matched(f, w));
+            }
+        }
     }
 }

@@ -21,7 +21,7 @@
 //! each window is fetched once per batch (hierarchical buffering) and
 //! each filter pair once per (batch, round) residency.
 
-use crate::arch::{pass_pe_cycles, Simulator};
+use crate::arch::{PassSource, Simulator};
 use crate::baselines::dram_traffic;
 use crate::config::{ArchKind, SimConfig};
 use crate::sim::cache::{sparse_block_lines, LINE_BYTES};
@@ -51,6 +51,84 @@ pub struct BaristaSim {
     cfg: SimConfig,
     pub trace: Option<TraceRequest>,
     pub last_trace: Option<Trace>,
+    /// Use direct mask arithmetic instead of the shared pass table
+    /// (bit-identical; kept for equivalence testing — §Perf).
+    reference: bool,
+    /// Reused across rounds, batches and layers (§Perf).
+    scratch: ClusterScratch,
+}
+
+/// Reusable flat buffers for [`simulate_cluster`] (DESIGN.md §Perf):
+/// the inner (batch × round × slot × col) loop allocates nothing.
+#[derive(Debug, Default)]
+struct ClusterScratch {
+    /// PE clocks, `[(r * cols + c) * parts + pe]`.
+    pe_clock: Vec<u64>,
+    /// Node clocks at the current round's start, `[r * cols + c]`.
+    round_t0: Vec<u64>,
+    /// `round_t0` of the previous round (double-buffered filter
+    /// prefetch issues at the clocks nodes had a round ago).
+    prev_t0: Vec<u64>,
+    /// Filter-data ready time per node, `[r * cols + c]`.
+    filter_ready: Vec<u64>,
+    /// Completion time of the current window per node, `[r * cols + c]`.
+    win_completion: Vec<u64>,
+    /// Window-needs history rings, `[c][ring_slot][r]` flattened — the
+    /// multi-buffered window prefetch (fetch for slot *k* issued with
+    /// the clocks of slot *k − prefetch*).
+    hist: Vec<u64>,
+    hist_head: Vec<usize>,
+    hist_len: Vec<usize>,
+    /// Per-row window-data ready times for the current (slot, col).
+    ready: Vec<u64>,
+    /// Sort scratch for the fetch combiners.
+    fetch_idx: Vec<usize>,
+    /// Telescope schedule boundaries (prefix sums), built once per call.
+    boundaries: Vec<usize>,
+}
+
+impl ClusterScratch {
+    fn prepare(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        parts: usize,
+        hist_cap: usize,
+        schedule: &[usize],
+    ) {
+        let nodes = rows * cols;
+        self.pe_clock.clear();
+        self.pe_clock.resize(nodes * parts, 0);
+        self.round_t0.clear();
+        self.round_t0.resize(nodes, 0);
+        self.prev_t0.clear();
+        self.prev_t0.resize(nodes, 0);
+        self.filter_ready.clear();
+        self.filter_ready.resize(nodes, 0);
+        self.win_completion.clear();
+        self.win_completion.resize(nodes, 0);
+        self.hist.clear();
+        self.hist.resize(cols * hist_cap * rows, 0);
+        self.hist_head.clear();
+        self.hist_head.resize(cols, 0);
+        self.hist_len.clear();
+        self.hist_len.resize(cols, 0);
+        self.ready.clear();
+        self.ready.resize(rows, 0);
+        self.fetch_idx.clear();
+        self.boundaries.clear();
+        let mut acc = 0usize;
+        for &s in schedule {
+            acc += s;
+            self.boundaries.push(acc);
+        }
+    }
+}
+
+/// Max of one node's PE clocks.
+#[inline]
+fn node_clock(pe_clock: &[u64], base: usize, parts: usize) -> u64 {
+    pe_clock[base..base + parts].iter().copied().max().unwrap()
 }
 
 /// How window/filter fetches are served.
@@ -74,6 +152,8 @@ impl BaristaSim {
             cfg,
             trace: None,
             last_trace: None,
+            reference: false,
+            scratch: ClusterScratch::default(),
         }
     }
 
@@ -112,6 +192,10 @@ impl Simulator for BaristaSim {
         self.cfg.arch
     }
 
+    fn set_reference_mode(&mut self, on: bool) {
+        self.reference = on;
+    }
+
     fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
         let cfg = self.cfg.clone();
         let rows = cfg.fgrs;
@@ -142,20 +226,44 @@ impl Simulator for BaristaSim {
         // Cache: the representative cluster sees its NUCA slice.
         let banks = (cfg.cache_banks / cfg.clusters).max(1);
 
+        // Pass costs come from the shared per-layer table (one build
+        // serves all four policy variants, every rotation, and every
+        // run sharing this workload — §Perf); the reference mode and
+        // untabulatable geometries use direct mask arithmetic, which is
+        // bit-identical.
+        let table = if self.reference {
+            None
+        } else {
+            layer.pass_table(parts)
+        };
+        let passes = match table.as_deref() {
+            Some(t) => PassSource::Table(t),
+            None => PassSource::Direct {
+                filters: &layer.filters,
+                windows: &layer.windows,
+                parts,
+            },
+        };
+        let policy = self.window_policy();
+        let trace_req = self.trace;
+        let sample: Vec<usize> = (0..s_rep).collect();
+
         self.last_trace = None;
         let (acc, trace) = simulate_cluster(
             &cfg,
             layer,
             &order,
             rounds,
-            &(0..s_rep).collect::<Vec<_>>(),
+            &sample,
             banks,
-            self.window_policy(),
+            policy,
             cfg.opts.snarfing,
             sync,
             unlimited,
             hierarchical,
-            self.trace,
+            trace_req,
+            &passes,
+            &mut self.scratch,
         );
         if let Some(t) = trace {
             self.last_trace = Some(t);
@@ -242,6 +350,8 @@ fn simulate_cluster(
     unlimited: bool,
     hierarchical: bool,
     trace_req: Option<TraceRequest>,
+    passes: &PassSource<'_>,
+    scratch: &mut ClusterScratch,
 ) -> (Acc, Option<Trace>) {
     let rows = cfg.fgrs;
     let cols = cfg.ifgcs;
@@ -268,17 +378,21 @@ fn simulate_cluster(
         .max()
         .unwrap_or(0);
 
-    // PE clocks, flattened [(row*cols + col)*parts + pe] (hot: §Perf).
-    let mut pe_clock = vec![0u64; rows * cols * parts];
-    let node_of = move |r: usize, c: usize| (r * cols + c) * parts;
-    let node_clock = move |pe_clock: &[u64], r: usize, c: usize| -> u64 {
-        let base = node_of(r, c);
-        *pe_clock[base..base + parts].iter().max().unwrap()
-    };
+    // Hoisted per-layer constants (§Perf) — the pre-optimization path
+    // recomputed these per (slot, col) / per row; the inputs are layer
+    // constants, so the values are identical.
+    let w_lines = sparse_block_lines(chunks, layer.map_density);
+    let f_pair_lines = 2 * sparse_block_lines(chunks, layer.filter_density);
+    // Window prefetch: private node buffers hold `node_buf_depth`
+    // windows, so the combiner sees the clocks nodes had
+    // `node_buf_depth - 1` slots ago — fetch latency overlaps earlier
+    // passes (multi-buffering).
+    let prefetch = cfg.node_buf_depth.saturating_sub(1).max(1).min(batch);
+    let hist_cap = prefetch + 1;
+    scratch.prepare(rows, cols, parts, hist_cap, &cfg.telescope_schedule);
 
-    // Completion of window at (row, col) for the current round — used for
-    // slot recycling and the Fig. 5 trace.
-    let mut win_completion = vec![vec![0u64; cols]; rows];
+    let node_of = move |r: usize, c: usize| (r * cols + c) * parts;
+
     // Running estimate of a round's duration (for snarf slack).
     let mut round_est: u64 = (chunks * (overhead + 8)) * batch as u64 / 2;
 
@@ -289,16 +403,17 @@ fn simulate_cluster(
     // Double-buffered filter prefetch: the fetch for round p is issued at
     // the clocks nodes had when round p-1 started (buffer depth 3 holds
     // the in-use pair plus one incoming).
-    let mut filter_needs_prev: Option<Vec<Vec<u64>>> = None;
+    let mut has_prev = false;
     for b in 0..n_batches {
         for p in 0..rounds {
             // --- filter pair fetch per FGR row -------------------------
-            let round_t0: Vec<Vec<u64>> = (0..rows)
-                .map(|r| (0..cols).map(|c| node_clock(&pe_clock, r, c)).collect())
-                .collect();
-            let fetch_needs = filter_needs_prev.take().unwrap_or_else(|| round_t0.clone());
-            filter_needs_prev = Some(round_t0.clone());
-            let mut filter_ready = vec![vec![0u64; cols]; rows];
+            for r in 0..rows {
+                for c in 0..cols {
+                    scratch.round_t0[r * cols + c] =
+                        node_clock(&scratch.pe_clock, node_of(r, c), parts);
+                }
+            }
+            scratch.filter_ready.fill(0);
             let lead_slack = (cfg.node_buf_depth.saturating_sub(1) as u64)
                 .saturating_mul(round_est)
                 .min(1 << 40);
@@ -309,22 +424,48 @@ fn simulate_cluster(
                 if !has_any {
                     continue;
                 }
-                let needs = &fetch_needs[r];
-                // The pair's chunk blocks, bit-mask compressed.
-                let lines = 2 * sparse_block_lines(chunks, layer.filter_density);
-                let out = if sync || unlimited {
-                    super::telescope::broadcast_fetch(&mut cache, needs, line_cursor, lines)
-                } else if snarfing {
-                    super::snarf::snarf_fetch(&mut cache, needs, lead_slack, line_cursor, lines)
+                let needs: &[u64] = if has_prev {
+                    &scratch.prev_t0[r * cols..(r + 1) * cols]
                 } else {
-                    super::telescope::solo_fetch(&mut cache, needs, line_cursor, lines)
+                    &scratch.round_t0[r * cols..(r + 1) * cols]
                 };
-                line_cursor += lines;
-                acc.filter_fetch_blocks += out.fetches * 2;
-                for c in 0..cols {
-                    filter_ready[r][c] = out.ready[c];
-                }
+                let ready_out = &mut scratch.filter_ready[r * cols..(r + 1) * cols];
+                // The pair's chunk blocks, bit-mask compressed.
+                let fetches = if sync || unlimited {
+                    super::telescope::broadcast_fetch_into(
+                        &mut cache,
+                        needs,
+                        line_cursor,
+                        f_pair_lines,
+                        ready_out,
+                    )
+                } else if snarfing {
+                    super::snarf::snarf_fetch_into(
+                        &mut cache,
+                        needs,
+                        lead_slack,
+                        line_cursor,
+                        f_pair_lines,
+                        &mut scratch.fetch_idx,
+                        ready_out,
+                    )
+                } else {
+                    super::telescope::solo_fetch_into(
+                        &mut cache,
+                        needs,
+                        line_cursor,
+                        f_pair_lines,
+                        &mut scratch.fetch_idx,
+                        ready_out,
+                    )
+                };
+                line_cursor += f_pair_lines;
+                acc.filter_fetch_blocks += fetches * 2;
             }
+            // This round's start clocks become the next round's fetch
+            // needs (round_t0 is recomputed next round).
+            std::mem::swap(&mut scratch.prev_t0, &mut scratch.round_t0);
+            has_prev = true;
 
             // --- Synchronous: broadcast barrier at round start ----------
             if sync {
@@ -332,17 +473,18 @@ fn simulate_cluster(
                 for r in 0..rows {
                     for c in 0..cols {
                         start = start
-                            .max(node_clock(&pe_clock, r, c))
-                            .max(filter_ready[r][c]);
+                            .max(node_clock(&scratch.pe_clock, node_of(r, c), parts))
+                            .max(scratch.filter_ready[r * cols + c]);
                     }
                 }
                 for r in 0..rows {
                     for c in 0..cols {
+                        let base = node_of(r, c);
                         for pe in 0..parts {
-                            acc.barrier += (start - pe_clock[node_of(r, c) + pe]) as f64;
-                            pe_clock[node_of(r, c) + pe] = start;
+                            acc.barrier += (start - scratch.pe_clock[base + pe]) as f64;
+                            scratch.pe_clock[base + pe] = start;
                         }
-                        filter_ready[r][c] = start;
+                        scratch.filter_ready[r * cols + c] = start;
                     }
                 }
             }
@@ -353,13 +495,8 @@ fn simulate_cluster(
             // columns advance slot-by-slot together, and replaying one
             // column's whole batch first would poison the bank queues
             // with far-future occupancy.
-            // Window prefetch: private node buffers hold `node_buf_depth`
-            // windows, so the combiner sees the clocks nodes had
-            // `node_buf_depth - 1` slots ago — fetch latency overlaps
-            // earlier passes (multi-buffering).
-            let prefetch = cfg.node_buf_depth.saturating_sub(1).max(1).min(batch);
-            let mut win_needs_hist: Vec<std::collections::VecDeque<Vec<u64>>> =
-                vec![std::collections::VecDeque::new(); cols];
+            scratch.hist_head.fill(0);
+            scratch.hist_len.fill(0);
             for slot in 0..batch {
                 for c in 0..cols {
                     let cw = &col_windows[c];
@@ -381,43 +518,58 @@ fn simulate_cluster(
                         } else {
                             cfg.node_buf_depth >= batch
                         };
-                    // Window data readiness per row.
-                    let w_lines = sparse_block_lines(chunks, layer.map_density);
-                    let mut ready = vec![0u64; rows];
-                    if !retained {
-                        let now_needs: Vec<u64> =
-                            (0..rows).map(|r| node_clock(&pe_clock, r, c)).collect();
-                        win_needs_hist[c].push_back(now_needs.clone());
-                        let needs = if win_needs_hist[c].len() > prefetch {
-                            win_needs_hist[c].pop_front().unwrap()
+                    if retained {
+                        // Window data already resident: no fetch gate.
+                        scratch.ready.fill(0);
+                    } else {
+                        // Push this slot's needs into the column's ring;
+                        // serve the fetch with the needs from `prefetch`
+                        // slots ago (the ring's front).
+                        let ring_base = c * hist_cap * rows;
+                        let head = scratch.hist_head[c];
+                        let len = scratch.hist_len[c];
+                        let write = ring_base + ((head + len) % hist_cap) * rows;
+                        for r in 0..rows {
+                            scratch.hist[write + r] =
+                                node_clock(&scratch.pe_clock, node_of(r, c), parts);
+                        }
+                        let front = ring_base + head * rows;
+                        if len + 1 > prefetch {
+                            scratch.hist_head[c] = (head + 1) % hist_cap;
+                            scratch.hist_len[c] = len; // popped one
                         } else {
-                            win_needs_hist[c].front().cloned().unwrap_or(now_needs)
-                        };
-                        let out = match window_policy {
-                            FetchPolicy::Broadcast => super::telescope::broadcast_fetch(
+                            scratch.hist_len[c] = len + 1;
+                        }
+                        let needs = &scratch.hist[front..front + rows];
+                        let fetches = match window_policy {
+                            FetchPolicy::Broadcast => super::telescope::broadcast_fetch_into(
                                 &mut cache,
-                                &needs,
+                                needs,
                                 line_cursor,
                                 w_lines,
+                                &mut scratch.ready,
                             ),
-                            FetchPolicy::Telescope => super::telescope::telescope_fetch(
+                            FetchPolicy::Telescope => super::telescope::telescope_fetch_into(
                                 &mut cache,
-                                &needs,
-                                &cfg.telescope_schedule,
+                                needs,
+                                &scratch.boundaries,
                                 line_cursor,
                                 w_lines,
+                                &mut scratch.fetch_idx,
+                                &mut scratch.ready,
                             ),
-                            FetchPolicy::Solo => super::telescope::solo_fetch(
+                            FetchPolicy::Solo => super::telescope::solo_fetch_into(
                                 &mut cache,
-                                &needs,
+                                needs,
                                 line_cursor,
                                 w_lines,
+                                &mut scratch.fetch_idx,
+                                &mut scratch.ready,
                             ),
                         };
                         line_cursor += w_lines;
-                        acc.window_fetch_blocks += out.fetches;
-                        ready = out.ready;
-                        acc.buffer_bytes += out.fetches * w_lines * LINE_BYTES;
+                        acc.window_fetch_blocks += fetches;
+                        acc.buffer_bytes += fetches * w_lines * LINE_BYTES;
                     }
 
                     // Per-row pass over (filter(r, parity), window w).
@@ -437,18 +589,12 @@ fn simulate_cluster(
                         }
                         let fi = order[rank];
                         let rotation = if rr { s } else { 0 };
-                        let cost = pass_pe_cycles(
-                            layer.filters.row(fi),
-                            layer.windows.row(w),
-                            parts,
-                            rotation,
-                            overhead,
-                        );
+                        let cost = passes.cost(fi, w, rotation, overhead);
                         acc.matched += cost.matched;
                         acc.chunk_ops += cost.chunk_ops;
                         acc.buffer_bytes +=
                             cost.matched * 2 + chunks * (LINE_BYTES / parts as u64);
-                        let gate = ready[r].max(filter_ready[r][c]);
+                        let gate = scratch.ready[r].max(scratch.filter_ready[r * cols + c]);
 
                         let mut completion = 0u64;
                         if cfg.opts.coloring && !sync {
@@ -457,7 +603,7 @@ fn simulate_cluster(
                             // by color tags.
                             let base = node_of(r, c);
                             for pe in 0..parts {
-                                let t0 = pe_clock[base + pe];
+                                let t0 = scratch.pe_clock[base + pe];
                                 let start = t0.max(gate);
                                 acc.bandwidth += (start - t0) as f64;
                                 // The node's adder tree is a dedicated
@@ -467,7 +613,7 @@ fn simulate_cluster(
                                 // into PE time.
                                 let t1 = start + cost.pe_cycles[pe];
                                 acc.busy += cost.pe_cycles[pe] as f64;
-                                pe_clock[base + pe] = t1;
+                                scratch.pe_clock[base + pe] = t1;
                                 completion = completion.max(t1 + reduce);
                             }
                             // Output-color exhaustion: with C colors a
@@ -479,32 +625,31 @@ fn simulate_cluster(
                             if cfg.output_colors < usize::MAX / 8
                                 && (s + 1) % cfg.output_colors == 0
                             {
-                                let m = node_clock(&pe_clock, r, c);
-                                let base = node_of(r, c);
+                                let m = node_clock(&scratch.pe_clock, base, parts);
                                 for pe in 0..parts {
-                                    acc.barrier += (m - pe_clock[base + pe]) as f64;
-                                    pe_clock[base + pe] = m;
+                                    acc.barrier += (m - scratch.pe_clock[base + pe]) as f64;
+                                    scratch.pe_clock[base + pe] = m;
                                 }
                                 completion = completion.max(m);
                             }
                         } else {
                             // No coloring: node-level sync per window.
-                            let sync_t = node_clock(&pe_clock, r, c);
+                            let base = node_of(r, c);
+                            let sync_t = node_clock(&scratch.pe_clock, base, parts);
                             let start = sync_t.max(gate);
                             let max_w = cost.max_pe(parts);
                             completion = start + max_w + reduce;
-                            let base = node_of(r, c);
                             for pe in 0..parts {
-                                let t0 = pe_clock[base + pe];
+                                let t0 = scratch.pe_clock[base + pe];
                                 acc.barrier += (sync_t - t0) as f64;
                                 acc.bandwidth += (start - sync_t) as f64;
                                 acc.busy += (cost.pe_cycles[pe] + reduce) as f64;
                                 acc.barrier +=
                                     (max_w - cost.pe_cycles[pe]) as f64;
-                                pe_clock[base + pe] = completion;
+                                scratch.pe_clock[base + pe] = completion;
                             }
                         }
-                        win_completion[r][c] = completion;
+                        scratch.win_completion[r * cols + c] = completion;
                         pass_cycles_sum += (cost.max_pe(parts) + reduce) as f64;
                         pass_count += 1;
                     }
@@ -518,32 +663,29 @@ fn simulate_cluster(
                     let mut m = 0u64;
                     for r in 0..rows {
                         for c in 0..cols {
-                            m = m.max(node_clock(&pe_clock, r, c));
+                            m = m.max(node_clock(&scratch.pe_clock, node_of(r, c), parts));
                         }
                     }
                     for r in 0..rows {
                         for c in 0..cols {
+                            let base = node_of(r, c);
                             for pe in 0..parts {
-                                acc.barrier += (m - pe_clock[node_of(r, c) + pe]) as f64;
-                                pe_clock[node_of(r, c) + pe] = m;
+                                acc.barrier += (m - scratch.pe_clock[base + pe]) as f64;
+                                scratch.pe_clock[base + pe] = m;
                             }
                         }
                     }
                 }
-                for c in 0..cols {
-                    let cw = &col_windows[c];
-                    let s = b * batch + slot;
-                    if s >= cw.len() || s >= (b + 1) * batch {
-                        continue;
-                    }
-                    let w = cw[s];
-                    let _ = w;
-                    // Trace capture (Fig. 5): IFGC 0, first batch+round.
-                    if let (Some(req), Some(tr)) = (trace_req.as_ref(), trace.as_mut()) {
-                        if c == 0 && b == 0 && p == 0 && slot < req.windows {
-                            let comps: Vec<u64> =
-                                (0..rows).map(|r| win_completion[r][0]).collect();
-                            tr.per_window.push((w, comps));
+                // Trace capture (Fig. 5): IFGC 0, first batch+round.
+                if let (Some(req), Some(tr)) = (trace_req.as_ref(), trace.as_mut()) {
+                    if b == 0 && p == 0 && slot < req.windows {
+                        let cw = &col_windows[0];
+                        let s = b * batch + slot;
+                        if s < cw.len() && s < (b + 1) * batch {
+                            let comps: Vec<u64> = (0..rows)
+                                .map(|r| scratch.win_completion[r * cols])
+                                .collect();
+                            tr.per_window.push((cw[s], comps));
                         }
                     }
                 }
@@ -567,7 +709,7 @@ fn simulate_cluster(
     let mut min_t = u64::MAX;
     for r in 0..rows {
         for c in 0..cols {
-            let t = node_clock(&pe_clock, r, c);
+            let t = node_clock(&scratch.pe_clock, node_of(r, c), parts);
             max_t = max_t.max(t);
             min_t = min_t.min(t);
         }
@@ -582,7 +724,7 @@ fn simulate_cluster(
         for c in 0..cols {
             let base = node_of(r, c);
             for pe in 0..parts {
-                acc.barrier += (max_t - pe_clock[base + pe]) as f64;
+                acc.barrier += (max_t - scratch.pe_clock[base + pe]) as f64;
             }
         }
     }
@@ -719,5 +861,35 @@ mod tests {
         let b = run(ArchKind::Barista, 1);
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.traffic.refetch_lines, b.traffic.refetch_lines);
+    }
+
+    /// The table-backed fast path must be bit-identical to the direct
+    /// (reference) path for every grid variant, and the scratch must be
+    /// safely reusable across layers and runs.
+    #[test]
+    fn table_path_identical_to_reference() {
+        for arch in [
+            ArchKind::Barista,
+            ArchKind::BaristaNoOpts,
+            ArchKind::Synchronous,
+            ArchKind::UnlimitedBuffer,
+        ] {
+            let cfg = cfg_for(arch);
+            let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+            let mut fast_sim = BaristaSim::new(cfg.clone());
+            let mut slow_sim = BaristaSim::new(cfg);
+            slow_sim.set_reference_mode(true);
+            for li in [1usize, 2] {
+                let l = &net.layers[li];
+                let fast = fast_sim.simulate_layer(l);
+                let slow = slow_sim.simulate_layer(l);
+                assert_eq!(fast.cycles, slow.cycles, "{arch} layer {li} cycles");
+                assert_eq!(fast.breakdown, slow.breakdown, "{arch} layer {li}");
+                assert_eq!(fast.traffic, slow.traffic, "{arch} layer {li}");
+                assert_eq!(fast.energy, slow.energy, "{arch} layer {li}");
+                assert_eq!(fast.peak_buffer_bytes, slow.peak_buffer_bytes);
+                assert_eq!(fast.refetch_ratio, slow.refetch_ratio);
+            }
+        }
     }
 }

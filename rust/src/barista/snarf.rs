@@ -28,10 +28,30 @@ pub fn snarf_fetch(
     first_line: u64,
     lines: u64,
 ) -> FetchOutcome {
+    let mut idx = Vec::new();
+    let mut ready = vec![0u64; needs.len()];
+    let fetches =
+        snarf_fetch_into(cache, needs, lead_slack, first_line, lines, &mut idx, &mut ready);
+    FetchOutcome { ready, fetches }
+}
+
+/// Allocation-free [`snarf_fetch`]: `idx` is a reusable sort buffer and
+/// `ready` (same length as `needs`) receives every node's data-ready
+/// time. Returns the number of fetches issued.
+pub fn snarf_fetch_into(
+    cache: &mut BankedCache,
+    needs: &[u64],
+    lead_slack: u64,
+    first_line: u64,
+    lines: u64,
+    idx: &mut Vec<usize>,
+    ready: &mut [u64],
+) -> u64 {
     let n = needs.len();
-    let mut idx: Vec<usize> = (0..n).collect();
+    debug_assert_eq!(ready.len(), n);
+    idx.clear();
+    idx.extend(0..n);
     idx.sort_by_key(|&i| needs[i]);
-    let mut ready = vec![0u64; n];
     let mut fetches = 0u64;
     let mut i = 0usize;
     while i < n {
@@ -50,7 +70,7 @@ pub fn snarf_fetch(
         }
         i = j;
     }
-    FetchOutcome { ready, fetches }
+    fetches
 }
 
 /// Every node fetches its own copy (snarfing disabled — BARISTA-no-opts).

@@ -22,6 +22,19 @@ pub struct FetchOutcome {
     pub fetches: u64,
 }
 
+/// Cumulative group boundaries of a telescoping schedule (the `_into`
+/// fast paths take these precomputed so the hot loop never rebuilds
+/// them — §Perf).
+pub fn telescope_boundaries(schedule: &[usize]) -> Vec<usize> {
+    schedule
+        .iter()
+        .scan(0usize, |acc, &s| {
+            *acc += s;
+            Some(*acc)
+        })
+        .collect()
+}
+
 /// Serve one chunk-block (`lines` cache lines starting at `first_line`)
 /// to requesters with the given `needs` (absolute cycle each node wants
 /// the data). `schedule` gives the telescoping group sizes; it should sum
@@ -34,23 +47,38 @@ pub fn telescope_fetch(
     first_line: u64,
     lines: u64,
 ) -> FetchOutcome {
+    let boundaries = telescope_boundaries(schedule);
+    let mut idx = Vec::new();
+    let mut ready = vec![0u64; needs.len()];
+    let fetches =
+        telescope_fetch_into(cache, needs, &boundaries, first_line, lines, &mut idx, &mut ready);
+    FetchOutcome { ready, fetches }
+}
+
+/// Allocation-free [`telescope_fetch`]: `boundaries` come from
+/// [`telescope_boundaries`], `idx` is a reusable sort buffer and
+/// `ready` (same length as `needs`) receives every requester's
+/// data-ready time. Returns the number of fetches issued.
+pub fn telescope_fetch_into(
+    cache: &mut BankedCache,
+    needs: &[u64],
+    boundaries: &[usize],
+    first_line: u64,
+    lines: u64,
+    idx: &mut Vec<usize>,
+    ready: &mut [u64],
+) -> u64 {
     let n = needs.len();
-    let mut idx: Vec<usize> = (0..n).collect();
+    debug_assert_eq!(ready.len(), n);
+    idx.clear();
+    idx.extend(0..n);
     idx.sort_by_key(|&i| needs[i]);
-    let mut ready = vec![0u64; n];
     let mut fetches = 0u64;
     let mut i = 0usize;
-    // Cumulative group boundaries: in-flight joining may overshoot a
-    // boundary, in which case the next fetch targets the next boundary
-    // beyond the current position (the schedule describes *positions* in
-    // the straggler distribution, not fixed group sizes).
-    let boundaries: Vec<usize> = schedule
-        .iter()
-        .scan(0usize, |acc, &s| {
-            *acc += s;
-            Some(*acc)
-        })
-        .collect();
+    // In-flight joining may overshoot a boundary, in which case the next
+    // fetch targets the next boundary beyond the current position (the
+    // schedule describes *positions* in the straggler distribution, not
+    // fixed group sizes).
     let mut bidx = 0usize;
     while i < n {
         while bidx < boundaries.len() && boundaries[bidx] <= i {
@@ -76,7 +104,7 @@ pub fn telescope_fetch(
         }
         i = j;
     }
-    FetchOutcome { ready, fetches }
+    fetches
 }
 
 /// Broadcast policy: a single fetch at the first need; everyone waits for
@@ -87,12 +115,26 @@ pub fn broadcast_fetch(
     first_line: u64,
     lines: u64,
 ) -> FetchOutcome {
+    let mut ready = vec![0u64; needs.len()];
+    let fetches = broadcast_fetch_into(cache, needs, first_line, lines, &mut ready);
+    FetchOutcome { ready, fetches }
+}
+
+/// Allocation-free [`broadcast_fetch`].
+pub fn broadcast_fetch_into(
+    cache: &mut BankedCache,
+    needs: &[u64],
+    first_line: u64,
+    lines: u64,
+    ready: &mut [u64],
+) -> u64 {
+    debug_assert_eq!(ready.len(), needs.len());
     let first = needs.iter().copied().min().unwrap_or(0);
     let resp = cache.access_block(first, first_line, lines);
-    FetchOutcome {
-        ready: needs.iter().map(|&t| resp.max(t)).collect(),
-        fetches: 1,
+    for (r, &t) in ready.iter_mut().zip(needs.iter()) {
+        *r = resp.max(t);
     }
+    1
 }
 
 /// No combining at all (BARISTA-no-opts): every requester fetches its own
@@ -103,16 +145,29 @@ pub fn solo_fetch(
     first_line: u64,
     lines: u64,
 ) -> FetchOutcome {
-    let mut order: Vec<usize> = (0..needs.len()).collect();
-    order.sort_by_key(|&i| needs[i]);
+    let mut idx = Vec::new();
     let mut ready = vec![0u64; needs.len()];
-    for &i in &order {
+    let fetches = solo_fetch_into(cache, needs, first_line, lines, &mut idx, &mut ready);
+    FetchOutcome { ready, fetches }
+}
+
+/// Allocation-free [`solo_fetch`]: `idx` is a reusable sort buffer.
+pub fn solo_fetch_into(
+    cache: &mut BankedCache,
+    needs: &[u64],
+    first_line: u64,
+    lines: u64,
+    idx: &mut Vec<usize>,
+    ready: &mut [u64],
+) -> u64 {
+    debug_assert_eq!(ready.len(), needs.len());
+    idx.clear();
+    idx.extend(0..needs.len());
+    idx.sort_by_key(|&i| needs[i]);
+    for &i in idx.iter() {
         ready[i] = cache.access_block(needs[i], first_line, lines);
     }
-    FetchOutcome {
-        ready,
-        fetches: needs.len() as u64,
-    }
+    needs.len() as u64
 }
 
 #[cfg(test)]

@@ -21,18 +21,26 @@ const ARRAY_DIM: u64 = 128;
 
 pub struct DenseSim {
     cfg: SimConfig,
+    reference: bool,
 }
 
 impl DenseSim {
     pub fn new(cfg: SimConfig) -> Self {
         assert_eq!(cfg.arch, ArchKind::Dense);
-        DenseSim { cfg }
+        DenseSim {
+            cfg,
+            reference: false,
+        }
     }
 }
 
 impl Simulator for DenseSim {
     fn arch(&self) -> ArchKind {
         ArchKind::Dense
+    }
+
+    fn set_reference_mode(&mut self, on: bool) {
+        self.reference = on;
     }
 
     fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
@@ -57,10 +65,17 @@ impl Simulator for DenseSim {
         // that idle area is `other`).
         let useful_macs = g.dense_macs(batch) as f64;
         // Effectual fraction measured from the sampled masks (exact
-        // per-layer df·di product including jitter).
+        // per-layer df·di product including jitter). The matched count
+        // comes from the shared pass table unless in reference mode —
+        // bit-identical either way (§Perf).
         let sampled_dense =
             (layer.windows.rows * layer.filters.rows * g.vec_len()) as f64;
-        let matched_frac = layer.matched_macs_sampled() as f64 / sampled_dense;
+        let matched_sampled = if self.reference {
+            layer.matched_macs_sampled()
+        } else {
+            layer.matched_macs_sampled_cached()
+        };
+        let matched_frac = matched_sampled as f64 / sampled_dense;
         let nonzero = useful_macs * matched_frac;
         let zero = useful_macs - nonzero;
         let other = (pe_cycles_total - useful_macs).max(0.0); // fill + padding idles

@@ -5,7 +5,7 @@
 //! spread perfectly over all PEs; no data waits, no barriers. BARISTA's
 //! headline claim is landing within ~6% of this bound.
 
-use crate::arch::{pass_pe_cycles, Simulator};
+use crate::arch::{PassSource, Simulator};
 use crate::baselines::dram_traffic;
 use crate::config::{ArchKind, SimConfig};
 use crate::sim::{Breakdown, EnergyCounters, LayerResult, Traffic};
@@ -13,11 +13,15 @@ use crate::workload::LayerWork;
 
 pub struct IdealSim {
     cfg: SimConfig,
+    reference: bool,
 }
 
 impl IdealSim {
     pub fn new(cfg: SimConfig) -> Self {
-        IdealSim { cfg }
+        IdealSim {
+            cfg,
+            reference: false,
+        }
     }
 }
 
@@ -26,16 +30,33 @@ impl Simulator for IdealSim {
         ArchKind::Ideal
     }
 
+    fn set_reference_mode(&mut self, on: bool) {
+        self.reference = on;
+    }
+
     fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
         let parts = self.cfg.pes_per_node;
         let overhead = self.cfg.chunk_overhead;
+        // Pass costs via the shared per-layer table (§Perf).
+        let table = if self.reference {
+            None
+        } else {
+            layer.pass_table(parts)
+        };
+        let passes = match table.as_deref() {
+            Some(t) => PassSource::Table(t),
+            None => PassSource::Direct {
+                filters: &layer.filters,
+                windows: &layer.windows,
+                parts,
+            },
+        };
         let mut pe_cycle_sum = 0u64;
         let mut matched = 0u64;
         let mut chunk_ops = 0u64;
         for f in 0..layer.filters.rows {
-            let frow = layer.filters.row(f);
             for w in 0..layer.windows.rows {
-                let c = pass_pe_cycles(frow, layer.windows.row(w), parts, 0, overhead);
+                let c = passes.cost(f, w, 0, overhead);
                 pe_cycle_sum += c.sum_pe(parts) + self.cfg.reduce_cycles;
                 matched += c.matched;
                 chunk_ops += c.chunk_ops;

@@ -13,11 +13,12 @@
 //! tile *k−1* starts, so only latency/queuing beyond one tile's compute
 //! shows up as stall.
 
-use crate::arch::Simulator;
+use crate::arch::{PassSource, Simulator};
 use crate::baselines::dram_traffic;
 use crate::config::{ArchKind, SimConfig};
 use crate::sim::cache::{dense_block_lines, sparse_block_lines, LINE_BYTES};
 use crate::sim::{BankedCache, Breakdown, EnergyCounters, EventHeap, LayerResult, Traffic};
+use crate::tensor::SUBCHUNKS;
 use crate::util::ceil_div;
 use crate::workload::LayerWork;
 
@@ -31,17 +32,25 @@ const GROUP: usize = 64;
 
 pub struct OneSidedSim {
     cfg: SimConfig,
+    reference: bool,
 }
 
 impl OneSidedSim {
     pub fn new(cfg: SimConfig) -> Self {
-        OneSidedSim { cfg }
+        OneSidedSim {
+            cfg,
+            reference: false,
+        }
     }
 }
 
 impl Simulator for OneSidedSim {
     fn arch(&self) -> ArchKind {
         ArchKind::OneSided
+    }
+
+    fn set_reference_mode(&mut self, on: bool) {
+        self.reference = on;
     }
 
     fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
@@ -52,11 +61,29 @@ impl Simulator for OneSidedSim {
         let groups = ceil_div(n_filters as u64, GROUP as u64) as usize;
         let overhead = cfg.chunk_overhead;
 
-        // Per-window compute time (identical for every lane): window nnz
+        // Matched counts from the shared per-layer pass table (§Perf).
+        let table = if self.reference {
+            None
+        } else {
+            layer.pass_table(SUBCHUNKS)
+        };
+        let matcher = match table.as_deref() {
+            Some(t) => PassSource::Table(t),
+            None => PassSource::Direct {
+                filters: &layer.filters,
+                windows: &layer.windows,
+                parts: SUBCHUNKS,
+            },
+        };
+
+        // Per-window nnz, hoisted out of the tile loop (§Perf), and
+        // per-window compute time (identical for every lane): window nnz
         // + per-chunk pipeline overhead, twice (two serialized filters
         // per lane).
-        let win_cycles: Vec<u64> = (0..n_windows)
-            .map(|w| 2 * (layer.windows.row_nnz(w) + chunks * overhead))
+        let win_nnz: Vec<u64> = (0..n_windows).map(|w| layer.windows.row_nnz(w)).collect();
+        let win_cycles: Vec<u64> = win_nnz
+            .iter()
+            .map(|&nz| 2 * (nz + chunks * overhead))
             .collect();
 
         // Tiles in group-major order, block-dealt to clusters so each
@@ -188,10 +215,9 @@ impl Simulator for OneSidedSim {
             st.time = start + win_cycles[w];
             // Effectual vs executed ops on this tile.
             let filters_here = GROUP.min(n_filters - g * GROUP);
-            executed_ops += layer.windows.row_nnz(w) * filters_here as u64;
+            executed_ops += win_nnz[w] * filters_here as u64;
             for f in 0..filters_here {
-                matched_total +=
-                    layer.filters.matched_row(g * GROUP + f, &layer.windows, w);
+                matched_total += matcher.matched(g * GROUP + f, w);
             }
             if st.next_tile >= st.end_tile {
                 if let Some((bs_, be_)) = pull(st.cur_group, &mut group_blocks) {

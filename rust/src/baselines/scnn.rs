@@ -30,11 +30,15 @@ const STRIDE_PENALTY: f64 = 1.6;
 
 pub struct ScnnSim {
     cfg: SimConfig,
+    reference: bool,
 }
 
 impl ScnnSim {
     pub fn new(cfg: SimConfig) -> Self {
-        ScnnSim { cfg }
+        ScnnSim {
+            cfg,
+            reference: false,
+        }
     }
 }
 
@@ -43,14 +47,24 @@ impl Simulator for ScnnSim {
         ArchKind::Scnn
     }
 
+    fn set_reference_mode(&mut self, on: bool) {
+        self.reference = on;
+    }
+
     fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
         let cfg = &self.cfg;
         let scale = layer.scale();
         let pes = cfg.total_macs() as f64;
 
         // Useful products = matched MACs (all Cartesian products of
-        // same-channel non-zeros contribute for unit stride).
-        let matched = layer.matched_macs_sampled() as f64 * scale;
+        // same-channel non-zeros contribute for unit stride); the count
+        // comes from the shared pass table (bit-identical — §Perf).
+        let matched_sampled = if self.reference {
+            layer.matched_macs_sampled()
+        } else {
+            layer.matched_macs_sampled_cached()
+        };
+        let matched = matched_sampled as f64 * scale;
 
         // Base compute time under fragmentation + crossbar contention.
         let stride_pen = if layer.geom.stride > 1 {

@@ -10,11 +10,12 @@
 //! until the slowest lane finishes); clusters refetch asynchronously
 //! from the shared cache, which queues on banks at this scale.
 
-use crate::arch::Simulator;
+use crate::arch::{PassSource, Simulator};
 use crate::baselines::dram_traffic;
 use crate::config::{ArchKind, SimConfig};
 use crate::sim::cache::{sparse_block_lines, LINE_BYTES};
 use crate::sim::{BankedCache, Breakdown, EnergyCounters, EventHeap, LayerResult, Traffic};
+use crate::tensor::SUBCHUNKS;
 use crate::util::ceil_div;
 use crate::workload::balance::gb_s_order;
 use crate::workload::LayerWork;
@@ -26,17 +27,25 @@ const GROUP: usize = 64;
 
 pub struct SparTenSim {
     cfg: SimConfig,
+    reference: bool,
 }
 
 impl SparTenSim {
     pub fn new(cfg: SimConfig) -> Self {
-        SparTenSim { cfg }
+        SparTenSim {
+            cfg,
+            reference: false,
+        }
     }
 }
 
 impl Simulator for SparTenSim {
     fn arch(&self) -> ArchKind {
         self.cfg.arch
+    }
+
+    fn set_reference_mode(&mut self, on: bool) {
+        self.reference = on;
     }
 
     fn simulate_layer(&mut self, layer: &LayerWork) -> LayerResult {
@@ -50,6 +59,23 @@ impl Simulator for SparTenSim {
         // group of 64 so each PE's serialized pair has near-average work.
         let order = gb_s_order(&layer.filters);
         let groups = ceil_div(n_filters as u64, GROUP as u64) as usize;
+
+        // Matched counts from the shared per-layer pass table (§Perf):
+        // the same table the BARISTA grid variants use, so a sweep
+        // computes the mask intersections once.
+        let table = if self.reference {
+            None
+        } else {
+            layer.pass_table(SUBCHUNKS)
+        };
+        let matcher = match table.as_deref() {
+            Some(t) => PassSource::Table(t),
+            None => PassSource::Direct {
+                filters: &layer.filters,
+                windows: &layer.windows,
+                parts: SUBCHUNKS,
+            },
+        };
 
         // Adaptive cluster engagement (see one_sided.rs): pick the
         // power-of-two cluster count minimizing max(compute, filter-load).
@@ -195,12 +221,12 @@ impl Simulator for SparTenSim {
                 if g * GROUP + lane >= n_filters {
                     continue; // ragged tail: idle lane
                 }
-                let mut t_lane =
-                    layer.filters.matched_row(a, &layer.windows, w) + chunks * overhead;
+                let ma = matcher.matched(a, w);
+                let mut t_lane = ma + chunks * overhead;
                 chunk_ops += chunks;
-                matched_total += layer.filters.matched_row(a, &layer.windows, w);
+                matched_total += ma;
                 if let Some(b) = b {
-                    let mb = layer.filters.matched_row(b, &layer.windows, w);
+                    let mb = matcher.matched(b, w);
                     t_lane += mb + chunks * overhead;
                     matched_total += mb;
                     chunk_ops += chunks;

@@ -11,14 +11,16 @@
 //! (CSV series + aligned text tables), shared by the CLI, the examples
 //! and the benches.
 
+mod pool;
 pub mod report;
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use crate::arch::simulator_for;
 use crate::config::{ArchKind, SimConfig};
-use crate::sim::NetworkResult;
+use crate::sim::{LayerResult, NetworkResult};
 use crate::workload::{Benchmark, NetworkWork};
 
 /// One simulation job.
@@ -38,20 +40,62 @@ pub struct RunResult {
     pub host_ms: f64,
 }
 
+/// How [`run_one_with`] executes a job. The §Perf fast paths are on by
+/// default; the reference configuration reproduces the pre-optimization
+/// behavior exactly — serial layers, direct pass arithmetic, fresh
+/// workload generation — for equivalence tests and baseline benchmarks.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    /// Simulate a job's independent layers across the shared layer
+    /// pool (deterministic ordered reduce; results are identical to a
+    /// serial run).
+    pub layer_parallel: bool,
+    /// Use the pre-§Perf reference paths: direct mask arithmetic
+    /// instead of the shared pass tables, and a freshly generated
+    /// workload instead of the process-wide memo.
+    pub reference: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> ExecOptions {
+        ExecOptions {
+            layer_parallel: true,
+            reference: false,
+        }
+    }
+}
+
 /// Execute one request synchronously (workers call this; also usable
 /// directly for single runs and tests).
 pub fn run_one(req: &RunRequest) -> RunResult {
+    run_one_with(req, ExecOptions::default())
+}
+
+/// The pre-§Perf execution path — serial layers, no pass tables, no
+/// workload memo. The equivalence tests assert it is bit-identical to
+/// [`run_one`]; `perf_hotpath` uses it as the before/after baseline.
+pub fn run_one_reference(req: &RunRequest) -> RunResult {
+    run_one_with(
+        req,
+        ExecOptions {
+            layer_parallel: false,
+            reference: true,
+        },
+    )
+}
+
+/// Execute one request with explicit [`ExecOptions`].
+pub fn run_one_with(req: &RunRequest, opts: ExecOptions) -> RunResult {
     let t0 = std::time::Instant::now();
     req.config
         .validate()
         .unwrap_or_else(|e| panic!("invalid config for {}: {e}", req.config.arch));
-    let work = NetworkWork::generate(req.benchmark, &req.config);
-    let mut sim = simulator_for(&req.config);
-    let layers = work
-        .layers
-        .iter()
-        .map(|l| sim.simulate_layer(l))
-        .collect::<Vec<_>>();
+    let work = if opts.reference {
+        Arc::new(NetworkWork::generate(req.benchmark, &req.config))
+    } else {
+        NetworkWork::shared(req.benchmark, &req.config)
+    };
+    let layers = simulate_layers(&req.config, &work, opts);
     let network = NetworkResult::from_layers(
         req.config.arch.name(),
         req.benchmark.name(),
@@ -65,8 +109,48 @@ pub fn run_one(req: &RunRequest) -> RunResult {
     }
 }
 
+/// Simulate every layer of `work`, in layer order. With
+/// `opts.layer_parallel` the layers fan out across the shared layer
+/// pool (each task owns its simulator and writes a disjoint slot, so
+/// results are deterministic and identical to the serial path).
+fn simulate_layers(
+    config: &SimConfig,
+    work: &Arc<NetworkWork>,
+    opts: ExecOptions,
+) -> Vec<LayerResult> {
+    let n = work.layers.len();
+    if !opts.layer_parallel || n <= 1 || pool::pool_threads() <= 1 {
+        let mut sim = simulator_for(config);
+        sim.set_reference_mode(opts.reference);
+        return work.layers.iter().map(|l| sim.simulate_layer(l)).collect();
+    }
+    let slots: Arc<Mutex<Vec<Option<LayerResult>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let mut tasks: Vec<pool::Task> = Vec::with_capacity(n);
+    for i in 0..n {
+        let work = work.clone();
+        let cfg = config.clone();
+        let slots = slots.clone();
+        let reference = opts.reference;
+        tasks.push(Box::new(move || {
+            let mut sim = simulator_for(&cfg);
+            sim.set_reference_mode(reference);
+            let r = sim.simulate_layer(&work.layers[i]);
+            slots.lock().unwrap()[i] = Some(r);
+        }));
+    }
+    pool::run_batch(tasks);
+    let mut slots = slots.lock().unwrap();
+    slots
+        .iter_mut()
+        .map(|s| s.take().expect("every layer task filled its slot"))
+        .collect()
+}
+
 /// Execute a request from a pre-generated workload (the end-to-end driver
-/// injects measured densities this way).
+/// injects measured densities this way). Serial by design — the caller
+/// owns the workload, and this path is not the service hot path — but it
+/// still shares pass tables through `work`'s layers.
 pub fn run_with_work(config: &SimConfig, work: &NetworkWork) -> RunResult {
     let t0 = std::time::Instant::now();
     let mut sim = simulator_for(config);
@@ -135,14 +219,17 @@ impl Coordinator {
         }
     }
 
-    /// Run all requests, preserving input order in the output.
+    /// Run all requests, preserving input order in the output. Workers
+    /// pull FIFO (submission order), so the sweep's long-running jobs —
+    /// listed first — start first and mixed sweeps have better tail
+    /// latency than the old LIFO `Vec::pop`.
     pub fn run_all(&self, requests: Vec<RunRequest>) -> Vec<RunResult> {
         if requests.is_empty() {
             return Vec::new();
         }
         let n = requests.len();
         let queue = Arc::new(Mutex::new(
-            requests.into_iter().enumerate().collect::<Vec<_>>(),
+            requests.into_iter().enumerate().collect::<VecDeque<_>>(),
         ));
         let (tx, rx) = mpsc::channel::<(usize, RunResult)>();
         let mut handles = Vec::new();
@@ -150,7 +237,7 @@ impl Coordinator {
             let queue = queue.clone();
             let tx = tx.clone();
             handles.push(std::thread::spawn(move || loop {
-                let job = queue.lock().unwrap().pop();
+                let job = queue.lock().unwrap().pop_front();
                 match job {
                     Some((i, req)) => {
                         let res = run_one(&req);
@@ -225,6 +312,59 @@ mod tests {
         let parallel = Coordinator::with_workers(3).run_all(reqs);
         for (s, p) in serial.iter().zip(&parallel) {
             assert_eq!(*s, p.network.cycles, "order + determinism preserved");
+        }
+    }
+
+    #[test]
+    fn optimized_equals_reference() {
+        for arch in [ArchKind::Barista, ArchKind::SparTen, ArchKind::Ideal] {
+            let req = RunRequest {
+                benchmark: Benchmark::AlexNet,
+                config: small(arch),
+            };
+            let fast = run_one(&req);
+            let slow = run_one_reference(&req);
+            assert_eq!(fast.network.cycles, slow.network.cycles, "{arch}");
+            assert_eq!(
+                fast.network.to_json().to_string(),
+                slow.network.to_json().to_string(),
+                "{arch}"
+            );
+        }
+    }
+
+    #[test]
+    fn layer_parallel_reduce_is_ordered_and_identical_to_serial() {
+        let req = RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: small(ArchKind::Barista),
+        };
+        let par = run_one_with(
+            &req,
+            ExecOptions {
+                layer_parallel: true,
+                reference: false,
+            },
+        );
+        let ser = run_one_with(
+            &req,
+            ExecOptions {
+                layer_parallel: false,
+                reference: false,
+            },
+        );
+        assert_eq!(par.network.layers.len(), ser.network.layers.len());
+        for (i, (a, b)) in par
+            .network
+            .layers
+            .iter()
+            .zip(&ser.network.layers)
+            .enumerate()
+        {
+            assert_eq!(a.cycles, b.cycles, "layer {i}");
+            assert_eq!(a.breakdown, b.breakdown, "layer {i}");
+            assert_eq!(a.traffic, b.traffic, "layer {i}");
+            assert_eq!(a.energy, b.energy, "layer {i}");
         }
     }
 

@@ -1,0 +1,204 @@
+//! Shared layer-simulation thread pool (DESIGN.md §Perf).
+//!
+//! `run_one` fans a job's independent layers out across this pool and
+//! reduces the results in layer order, so a single cold `submit` — the
+//! service's user-facing latency — scales with cores instead of running
+//! layers serially. The pool is global and sized to the machine:
+//! concurrent jobs (scheduler workers, coordinator workers, tests)
+//! share one set of threads instead of each spawning their own, and the
+//! submitting thread *helps* execute its own batch while it waits, so a
+//! batch always makes progress even when every pool thread is busy
+//! elsewhere.
+//!
+//! Determinism: tasks are independent (one per layer, each with its own
+//! simulator) and write to disjoint result slots, so scheduling order
+//! cannot affect results — the ordered reduce reads slots by index.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One unit of pool work (a single layer simulation).
+pub(crate) type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A submitted batch: a queue of tasks plus a completion latch.
+struct Batch {
+    tasks: Mutex<VecDeque<Task>>,
+    /// Tasks not yet finished (queued + running).
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Batch {
+    /// Pop and execute one task. Returns false when the queue is empty.
+    fn run_one_task(&self) -> bool {
+        let task = self.tasks.lock().unwrap().pop_front();
+        match task {
+            Some(t) => {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(t)).is_err() {
+                    self.panicked.store(true, Ordering::SeqCst);
+                }
+                let mut r = self.remaining.lock().unwrap();
+                *r -= 1;
+                if *r == 0 {
+                    self.done.notify_all();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn has_tasks(&self) -> bool {
+        !self.tasks.lock().unwrap().is_empty()
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.done.wait(r).unwrap();
+        }
+    }
+}
+
+struct PoolState {
+    queue: Mutex<VecDeque<Arc<Batch>>>,
+    ready: Condvar,
+}
+
+static POOL: OnceLock<Arc<PoolState>> = OnceLock::new();
+
+/// Threads the shared pool runs (also the per-batch parallelism cap).
+pub(crate) fn pool_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+fn pool() -> &'static Arc<PoolState> {
+    POOL.get_or_init(|| {
+        let state = Arc::new(PoolState {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        });
+        for i in 0..pool_threads() {
+            let state = state.clone();
+            std::thread::Builder::new()
+                .name(format!("barista-layer-{i}"))
+                .spawn(move || worker(&state))
+                .expect("spawn layer-pool worker");
+        }
+        state
+    })
+}
+
+fn worker(state: &PoolState) {
+    loop {
+        let batch = {
+            let mut q = state.queue.lock().unwrap();
+            loop {
+                // Drop drained batches, grab the first with work left.
+                while q.front().map(|b| !b.has_tasks()).unwrap_or(false) {
+                    q.pop_front();
+                }
+                match q.front() {
+                    Some(b) => break b.clone(),
+                    None => q = state.ready.wait(q).unwrap(),
+                }
+            }
+        };
+        while batch.run_one_task() {}
+    }
+}
+
+/// Run `tasks` to completion, the calling thread helping to drain its
+/// own batch. Panics (after every task has settled) if any task
+/// panicked.
+pub(crate) fn run_batch(tasks: Vec<Task>) {
+    if tasks.is_empty() {
+        return;
+    }
+    let n = tasks.len();
+    let batch = Arc::new(Batch {
+        tasks: Mutex::new(tasks.into()),
+        remaining: Mutex::new(n),
+        done: Condvar::new(),
+        panicked: AtomicBool::new(false),
+    });
+    if n > 1 {
+        let state = pool();
+        state.queue.lock().unwrap().push_back(batch.clone());
+        state.ready.notify_all();
+    }
+    while batch.run_one_task() {}
+    batch.wait();
+    if batch.panicked.load(Ordering::SeqCst) {
+        panic!("layer simulation task panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let tasks: Vec<Task> = (0..64)
+            .map(|_| {
+                let count = count.clone();
+                Box::new(move || {
+                    count.fetch_add(1, Ordering::SeqCst);
+                }) as Task
+            })
+            .collect();
+        run_batch(tasks);
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn concurrent_batches_complete() {
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            joins.push(std::thread::spawn(|| {
+                let hits = Arc::new(AtomicUsize::new(0));
+                let tasks: Vec<Task> = (0..16)
+                    .map(|_| {
+                        let hits = hits.clone();
+                        Box::new(move || {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        }) as Task
+                    })
+                    .collect();
+                run_batch(tasks);
+                hits.load(Ordering::SeqCst)
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), 16);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        run_batch(Vec::new());
+    }
+
+    #[test]
+    fn panicking_task_propagates_after_batch_settles() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = done.clone();
+        let tasks: Vec<Task> = vec![
+            Box::new(move || {
+                d2.fetch_add(1, Ordering::SeqCst);
+            }),
+            Box::new(|| panic!("boom")),
+        ];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_batch(tasks)));
+        assert!(res.is_err(), "panic must propagate to the submitter");
+        assert_eq!(done.load(Ordering::SeqCst), 1, "other tasks still ran");
+    }
+}

@@ -47,3 +47,13 @@ pub mod util;
 pub mod workload;
 
 pub use config::{ArchKind, SimConfig};
+
+/// Simulator semantics version, folded into the service result cache's
+/// content address (`service::cache::job_key`). Bump it on ANY change
+/// that can alter simulation results for an unchanged config — new
+/// timing terms, workload-generation tweaks, accounting fixes — so a
+/// newer build can never serve stale cached results produced by an
+/// older simulator. Pure performance work that is bit-identical (e.g.
+/// the §Perf pass tables, proven by `tests/perf_equivalence.rs`) does
+/// not require a bump.
+pub const SIM_VERSION: u32 = 1;

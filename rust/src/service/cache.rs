@@ -36,9 +36,13 @@ impl JobKey {
 }
 
 /// The canonical string a job hashes to (also usable as a debug label).
+/// [`crate::SIM_VERSION`] is folded in so results computed by an older
+/// simulator can never be served for a semantically newer one — any
+/// semantics-changing release bumps the version and thereby every key.
 pub fn canonical_job_string(req: &RunRequest) -> String {
     format!(
-        "{}|{}",
+        "sim-v{}|{}|{}",
+        crate::SIM_VERSION,
         req.benchmark.name(),
         req.config.canonical_json().to_string()
     )
@@ -267,6 +271,17 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, c);
         assert_eq!(a.hex().len(), 32);
+    }
+
+    #[test]
+    fn job_key_is_versioned() {
+        // The canonical string carries SIM_VERSION, so bumping the
+        // version invalidates every older key.
+        let s = canonical_job_string(&small_req(1));
+        assert!(
+            s.starts_with(&format!("sim-v{}|", crate::SIM_VERSION)),
+            "canonical string must lead with the simulator version: {s}"
+        );
     }
 
     #[test]

@@ -11,10 +11,20 @@
 //!   `scale()`; window statistics are stationary so sampling preserves
 //!   comparative timing (DESIGN.md §Substitutions-4).
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::arch::PassTable;
 use crate::config::SimConfig;
-use crate::tensor::{LayerGeom, MaskMatrix};
+use crate::tensor::{LayerGeom, MaskMatrix, SUBCHUNKS};
 use crate::util::rng::Pcg32;
 use crate::workload::networks::{network, Benchmark, NetworkSpec};
+
+/// Largest pass table worth retaining per (layer, parts) — paper-sized
+/// workloads sit at a few MB; only uncapped (`window_cap: 0`) runs
+/// exceed this, and they keep the pre-§Perf direct path instead of
+/// churning hundreds of MB of table per layer.
+pub const PASS_TABLE_MAX_BYTES: usize = 64 << 20;
 
 /// Relative density spread across filters (pruned-filter variation).
 pub const FILTER_JITTER: f64 = 0.15;
@@ -37,9 +47,54 @@ pub struct LayerWork {
     pub filter_density: f64,
     /// Input-map density used for this layer.
     pub map_density: f64,
+    /// Shared pass-table slots, keyed by PE partition count. Clones
+    /// share the slots (the masks are immutable), so a memoized
+    /// workload builds each table once for a whole sweep (§Perf).
+    tables: Arc<TableSlots>,
+}
+
+/// Lazily built [`PassTable`]s for one layer. `None` remembers that a
+/// geometry cannot be tabulated so the build is not retried.
+#[derive(Debug, Default)]
+struct TableSlots {
+    by_parts: Mutex<HashMap<usize, Option<Arc<PassTable>>>>,
 }
 
 impl LayerWork {
+    /// The shared pass-cost table for `parts` PEs per node, built on
+    /// first use. One table per (layer, parts) serves every rotation,
+    /// every BARISTA policy variant and the baselines' matched-MAC
+    /// accounting — across all runs that share this workload. `None`
+    /// when the geometry cannot or should not be tabulated — lane
+    /// overflow, or a table beyond [`PASS_TABLE_MAX_BYTES`] (uncapped
+    /// `window_cap: 0` runs) — in which case the caller falls back to
+    /// direct mask arithmetic, which is bit-identical.
+    pub fn pass_table(&self, parts: usize) -> Option<Arc<PassTable>> {
+        let mut slots = self.tables.by_parts.lock().unwrap();
+        if let Some(t) = slots.get(&parts) {
+            return t.clone();
+        }
+        let bytes = self.filters.rows * self.windows.rows * parts * 2;
+        let built = if bytes > PASS_TABLE_MAX_BYTES {
+            None
+        } else {
+            PassTable::build(&self.filters, &self.windows, parts).map(Arc::new)
+        };
+        slots.insert(parts, built.clone());
+        built
+    }
+
+    /// [`matched_macs_sampled`](Self::matched_macs_sampled) through the
+    /// shared pass table — bit-identical, but amortized across every
+    /// architecture that asks. The direct method stays as independent
+    /// ground truth for tests.
+    pub fn matched_macs_sampled_cached(&self) -> u64 {
+        match self.pass_table(SUBCHUNKS) {
+            Some(t) => t.total_matched(),
+            None => self.matched_macs_sampled(),
+        }
+    }
+
     /// Multiplier to scale sampled-window counts up to the full layer.
     pub fn scale(&self) -> f64 {
         self.total_windows as f64 / self.windows.rows.max(1) as f64
@@ -145,6 +200,7 @@ impl NetworkWork {
             total_windows,
             filter_density,
             map_density,
+            tables: Arc::default(),
         }
     }
 
@@ -152,7 +208,80 @@ impl NetworkWork {
     pub fn dense_macs(&self) -> u64 {
         self.spec.dense_macs(self.batch)
     }
+
+    /// Memoized [`generate`](Self::generate): identical `(benchmark,
+    /// seed, window_cap, batch)` requests share one generated workload
+    /// — and hence one set of pass tables — across the whole process,
+    /// so an 8-architecture sweep synthesizes masks once instead of 8
+    /// times (§Perf). Those four fields are the only `SimConfig` inputs
+    /// generation reads, which the `memo_key_covers_generation` test
+    /// pins down.
+    pub fn shared(benchmark: Benchmark, cfg: &SimConfig) -> Arc<NetworkWork> {
+        let key = WorkKey {
+            benchmark,
+            seed: cfg.seed,
+            window_cap: cfg.window_cap,
+            batch: cfg.batch,
+        };
+        let slot = {
+            let memo = WORK_MEMO.get_or_init(|| {
+                Mutex::new(WorkMemo {
+                    slots: HashMap::new(),
+                    stamp: 0,
+                })
+            });
+            let mut m = memo.lock().unwrap();
+            m.stamp += 1;
+            let stamp = m.stamp;
+            let arc = {
+                let e = m
+                    .slots
+                    .entry(key)
+                    .or_insert_with(|| (stamp, Arc::new(OnceLock::new())));
+                e.0 = stamp;
+                e.1.clone()
+            };
+            if m.slots.len() > WORK_MEMO_CAP {
+                // Evict the least-recently-used other entry; holders of
+                // its Arc keep it alive, we just stop memoizing it.
+                let victim = m
+                    .slots
+                    .iter()
+                    .filter(|&(k, _)| *k != key)
+                    .min_by_key(|&(_, v)| v.0)
+                    .map(|(k, _)| *k);
+                if let Some(v) = victim {
+                    m.slots.remove(&v);
+                }
+            }
+            arc
+        };
+        // Generation happens outside the memo lock: only callers of the
+        // *same* key wait on it (that wait is exactly the dedup win).
+        slot.get_or_init(|| Arc::new(NetworkWork::generate(benchmark, cfg)))
+            .clone()
+    }
 }
+
+/// The `SimConfig` fields workload generation depends on — the memo key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct WorkKey {
+    benchmark: Benchmark,
+    seed: u64,
+    window_cap: usize,
+    batch: usize,
+}
+
+/// At most this many distinct workloads stay memoized (LRU beyond it).
+/// A full report sweep uses one per benchmark.
+const WORK_MEMO_CAP: usize = 8;
+
+struct WorkMemo {
+    slots: HashMap<WorkKey, (u64, Arc<OnceLock<Arc<NetworkWork>>>)>,
+    stamp: u64,
+}
+
+static WORK_MEMO: OnceLock<Mutex<WorkMemo>> = OnceLock::new();
 
 #[cfg(test)]
 mod tests {
@@ -240,6 +369,64 @@ mod tests {
             assert!(onesided <= dense, "layer {}", l.index);
             assert!(matched > 0, "layer {} produced no work", l.index);
         }
+    }
+
+    #[test]
+    fn shared_memoizes_and_matches_generate() {
+        let cfg = small_cfg();
+        let a = NetworkWork::shared(Benchmark::AlexNet, &cfg);
+        let b = NetworkWork::shared(Benchmark::AlexNet, &cfg);
+        assert!(Arc::ptr_eq(&a, &b), "identical keys share one workload");
+        let fresh = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        for (x, y) in a.layers.iter().zip(&fresh.layers) {
+            assert_eq!(x.filters.get(0, 0), y.filters.get(0, 0));
+            assert_eq!(x.windows.get(0, 0), y.windows.get(0, 0));
+            assert_eq!(x.matched_macs_sampled(), y.matched_macs_sampled());
+        }
+    }
+
+    /// The memo key (benchmark, seed, window_cap, batch) must cover
+    /// every config input generation reads: configs differing in any
+    /// *other* field generate identical workloads.
+    #[test]
+    fn memo_key_covers_generation() {
+        let mut a = SimConfig::paper(ArchKind::Barista);
+        a.window_cap = 48;
+        a.batch = 2;
+        let mut b = SimConfig::paper(ArchKind::Dense); // different arch et al.
+        b.window_cap = 48;
+        b.batch = 2;
+        b.seed = a.seed;
+        let wa = NetworkWork::generate(Benchmark::ResNet18, &a);
+        let wb = NetworkWork::generate(Benchmark::ResNet18, &b);
+        for (x, y) in wa.layers.iter().zip(&wb.layers) {
+            for f in 0..x.filters.rows {
+                for c in 0..x.filters.chunks {
+                    assert_eq!(x.filters.get(f, c), y.filters.get(f, c));
+                }
+            }
+            for w in 0..x.windows.rows {
+                for c in 0..x.windows.chunks {
+                    assert_eq!(x.windows.get(w, c), y.windows.get(w, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pass_table_cached_and_exact() {
+        let cfg = small_cfg();
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let l = &net.layers[1];
+        let t1 = l.pass_table(4).expect("paper geometry tabulates");
+        let t2 = l.pass_table(4).unwrap();
+        assert!(Arc::ptr_eq(&t1, &t2), "table built once per (layer, parts)");
+        assert_eq!(t1.total_matched(), l.matched_macs_sampled());
+        assert_eq!(l.matched_macs_sampled_cached(), l.matched_macs_sampled());
+        // Clones share the slots.
+        let clone = l.clone();
+        let t3 = clone.pass_table(4).unwrap();
+        assert!(Arc::ptr_eq(&t1, &t3));
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! §Perf optimization-equivalence suite (DESIGN.md §Perf).
+//!
+//! The PR that introduced the shared pass tables, the workload memo,
+//! the zero-allocation cluster scratch and the layer-parallel reduce
+//! promised *bit-identical* results. These tests hold it (and every
+//! future perf PR) to that: the optimized `run_one` must reproduce the
+//! pre-optimization reference path exactly — per-layer cycles,
+//! breakdown, traffic, energy — for every architecture, and a pinned
+//! golden value catches silent drift across releases.
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, run_one_reference, ExecOptions, RunRequest};
+use barista::workload::Benchmark;
+
+fn req(arch: ArchKind, window_cap: usize, batch: usize) -> RunRequest {
+    let mut c = SimConfig::paper(arch);
+    c.window_cap = window_cap;
+    c.batch = batch;
+    RunRequest {
+        benchmark: Benchmark::AlexNet,
+        config: c,
+    }
+}
+
+/// The table-backed, memoized, layer-parallel path must be bit-identical
+/// to the old direct path for every architecture the repo models.
+#[test]
+fn optimized_bit_identical_to_reference_across_archs() {
+    for arch in ArchKind::ALL {
+        let r = req(arch, 48, 2);
+        let fast = run_one(&r);
+        let slow = run_one_reference(&r);
+        assert_eq!(
+            fast.network.layers.len(),
+            slow.network.layers.len(),
+            "{arch}: layer count"
+        );
+        for (i, (a, b)) in fast
+            .network
+            .layers
+            .iter()
+            .zip(&slow.network.layers)
+            .enumerate()
+        {
+            assert_eq!(
+                a.cycles.to_bits(),
+                b.cycles.to_bits(),
+                "{arch} layer {i}: cycles {} vs {}",
+                a.cycles,
+                b.cycles
+            );
+            assert_eq!(a.breakdown, b.breakdown, "{arch} layer {i}: breakdown");
+            assert_eq!(a.traffic, b.traffic, "{arch} layer {i}: traffic");
+            assert_eq!(a.energy, b.energy, "{arch} layer {i}: energy");
+            assert_eq!(
+                a.peak_buffer_bytes, b.peak_buffer_bytes,
+                "{arch} layer {i}: peak buffer"
+            );
+            assert_eq!(
+                a.refetch_ratio.to_bits(),
+                b.refetch_ratio.to_bits(),
+                "{arch} layer {i}: refetch ratio"
+            );
+        }
+        assert_eq!(
+            fast.network.to_json().to_string(),
+            slow.network.to_json().to_string(),
+            "{arch}: serialized network result"
+        );
+    }
+}
+
+/// Every combination of the two independent optimizations must agree —
+/// layer parallelism and the table path are separately toggleable.
+#[test]
+fn all_exec_option_combinations_agree() {
+    let r = req(ArchKind::Barista, 32, 1);
+    let base = run_one_reference(&r).network.to_json().to_string();
+    for layer_parallel in [false, true] {
+        for reference in [false, true] {
+            let got = barista::coordinator::run_one_with(
+                &r,
+                ExecOptions {
+                    layer_parallel,
+                    reference,
+                },
+            );
+            assert_eq!(
+                got.network.to_json().to_string(),
+                base,
+                "layer_parallel={layer_parallel} reference={reference}"
+            );
+        }
+    }
+}
+
+/// Pinned-golden cycles for one fixed seed: catches *silent* semantic
+/// drift that an equivalence test (which re-derives both sides) cannot.
+/// The golden file self-seals on the first run in a fresh environment;
+/// once committed, any cycle change must be deliberate — bump
+/// `SIM_VERSION` and refresh this file together.
+#[test]
+fn pinned_golden_barista_alexnet_cycles() {
+    let r = req(ArchKind::Barista, 64, 2);
+    let got = run_one(&r).network.cycles;
+    assert!(got.is_finite() && got > 0.0, "sane cycles: {got}");
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden");
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/golden/barista_alexnet_cap64_batch2_cycles.txt"
+    );
+    match std::fs::read_to_string(path) {
+        Ok(s) => {
+            let want: f64 = s.trim().parse().unwrap_or_else(|e| {
+                panic!("golden file {path} must hold one f64: {e}")
+            });
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "pinned BARISTA AlexNet cycles drifted: got {got}, golden {want}. \
+                 If this change is intentional, bump SIM_VERSION in src/lib.rs \
+                 (the service cache key) and refresh {path}."
+            );
+        }
+        Err(_) => {
+            // First run in this environment: seal the measured value.
+            std::fs::create_dir_all(dir).expect("create golden dir");
+            std::fs::write(path, format!("{got}\n")).expect("seal golden file");
+            println!("sealed golden: {got} -> {path}");
+        }
+    }
+}
+
+/// Determinism under the shared layer pool: repeated optimized runs are
+/// byte-identical (regression guard for scheduling-dependent state).
+#[test]
+fn optimized_runs_are_deterministic() {
+    let r = req(ArchKind::Barista, 48, 2);
+    let a = run_one(&r).network.to_json().to_string();
+    for _ in 0..3 {
+        assert_eq!(run_one(&r).network.to_json().to_string(), a);
+    }
+}
