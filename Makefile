@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt bench bench-smoke bench-figs artifacts serve clean
+.PHONY: build test fmt prop examples bench bench-smoke bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -12,6 +12,17 @@ test:
 
 fmt:
 	cd rust && cargo fmt --check
+
+# Deep local run of the property-based invariant suite (tests/invariants.rs):
+# 8x the CI case counts. Override the (decimal) seed to explore new ground:
+#   make prop PROP_SEED=12345
+prop:
+	cd rust && PROP_CASES=8 $(if $(PROP_SEED),PROP_SEED=$(PROP_SEED)) \
+		cargo test --release --test invariants -- --nocapture
+
+# Examples must keep compiling (CI enforces this too).
+examples:
+	cd rust && cargo build --examples
 
 # Perf benches: writes BENCH_hotpath.json / BENCH_service.json at the
 # repo root (machine-readable before/after numbers for DESIGN.md §Perf).

@@ -104,6 +104,7 @@ mod pjrt {
             layers: geoms.to_vec(),
             filter_density: fdens,
             map_density: mdens,
+            per_layer: None,
         };
         println!(
             "measured network averages: filter density {fdens:.3}, map density {mdens:.3}"

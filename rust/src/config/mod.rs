@@ -8,6 +8,7 @@
 use std::fmt;
 
 use crate::util::Json;
+use crate::workload::SparsityModel;
 
 /// Which architecture to simulate (paper §4, Table 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -219,6 +220,10 @@ pub struct SimConfig {
     pub batch: usize,
     /// RNG seed for workload synthesis.
     pub seed: u64,
+    /// How the synthesized non-zeros are distributed (scenario engine,
+    /// DESIGN.md §Workloads). The default reproduces the seed
+    /// generator's jittered-Bernoulli draws bit-identically.
+    pub sparsity: SparsityModel,
 
     /// BARISTA optimization toggles.
     pub opts: BaristaOpts,
@@ -248,6 +253,7 @@ impl SimConfig {
             window_cap: 1024,
             batch: 32,
             seed: 0xBA757A,
+            sparsity: SparsityModel::Bernoulli,
             opts: BaristaOpts::ALL_ON,
         };
         match arch {
@@ -340,6 +346,7 @@ impl SimConfig {
             .set("reduce_cycles", int_json(self.reduce_cycles))
             .set("seed", int_json(self.seed))
             .set("shared_buf_depth", int_json(self.shared_buf_depth as u64))
+            .set("sparsity", self.sparsity.spec())
             .set("telescope_schedule", sched)
             .set("window_cap", int_json(self.window_cap as u64));
         j
@@ -380,6 +387,12 @@ impl SimConfig {
                 "window_cap" => self.window_cap = usize_field(k, v)?,
                 "batch" => self.batch = usize_field(k, v)?,
                 "seed" => self.seed = u64_field(k, v)?,
+                "sparsity" => {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| format!("'{k}' expects a model string"))?;
+                    self.sparsity = SparsityModel::parse(s)?;
+                }
                 "telescope_schedule" => {
                     let arr = v
                         .as_arr()
@@ -553,6 +566,14 @@ mod tests {
         let mut d = a.clone();
         d.opts.telescoping = false;
         assert_ne!(a.content_hash(), d.content_hash());
+        // Scenario changes must change the key (the cache-key extension
+        // the scenario engine relies on).
+        let mut sc = a.clone();
+        sc.sparsity = SparsityModel::Clustered { run: 16 };
+        assert_ne!(a.content_hash(), sc.content_hash());
+        let mut sc2 = a.clone();
+        sc2.sparsity = SparsityModel::Clustered { run: 8 };
+        assert_ne!(sc.content_hash(), sc2.content_hash());
         // Above 2^53 distinct integers must not collapse to one f64
         // (and hence one cache key).
         let mut e = a.clone();
@@ -581,6 +602,7 @@ mod tests {
             src.window_cap = 77;
             src.seed = (1u64 << 60) + 123; // also above 2^53
             src.opts.snarfing = false;
+            src.sparsity = SparsityModel::BankBalanced { bank: 16 };
             let mut wire = src.canonical_json();
             if let Json::Obj(m) = &mut wire {
                 m.remove("arch");
@@ -635,5 +657,17 @@ mod tests {
         assert_eq!(c.batch, 2);
         assert_eq!(c.seed, 9);
         assert!(!c.opts.coloring);
+    }
+
+    #[test]
+    fn sparsity_override_parses_and_rejects_garbage() {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        let j = Json::parse(r#"{"sparsity": "channel-skew:40"}"#).unwrap();
+        c.apply_overrides(&j).unwrap();
+        assert_eq!(c.sparsity, SparsityModel::ChannelSkew { hot_pct: 40 });
+        let j = Json::parse(r#"{"sparsity": "frothy"}"#).unwrap();
+        assert!(c.apply_overrides(&j).is_err());
+        let j = Json::parse(r#"{"sparsity": 7}"#).unwrap();
+        assert!(c.apply_overrides(&j).is_err());
     }
 }

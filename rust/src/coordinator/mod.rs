@@ -174,9 +174,9 @@ pub fn run_with_work(config: &SimConfig, work: &NetworkWork) -> RunResult {
 
 /// Build the request matrix for a benchmark × architecture sweep: each
 /// architecture uses its paper configuration with the shared workload
-/// knobs (window cap, batch, seed) taken from `base`. Shared by
-/// [`Coordinator::sweep`] and the cache-aware service scheduler so both
-/// paths hash to identical job keys.
+/// knobs (window cap, batch, seed, sparsity scenario) taken from
+/// `base`. Shared by [`Coordinator::sweep`] and the cache-aware service
+/// scheduler so both paths hash to identical job keys.
 pub fn sweep_requests(
     benchmarks: &[Benchmark],
     archs: &[ArchKind],
@@ -189,6 +189,7 @@ pub fn sweep_requests(
             cfg.window_cap = base.window_cap;
             cfg.batch = base.batch;
             cfg.seed = base.seed;
+            cfg.sparsity = base.sparsity;
             reqs.push(RunRequest {
                 benchmark: b,
                 config: cfg,

@@ -190,6 +190,47 @@ pub fn fig9_energy(
     (txt, csv)
 }
 
+/// Scenario comparison (the scaled-up analogue of Figure 7): one full
+/// benchmark × architecture sweep *per sparsity scenario*, rendered as
+/// speedups over that scenario's own Dense baseline. Rows arrive as
+/// `(scenario label, that scenario's sweep results)`.
+pub fn scenario_matrix(
+    scenarios: &[(String, Vec<RunResult>)],
+    benchmarks: &[Benchmark],
+    archs: &[ArchKind],
+) -> (String, String) {
+    let mut txt = String::new();
+    let mut csv = String::from("sparsity,arch");
+    for b in benchmarks {
+        let _ = write!(csv, ",{b}");
+    }
+    csv.push_str(",geomean\n");
+    let _ = writeln!(
+        txt,
+        "{:<18} {:<18} {}  geomean",
+        "sparsity",
+        "speedup vs dense",
+        benchmarks
+            .iter()
+            .map(|b| format!("{:>12}", b.name()))
+            .collect::<String>()
+    );
+    for (label, results) in scenarios {
+        let rows = fig7_speedups(results, benchmarks, archs);
+        for (a, per, g) in &rows {
+            let _ = write!(txt, "{label:<18} {:<18}", a.name());
+            let _ = write!(csv, "{label},{}", a.name());
+            for v in per {
+                let _ = write!(txt, "{v:>12.2}");
+                let _ = write!(csv, ",{v:.4}");
+            }
+            let _ = writeln!(txt, "  {g:>7.2}");
+            let _ = writeln!(csv, ",{g:.4}");
+        }
+    }
+    (txt, csv)
+}
+
 /// Serialize a sweep to JSON (one object per run).
 pub fn results_json(results: &[RunResult]) -> Json {
     Json::Arr(results.iter().map(|r| r.network.to_json()).collect())
@@ -265,6 +306,29 @@ mod tests {
                 "components {sum} vs total {}",
                 f[5]
             );
+        }
+    }
+
+    #[test]
+    fn scenario_matrix_renders_all_scenarios() {
+        let res = mini_sweep();
+        let rows = vec![
+            ("bernoulli".to_string(), res.clone()),
+            ("clustered:16".to_string(), res),
+        ];
+        let (txt, csv) = scenario_matrix(
+            &rows,
+            &[Benchmark::AlexNet],
+            &[ArchKind::Dense, ArchKind::Barista],
+        );
+        assert!(txt.contains("clustered:16"));
+        assert!(csv.starts_with("sparsity,arch,alexnet,geomean"));
+        // Header + 2 scenarios × 2 archs.
+        assert_eq!(csv.lines().count(), 5);
+        // Dense vs itself is exactly 1.0 in every scenario block.
+        for line in csv.lines().skip(1).filter(|l| l.contains(",dense,")) {
+            let g: f64 = line.rsplit(',').next().unwrap().parse().unwrap();
+            assert!((g - 1.0).abs() < 1e-9, "{line}");
         }
     }
 

@@ -29,7 +29,7 @@ use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{self, report, run_one, RunRequest};
 use barista::service::{Client, JobSpec, Scheduler, SchedulerConfig, Server, DEFAULT_ADDR};
 use barista::util::Json;
-use barista::workload::{network, Benchmark};
+use barista::workload::{load_network_file, network, Benchmark, SparsityModel};
 
 fn main() {
     let args = match Args::from_env() {
@@ -69,18 +69,26 @@ fn print_help() {
          USAGE: barista <command> [options]\n\
          \n\
          COMMANDS:\n\
-         \x20 simulate  --network <name> --arch <name> [--window-cap N] [--batch N] [--seed N]\n\
-         \x20 sweep     [--window-cap N] [--batch N] [--seed N] [--out FILE] [--workers N]\n\
-         \x20 report    --figure <fig7|fig8|fig9|all|comma,list> [--window-cap N] [--workers N]\n\
+         \x20 simulate  --network <name|file.json> --arch <name> [--window-cap N] [--batch N]\n\
+         \x20           [--seed N] [--sparsity MODEL]\n\
+         \x20 sweep     [--window-cap N] [--batch N] [--seed N] [--sparsity MODEL] [--out FILE]\n\
+         \x20           [--workers N]\n\
+         \x20 report    --figure <fig7|fig8|fig9|scenarios|all|comma,list> [--window-cap N]\n\
+         \x20           [--sparsity MODEL] [--workers N]\n\
          \x20 serve     [--addr HOST:PORT] [--workers N] [--shards N] [--queue-cap N] [--cache-mb N]\n\
-         \x20 submit    [--addr HOST:PORT] --network <name> [--arch <name>] [--window-cap N] [--json]\n\
-         \x20 batch     [--addr HOST:PORT] [--networks a,b|all] [--archs x,y|fig7] [--window-cap N]\n\
+         \x20 submit    [--addr HOST:PORT] --network <name|file.json> [--arch <name>]\n\
+         \x20           [--window-cap N] [--sparsity MODEL] [--json]\n\
+         \x20 batch     [--addr HOST:PORT] [--networks a,b|all] [--archs x,y|fig7]\n\
+         \x20           [--window-cap N] [--sparsity MODEL]\n\
          \x20 golden    [--artifacts DIR]\n\
-         \x20 info      [--network <name>]\n\
+         \x20 info      [--network <name|file.json>]\n\
          \n\
-         NETWORKS: alexnet resnet18 inception-v4 vggnet resnet50\n\
+         NETWORKS: alexnet resnet18 inception-v4 vggnet resnet50, or a JSON\n\
+         \x20         spec file (layer geometries + densities; see README)\n\
          ARCHS:    dense one-sided scnn sparten sparten-iso synchronous\n\
-         \x20         barista-no-opts barista unlimited-buffer ideal"
+         \x20         barista-no-opts barista unlimited-buffer ideal\n\
+         SPARSITY: bernoulli (default) clustered[:run] channel-skew[:pct]\n\
+         \x20         bank-balanced[:bank] layer-decay[:pct]"
     );
 }
 
@@ -98,13 +106,31 @@ fn parse_common(args: &Args, arch: ArchKind) -> Result<SimConfig, String> {
     cfg.window_cap = args.get_usize("window-cap", cfg.window_cap)?;
     cfg.batch = args.get_usize("batch", cfg.batch)?;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
+    if let Some(s) = args.get("sparsity") {
+        cfg.sparsity = SparsityModel::parse(s)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
+/// Resolve a `--network` value: a built-in (or already-registered
+/// custom) name, or a path to a JSON network spec file.
+fn resolve_network(name: &str) -> Result<Benchmark, String> {
+    if let Some(b) = Benchmark::parse(name) {
+        return Ok(b);
+    }
+    if name.ends_with(".json") || name.contains('/') || std::path::Path::new(name).exists()
+    {
+        return load_network_file(name);
+    }
+    Err(format!(
+        "unknown network '{name}' (built-ins: alexnet resnet18 inception-v4 vggnet \
+         resnet50; or pass a JSON spec file)"
+    ))
+}
+
 fn parse_benchmark(args: &Args) -> Result<Benchmark, String> {
-    let name = args.get_or("network", "alexnet");
-    Benchmark::parse(name).ok_or_else(|| format!("unknown network '{name}'"))
+    resolve_network(args.get_or("network", "alexnet"))
 }
 
 /// Scheduler sizing from the shared `--workers`/`--shards`/`--queue-cap`
@@ -131,7 +157,10 @@ fn scheduler_config(args: &Args) -> Result<SchedulerConfig, String> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
-    args.finish(&["network", "arch", "window-cap", "batch", "seed"], &["json"])?;
+    args.finish(
+        &["network", "arch", "window-cap", "batch", "seed", "sparsity"],
+        &["json"],
+    )?;
     let arch_name = args.get_or("arch", "barista");
     let arch = ArchKind::parse(arch_name).ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
     let cfg = parse_common(args, arch)?;
@@ -171,7 +200,10 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
-    args.finish(&["window-cap", "batch", "seed", "out", "workers"], &[])?;
+    args.finish(
+        &["window-cap", "batch", "seed", "sparsity", "out", "workers"],
+        &[],
+    )?;
     let base = parse_common(args, ArchKind::Barista)?;
     let sched = Scheduler::new(scheduler_config(args)?);
     let reqs = coordinator::sweep_requests(&Benchmark::ALL, &ArchKind::FIG7, &base);
@@ -186,6 +218,16 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The compact architecture set of the scenario comparison (`report
+/// --figure scenarios`): Dense as the baseline, the strongest prior
+/// two-sided design, BARISTA, and the Ideal bound.
+const SCENARIO_ARCHS: [ArchKind; 4] = [
+    ArchKind::Dense,
+    ArchKind::SparTen,
+    ArchKind::Barista,
+    ArchKind::Ideal,
+];
+
 fn cmd_report(args: &Args) -> Result<(), String> {
     args.finish(
         &[
@@ -193,6 +235,7 @@ fn cmd_report(args: &Args) -> Result<(), String> {
             "window-cap",
             "batch",
             "seed",
+            "sparsity",
             "workers",
             "shards",
             "queue-cap",
@@ -208,33 +251,70 @@ fn cmd_report(args: &Args) -> Result<(), String> {
         figure.split(',').map(str::trim).collect()
     };
     for fig in &figures {
-        if !matches!(*fig, "fig7" | "fig8" | "fig9") {
-            return Err(format!("unknown figure '{fig}' (expected fig7|fig8|fig9|all)"));
+        if !matches!(*fig, "fig7" | "fig8" | "fig9" | "scenarios") {
+            return Err(format!(
+                "unknown figure '{fig}' (expected fig7|fig8|fig9|scenarios|all)"
+            ));
         }
     }
-    // One cache-aware scheduler for the whole invocation: every figure
-    // needs the same benchmark × FIG7 sweep, so after the first figure
-    // the rest are pure cache hits (no simulation work).
+    // One cache-aware scheduler for the whole invocation: every classic
+    // figure needs the same benchmark × FIG7 sweep, so after the first
+    // figure the rest are pure cache hits (no simulation work); the
+    // scenario matrix shares its default-scenario jobs with them too.
     let sched = Scheduler::new(scheduler_config(args)?);
     let reqs = coordinator::sweep_requests(&Benchmark::ALL, &ArchKind::FIG7, &base);
     for fig in &figures {
         let before = sched.stats();
         let t0 = Instant::now();
-        let results = sched.run_results(&reqs).map_err(|e| e.to_string())?;
+        let (txt, csv, jobs) = if *fig == "scenarios" {
+            let mut rows = Vec::new();
+            let mut jobs = 0usize;
+            // The scenario axis: one representative per family, with
+            // `--sparsity` substituting the user's parameters for its
+            // family's default row (so the flag is honored, not
+            // silently ignored).
+            let mut axis = SparsityModel::ALL;
+            if let Some(slot) = axis
+                .iter_mut()
+                .find(|m| m.family() == base.sparsity.family())
+            {
+                *slot = base.sparsity;
+            }
+            for model in axis {
+                let mut scenario_base = base.clone();
+                scenario_base.sparsity = model;
+                let sreqs = coordinator::sweep_requests(
+                    &Benchmark::ALL,
+                    &SCENARIO_ARCHS,
+                    &scenario_base,
+                );
+                jobs += sreqs.len();
+                let results = sched.run_results(&sreqs).map_err(|e| e.to_string())?;
+                rows.push((model.spec(), results));
+            }
+            let (txt, csv) =
+                report::scenario_matrix(&rows, &Benchmark::ALL, &SCENARIO_ARCHS);
+            (txt, csv, jobs)
+        } else {
+            let results = sched.run_results(&reqs).map_err(|e| e.to_string())?;
+            let (txt, csv) = match *fig {
+                "fig7" => report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7),
+                "fig8" => {
+                    report::fig8_breakdown(&results, &Benchmark::ALL, &ArchKind::FIG7)
+                }
+                _ => report::fig9_energy(&results, &Benchmark::ALL, &FIG9_ARCHS),
+            };
+            (txt, csv, reqs.len())
+        };
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         let after = sched.stats();
-        let (txt, csv) = match *fig {
-            "fig7" => report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7),
-            "fig8" => report::fig8_breakdown(&results, &Benchmark::ALL, &ArchKind::FIG7),
-            _ => report::fig9_energy(&results, &Benchmark::ALL, &FIG9_ARCHS),
-        };
         println!("{txt}");
         let path = report::write_out(&format!("{fig}.csv"), &csv)
             .map_err(|e| format!("write out/{fig}.csv: {e}"))?;
         println!("wrote {}", path.display());
         println!(
             "[{fig}] {} jobs: {} simulated, {} cache hits, {} deduped — {:.0} ms wall",
-            reqs.len(),
+            jobs,
             after.executed - before.executed,
             after.cache_hits - before.cache_hits,
             after.deduped - before.deduped,
@@ -296,7 +376,9 @@ fn print_job_line(label: &str, body: &Json) {
 
 fn cmd_submit(args: &Args) -> Result<(), String> {
     args.finish(
-        &["addr", "network", "arch", "window-cap", "batch", "seed"],
+        &[
+            "addr", "network", "arch", "window-cap", "batch", "seed", "sparsity",
+        ],
         &["json"],
     )?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
@@ -320,10 +402,7 @@ fn parse_network_list(s: &str) -> Result<Vec<Benchmark>, String> {
     if s == "all" {
         return Ok(Benchmark::ALL.to_vec());
     }
-    s.split(',')
-        .map(str::trim)
-        .map(|n| Benchmark::parse(n).ok_or_else(|| format!("unknown network '{n}'")))
-        .collect()
+    s.split(',').map(str::trim).map(resolve_network).collect()
 }
 
 fn parse_arch_list(s: &str) -> Result<Vec<ArchKind>, String> {
@@ -340,7 +419,9 @@ fn parse_arch_list(s: &str) -> Result<Vec<ArchKind>, String> {
 
 fn cmd_batch(args: &Args) -> Result<(), String> {
     args.finish(
-        &["addr", "networks", "archs", "window-cap", "batch", "seed"],
+        &[
+            "addr", "networks", "archs", "window-cap", "batch", "seed", "sparsity",
+        ],
         &["json"],
     )?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
@@ -398,7 +479,7 @@ fn cmd_golden(args: &Args) -> Result<(), String> {
 fn cmd_info(args: &Args) -> Result<(), String> {
     args.finish(&["network"], &[])?;
     if let Some(name) = args.get("network") {
-        let b = Benchmark::parse(name).ok_or_else(|| format!("unknown network '{name}'"))?;
+        let b = resolve_network(name)?;
         let spec = network(b);
         println!(
             "{}: {} conv layers, filter density {:.3}, map density {:.3} (Table 1)",
@@ -439,6 +520,10 @@ fn cmd_info(args: &Args) -> Result<(), String> {
                 c.cache_banks,
                 c.cache_bytes >> 20
             );
+        }
+        println!("\nsparsity scenarios (--sparsity, DESIGN.md §Workloads):");
+        for m in SparsityModel::ALL {
+            println!("  {}", m.spec());
         }
     }
     Ok(())

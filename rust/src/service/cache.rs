@@ -39,11 +39,16 @@ impl JobKey {
 /// [`crate::SIM_VERSION`] is folded in so results computed by an older
 /// simulator can never be served for a semantically newer one — any
 /// semantics-changing release bumps the version and thereby every key.
+/// The network travels as its cache token: the plain name for
+/// built-ins (keys unchanged from earlier releases), name + spec
+/// content hash for custom networks (so same-named customs with
+/// different geometry can never alias); the sparsity scenario rides
+/// inside the config's canonical JSON.
 pub fn canonical_job_string(req: &RunRequest) -> String {
     format!(
         "sim-v{}|{}|{}",
         crate::SIM_VERSION,
-        req.benchmark.name(),
+        req.benchmark.cache_token(),
         req.config.canonical_json().to_string()
     )
 }

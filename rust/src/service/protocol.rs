@@ -44,7 +44,10 @@ impl JobSpec {
     }
 
     /// Wire form: `network` + `arch` + full `config` overrides (the
-    /// round-trip through [`Self::from_json`] is lossless).
+    /// round-trip through [`Self::from_json`] is lossless). Custom
+    /// networks additionally embed their full spec as `network_spec`,
+    /// so a remote server can resolve the job with no prior
+    /// registration.
     pub fn to_json(&self) -> Json {
         let mut cfg = self.config.canonical_json();
         if let Json::Obj(m) = &mut cfg {
@@ -56,22 +59,42 @@ impl JobSpec {
         j.set("network", self.benchmark.name())
             .set("arch", self.config.arch.name())
             .set("config", cfg);
+        if let Some(spec) = crate::workload::networks::custom_canonical_json(self.benchmark) {
+            j.set("network_spec", spec);
+        }
         j
     }
 
     pub fn from_json(j: &Json) -> Result<JobSpec, String> {
         let obj = j.as_obj().ok_or("job must be an object")?;
         for k in obj.keys() {
-            if !matches!(k.as_str(), "network" | "arch" | "config") {
+            if !matches!(k.as_str(), "network" | "arch" | "config" | "network_spec") {
                 return Err(format!("unknown job key '{k}'"));
             }
         }
-        let network = j
-            .get("network")
-            .and_then(Json::as_str)
-            .ok_or("job missing 'network'")?;
-        let benchmark =
-            Benchmark::parse(network).ok_or_else(|| format!("unknown network '{network}'"))?;
+        let benchmark = if let Some(spec) = j.get("network_spec") {
+            // Validate the name match *before* registering: the
+            // registry is append-only, so a rejected request must not
+            // consume a slot or squat the name.
+            if let (Some(n), Some(sn)) = (
+                j.get("network").and_then(Json::as_str),
+                spec.get("name").and_then(Json::as_str),
+            ) {
+                if n != sn {
+                    return Err(format!(
+                        "'network' = '{n}' does not match network_spec name '{sn}'"
+                    ));
+                }
+            }
+            crate::workload::register_custom_network(spec)?
+        } else {
+            let network = j
+                .get("network")
+                .and_then(Json::as_str)
+                .ok_or("job missing 'network'")?;
+            Benchmark::parse(network)
+                .ok_or_else(|| format!("unknown network '{network}'"))?
+        };
         let arch_name = j.get("arch").and_then(Json::as_str).unwrap_or("barista");
         let arch =
             ArchKind::parse(arch_name).ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
@@ -262,6 +285,69 @@ mod tests {
         )
         .unwrap_err();
         assert!(e.contains("grid"), "{e}");
+    }
+
+    #[test]
+    fn custom_network_and_sparsity_roundtrip_the_wire() {
+        // A job on a custom network with a non-default scenario must
+        // survive serialize → parse with its cache key intact.
+        let mut layer = Json::obj();
+        layer
+            .set("h", 10u64)
+            .set("w", 10u64)
+            .set("d", 64u64)
+            .set("k", 3u64)
+            .set("n", 32u64)
+            .set("stride", 1u64)
+            .set("pad", 1u64);
+        let mut netj = Json::obj();
+        netj.set("name", "wire-net")
+            .set("filter_density", 0.4)
+            .set("map_density", 0.5)
+            .set("layers", Json::Arr(vec![layer]));
+        let benchmark = crate::workload::register_custom_network(&netj).unwrap();
+        let mut config = SimConfig::paper(ArchKind::Barista);
+        config.window_cap = 16;
+        config.sparsity = crate::workload::SparsityModel::Clustered { run: 8 };
+        let spec = JobSpec { benchmark, config };
+        let line = Request::Submit(spec.clone()).to_json().to_string();
+        assert!(line.contains("network_spec"), "{line}");
+        match Request::parse_line(&line).unwrap() {
+            Request::Submit(back) => {
+                assert_eq!(back.benchmark, spec.benchmark);
+                assert_eq!(back.benchmark.cache_token(), spec.benchmark.cache_token());
+                assert_eq!(back.config.sparsity, spec.config.sparsity);
+                assert_eq!(
+                    back.config.canonical_json().to_string(),
+                    spec.config.canonical_json().to_string()
+                );
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn network_spec_name_mismatch_rejected() {
+        let mut layer = Json::obj();
+        layer
+            .set("h", 8u64)
+            .set("w", 8u64)
+            .set("d", 64u64)
+            .set("k", 1u64)
+            .set("n", 16u64)
+            .set("stride", 1u64)
+            .set("pad", 0u64);
+        let mut netj = Json::obj();
+        netj.set("name", "wire-mismatch")
+            .set("filter_density", 0.4)
+            .set("map_density", 0.5)
+            .set("layers", Json::Arr(vec![layer]));
+        let mut job = Json::obj();
+        job.set("network", "alexnet").set("network_spec", netj);
+        let mut req = Json::obj();
+        req.set("op", "submit").set("job", job);
+        let e = Request::parse_line(&req.to_string()).unwrap_err();
+        assert!(e.contains("does not match"), "{e}");
     }
 
     #[test]

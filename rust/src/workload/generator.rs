@@ -10,6 +10,10 @@
 //!   capped (`SimConfig::window_cap`) and results are scaled by
 //!   `scale()`; window statistics are stationary so sampling preserves
 //!   comparative timing (DESIGN.md §Substitutions-4).
+//!
+//! *How* the non-zeros are distributed is delegated to the config's
+//! [`SparsityModel`] (DESIGN.md §Workloads); the default model draws
+//! bit-identically to the pre-scenario generator.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -19,6 +23,7 @@ use crate::config::SimConfig;
 use crate::tensor::{LayerGeom, MaskMatrix, SUBCHUNKS};
 use crate::util::rng::Pcg32;
 use crate::workload::networks::{network, Benchmark, NetworkSpec};
+use crate::workload::sparsity::SparsityModel;
 
 /// Largest pass table worth retaining per (layer, parts) — paper-sized
 /// workloads sit at a few MB; only uncapped (`window_cap: 0`) runs
@@ -148,8 +153,28 @@ impl NetworkWork {
     /// inject *measured* densities).
     pub fn from_spec(spec: NetworkSpec, cfg: &SimConfig) -> NetworkWork {
         let densities = spec.layer_densities();
-        let mut layers = Vec::with_capacity(spec.layers.len());
+        let nlayers = spec.layers.len();
+        let mut layers = Vec::with_capacity(nlayers);
         for (i, (geom, (fd, md))) in spec.layers.iter().zip(densities).enumerate() {
+            // Layer-decay *replaces* the derived depth profile: the
+            // geometric shape applies to the network averages, so the
+            // network mean is preserved (multiplying the default
+            // profile instead would compound two decaying sequences and
+            // inflate it). Densities the user pinned per layer always
+            // win — reshaping them would simulate a network the user
+            // never defined. Every other model is the identity, keeping
+            // the default path bit-identical.
+            let (fd, md) = match cfg.sparsity {
+                SparsityModel::LayerDecay { .. } if spec.per_layer.is_none() => {
+                    cfg.sparsity.depth_profile(
+                        spec.filter_density,
+                        spec.map_density,
+                        i,
+                        nlayers,
+                    )
+                }
+                _ => (fd, md),
+            };
             layers.push(Self::layer(i, geom, fd, md, cfg));
         }
         NetworkWork {
@@ -178,20 +203,12 @@ impl NetworkWork {
         } else {
             total_windows.min(cfg.window_cap)
         };
-        let filters = MaskMatrix::random(
-            &mut frng,
-            geom.n,
-            geom.vec_len(),
-            filter_density,
-            FILTER_JITTER,
-        );
-        let windows = MaskMatrix::random(
-            &mut wrng,
-            sampled,
-            geom.vec_len(),
-            map_density,
-            WINDOW_JITTER,
-        );
+        let filters =
+            cfg.sparsity
+                .filter_masks(&mut frng, geom.n, geom.vec_len(), filter_density);
+        let windows =
+            cfg.sparsity
+                .window_masks(&mut wrng, sampled, geom.vec_len(), map_density);
         LayerWork {
             index,
             geom: *geom,
@@ -210,18 +227,19 @@ impl NetworkWork {
     }
 
     /// Memoized [`generate`](Self::generate): identical `(benchmark,
-    /// seed, window_cap, batch)` requests share one generated workload
-    /// — and hence one set of pass tables — across the whole process,
-    /// so an 8-architecture sweep synthesizes masks once instead of 8
-    /// times (§Perf). Those four fields are the only `SimConfig` inputs
-    /// generation reads, which the `memo_key_covers_generation` test
-    /// pins down.
+    /// seed, window_cap, batch, sparsity)` requests share one generated
+    /// workload — and hence one set of pass tables — across the whole
+    /// process, so an 8-architecture sweep synthesizes masks once
+    /// instead of 8 times (§Perf). Those five fields are the only
+    /// `SimConfig` inputs generation reads, which the
+    /// `memo_key_covers_generation` test pins down.
     pub fn shared(benchmark: Benchmark, cfg: &SimConfig) -> Arc<NetworkWork> {
         let key = WorkKey {
             benchmark,
             seed: cfg.seed,
             window_cap: cfg.window_cap,
             batch: cfg.batch,
+            sparsity: cfg.sparsity,
         };
         let slot = {
             let memo = WORK_MEMO.get_or_init(|| {
@@ -270,6 +288,7 @@ struct WorkKey {
     seed: u64,
     window_cap: usize,
     batch: usize,
+    sparsity: SparsityModel,
 }
 
 /// At most this many distinct workloads stay memoized (LRU beyond it).
@@ -427,6 +446,69 @@ mod tests {
         let clone = l.clone();
         let t3 = clone.pass_table(4).unwrap();
         assert!(Arc::ptr_eq(&t1, &t3));
+    }
+
+    /// Scenarios are part of the memo key: differing sparsity models
+    /// never share a workload, and every non-default model actually
+    /// changes the masks.
+    #[test]
+    fn sparsity_model_changes_workload_and_memo_key() {
+        let base = small_cfg();
+        let a = NetworkWork::shared(Benchmark::AlexNet, &base);
+        for model in SparsityModel::ALL {
+            if model == SparsityModel::Bernoulli {
+                continue;
+            }
+            let mut cfg = small_cfg();
+            cfg.sparsity = model;
+            let b = NetworkWork::shared(Benchmark::AlexNet, &cfg);
+            assert!(
+                !Arc::ptr_eq(&a, &b),
+                "{model}: scenario must not share the default workload"
+            );
+            let differs = a.layers.iter().zip(&b.layers).any(|(x, y)| {
+                x.matched_macs_sampled() != y.matched_macs_sampled()
+                    || x.filter_density != y.filter_density
+            });
+            assert!(differs, "{model}: scenario left the workload unchanged");
+        }
+    }
+
+    /// The default scenario draws exactly the seed generator's masks —
+    /// the bit-identical guarantee the PR-2 goldens rely on.
+    #[test]
+    fn default_scenario_is_bit_identical_to_direct_draws() {
+        let cfg = small_cfg();
+        assert_eq!(cfg.sparsity, SparsityModel::Bernoulli);
+        let w = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        for (i, l) in w.layers.iter().enumerate() {
+            let mut frng = Pcg32::new(cfg.seed ^ 0xF11F, (i as u64) * 2 + 1);
+            let mut wrng = Pcg32::new(cfg.seed ^ 0x3A95, (i as u64) * 2 + 2);
+            let filters = MaskMatrix::random(
+                &mut frng,
+                l.geom.n,
+                l.geom.vec_len(),
+                l.filter_density,
+                FILTER_JITTER,
+            );
+            let windows = MaskMatrix::random(
+                &mut wrng,
+                l.windows.rows,
+                l.geom.vec_len(),
+                l.map_density,
+                WINDOW_JITTER,
+            );
+            for r in 0..filters.rows {
+                for c in 0..filters.chunks {
+                    assert_eq!(l.filters.get(r, c), filters.get(r, c), "layer {i}");
+                }
+            }
+            for r in 0..windows.rows {
+                for c in 0..windows.chunks {
+                    assert_eq!(l.windows.get(r, c), windows.get(r, c), "layer {i}");
+                }
+            }
+        }
     }
 
     #[test]

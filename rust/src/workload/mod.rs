@@ -1,16 +1,22 @@
-//! CNN benchmark workloads (paper Table 1).
+//! CNN benchmark workloads (paper Table 1) and the scenario engine.
 //!
 //! [`networks`] holds the conv-layer tables of the five benchmarks with
-//! the paper's measured network-average filter / input-map densities.
+//! the paper's measured network-average filter / input-map densities,
+//! plus the registry for user-defined networks loaded from JSON.
 //! [`generator`] synthesizes the chunked bitmask tensors the simulator
 //! consumes (see DESIGN.md §Substitutions for why masks at matched
-//! densities preserve the paper's behaviour). [`balance`] implements the
-//! GB-S inter-filter load-balancing variant (§3.3.3).
+//! densities preserve the paper's behaviour); [`sparsity`] decides how
+//! the non-zeros are *distributed* (DESIGN.md §Workloads). [`balance`]
+//! implements the GB-S inter-filter load-balancing variant (§3.3.3).
 
 pub mod balance;
 pub mod generator;
 pub mod networks;
+pub mod sparsity;
 
 pub use balance::{alternating_assignment, gb_s_order};
 pub use generator::{LayerWork, NetworkWork};
-pub use networks::{network, Benchmark, NetworkSpec};
+pub use networks::{
+    load_network_file, network, register_custom_network, Benchmark, NetworkSpec,
+};
+pub use sparsity::SparsityModel;

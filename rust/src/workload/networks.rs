@@ -1,16 +1,28 @@
-//! Conv-layer tables for the paper's five benchmarks (Table 1).
+//! Conv-layer tables for the paper's five benchmarks (Table 1), plus
+//! user-defined custom networks loaded from JSON.
 //!
-//! Layer geometries are the standard published architectures; densities
-//! are the paper's network averages (filter density from magnitude
-//! pruning + retraining [23], input-map density from ReLU statistics),
-//! with deterministic per-layer modulation: early layers are denser,
-//! deep layers sparser — the universally observed profile (e.g. SparTen
-//! Fig. 12, Cnvlutin Table 1) — normalized so the *network average*
-//! matches Table 1 exactly.
+//! Built-in layer geometries are the standard published architectures;
+//! densities are the paper's network averages (filter density from
+//! magnitude pruning + retraining [23], input-map density from ReLU
+//! statistics), with deterministic per-layer modulation: early layers
+//! are denser, deep layers sparser — the universally observed profile
+//! (e.g. SparTen Fig. 12, Cnvlutin Table 1) — normalized so the
+//! *network average* matches Table 1 exactly.
+//!
+//! Custom networks ([`register_custom_network`], [`load_network_file`])
+//! live in a process-wide registry and are addressed by a
+//! [`Benchmark::Custom`] handle, so the whole stack — generator memo,
+//! coordinator, service cache — treats them exactly like built-ins.
+//! The service cache key folds the spec's content hash in (see
+//! [`Benchmark::cache_token`]) so two customs sharing a name can never
+//! alias a cached result.
+
+use std::sync::{OnceLock, RwLock};
 
 use crate::tensor::LayerGeom;
+use crate::util::Json;
 
-/// The five benchmarks of Table 1.
+/// The five benchmarks of Table 1, plus registered custom networks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Benchmark {
     AlexNet,
@@ -18,6 +30,9 @@ pub enum Benchmark {
     InceptionV4,
     VggNet,
     ResNet50,
+    /// A user-defined network: index into the process-wide registry
+    /// (see [`register_custom_network`]).
+    Custom(u16),
 }
 
 impl Benchmark {
@@ -37,11 +52,36 @@ impl Benchmark {
             Benchmark::InceptionV4 => "inception-v4",
             Benchmark::VggNet => "vggnet",
             Benchmark::ResNet50 => "resnet50",
+            Benchmark::Custom(i) => custom_name(*i),
         }
     }
 
+    /// Resolve a name: the built-ins first, then any custom network
+    /// registered in this process.
     pub fn parse(s: &str) -> Option<Benchmark> {
-        Self::ALL.iter().copied().find(|b| b.name() == s)
+        if let Some(b) = Self::ALL.iter().copied().find(|b| b.name() == s) {
+            return Some(b);
+        }
+        let reg = registry().read().unwrap();
+        reg.iter()
+            .position(|c| c.name == s)
+            .map(|i| Benchmark::Custom(i as u16))
+    }
+
+    /// The string the service cache key hashes for this network. For
+    /// built-ins it is the plain name (keys are unchanged from earlier
+    /// releases); for customs it folds in the spec's content hash, so
+    /// two different specs can never alias — even across processes that
+    /// registered different networks under the same name.
+    pub fn cache_token(&self) -> String {
+        match self {
+            Benchmark::Custom(i) => {
+                let reg = registry().read().unwrap();
+                let c = &reg[*i as usize];
+                format!("custom:{}:{:016x}", c.name, c.spec_hash)
+            }
+            _ => self.name().to_string(),
+        }
     }
 }
 
@@ -60,15 +100,23 @@ pub struct NetworkSpec {
     pub filter_density: f64,
     /// Network-average input-map density (Table 1).
     pub map_density: f64,
+    /// Explicit per-layer `(filter, map)` densities. `None` derives the
+    /// standard depth profile from the network averages; custom
+    /// networks may pin every layer instead.
+    pub per_layer: Option<Vec<(f64, f64)>>,
 }
 
 impl NetworkSpec {
-    /// Per-layer (filter, map) densities: a deterministic depth profile
-    /// normalized so averages match Table 1. Input maps of layer 0 are
-    /// raw images (density ≈ 1.0 conceptually, but the paper reports the
-    /// network average including layer 0 — we use the same profile for
+    /// Per-layer (filter, map) densities: the spec's explicit table if
+    /// it has one, otherwise a deterministic depth profile normalized
+    /// so averages match Table 1. Input maps of layer 0 are raw images
+    /// (density ≈ 1.0 conceptually, but the paper reports the network
+    /// average including layer 0 — we use the same profile for
     /// simplicity and normalize across all layers).
     pub fn layer_densities(&self) -> Vec<(f64, f64)> {
+        if let Some(pl) = &self.per_layer {
+            return pl.clone();
+        }
         profile(self.layers.len(), self.filter_density, self.map_density)
     }
 
@@ -131,6 +179,7 @@ pub fn network(b: Benchmark) -> NetworkSpec {
             ],
             filter_density: 0.368,
             map_density: 0.473,
+            per_layer: None,
         },
         Benchmark::VggNet => NetworkSpec {
             benchmark: b,
@@ -152,6 +201,7 @@ pub fn network(b: Benchmark) -> NetworkSpec {
             ],
             filter_density: 0.334,
             map_density: 0.446,
+            per_layer: None,
         },
         Benchmark::ResNet18 => NetworkSpec {
             benchmark: b,
@@ -182,6 +232,7 @@ pub fn network(b: Benchmark) -> NetworkSpec {
             },
             filter_density: 0.336,
             map_density: 0.486,
+            per_layer: None,
         },
         Benchmark::ResNet50 => NetworkSpec {
             benchmark: b,
@@ -216,6 +267,7 @@ pub fn network(b: Benchmark) -> NetworkSpec {
             },
             filter_density: 0.421,
             map_density: 0.384,
+            per_layer: None,
         },
         Benchmark::InceptionV4 => NetworkSpec {
             benchmark: b,
@@ -243,8 +295,255 @@ pub fn network(b: Benchmark) -> NetworkSpec {
             },
             filter_density: 0.570,
             map_density: 0.317,
+            per_layer: None,
         },
+        Benchmark::Custom(i) => custom_spec(i),
     }
+}
+
+// ---- custom network registry -------------------------------------------
+
+/// One registered user-defined network. Names are leaked to `'static`
+/// so `Benchmark::name` keeps its zero-cost signature; the registry is
+/// tiny (capped) and lives for the process lifetime anyway.
+struct CustomNet {
+    name: &'static str,
+    /// FNV-1a hash of the canonical spec JSON (cache-key component).
+    spec_hash: u64,
+    layers: Vec<LayerGeom>,
+    filter_density: f64,
+    map_density: f64,
+    per_layer: Option<Vec<(f64, f64)>>,
+    canonical: Json,
+}
+
+/// Hard cap on registered customs — a typo'd client loop must not leak
+/// unbounded names in a long-lived server. Known limitation: the
+/// registry is process-wide and append-only, so on an (unauthenticated)
+/// shared server a client can fill it or claim a name first; content
+/// hashing in the cache key guarantees a squatted name can never serve
+/// wrong *results*, only an explicit registration error.
+const CUSTOM_CAP: usize = 1024;
+
+fn registry() -> &'static RwLock<Vec<CustomNet>> {
+    static REGISTRY: OnceLock<RwLock<Vec<CustomNet>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+fn custom_name(i: u16) -> &'static str {
+    registry().read().unwrap()[i as usize].name
+}
+
+fn custom_spec(i: u16) -> NetworkSpec {
+    let reg = registry().read().unwrap();
+    let c = &reg[i as usize];
+    NetworkSpec {
+        benchmark: Benchmark::Custom(i),
+        layers: c.layers.clone(),
+        filter_density: c.filter_density,
+        map_density: c.map_density,
+        per_layer: c.per_layer.clone(),
+    }
+}
+
+/// The canonical JSON a custom network serializes to on the wire
+/// (`JobSpec::to_json` embeds it so a remote server can resolve the
+/// job without prior registration). `None` for built-ins.
+pub fn custom_canonical_json(b: Benchmark) -> Option<Json> {
+    match b {
+        Benchmark::Custom(i) => {
+            Some(registry().read().unwrap()[i as usize].canonical.clone())
+        }
+        _ => None,
+    }
+}
+
+fn geom_field(obj: &Json, key: &str) -> Result<usize, String> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("layer field '{key}' expects a non-negative integer"))
+}
+
+fn density_field(obj: &Json, key: &str) -> Result<Option<f64>, String> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| format!("'{key}' expects a number"))?;
+            if !(0.0..=1.0).contains(&x) {
+                return Err(format!("'{key}' = {x} outside [0, 1]"));
+            }
+            Ok(Some(x))
+        }
+    }
+}
+
+/// Register a user-defined network from its JSON spec:
+///
+/// ```json
+/// {"name": "tiny",
+///  "filter_density": 0.4, "map_density": 0.5,
+///  "layers": [
+///    {"h":14,"w":14,"d":128,"k":3,"n":128,"stride":1,"pad":1}
+///  ]}
+/// ```
+///
+/// Per-layer `filter_density`/`map_density` keys may appear on *every*
+/// layer instead of the network-average pair (all-or-nothing, so a
+/// half-specified profile cannot silently mix with the default one).
+/// Unknown keys are errors — the same silent-typo guard as the rest of
+/// the stack. Registering the identical spec again returns the same
+/// handle; reusing a name for a *different* spec is an error.
+pub fn register_custom_network(j: &Json) -> Result<Benchmark, String> {
+    let obj = j.as_obj().ok_or("network spec must be a JSON object")?;
+    for k in obj.keys() {
+        if !matches!(
+            k.as_str(),
+            "name" | "layers" | "filter_density" | "map_density"
+        ) {
+            return Err(format!("unknown network spec key '{k}'"));
+        }
+    }
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("network spec missing 'name'")?;
+    if name.is_empty() || name.chars().any(|c| c.is_whitespace()) {
+        return Err(format!("invalid network name '{name}'"));
+    }
+    if Benchmark::ALL.iter().any(|b| b.name() == name) {
+        return Err(format!("'{name}' is a built-in network name"));
+    }
+    let layers_json = j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or("network spec missing 'layers' array")?;
+    if layers_json.is_empty() {
+        return Err("network spec has no layers".into());
+    }
+
+    let mut layers = Vec::with_capacity(layers_json.len());
+    let mut per_layer: Vec<(f64, f64)> = Vec::new();
+    let mut with_density = 0usize;
+    for (i, lj) in layers_json.iter().enumerate() {
+        let lobj = lj
+            .as_obj()
+            .ok_or_else(|| format!("layer {i} must be an object"))?;
+        for k in lobj.keys() {
+            if !matches!(
+                k.as_str(),
+                "h" | "w" | "d" | "k" | "n" | "stride" | "pad"
+                    | "filter_density" | "map_density"
+            ) {
+                return Err(format!("layer {i}: unknown key '{k}'"));
+            }
+        }
+        let g = LayerGeom {
+            h: geom_field(lj, "h")?,
+            w: geom_field(lj, "w")?,
+            d: geom_field(lj, "d")?,
+            k: geom_field(lj, "k")?,
+            n: geom_field(lj, "n")?,
+            stride: geom_field(lj, "stride")?,
+            pad: geom_field(lj, "pad")?,
+        };
+        if g.h == 0 || g.w == 0 || g.d == 0 || g.k == 0 || g.n == 0 || g.stride == 0 {
+            return Err(format!("layer {i}: zero-sized dimension in {g:?}"));
+        }
+        if g.h + 2 * g.pad < g.k || g.w + 2 * g.pad < g.k {
+            return Err(format!("layer {i}: kernel {} exceeds padded input", g.k));
+        }
+        let fd = density_field(lj, "filter_density")?;
+        let md = density_field(lj, "map_density")?;
+        match (fd, md) {
+            (Some(f), Some(m)) => {
+                with_density += 1;
+                per_layer.push((f, m));
+            }
+            (None, None) => {}
+            _ => {
+                return Err(format!(
+                    "layer {i}: specify both filter_density and map_density or neither"
+                ))
+            }
+        }
+        layers.push(g);
+    }
+    let per_layer = if with_density == layers.len() {
+        Some(per_layer)
+    } else if with_density == 0 {
+        None
+    } else {
+        return Err(format!(
+            "{with_density} of {} layers carry densities — per-layer densities are \
+             all-or-nothing",
+            layers.len()
+        ));
+    };
+
+    let net_fd = density_field(j, "filter_density")?;
+    let net_md = density_field(j, "map_density")?;
+    let (filter_density, map_density) = match &per_layer {
+        Some(pl) => {
+            if net_fd.is_some() || net_md.is_some() {
+                return Err(
+                    "specify either per-layer densities or network averages, not both"
+                        .into(),
+                );
+            }
+            let n = pl.len() as f64;
+            (
+                pl.iter().map(|x| x.0).sum::<f64>() / n,
+                pl.iter().map(|x| x.1).sum::<f64>() / n,
+            )
+        }
+        None => (
+            net_fd.ok_or("network spec missing 'filter_density'")?,
+            net_md.ok_or("network spec missing 'map_density'")?,
+        ),
+    };
+
+    // Canonical form + content hash (the cache-key component). The
+    // input object already passed the unknown-key guard, and Json
+    // objects are BTreeMaps, so its compact serialization is canonical.
+    let canonical = j.clone();
+    let spec_hash = crate::util::fnv1a64(
+        canonical.to_string().as_bytes(),
+        crate::util::FNV_OFFSET_BASIS,
+    );
+
+    let mut reg = registry().write().unwrap();
+    if let Some(i) = reg.iter().position(|c| c.name == name) {
+        return if reg[i].spec_hash == spec_hash {
+            Ok(Benchmark::Custom(i as u16))
+        } else {
+            Err(format!(
+                "network '{name}' is already registered with different contents"
+            ))
+        };
+    }
+    if reg.len() >= CUSTOM_CAP {
+        return Err(format!("custom network registry full ({CUSTOM_CAP})"));
+    }
+    reg.push(CustomNet {
+        name: Box::leak(name.to_string().into_boxed_str()),
+        spec_hash,
+        layers,
+        filter_density,
+        map_density,
+        per_layer,
+        canonical,
+    });
+    Ok(Benchmark::Custom((reg.len() - 1) as u16))
+}
+
+/// Load and register a custom network from a JSON file (the CLI's
+/// `--network <file>` path).
+pub fn load_network_file(path: &str) -> Result<Benchmark, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    register_custom_network(&j).map_err(|e| format!("{path}: {e}"))
 }
 
 #[cfg(test)]
@@ -349,5 +648,120 @@ mod tests {
         for b in Benchmark::ALL {
             assert_eq!(Benchmark::parse(b.name()), Some(b));
         }
+    }
+
+    // ---- custom networks (names are unique per test: the registry is
+    // process-wide and tests share one process) ----
+
+    fn custom_json(name: &str, per_layer: bool) -> Json {
+        let mut layer = Json::obj();
+        layer
+            .set("h", 14u64)
+            .set("w", 14u64)
+            .set("d", 128u64)
+            .set("k", 3u64)
+            .set("n", 64u64)
+            .set("stride", 1u64)
+            .set("pad", 1u64);
+        if per_layer {
+            layer.set("filter_density", 0.4).set("map_density", 0.5);
+        }
+        let mut j = Json::obj();
+        j.set("name", name)
+            .set("layers", Json::Arr(vec![layer]));
+        if !per_layer {
+            j.set("filter_density", 0.3).set("map_density", 0.6);
+        }
+        j
+    }
+
+    #[test]
+    fn custom_network_registers_and_resolves() {
+        let b = register_custom_network(&custom_json("t-basic", false)).unwrap();
+        assert_eq!(b.name(), "t-basic");
+        assert_eq!(Benchmark::parse("t-basic"), Some(b));
+        let spec = network(b);
+        assert_eq!(spec.layers.len(), 1);
+        assert_eq!(spec.layers[0].n, 64);
+        assert!((spec.filter_density - 0.3).abs() < 1e-12);
+        // Average-density customs use the standard depth profile.
+        assert!(spec.per_layer.is_none());
+        assert_eq!(spec.layer_densities().len(), 1);
+    }
+
+    #[test]
+    fn custom_per_layer_densities_are_exact() {
+        let b = register_custom_network(&custom_json("t-perlayer", true)).unwrap();
+        let spec = network(b);
+        assert_eq!(spec.layer_densities(), vec![(0.4, 0.5)]);
+        assert!((spec.filter_density - 0.4).abs() < 1e-12);
+        assert!((spec.map_density - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn custom_registration_dedups_and_guards_name_conflicts() {
+        let a = register_custom_network(&custom_json("t-dedup", false)).unwrap();
+        let b = register_custom_network(&custom_json("t-dedup", false)).unwrap();
+        assert_eq!(a, b, "identical spec re-registration shares one handle");
+        // Same name, different contents: rejected.
+        let conflict = register_custom_network(&custom_json("t-dedup", true));
+        assert!(conflict.is_err(), "{conflict:?}");
+    }
+
+    #[test]
+    fn custom_cache_tokens_distinguish_contents() {
+        let a = register_custom_network(&custom_json("t-tok-a", false)).unwrap();
+        let b = register_custom_network(&custom_json("t-tok-b", true)).unwrap();
+        assert_ne!(a.cache_token(), b.cache_token());
+        assert!(a.cache_token().starts_with("custom:t-tok-a:"));
+        // Built-ins keep their bare names (cache keys unchanged).
+        assert_eq!(Benchmark::AlexNet.cache_token(), "alexnet");
+    }
+
+    #[test]
+    fn custom_spec_validation_rejects_bad_input() {
+        // Built-in name collision.
+        let mut j = custom_json("alexnet", false);
+        assert!(register_custom_network(&j).is_err());
+        // Unknown top-level key.
+        j = custom_json("t-bad1", false);
+        j.set("layerz", 1u64);
+        assert!(register_custom_network(&j).unwrap_err().contains("layerz"));
+        // Unknown layer key.
+        let mut layer = Json::obj();
+        layer
+            .set("h", 8u64)
+            .set("w", 8u64)
+            .set("d", 16u64)
+            .set("k", 3u64)
+            .set("n", 8u64)
+            .set("stride", 1u64)
+            .set("padd", 1u64);
+        let mut j2 = Json::obj();
+        j2.set("name", "t-bad2")
+            .set("filter_density", 0.5)
+            .set("map_density", 0.5)
+            .set("layers", Json::Arr(vec![layer]));
+        assert!(register_custom_network(&j2).unwrap_err().contains("padd"));
+        // Missing densities entirely.
+        let mut j3 = custom_json("t-bad3", false);
+        if let Json::Obj(m) = &mut j3 {
+            m.remove("filter_density");
+        }
+        assert!(register_custom_network(&j3).is_err());
+        // Density out of range.
+        let mut j4 = custom_json("t-bad4", false);
+        j4.set("map_density", 1.5);
+        assert!(register_custom_network(&j4).is_err());
+    }
+
+    #[test]
+    fn load_network_file_roundtrip() {
+        let path = std::env::temp_dir().join("barista_t_load_net.json");
+        std::fs::write(&path, custom_json("t-fromfile", true).to_string()).unwrap();
+        let b = load_network_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(b.name(), "t-fromfile");
+        assert!(load_network_file("/no/such/file.json").is_err());
+        let _ = std::fs::remove_file(&path);
     }
 }

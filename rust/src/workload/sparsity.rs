@@ -1,0 +1,521 @@
+//! Pluggable sparsity-distribution models (scenario engine).
+//!
+//! BARISTA's mechanisms each absorb a different *shape* of sparsity
+//! imbalance — telescoping and coloring absorb bursty feature-map
+//! sparsity, snarfing absorbs shared filter fetches, GB-S absorbs
+//! inter-filter density spread (paper §3.2–§3.3) — so how zeros are
+//! *distributed* matters as much as how many there are. The seed
+//! generator emitted exactly one scenario: independent jittered
+//! Bernoulli masks. This module turns that into a pluggable
+//! [`SparsityModel`]:
+//!
+//! * [`SparsityModel::Bernoulli`] — the default, **bit-identical** to
+//!   the pre-scenario generator (same RNG streams, same draws);
+//! * [`SparsityModel::Clustered`] — spatially clustered / bursty
+//!   feature-map zeros à la GrateTile's tiled feature maps: window
+//!   masks come from a two-state Markov chain with a configurable mean
+//!   zero-run length, stressing telescoping and coloring;
+//! * [`SparsityModel::ChannelSkew`] — a hot fraction of filters is
+//!   much denser than the rest (channel-magnitude pruning skew),
+//!   stressing GB-S and round-robin assignment;
+//! * [`SparsityModel::BankBalanced`] — Sense-style bank-balanced
+//!   structured filter sparsity: every `bank`-cell bank of a filter
+//!   holds an *exact* non-zero count, the best case for load balance;
+//! * [`SparsityModel::LayerDecay`] — a geometric depth-decaying
+//!   density profile (dense early layers, very sparse deep layers)
+//!   replacing the mild linear default, stressing per-layer extremes.
+//!
+//! Every model is deterministic in the workload RNG streams, hits the
+//! layer's target density on average, and is identified by a stable
+//! canonical spec string (`clustered:16`) that rides through
+//! `SimConfig::canonical_json` — so the service's content-addressed
+//! cache and the workload memo distinguish scenarios by construction.
+
+use crate::tensor::{MaskMatrix, SparseChunk, CHUNK_BITS};
+use crate::util::rng::Pcg32;
+use crate::workload::generator::{FILTER_JITTER, WINDOW_JITTER};
+
+/// How zeros are distributed across the synthesized masks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SparsityModel {
+    /// Independent jittered-Bernoulli masks (the seed behaviour).
+    Bernoulli,
+    /// Spatially clustered window zeros; `run` is the mean zero-run
+    /// length in cells (GrateTile-like bursty feature maps).
+    Clustered { run: u32 },
+    /// `hot_pct` percent of filters run at ~2× density, the rest are
+    /// rescaled so the layer average is preserved.
+    ChannelSkew { hot_pct: u32 },
+    /// Exact non-zero count per `bank` consecutive filter cells
+    /// (Sense-style bank-balanced structured pruning).
+    BankBalanced { bank: u32 },
+    /// Geometric depth decay: the last layer's density target is
+    /// `decay_pct`% of the first's (before mean renormalization).
+    LayerDecay { decay_pct: u32 },
+}
+
+impl SparsityModel {
+    /// One representative of each family, at the default parameters —
+    /// the scenario axis of `barista report --figure scenarios` and of
+    /// the pinned scenario goldens.
+    pub const ALL: [SparsityModel; 5] = [
+        SparsityModel::Bernoulli,
+        SparsityModel::Clustered { run: 16 },
+        SparsityModel::ChannelSkew { hot_pct: 25 },
+        SparsityModel::BankBalanced { bank: 32 },
+        SparsityModel::LayerDecay { decay_pct: 40 },
+    ];
+
+    /// Family name (without parameters).
+    pub fn family(&self) -> &'static str {
+        match self {
+            SparsityModel::Bernoulli => "bernoulli",
+            SparsityModel::Clustered { .. } => "clustered",
+            SparsityModel::ChannelSkew { .. } => "channel-skew",
+            SparsityModel::BankBalanced { .. } => "bank-balanced",
+            SparsityModel::LayerDecay { .. } => "layer-decay",
+        }
+    }
+
+    /// Canonical spec string: `family` or `family:param`. This is the
+    /// wire/CLI form and the form embedded in `SimConfig::canonical_json`
+    /// (hence in every service cache key and workload memo key);
+    /// [`parse`](Self::parse) round-trips it exactly.
+    pub fn spec(&self) -> String {
+        match *self {
+            SparsityModel::Bernoulli => "bernoulli".to_string(),
+            SparsityModel::Clustered { run } => format!("clustered:{run}"),
+            SparsityModel::ChannelSkew { hot_pct } => format!("channel-skew:{hot_pct}"),
+            SparsityModel::BankBalanced { bank } => format!("bank-balanced:{bank}"),
+            SparsityModel::LayerDecay { decay_pct } => format!("layer-decay:{decay_pct}"),
+        }
+    }
+
+    /// Parse `family` (default parameter) or `family:param`. Parameters
+    /// are range-checked here so an invalid scenario can never reach
+    /// generation.
+    pub fn parse(s: &str) -> Result<SparsityModel, String> {
+        let (family, param) = match s.split_once(':') {
+            Some((f, p)) => (f, Some(p)),
+            None => (s, None),
+        };
+        let num = |p: Option<&str>, default: u32| -> Result<u32, String> {
+            match p {
+                None => Ok(default),
+                Some(v) => v
+                    .parse()
+                    .map_err(|e| format!("sparsity parameter '{v}': {e}")),
+            }
+        };
+        match family {
+            "bernoulli" => {
+                if param.is_some() {
+                    return Err("'bernoulli' takes no parameter".into());
+                }
+                Ok(SparsityModel::Bernoulli)
+            }
+            "clustered" => {
+                let run = num(param, 16)?;
+                if !(1..=256).contains(&run) {
+                    return Err(format!("clustered run length {run} outside 1..=256"));
+                }
+                Ok(SparsityModel::Clustered { run })
+            }
+            "channel-skew" => {
+                let hot_pct = num(param, 25)?;
+                if !(1..=99).contains(&hot_pct) {
+                    return Err(format!("channel-skew hot percent {hot_pct} outside 1..=99"));
+                }
+                Ok(SparsityModel::ChannelSkew { hot_pct })
+            }
+            "bank-balanced" => {
+                let bank = num(param, 32)?;
+                if !(2..=CHUNK_BITS as u32).contains(&bank) {
+                    return Err(format!(
+                        "bank-balanced bank size {bank} outside 2..={CHUNK_BITS}"
+                    ));
+                }
+                Ok(SparsityModel::BankBalanced { bank })
+            }
+            "layer-decay" => {
+                let decay_pct = num(param, 40)?;
+                if !(1..=100).contains(&decay_pct) {
+                    return Err(format!("layer-decay percent {decay_pct} outside 1..=100"));
+                }
+                Ok(SparsityModel::LayerDecay { decay_pct })
+            }
+            other => Err(format!(
+                "unknown sparsity model '{other}' (known: bernoulli, clustered[:run], \
+                 channel-skew[:pct], bank-balanced[:bank], layer-decay[:pct])"
+            )),
+        }
+    }
+
+    /// Per-layer density targets for layer `index` of `layers`. Every
+    /// model except `LayerDecay` returns the baseline unchanged
+    /// (bit-identical default path); `LayerDecay` builds a geometric
+    /// decay renormalized to preserve the mean of the baseline —
+    /// callers pass the *network-average* densities, replacing (not
+    /// compounding) any default depth profile.
+    pub fn depth_profile(&self, fd: f64, md: f64, index: usize, layers: usize) -> (f64, f64) {
+        match *self {
+            SparsityModel::LayerDecay { decay_pct } => {
+                let g = (decay_pct as f64 / 100.0).clamp(0.01, 1.0);
+                let l = layers.max(1);
+                let t = |i: usize| {
+                    if l <= 1 {
+                        0.5
+                    } else {
+                        i as f64 / (l - 1) as f64
+                    }
+                };
+                let mean: f64 =
+                    (0..l).map(|i| g.powf(t(i))).sum::<f64>() / l as f64;
+                let shape = g.powf(t(index)) / mean;
+                (
+                    (fd * shape).clamp(0.02, 0.98),
+                    (md * shape).clamp(0.02, 0.98),
+                )
+            }
+            _ => (fd, md),
+        }
+    }
+
+    /// Synthesize a layer's filter masks: `rows` vectors of `vec_len`
+    /// cells at mean density `density`. The Bernoulli arm is the exact
+    /// seed draw sequence.
+    pub fn filter_masks(
+        &self,
+        rng: &mut Pcg32,
+        rows: usize,
+        vec_len: usize,
+        density: f64,
+    ) -> MaskMatrix {
+        match *self {
+            SparsityModel::ChannelSkew { hot_pct } => {
+                skewed_rows(rng, rows, vec_len, density, hot_pct as f64 / 100.0)
+            }
+            SparsityModel::BankBalanced { bank } => {
+                bank_balanced_rows(rng, rows, vec_len, density, bank as usize)
+            }
+            // Clustering and depth decay reshape windows / the profile,
+            // not the filter draw.
+            _ => MaskMatrix::random(rng, rows, vec_len, density, FILTER_JITTER),
+        }
+    }
+
+    /// Synthesize a layer's sampled window masks. The Bernoulli arm is
+    /// the exact seed draw sequence.
+    pub fn window_masks(
+        &self,
+        rng: &mut Pcg32,
+        rows: usize,
+        vec_len: usize,
+        density: f64,
+    ) -> MaskMatrix {
+        match *self {
+            SparsityModel::Clustered { run } => {
+                clustered_rows(rng, rows, vec_len, density, run as f64)
+            }
+            _ => MaskMatrix::random(rng, rows, vec_len, density, WINDOW_JITTER),
+        }
+    }
+}
+
+impl std::fmt::Display for SparsityModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec())
+    }
+}
+
+/// Rows from a two-state (zero/non-zero) Markov chain: mean zero-run
+/// length `run`, non-zero-run length chosen so the stationary density is
+/// the row's jittered target. Starting state is drawn from the
+/// stationary distribution, so no burn-in is needed.
+fn clustered_rows(
+    rng: &mut Pcg32,
+    rows: usize,
+    vec_len: usize,
+    density: f64,
+    run: f64,
+) -> MaskMatrix {
+    let chunks = crate::util::ceil_div(vec_len as u64, CHUNK_BITS as u64) as usize;
+    let mut m = MaskMatrix::zeroed(rows, chunks);
+    for r in 0..rows {
+        let d = (density * (1.0 + WINDOW_JITTER * rng.gen_normal())).clamp(0.005, 0.995);
+        let mut zero_run = run.max(1.0);
+        let mut one_run = d / (1.0 - d) * zero_run;
+        if one_run < 1.0 {
+            // Sparse rows with short requested runs: a state can't dwell
+            // under one cell, so lengthen the zero runs instead — the
+            // stationary density stays exactly `d` either way.
+            one_run = 1.0;
+            zero_run = (1.0 - d) / d;
+        }
+        // Exit probabilities of each state (geometric run lengths).
+        let p_leave_zero = (1.0 / zero_run).min(1.0);
+        let p_leave_one = (1.0 / one_run).min(1.0);
+        let mut on = rng.gen_bool(d);
+        let mut mask: u128 = 0;
+        for cell in 0..vec_len {
+            let bit = cell % CHUNK_BITS;
+            if on {
+                mask |= 1u128 << bit;
+            }
+            if bit == CHUNK_BITS - 1 || cell == vec_len - 1 {
+                m.set(r, cell / CHUNK_BITS, SparseChunk::new(mask));
+                mask = 0;
+            }
+            let leave = if on { p_leave_one } else { p_leave_zero };
+            if rng.gen_bool(leave) {
+                on = !on;
+            }
+        }
+    }
+    m
+}
+
+/// Rows where a `hot` fraction runs at ~2× density and the rest are
+/// rescaled to preserve the mean — inter-filter imbalance far beyond
+/// the default jitter (what GB-S and round-robin must absorb).
+fn skewed_rows(
+    rng: &mut Pcg32,
+    rows: usize,
+    vec_len: usize,
+    density: f64,
+    hot: f64,
+) -> MaskMatrix {
+    let chunks = crate::util::ceil_div(vec_len as u64, CHUNK_BITS as u64) as usize;
+    // Hot density: ~2× the mean, capped both physically (0.95) and by
+    // the mass actually available — a large hot fraction cannot all run
+    // at 2× without pushing the cold rows below the floor, which would
+    // silently inflate the layer mean.
+    let max_hot = ((density - (1.0 - hot) * 0.005) / hot).max(density);
+    // `.max(density)` after the 0.95 cap (not `clamp(density, 0.95)`):
+    // densities above 0.95 would invert clamp's bounds and panic.
+    let d_hot = (density * 2.0).min(0.95).max(density).min(max_hot);
+    // Mean-preserving cold density.
+    let d_cold = ((density - hot * d_hot) / (1.0 - hot)).clamp(0.005, 0.995);
+    let mut m = MaskMatrix::zeroed(rows, chunks);
+    for r in 0..rows {
+        let d = if rng.gen_bool(hot) { d_hot } else { d_cold };
+        for c in 0..chunks {
+            let valid = (vec_len - c * CHUNK_BITS).min(CHUNK_BITS);
+            m.set(r, c, SparseChunk::random_bernoulli(rng, d).truncate(valid));
+        }
+    }
+    m
+}
+
+/// Rows with an *exact* non-zero count in every `bank` consecutive
+/// cells (the last bank of a row may be shorter): Sense-style
+/// bank-balanced structured sparsity — zero inter-bank variance, the
+/// load balancer's best case.
+fn bank_balanced_rows(
+    rng: &mut Pcg32,
+    rows: usize,
+    vec_len: usize,
+    density: f64,
+    bank: usize,
+) -> MaskMatrix {
+    let chunks = crate::util::ceil_div(vec_len as u64, CHUNK_BITS as u64) as usize;
+    let mut m = MaskMatrix::zeroed(rows, chunks);
+    let mut row_masks = vec![0u128; chunks];
+    for r in 0..rows {
+        let d = (density * (1.0 + FILTER_JITTER * rng.gen_normal())).clamp(0.005, 0.995);
+        for x in row_masks.iter_mut() {
+            *x = 0;
+        }
+        let mut start = 0usize;
+        while start < vec_len {
+            let size = bank.min(vec_len - start);
+            let nnz = ((d * size as f64).round() as usize).min(size);
+            // Floyd's algorithm over the bank's `size` positions.
+            let mut chosen: u128 = 0;
+            for j in (size - nnz)..size {
+                let t = rng.gen_range(j as u32 + 1) as usize;
+                if chosen & (1u128 << t) != 0 {
+                    chosen |= 1u128 << j;
+                } else {
+                    chosen |= 1u128 << t;
+                }
+            }
+            for p in 0..size {
+                if chosen & (1u128 << p) != 0 {
+                    let cell = start + p;
+                    row_masks[cell / CHUNK_BITS] |= 1u128 << (cell % CHUNK_BITS);
+                }
+            }
+            start += size;
+        }
+        for (c, &mask) in row_masks.iter().enumerate() {
+            m.set(r, c, SparseChunk::new(mask));
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for m in SparsityModel::ALL {
+            assert_eq!(SparsityModel::parse(&m.spec()).unwrap(), m);
+        }
+        assert_eq!(
+            SparsityModel::parse("clustered").unwrap(),
+            SparsityModel::Clustered { run: 16 }
+        );
+        assert_eq!(
+            SparsityModel::parse("bank-balanced:8").unwrap(),
+            SparsityModel::BankBalanced { bank: 8 }
+        );
+        assert!(SparsityModel::parse("bernoulli:3").is_err());
+        assert!(SparsityModel::parse("clustered:0").is_err());
+        assert!(SparsityModel::parse("channel-skew:100").is_err());
+        assert!(SparsityModel::parse("nope").is_err());
+    }
+
+    #[test]
+    fn bernoulli_draws_identical_to_mask_matrix_random() {
+        // The default model must consume the RNG exactly like the seed
+        // generator did — bit-identical masks from equal streams.
+        let mut a = Pcg32::new(7, 1);
+        let mut b = Pcg32::new(7, 1);
+        let via_model =
+            SparsityModel::Bernoulli.filter_masks(&mut a, 8, 300, 0.4);
+        let direct = MaskMatrix::random(&mut b, 8, 300, 0.4, FILTER_JITTER);
+        for r in 0..8 {
+            for c in 0..via_model.chunks {
+                assert_eq!(via_model.get(r, c), direct.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_hits_density_and_clusters() {
+        let mut rng = Pcg32::seeded(3);
+        let m = clustered_rows(&mut rng, 128, 1024, 0.4, 16.0);
+        let d = m.density();
+        assert!((d - 0.4).abs() < 0.06, "density {d}");
+        // Clustering: adjacent-cell agreement far above the Bernoulli
+        // expectation (d² + (1-d)² ≈ 0.52 at d=0.4).
+        let mut same = 0u64;
+        let mut total = 0u64;
+        for r in 0..m.rows {
+            for c in 0..m.chunks {
+                let mask = m.get(r, c).mask;
+                for b in 0..(CHUNK_BITS - 1) {
+                    let x = (mask >> b) & 1;
+                    let y = (mask >> (b + 1)) & 1;
+                    same += (x == y) as u64;
+                    total += 1;
+                }
+            }
+        }
+        let agree = same as f64 / total as f64;
+        assert!(agree > 0.8, "adjacent agreement {agree} not clustered");
+    }
+
+    #[test]
+    fn bank_balanced_is_exact_per_bank() {
+        let mut rng = Pcg32::seeded(4);
+        let bank = 32usize;
+        let m = bank_balanced_rows(&mut rng, 16, 256, 0.375, bank);
+        for r in 0..m.rows {
+            // Recover the row's jittered density from its total, then
+            // check every bank holds exactly round(d*bank) non-zeros.
+            let row_nnz = m.row_nnz(r) as usize;
+            let banks = 256 / bank;
+            assert_eq!(row_nnz % banks, 0, "row {r}: banks must be equal");
+            let per = row_nnz / banks;
+            for bidx in 0..banks {
+                let mut got = 0usize;
+                for p in 0..bank {
+                    let cell = bidx * bank + p;
+                    let chunk = m.get(r, cell / CHUNK_BITS).mask;
+                    got += ((chunk >> (cell % CHUNK_BITS)) & 1) as usize;
+                }
+                assert_eq!(got, per, "row {r} bank {bidx}");
+            }
+        }
+    }
+
+    #[test]
+    fn channel_skew_preserves_mean_and_spreads() {
+        let mut rng = Pcg32::seeded(5);
+        let m = skewed_rows(&mut rng, 512, 1024, 0.35, 0.25);
+        let d = m.density();
+        assert!((d - 0.35).abs() < 0.05, "mean density {d}");
+        // Hot rows exist: max row density near 0.7, min well below.
+        let mut lo = f64::MAX;
+        let mut hi = 0.0f64;
+        for r in 0..m.rows {
+            let rd = m.row_nnz(r) as f64 / 1024.0;
+            lo = lo.min(rd);
+            hi = hi.max(rd);
+        }
+        assert!(hi > 0.6, "no hot rows: max {hi}");
+        assert!(lo < 0.35, "no cold rows: min {lo}");
+    }
+
+    #[test]
+    fn layer_decay_profile_decays_and_preserves_mean() {
+        let m = SparsityModel::LayerDecay { decay_pct: 40 };
+        let layers = 12;
+        let mut prev = f64::MAX;
+        let mut sum = 0.0;
+        for i in 0..layers {
+            let (fd, _) = m.depth_profile(0.4, 0.5, i, layers);
+            assert!(fd <= prev + 1e-12, "layer {i}: profile must decay");
+            prev = fd;
+            sum += fd;
+        }
+        let mean = sum / layers as f64;
+        assert!((mean - 0.4).abs() < 0.02, "mean {mean} drifted from 0.4");
+        // First layer denser than the base, last much sparser.
+        assert!(m.depth_profile(0.4, 0.5, 0, layers).0 > 0.4);
+        assert!(m.depth_profile(0.4, 0.5, layers - 1, layers).0 < 0.3);
+    }
+
+    #[test]
+    fn non_decay_models_leave_profile_untouched() {
+        for m in [
+            SparsityModel::Bernoulli,
+            SparsityModel::Clustered { run: 8 },
+            SparsityModel::ChannelSkew { hot_pct: 10 },
+            SparsityModel::BankBalanced { bank: 16 },
+        ] {
+            assert_eq!(m.depth_profile(0.37, 0.51, 3, 9), (0.37, 0.51));
+        }
+    }
+
+    #[test]
+    fn prop_all_models_respect_vec_len_truncation() {
+        run_prop("mask truncation", 0x5CEA, 60, |rng| {
+            let vec_len = 64 + rng.gen_range(400) as usize;
+            let rows = 1 + rng.gen_range(16) as usize;
+            let model = SparsityModel::ALL
+                [rng.gen_range(SparsityModel::ALL.len() as u32) as usize];
+            let f = model.filter_masks(rng, rows, vec_len, 0.5);
+            let w = model.window_masks(rng, rows, vec_len, 0.5);
+            for m in [&f, &w] {
+                let tail_valid = vec_len - (m.chunks - 1) * CHUNK_BITS;
+                for r in 0..rows {
+                    let tail = m.get(r, m.chunks - 1);
+                    if tail_valid < CHUNK_BITS
+                        && tail.mask >> tail_valid != 0
+                    {
+                        return Err(format!(
+                            "{model}: bits beyond vec_len {vec_len} in row {r}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -124,6 +124,7 @@ fn degenerate_layer(density_f: f64, density_m: f64) -> NetworkWork {
         }],
         filter_density: density_f,
         map_density: density_m,
+        per_layer: None,
     };
     NetworkWork::from_spec(spec, &cfg)
 }

@@ -11,9 +11,9 @@ use std::sync::Arc;
 
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{run_one, RunRequest};
-use barista::service::{Client, JobSpec, Scheduler, SchedulerConfig, Server};
-use barista::util::Json;
-use barista::workload::Benchmark;
+use barista::service::{job_key, Client, JobSpec, Scheduler, SchedulerConfig, Server, Source};
+use barista::util::{Json, Pcg32};
+use barista::workload::{Benchmark, SparsityModel};
 
 fn small_cfg(arch: ArchKind, seed: u64) -> SimConfig {
     let mut c = SimConfig::paper(arch);
@@ -199,6 +199,96 @@ fn protocol_errors_do_not_kill_the_connection() {
 
     client.shutdown().expect("shutdown");
     server.join().expect("server thread").expect("server io");
+}
+
+/// Differential test of `barista serve`'s scheduler: a randomized job
+/// mix — including jobs that differ *only* in their sparsity model —
+/// must (a) hash to pairwise-distinct cache keys, (b) produce results
+/// byte-identical to a fresh `run_one` of the same job, and (c) serve
+/// a replay of the whole mix entirely from cache, byte-identical again.
+/// Guards the scenario extension of the content-addressed cache key.
+#[test]
+fn randomized_job_mix_is_cache_exact_across_sparsity_models() {
+    let sched = Scheduler::new(SchedulerConfig {
+        workers: 4,
+        shards: 2,
+        queue_cap: 128,
+        cache_bytes: 64 << 20,
+    });
+    // Deterministic "random" pool: benchmarks × archs × scenarios,
+    // with one group differing only in the sparsity model.
+    let mut pool: Vec<RunRequest> = Vec::new();
+    for (i, model) in SparsityModel::ALL.iter().enumerate() {
+        let arch = if i % 2 == 0 {
+            ArchKind::Barista
+        } else {
+            ArchKind::Dense
+        };
+        let mut c = small_cfg(arch, 11);
+        c.sparsity = *model;
+        pool.push(RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: c,
+        });
+        // The sparsity-only variant group: identical everything, only
+        // the model differs.
+        let mut c2 = small_cfg(ArchKind::Ideal, 12);
+        c2.sparsity = *model;
+        pool.push(RunRequest {
+            benchmark: Benchmark::ResNet18,
+            config: c2,
+        });
+    }
+    // (a) all keys pairwise distinct.
+    for i in 0..pool.len() {
+        for j in (i + 1)..pool.len() {
+            assert_ne!(
+                job_key(&pool[i]),
+                job_key(&pool[j]),
+                "jobs {i} and {j} collide on the cache key"
+            );
+        }
+    }
+
+    let mut rng = Pcg32::seeded(0xD1FF);
+    let mix: Vec<RunRequest> = (0..32)
+        .map(|_| pool[rng.gen_range(pool.len() as u32) as usize].clone())
+        .collect();
+    let first = sched.run_all(&mix).expect("first mix");
+    // (b) byte-identical to fresh simulations.
+    let mut fresh: HashMap<String, String> = HashMap::new();
+    for req in &pool {
+        fresh.insert(
+            job_key(req).hex(),
+            run_one(req).network.to_json().to_string(),
+        );
+    }
+    for (o, req) in first.iter().zip(&mix) {
+        assert_eq!(
+            o.entry.network_json,
+            fresh[&job_key(req).hex()],
+            "scheduler result differs from fresh run_one for {} {} {}",
+            req.benchmark,
+            req.config.arch,
+            req.config.sparsity
+        );
+    }
+    // (c) replay: all cache hits, byte-identical to the first pass.
+    let replay = sched.run_all(&mix).expect("replay mix");
+    for (i, (a, b)) in first.iter().zip(&replay).enumerate() {
+        assert_eq!(b.source, Source::CacheHit, "replay job {i} not a cache hit");
+        assert_eq!(a.entry.network_json, b.entry.network_json, "replay job {i}");
+    }
+    let distinct = mix
+        .iter()
+        .map(|r| job_key(r).hex())
+        .collect::<std::collections::BTreeSet<_>>()
+        .len();
+    let stats = sched.stats();
+    assert_eq!(
+        stats.executed as usize, distinct,
+        "each distinct job simulated exactly once: {stats:?}"
+    );
 }
 
 #[test]

@@ -1,0 +1,273 @@
+//! Property-based cross-architecture invariant suite (ISSUE 3).
+//!
+//! Built on `util::prop::run_prop`: every property runs over random
+//! configurations *and* random sparsity scenarios, and a failure panics
+//! with the exact `(seed, case)` pair that reproduces it. The seed and
+//! case count are environment-tunable so CI pins a fixed seed while
+//! `make prop` runs a deeper sweep:
+//!
+//! * `PROP_SEED`  — base seed (default `0xBA7157A`, what CI uses);
+//! * `PROP_CASES` — multiplier on the per-property case counts
+//!   (default 1; `make prop` uses 8).
+//!
+//! Invariants held:
+//! 1. Ideal cycles lower-bound every architecture's cycles;
+//! 2. two-sided matched MACs ≤ one-sided MACs ≤ dense MACs;
+//! 3. the shared pass-table path equals direct mask arithmetic
+//!    (`matched_macs_sampled_cached == matched_macs_sampled`);
+//! 4. `gb_s_order` is a permutation and even/odd GB-S assignments are
+//!    mutually reversed;
+//! 5. every sparsity model tracks its target density.
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, sweep_requests, RunRequest};
+use barista::tensor::LayerGeom;
+use barista::util::prop::run_prop;
+use barista::util::rng::Pcg32;
+use barista::workload::{alternating_assignment, gb_s_order, Benchmark, NetworkWork, SparsityModel};
+
+/// Read a tuning env var; a set-but-unparseable value is a hard error,
+/// never a silent fall-back — a typo'd `PROP_SEED` must not "pass" by
+/// quietly running the default seed.
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(s) => s
+            .parse()
+            .unwrap_or_else(|e| panic!("{name}='{s}' must be a decimal integer: {e}")),
+    }
+}
+
+fn prop_seed() -> u64 {
+    env_u64("PROP_SEED", 0xBA7157A)
+}
+
+fn cases(base: u64) -> u64 {
+    base * env_u64("PROP_CASES", 1).max(1)
+}
+
+/// A random scenario, parameters included.
+fn random_model(rng: &mut Pcg32) -> SparsityModel {
+    match rng.gen_range(5) {
+        0 => SparsityModel::Bernoulli,
+        1 => SparsityModel::Clustered {
+            run: 2 + rng.gen_range(62),
+        },
+        2 => SparsityModel::ChannelSkew {
+            hot_pct: 5 + rng.gen_range(60),
+        },
+        3 => SparsityModel::BankBalanced {
+            bank: 8 << rng.gen_range(5), // 8..=128
+        },
+        _ => SparsityModel::LayerDecay {
+            decay_pct: 10 + rng.gen_range(85),
+        },
+    }
+}
+
+/// A random small conv layer.
+fn random_geom(rng: &mut Pcg32) -> LayerGeom {
+    let k = if rng.gen_bool(0.5) { 1 } else { 3 };
+    LayerGeom {
+        h: 4 + rng.gen_range(12) as usize,
+        w: 4 + rng.gen_range(12) as usize,
+        d: 16 + rng.gen_range(240) as usize,
+        k,
+        n: 8 + rng.gen_range(120) as usize,
+        stride: 1,
+        pad: k / 2,
+    }
+}
+
+fn small_cfg(rng: &mut Pcg32, arch: ArchKind) -> SimConfig {
+    let mut cfg = SimConfig::paper(arch);
+    cfg.window_cap = 8 + rng.gen_range(32) as usize;
+    cfg.batch = 1;
+    cfg.seed = rng.next_u64();
+    cfg.sparsity = random_model(rng);
+    cfg
+}
+
+/// One random layer workload under a random scenario.
+fn random_layer(rng: &mut Pcg32) -> barista::workload::LayerWork {
+    let geom = random_geom(rng);
+    let cfg = small_cfg(rng, ArchKind::Barista);
+    let fd = 0.1 + 0.7 * rng.next_f64();
+    let md = 0.1 + 0.7 * rng.next_f64();
+    NetworkWork::layer(0, &geom, fd, md, &cfg)
+}
+
+/// Invariant 1: the Ideal configuration (unlimited bandwidth/buffering,
+/// perfect spread) lower-bounds every other architecture at equal total
+/// MACs and shared workload knobs — on every benchmark, seed, and
+/// scenario. The per-arch configs come from `sweep_requests`, the same
+/// helper the coordinator and service use, so the workload-knob set can
+/// never silently diverge from the memo key.
+#[test]
+fn prop_ideal_lower_bounds_every_architecture() {
+    const ARCHS: [ArchKind; 9] = [
+        ArchKind::Dense,
+        ArchKind::OneSided,
+        ArchKind::Scnn,
+        ArchKind::SparTen,
+        ArchKind::SparTenIso,
+        ArchKind::Synchronous,
+        ArchKind::BaristaNoOpts,
+        ArchKind::Barista,
+        ArchKind::UnlimitedBuffer,
+    ];
+    run_prop("ideal lower-bounds all archs", prop_seed(), cases(4), |rng| {
+        let benchmark = if rng.gen_bool(0.5) {
+            Benchmark::AlexNet
+        } else {
+            Benchmark::ResNet18
+        };
+        let base = small_cfg(rng, ArchKind::Ideal);
+        let ideal = run_one(&RunRequest {
+            benchmark,
+            config: base.clone(),
+        })
+        .network
+        .cycles;
+        for req in sweep_requests(&[benchmark], &ARCHS, &base) {
+            let got = run_one(&req).network.cycles;
+            if ideal > got * (1.0 + 1e-9) {
+                return Err(format!(
+                    "{benchmark} {} ({}): ideal {ideal:.3e} > {} {got:.3e}",
+                    base.sparsity,
+                    base.seed,
+                    req.config.arch
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 2: per sampled layer, two-sided matched work ≤ one-sided
+/// work ≤ dense work, whatever the scenario shapes the masks into.
+#[test]
+fn prop_matched_leq_one_sided_leq_dense() {
+    run_prop("matched<=one-sided<=dense", prop_seed(), cases(48), |rng| {
+        let l = random_layer(rng);
+        let matched = l.matched_macs_sampled();
+        let one_sided = l.one_sided_macs_sampled();
+        let dense =
+            l.windows.rows as u64 * l.geom.vec_len() as u64 * l.filters.rows as u64;
+        if matched > one_sided {
+            return Err(format!("matched {matched} > one-sided {one_sided}"));
+        }
+        if one_sided > dense {
+            return Err(format!("one-sided {one_sided} > dense {dense}"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 3: the shared pass-table fast path and the direct
+/// mask-arithmetic path agree exactly on matched-MAC accounting.
+#[test]
+fn prop_pass_table_equals_direct_path() {
+    run_prop("table path == direct path", prop_seed(), cases(24), |rng| {
+        let l = random_layer(rng);
+        let cached = l.matched_macs_sampled_cached();
+        let direct = l.matched_macs_sampled();
+        if cached != direct {
+            return Err(format!("table {cached} != direct {direct}"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 4: GB-S density ordering is a permutation of the filters,
+/// and the even/odd-map assignments walk it in mutually reverse order.
+#[test]
+fn prop_gb_s_permutation_and_alternation() {
+    run_prop("gb-s permutation + alternation", prop_seed(), cases(48), |rng| {
+        let rows = 4 + rng.gen_range(124) as usize;
+        let model = random_model(rng);
+        let vec_len = 128 + rng.gen_range(1024) as usize;
+        let filters = model.filter_masks(rng, rows, vec_len, 0.2 + 0.6 * rng.next_f64());
+        let order = gb_s_order(&filters);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        if sorted != (0..rows).collect::<Vec<_>>() {
+            return Err(format!("{model}: gb_s_order is not a permutation"));
+        }
+        for w in order.windows(2) {
+            if filters.row_nnz(w[0]) < filters.row_nnz(w[1]) {
+                return Err(format!("{model}: order not descending by density"));
+            }
+        }
+        let positions = 1 + rng.gen_range(64) as usize;
+        let rounds = (rows + positions - 1) / positions;
+        let round = rng.gen_range(rounds as u32) as usize;
+        let map = 2 * rng.gen_range(16) as usize;
+        let even = alternating_assignment(&order, positions, round, map, true);
+        let odd = alternating_assignment(&order, positions, round, map + 1, true);
+        let mut rev = even.clone();
+        rev.reverse();
+        if odd != rev {
+            return Err(format!(
+                "{model}: odd map is not the reverse of the even map"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 5: every scenario hits its requested density (network
+/// matrices are large enough that sampling noise is small).
+#[test]
+fn prop_scenarios_track_target_density() {
+    run_prop("scenario density tracking", prop_seed(), cases(24), |rng| {
+        let model = random_model(rng);
+        let density = 0.15 + 0.6 * rng.next_f64();
+        // Multiple of 128 cells so truncation doesn't shave the target.
+        let vec_len = 128 * (2 + rng.gen_range(8) as usize);
+        let f = model.filter_masks(rng, 192, vec_len, density);
+        let w = model.window_masks(rng, 192, vec_len, density);
+        for (label, m) in [("filters", &f), ("windows", &w)] {
+            let got = m.density();
+            // Tolerance sized ≥4σ for the worst case (long clustered
+            // runs shrink the effective sample; bank rounding biases up
+            // to 0.5/bank) so the fixed-seed CI run can't flake.
+            if (got - density).abs() > 0.12 {
+                return Err(format!(
+                    "{model} {label}: density {got:.3} vs target {density:.3}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 5b: layer-decay's depth profile is monotone non-increasing
+/// and roughly mean-preserving for realistic targets.
+#[test]
+fn prop_layer_decay_monotone() {
+    run_prop("layer-decay monotone", prop_seed(), cases(48), |rng| {
+        let decay_pct = 10 + rng.gen_range(90);
+        let model = SparsityModel::LayerDecay { decay_pct };
+        let layers = 2 + rng.gen_range(46) as usize;
+        let fd = 0.2 + 0.4 * rng.next_f64();
+        let md = 0.2 + 0.4 * rng.next_f64();
+        let mut prev = (f64::MAX, f64::MAX);
+        let mut sum = 0.0;
+        for i in 0..layers {
+            let (a, b) = model.depth_profile(fd, md, i, layers);
+            if a > prev.0 + 1e-12 || b > prev.1 + 1e-12 {
+                return Err(format!("layer {i}: profile increased"));
+            }
+            prev = (a, b);
+            sum += a;
+        }
+        let mean = sum / layers as f64;
+        // Clamping at 0.98 can shave up to ~0.097 off the mean for the
+        // steepest short-network cases; 0.12 bounds it with margin.
+        if (mean - fd).abs() > 0.12 {
+            return Err(format!("mean {mean:.3} drifted from target {fd:.3}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,71 @@
+//! Pinned scenario goldens: one cycle count per (sparsity model,
+//! architecture) pair, extending the self-sealing scheme of
+//! `perf_equivalence.rs` (see `tests/golden/README.md`).
+//!
+//! Equivalence and invariant tests re-derive both sides of every
+//! comparison, so only pinned constants catch *silent* semantic drift —
+//! in the scenario engine itself (a mask-generation tweak changes every
+//! non-default model) or in any architecture's timing model. On the
+//! first run in a fresh environment each missing file seals itself with
+//! the measured value; once committed, a change must be deliberate:
+//! bump `SIM_VERSION` in `src/lib.rs` and refresh the files together.
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::workload::{Benchmark, SparsityModel};
+
+#[test]
+fn pinned_golden_cycles_per_model_and_architecture() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden");
+    std::fs::create_dir_all(dir).expect("create golden dir");
+    let mut sealed = 0usize;
+    let mut checked = 0usize;
+    for model in SparsityModel::ALL {
+        for arch in ArchKind::ALL {
+            let mut cfg = SimConfig::paper(arch);
+            cfg.window_cap = 24;
+            cfg.batch = 1;
+            cfg.sparsity = model;
+            let got = run_one(&RunRequest {
+                benchmark: Benchmark::AlexNet,
+                config: cfg,
+            })
+            .network
+            .cycles;
+            assert!(
+                got.is_finite() && got > 0.0,
+                "{model} on {arch}: insane cycles {got}"
+            );
+            let path = format!(
+                "{dir}/scenario_{}_{}_cycles.txt",
+                model.spec().replace(':', "-"),
+                arch.name()
+            );
+            match std::fs::read_to_string(&path) {
+                Ok(s) => {
+                    let want: f64 = s.trim().parse().unwrap_or_else(|e| {
+                        panic!("golden file {path} must hold one f64: {e}")
+                    });
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "pinned cycles for {model} on {arch} drifted: got {got}, \
+                         golden {want}. If intentional, bump SIM_VERSION in \
+                         src/lib.rs and refresh {path}."
+                    );
+                    checked += 1;
+                }
+                Err(_) => {
+                    std::fs::write(&path, format!("{got}\n")).expect("seal golden file");
+                    sealed += 1;
+                }
+            }
+        }
+    }
+    println!(
+        "scenario goldens: {checked} checked, {sealed} sealed \
+         ({} models × {} architectures)",
+        SparsityModel::ALL.len(),
+        ArchKind::ALL.len()
+    );
+}
