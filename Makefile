@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt prop examples bench bench-smoke bench-figs artifacts serve clean
+.PHONY: build test fmt clippy prop examples bench bench-smoke bench-table bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -12,6 +12,13 @@ test:
 
 fmt:
 	cd rust && cargo fmt --check
+
+# Lint gate over the library + binary (CI runs this with the same
+# flags; benches/tests/examples are not in default clippy scope):
+# correctness/perf lints are hard errors; the deliberate style
+# opt-outs live in src/lib.rs and src/main.rs.
+clippy:
+	cd rust && cargo clippy -- -D warnings
 
 # Deep local run of the property-based invariant suite (tests/invariants.rs):
 # 8x the CI case counts. Override the (decimal) seed to explore new ground:
@@ -29,9 +36,17 @@ examples:
 bench:
 	cd rust && cargo bench --bench perf_hotpath --bench service_throughput
 
-# CI-sized variant of the perf benches (same JSON artifacts, tiny sizes).
+# CI-sized variant of the perf benches (same JSON artifacts, tiny
+# sizes) with the regression guard on: the first run seals
+# BENCH_*.smoke.baseline.json at the repo root, later runs fail on any
+# timed field regressing past 2x (BENCH_GUARD_RATIO overrides).
 bench-smoke:
-	cd rust && BENCH_SMOKE=1 cargo bench --bench perf_hotpath --bench service_throughput
+	cd rust && BENCH_SMOKE=1 BENCH_GUARD=1 cargo bench --bench perf_hotpath --bench service_throughput --bench table_build
+
+# Table-build microbench only: scalar AoS kernel vs tiled SoA kernel vs
+# pool-parallel tiles, across layer geometries -> BENCH_table.json.
+bench-table:
+	cd rust && cargo bench --bench table_build
 
 # The full paper figure/table bench suite.
 bench-figs:

@@ -1,23 +1,27 @@
 //! Simulator hot-path microbenchmarks (the §Perf deliverable's
 //! before/after instrument): pass-cost mask arithmetic vs the shared
-//! pass table, the telescoping combiner, the banked-cache queue, and
-//! full end-to-end layers — the optimized `run_one` against the
-//! pre-§Perf reference path, reported as simulated-MAC-cycles per
-//! host-second and written machine-readably to `BENCH_hotpath.json` at
-//! the repo root.
+//! pass table, the table *build* kernels (scalar AoS vs tiled SoA vs
+//! pool-parallel tiles), the telescoping combiner, the banked-cache
+//! queue, full end-to-end layers — the optimized `run_one` against the
+//! pre-§Perf reference path — and a per-phase breakdown (mask gen /
+//! table build / cluster sim) of one cold BARISTA job. Reported as
+//! simulated-MAC-cycles per host-second and written machine-readably to
+//! `BENCH_hotpath.json` at the repo root.
 //!
-//! `BENCH_SMOKE=1` shrinks sizes/iterations for CI.
+//! `BENCH_SMOKE=1` shrinks sizes/iterations for CI; `BENCH_GUARD=1`
+//! additionally seals/compares a smoke baseline (see
+//! `bench_harness::finish_bench`).
 
 use barista::arch::{pass_pe_cycles, PassTable};
 use barista::barista::telescope::telescope_fetch;
-use barista::bench_harness::{bench, bench_header};
+use barista::bench_harness::{bench, bench_header, finish_bench};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{run_one, run_one_reference, RunRequest};
 use barista::sim::BankedCache;
 use barista::tensor::MaskMatrix;
 use barista::util::rng::Pcg32;
 use barista::util::Json;
-use barista::workload::Benchmark;
+use barista::workload::{Benchmark, NetworkWork};
 
 fn main() {
     let smoke = std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
@@ -52,12 +56,47 @@ fn main() {
     );
     let direct_ns_per_pass = t.mean_s / passes * 1e9;
 
-    // --- shared pass table: one build amortized over lookups ------------
-    let tb = bench(&format!("pass table build {nf}x{nw}"), 1, 10, || {
-        let table = PassTable::build(&filters, &windows, 4).expect("tabulates");
+    // --- table build kernels: scalar AoS vs tiled SoA vs parallel -------
+    // The scalar kernel is the pre-SoA reference (`build_scalar`), the
+    // serial kernel is the tiled SWAR path on one core, and `build` is
+    // the production path (pool fan-out on large tables).
+    let tb_scalar = bench(&format!("table build scalar {nf}x{nw}"), 1, 10, || {
+        let table = PassTable::build_scalar(&filters, &windows, 4).expect("tabulates");
         sink = sink.wrapping_add(table.total_matched());
     });
-    println!("{}", tb.report());
+    println!("{}", tb_scalar.report());
+    let tb_tiled = bench(&format!("table build tiled-SoA {nf}x{nw}"), 1, 10, || {
+        let table = PassTable::build_serial(&filters, &windows, 4).expect("tabulates");
+        sink = sink.wrapping_add(table.total_matched());
+    });
+    println!("{}", tb_tiled.report());
+    let tb_par = bench(&format!("table build parallel {nf}x{nw}"), 1, 10, || {
+        let table = PassTable::build_parallel(&filters, &windows, 4).expect("tabulates");
+        sink = sink.wrapping_add(table.total_matched());
+    });
+    println!("{}", tb_par.report());
+    // The kernels under comparison must agree bit-for-bit.
+    PassTable::build_scalar(&filters, &windows, 4)
+        .unwrap()
+        .assert_bit_identical(&PassTable::build_parallel(&filters, &windows, 4).unwrap());
+    println!(
+        "  -> build: scalar {:.0} ns/pass, tiled {:.0} ns/pass ({:.2}x), parallel {:.0} ns/pass ({:.2}x)",
+        tb_scalar.mean_s / passes * 1e9,
+        tb_tiled.mean_s / passes * 1e9,
+        tb_scalar.mean_s / tb_tiled.mean_s,
+        tb_par.mean_s / passes * 1e9,
+        tb_scalar.mean_s / tb_par.mean_s
+    );
+    let mut row = Json::obj();
+    row.set("name", "table_build")
+        .set("scalar_ns_per_pass", tb_scalar.mean_s / passes * 1e9)
+        .set("tiled_ns_per_pass", tb_tiled.mean_s / passes * 1e9)
+        .set("parallel_ns_per_pass", tb_par.mean_s / passes * 1e9)
+        .set("tiled_speedup", tb_scalar.mean_s / tb_tiled.mean_s)
+        .set("parallel_speedup", tb_scalar.mean_s / tb_par.mean_s);
+    rows.push(row);
+
+    // --- shared pass table: one build amortized over lookups ------------
     let table = PassTable::build(&filters, &windows, 4).unwrap();
     let tl = bench(&format!("pass table lookup {nf}x{nw}"), 3, 20, || {
         for f in 0..nf {
@@ -70,14 +109,14 @@ fn main() {
     println!("{}", tl.report());
     println!(
         "  -> build {:.0} ns/pass once, then {:.1} ns/pass lookups (direct: {:.0} ns/pass)",
-        tb.mean_s / passes * 1e9,
+        tb_tiled.mean_s / passes * 1e9,
         tl.mean_s / passes * 1e9,
         direct_ns_per_pass
     );
     let mut row = Json::obj();
     row.set("name", "pass_table")
         .set("direct_ns_per_pass", direct_ns_per_pass)
-        .set("build_ns_per_pass", tb.mean_s / passes * 1e9)
+        .set("build_ns_per_pass", tb_tiled.mean_s / passes * 1e9)
         .set("lookup_ns_per_pass", tl.mean_s / passes * 1e9);
     rows.push(row);
 
@@ -172,6 +211,73 @@ fn main() {
         rows.push(row);
     }
 
+    // --- per-phase breakdown: mask gen / table build / cluster sim -------
+    // One cold BARISTA AlexNet job decomposed into its three host-side
+    // phases, so table-build wins are visible in isolation instead of
+    // being averaged into end-to-end wall-clock.
+    {
+        let mut cfg = SimConfig::paper(ArchKind::Barista);
+        cfg.window_cap = cap;
+        cfg.batch = 32;
+        let parts = cfg.pes_per_node;
+        let iters = iters.max(2);
+
+        // Phase 1: mask synthesis (fresh every iteration, no memo).
+        let mut gen_work: Option<NetworkWork> = None;
+        let tg = bench("phase: mask gen (alexnet)", 0, iters, || {
+            gen_work = Some(NetworkWork::generate(Benchmark::AlexNet, &cfg));
+        });
+        println!("{}", tg.report());
+        let work = gen_work.take().expect("bench ran");
+
+        // Phase 2: table build over every layer — the production tiled
+        // kernel vs the scalar reference kernel on identical masks.
+        let tt = bench("phase: table build (all layers)", 0, iters, || {
+            for l in &work.layers {
+                let t = PassTable::build(&l.filters, &l.windows, parts).expect("tabulates");
+                sink = sink.wrapping_add(t.total_matched());
+            }
+        });
+        println!("{}", tt.report());
+        let tt_scalar = bench("phase: table build scalar (all layers)", 0, iters, || {
+            for l in &work.layers {
+                let t = PassTable::build_scalar(&l.filters, &l.windows, parts).expect("tabulates");
+                sink = sink.wrapping_add(t.total_matched());
+            }
+        });
+        println!("{}", tt_scalar.report());
+
+        // Phase 3: cluster simulation with workload memo and tables
+        // warm (the warmup run populates both).
+        let req = RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: cfg.clone(),
+        };
+        let mut cycles = 0.0;
+        let tc = bench("phase: cluster sim (tables warm)", 1, iters, || {
+            cycles = run_one(&req).network.cycles;
+        });
+        println!("{}", tc.report());
+        let build_speedup = tt_scalar.mean_s / tt.mean_s;
+        println!(
+            "  -> phases: mask gen {:.1} ms, table build {:.1} ms (scalar {:.1} ms, {build_speedup:.2}x), cluster sim {:.1} ms",
+            tg.mean_s * 1e3,
+            tt.mean_s * 1e3,
+            tt_scalar.mean_s * 1e3,
+            tc.mean_s * 1e3
+        );
+        let mut row = Json::obj();
+        row.set("name", "phase_breakdown")
+            .set("window_cap", cap)
+            .set("cycles", cycles)
+            .set("mask_gen_ms", tg.mean_s * 1e3)
+            .set("table_build_ms", tt.mean_s * 1e3)
+            .set("table_build_scalar_ms", tt_scalar.mean_s * 1e3)
+            .set("table_build_speedup", build_speedup)
+            .set("cluster_sim_ms", tc.mean_s * 1e3);
+        rows.push(row);
+    }
+
     // --- machine-readable summary (repo root) -----------------------------
     let mut summary = Json::obj();
     summary
@@ -179,11 +285,10 @@ fn main() {
         .set("smoke", smoke)
         .set("rows", Json::Arr(rows));
     println!("perf_hotpath_summary {}", summary.to_string());
-    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
-    match std::fs::write(out, format!("{}\n", summary.pretty())) {
-        Ok(()) => println!("wrote {out}"),
-        Err(e) => eprintln!("warn: could not write {out}: {e}"),
-    }
+    finish_bench(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json"),
+        &summary,
+    );
 
     // keep the sink alive
     assert!(sink != 0x5EED_DEAD_BEEF);

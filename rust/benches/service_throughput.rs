@@ -8,7 +8,7 @@
 
 use std::time::Instant;
 
-use barista::bench_harness::bench_header;
+use barista::bench_harness::{bench_header, finish_bench};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::RunRequest;
 use barista::service::{Scheduler, SchedulerConfig};
@@ -70,6 +70,8 @@ fn main() {
         let mut row = Json::obj();
         row.set("workers", workers)
             .set("jobs", jobs)
+            .set("cold_ms", cold_s * 1e3)
+            .set("cached_ms", warm_s * 1e3)
             .set("cold_jobs_per_s", cold_jps)
             .set("cached_jobs_per_s", warm_jps);
         rows.push(row);
@@ -81,9 +83,8 @@ fn main() {
         .set("smoke", smoke)
         .set("rows", Json::Arr(rows));
     println!("service_throughput_summary {}", summary.to_string());
-    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_service.json");
-    match std::fs::write(out, format!("{}\n", summary.pretty())) {
-        Ok(()) => println!("wrote {out}"),
-        Err(e) => eprintln!("warn: could not write {out}: {e}"),
-    }
+    finish_bench(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_service.json"),
+        &summary,
+    );
 }

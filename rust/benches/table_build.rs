@@ -1,0 +1,90 @@
+//! Pass-table build microbenchmark (`make bench-table`): the scalar
+//! AoS reference kernel vs the tiled SoA SWAR kernel vs the
+//! pool-parallel tiled build, across representative layer geometries.
+//! Writes `BENCH_table.json` at the repo root; `BENCH_SMOKE=1` shrinks
+//! sizes, `BENCH_GUARD=1` seals/compares a baseline
+//! (`bench_harness::finish_bench`).
+
+use barista::arch::PassTable;
+use barista::bench_harness::{bench, bench_header, finish_bench};
+use barista::tensor::MaskMatrix;
+use barista::util::rng::Pcg32;
+use barista::util::Json;
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    bench_header(if smoke {
+        "table build: scalar vs tiled SoA vs parallel (smoke)"
+    } else {
+        "table build: scalar vs tiled SoA vs parallel"
+    });
+    // (filters, windows, cells): a small AlexNet-conv2-like layer, a
+    // mid VGG-like layer, and a wide late-ResNet-like layer.
+    let geoms: &[(usize, usize, usize)] = if smoke {
+        &[(16, 64, 2304)]
+    } else {
+        &[(64, 256, 2304), (96, 512, 6912), (256, 512, 27648)]
+    };
+    let iters = if smoke { 5 } else { 10 };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut sink = 0u64;
+    for &(nf, nw, cells) in geoms {
+        let mut rng = Pcg32::seeded(0x7AB1E ^ ((nf as u64) << 20) ^ (nw as u64));
+        let filters = MaskMatrix::random(&mut rng, nf, cells, 0.37, 0.15);
+        let windows = MaskMatrix::random(&mut rng, nw, cells, 0.47, 0.30);
+        let passes = (nf * nw) as f64;
+
+        let ts = bench(&format!("scalar   {nf}x{nw} ({cells} cells)"), 1, iters, || {
+            let t = PassTable::build_scalar(&filters, &windows, 4).expect("tabulates");
+            sink = sink.wrapping_add(t.total_matched());
+        });
+        println!("{}", ts.report());
+        let tt = bench(&format!("tiled    {nf}x{nw} ({cells} cells)"), 1, iters, || {
+            let t = PassTable::build_serial(&filters, &windows, 4).expect("tabulates");
+            sink = sink.wrapping_add(t.total_matched());
+        });
+        println!("{}", tt.report());
+        let tp = bench(&format!("parallel {nf}x{nw} ({cells} cells)"), 1, iters, || {
+            let t = PassTable::build_parallel(&filters, &windows, 4).expect("tabulates");
+            sink = sink.wrapping_add(t.total_matched());
+        });
+        println!("{}", tp.report());
+
+        // The kernels under comparison must agree bit-for-bit.
+        PassTable::build_scalar(&filters, &windows, 4)
+            .unwrap()
+            .assert_bit_identical(&PassTable::build_parallel(&filters, &windows, 4).unwrap());
+
+        println!(
+            "  -> scalar {:.0} ns/pass | tiled {:.0} ns/pass ({:.2}x) | parallel {:.0} ns/pass ({:.2}x)",
+            ts.mean_s / passes * 1e9,
+            tt.mean_s / passes * 1e9,
+            ts.mean_s / tt.mean_s,
+            tp.mean_s / passes * 1e9,
+            ts.mean_s / tp.mean_s
+        );
+        let mut row = Json::obj();
+        row.set("name", format!("build_{nf}x{nw}x{cells}"))
+            .set("filters", nf)
+            .set("windows", nw)
+            .set("cells", cells)
+            .set("scalar_ns_per_pass", ts.mean_s / passes * 1e9)
+            .set("tiled_ns_per_pass", tt.mean_s / passes * 1e9)
+            .set("parallel_ns_per_pass", tp.mean_s / passes * 1e9)
+            .set("tiled_speedup", ts.mean_s / tt.mean_s)
+            .set("parallel_speedup", ts.mean_s / tp.mean_s);
+        rows.push(row);
+    }
+
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "table_build")
+        .set("smoke", smoke)
+        .set("rows", Json::Arr(rows));
+    println!("table_build_summary {}", summary.to_string());
+    finish_bench(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_table.json"),
+        &summary,
+    );
+    assert!(sink != 0x5EED_DEAD_BEEF);
+}

@@ -11,7 +11,8 @@
 //! matched pair per cycle through the prefix-sum/priority-encode
 //! pipeline) + a fixed per-chunk pipeline overhead.
 
-use crate::tensor::{MaskMatrix, SparseChunk, CHUNK_BITS};
+use crate::pool;
+use crate::tensor::{MaskMatrix, MaskPlanes, SparseChunk, CHUNK_BITS};
 
 /// Upper bound on PEs per node this model supports.
 pub const MAX_PARTS: usize = 8;
@@ -124,6 +125,14 @@ fn pass_pe_cycles4(f: &[SparseChunk], w: &[SparseChunk], rotation: usize, overhe
 /// loop into an 8-byte table read — and one table serves every
 /// rotation, all four BARISTA policy variants, and the matched-MAC
 /// accounting of the SparTen/one-sided baselines.
+///
+/// The build itself is the next hot loop up (O(filters × windows ×
+/// chunks)), so [`build`](Self::build) runs a bit-parallel tiled
+/// kernel over SoA lane planes ([`MaskPlanes`]) with SWAR-packed
+/// accumulators, fanned across the shared layer pool for large layers
+/// (DESIGN.md §Perf-5) — bit-identical to the scalar reference kernel
+/// ([`build_scalar`](Self::build_scalar)), which stays first-class for
+/// equivalence tests and the table-build microbench.
 #[derive(Debug, Clone)]
 pub struct PassTable {
     filters: usize,
@@ -136,21 +145,78 @@ pub struct PassTable {
     lanes: Vec<u16>,
 }
 
+/// Filter rows per cache block of the tiled build kernel: one lane's
+/// filter tile (≤ `FILTER_TILE` × words-per-row × 8 B) stays L1/L2
+/// resident while the window rows stream past it.
+const FILTER_TILE: usize = 64;
+
+/// `PassTable::build` fans tiles across the layer pool once the kernel
+/// has at least this many packed-word operations (pairs × words per
+/// pair); below it the pool hand-off costs more than the build.
+const PARALLEL_BUILD_MIN_WORD_OPS: u64 = 1 << 21;
+
+/// How a [`PassTable`] build maps onto the machine (all modes are
+/// bit-identical; they differ only in wall-clock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BuildMode {
+    /// Parallelize when the kernel is large enough to amortize it.
+    Auto,
+    /// Tiled SoA kernel on the calling thread only.
+    Serial,
+    /// Always fan window blocks across the layer pool.
+    Parallel,
+}
+
 impl PassTable {
-    /// Build the table for `parts` PEs per node. Returns `None` when
-    /// the geometry cannot be tabulated: unsupported `parts`, or lane
-    /// counts that could overflow `u16` (vectors beyond ~64 K cells per
-    /// lane — far past any paper workload). Callers fall back to
-    /// [`pass_pe_cycles`], which is bit-identical.
+    /// Build the table for `parts` PEs per node — the bit-parallel
+    /// tiled SoA kernel, fanned across the shared layer pool for large
+    /// layers. Returns `None` when the geometry cannot be tabulated:
+    /// unsupported `parts`, or lane counts that could overflow `u16`
+    /// (vectors beyond ~64 K cells per lane — far past any paper
+    /// workload). Callers fall back to [`pass_pe_cycles`], which is
+    /// bit-identical.
     pub fn build(filters: &MaskMatrix, windows: &MaskMatrix, parts: usize) -> Option<PassTable> {
-        if parts == 0 || parts > MAX_PARTS || CHUNK_BITS % parts != 0 {
+        Self::build_mode(filters, windows, parts, BuildMode::Auto)
+    }
+
+    /// [`build`](Self::build) restricted to the calling thread (the
+    /// tiled SoA kernel without the pool fan-out). Bit-identical to
+    /// every other builder; exists for the table-build microbench and
+    /// the equivalence tests.
+    pub fn build_serial(
+        filters: &MaskMatrix,
+        windows: &MaskMatrix,
+        parts: usize,
+    ) -> Option<PassTable> {
+        Self::build_mode(filters, windows, parts, BuildMode::Serial)
+    }
+
+    /// [`build`](Self::build) with the pool fan-out forced on even for
+    /// small tables (the equivalence tests use it to exercise the
+    /// parallel path on test-sized geometries).
+    pub fn build_parallel(
+        filters: &MaskMatrix,
+        windows: &MaskMatrix,
+        parts: usize,
+    ) -> Option<PassTable> {
+        Self::build_mode(filters, windows, parts, BuildMode::Parallel)
+    }
+
+    /// The pre-SoA reference kernel: scalar per-chunk `u128` AND +
+    /// per-lane popcounts over the AoS [`MaskMatrix`] rows. Kept
+    /// first-class so the equivalence suite and the table-build
+    /// microbench can always compare the tiled kernel against the
+    /// original arithmetic, the same way `run_one_reference` preserves
+    /// the pre-§Perf execution path.
+    pub fn build_scalar(
+        filters: &MaskMatrix,
+        windows: &MaskMatrix,
+        parts: usize,
+    ) -> Option<PassTable> {
+        if !Self::tabulatable(filters, windows, parts) {
             return None;
         }
-        debug_assert_eq!(filters.chunks, windows.chunks);
         let width = CHUNK_BITS / parts;
-        if filters.chunks * width > u16::MAX as usize {
-            return None;
-        }
         let nf = filters.rows;
         let nw = windows.rows;
         let seg_mask: u128 = if width == CHUNK_BITS {
@@ -199,6 +265,94 @@ impl PassTable {
         })
     }
 
+    /// Geometry gate shared by every builder: a supported lane split
+    /// whose per-lane counts fit `u16`. The supported `parts` are
+    /// exactly the divisors of [`CHUNK_BITS`] up to [`MAX_PARTS`] —
+    /// i.e. {1, 2, 4, 8} — which is also exactly what
+    /// [`MaskPlanes::supports`] packs, so the scalar and SoA builders
+    /// accept identical geometries.
+    fn tabulatable(filters: &MaskMatrix, windows: &MaskMatrix, parts: usize) -> bool {
+        if parts == 0 || parts > MAX_PARTS || CHUNK_BITS % parts != 0 {
+            return false;
+        }
+        debug_assert_eq!(filters.chunks, windows.chunks);
+        debug_assert!(MaskPlanes::supports(parts));
+        filters.chunks * (CHUNK_BITS / parts) <= u16::MAX as usize
+    }
+
+    fn build_mode(
+        filters: &MaskMatrix,
+        windows: &MaskMatrix,
+        parts: usize,
+        mode: BuildMode,
+    ) -> Option<PassTable> {
+        if !Self::tabulatable(filters, windows, parts) {
+            return None;
+        }
+        let nf = filters.rows;
+        let nw = windows.rows;
+        let fplanes = MaskPlanes::build(filters, parts)?;
+        let wplanes = MaskPlanes::build(windows, parts)?;
+        let mut lanes = vec![0u16; nf * nw * parts];
+        let threads = pool::pool_threads();
+        let parallel = match mode {
+            BuildMode::Serial => false,
+            BuildMode::Parallel => true,
+            BuildMode::Auto => {
+                let word_ops = (nf as u64) * (nw as u64) * (parts * fplanes.row_words()) as u64;
+                threads > 1 && word_ops >= PARALLEL_BUILD_MIN_WORD_OPS
+            }
+        };
+        if parallel && nw > 1 && nf > 0 {
+            // Window blocks own disjoint, contiguous slices of the
+            // window-major output (no aliasing, no stitch copies), and
+            // each block's contents are a pure function of the shared
+            // read-only planes — so the result is bit-identical no
+            // matter how the pool schedules the tiles. Two blocks per
+            // thread for load balance.
+            let block = ((nw + 2 * threads - 1) / (2 * threads)).max(1);
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest = lanes.as_mut_slice();
+            let mut w0 = 0usize;
+            while w0 < nw {
+                let wn = block.min(nw - w0);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(wn * nf * parts);
+                rest = tail;
+                let fp = &fplanes;
+                let wp = &wplanes;
+                tasks.push(Box::new(move || build_block(head, fp, wp, w0, wn)));
+                w0 += wn;
+            }
+            pool::run_scoped(tasks);
+        } else {
+            build_block(&mut lanes, &fplanes, &wplanes, 0, nw);
+        }
+        Some(PassTable {
+            filters: nf,
+            windows: nw,
+            chunks: filters.chunks as u64,
+            parts,
+            lanes,
+        })
+    }
+
+    /// Peak bytes a tiled build needs for an (`nf` × `nw`, `chunks`,
+    /// `parts`) geometry: the final lane table plus both transient SoA
+    /// plane sets. [`LayerWork::pass_table`] budgets against this — not
+    /// just the finished table — so uncapped runs cannot blow past
+    /// their table budget mid-build.
+    ///
+    /// [`LayerWork::pass_table`]: crate::workload::LayerWork::pass_table
+    pub fn build_bytes(nf: usize, nw: usize, chunks: usize, parts: usize) -> usize {
+        let table = nf * nw * parts * std::mem::size_of::<u16>();
+        if !MaskPlanes::supports(parts) {
+            return table;
+        }
+        table
+            + MaskPlanes::bytes_for(nf, chunks, parts)
+            + MaskPlanes::bytes_for(nw, chunks, parts)
+    }
+
     pub fn parts(&self) -> usize {
         self.parts
     }
@@ -239,6 +393,83 @@ impl PassTable {
     /// `LayerWork::matched_macs_sampled` exactly.
     pub fn total_matched(&self) -> u64 {
         self.lanes.iter().map(|&x| x as u64).sum()
+    }
+
+    /// Panic unless `self` and `other` are the same table, bit for bit
+    /// — geometry and every lane count. Shared by the benches that
+    /// compare builder kernels (a full `u16` compare is cheaper than
+    /// one build, so there is no reason to spot-check).
+    pub fn assert_bit_identical(&self, other: &PassTable) {
+        assert_eq!(
+            (self.filters, self.windows, self.chunks, self.parts),
+            (other.filters, other.windows, other.chunks, other.parts),
+            "table geometry diverged"
+        );
+        assert!(self.lanes == other.lanes, "table lane counts diverged");
+    }
+}
+
+/// The tiled SoA build kernel: fill the lane counts for windows
+/// `[w0, w0 + wn)` — all filters, all lanes. `out` is exactly that
+/// window span of the window-major lane array
+/// (`wn × filters × parts` entries).
+///
+/// Structure (DESIGN.md §Perf-5):
+/// * **Lane planes** — each (lane, row) is a dense `u64` word stream
+///   ([`MaskPlanes`]), so the innermost op is a full-width
+///   `AND` + `popcount` with no shifts or segment masks, for every
+///   `parts` value alike.
+/// * **Cache blocking** — filter tiles of [`FILTER_TILE`] rows keep one
+///   lane's tile resident while window rows stream past it.
+/// * **SWAR accumulation** — four filters' running counts ride in one
+///   `u64` as 16-bit fields, spilling to the table once per four
+///   (filter, window) pairs. No field can carry into its neighbor: a
+///   lane count is at most `chunks × lane-width`, which
+///   `PassTable::tabulatable` bounds by `u16::MAX`.
+fn build_block(out: &mut [u16], fplanes: &MaskPlanes, wplanes: &MaskPlanes, w0: usize, wn: usize) {
+    let nf = fplanes.rows();
+    let parts = fplanes.parts();
+    let wpr = fplanes.row_words();
+    debug_assert_eq!(wplanes.parts(), parts);
+    debug_assert_eq!(wplanes.row_words(), wpr);
+    debug_assert_eq!(out.len(), wn * nf * parts);
+    for f0 in (0..nf).step_by(FILTER_TILE) {
+        let ft = FILTER_TILE.min(nf - f0);
+        for lane in 0..parts {
+            for wi in 0..wn {
+                let wrow = wplanes.lane_row(lane, w0 + wi);
+                let base = (wi * nf + f0) * parts + lane;
+                let mut f = 0usize;
+                while f + 4 <= ft {
+                    let r0 = fplanes.lane_row(lane, f0 + f);
+                    let r1 = fplanes.lane_row(lane, f0 + f + 1);
+                    let r2 = fplanes.lane_row(lane, f0 + f + 2);
+                    let r3 = fplanes.lane_row(lane, f0 + f + 3);
+                    let mut acc = 0u64;
+                    for j in 0..wpr {
+                        let wv = wrow[j];
+                        acc += (r0[j] & wv).count_ones() as u64
+                            + (((r1[j] & wv).count_ones() as u64) << 16)
+                            + (((r2[j] & wv).count_ones() as u64) << 32)
+                            + (((r3[j] & wv).count_ones() as u64) << 48);
+                    }
+                    out[base + f * parts] = acc as u16;
+                    out[base + (f + 1) * parts] = (acc >> 16) as u16;
+                    out[base + (f + 2) * parts] = (acc >> 32) as u16;
+                    out[base + (f + 3) * parts] = (acc >> 48) as u16;
+                    f += 4;
+                }
+                while f < ft {
+                    let r = fplanes.lane_row(lane, f0 + f);
+                    let mut acc = 0u32;
+                    for j in 0..wpr {
+                        acc += (r[j] & wrow[j]).count_ones();
+                    }
+                    out[base + f * parts] = acc as u16;
+                    f += 1;
+                }
+            }
+        }
     }
 }
 
@@ -477,9 +708,126 @@ mod tests {
     fn table_build_rejects_bad_parts() {
         let mut rng = Pcg32::seeded(0x0BAD);
         let m = MaskMatrix::random(&mut rng, 2, 256, 0.5, 0.0);
-        assert!(PassTable::build(&m, &m, 0).is_none());
-        assert!(PassTable::build(&m, &m, 3).is_none());
-        assert!(PassTable::build(&m, &m, 16).is_none());
+        for parts in [0usize, 3, 16] {
+            assert!(PassTable::build(&m, &m, parts).is_none());
+            assert!(PassTable::build_serial(&m, &m, parts).is_none());
+            assert!(PassTable::build_parallel(&m, &m, parts).is_none());
+            assert!(PassTable::build_scalar(&m, &m, parts).is_none());
+        }
+    }
+
+    /// Every builder — scalar AoS reference, tiled SoA serial, pool-
+    /// parallel tiles, and the auto dispatcher — produces identical
+    /// tables, and all match the direct per-pass arithmetic, for every
+    /// supported partition count and rotation. This is the tentpole
+    /// bit-equality proof at the kernel level; `tests/perf_equivalence`
+    /// and `tests/invariants` repeat it over real workloads and
+    /// sparsity scenarios.
+    #[test]
+    fn prop_all_builders_bit_identical() {
+        type Builder = fn(&MaskMatrix, &MaskMatrix, usize) -> Option<PassTable>;
+        const BUILDERS: [(&str, Builder); 3] = [
+            ("auto", PassTable::build as Builder),
+            ("serial", PassTable::build_serial as Builder),
+            ("parallel", PassTable::build_parallel as Builder),
+        ];
+        run_prop("SoA builders == scalar == direct", 0x50A7AB, 40, |rng| {
+            let nf = 1 + rng.gen_range(9) as usize;
+            let nw = 1 + rng.gen_range(9) as usize;
+            let chunks = 1 + rng.gen_range(12) as usize;
+            let vec_len = chunks * CHUNK_BITS - rng.gen_range(CHUNK_BITS as u32) as usize;
+            let df = rng.next_f64();
+            let filters = MaskMatrix::random(rng, nf, vec_len, df, 0.2);
+            let dw = rng.next_f64();
+            let windows = MaskMatrix::random(rng, nw, vec_len, dw, 0.2);
+            let oh = rng.gen_range(4) as u64;
+            for parts in [1usize, 2, 4, 8] {
+                let scalar = PassTable::build_scalar(&filters, &windows, parts)
+                    .ok_or_else(|| format!("scalar build failed for parts={parts}"))?;
+                for (name, builder) in BUILDERS {
+                    let table = builder(&filters, &windows, parts)
+                        .ok_or_else(|| format!("{name} build failed for parts={parts}"))?;
+                    for f in 0..nf {
+                        for w in 0..nw {
+                            for rot in 0..parts {
+                                let want = pass_pe_cycles(
+                                    filters.row(f),
+                                    windows.row(w),
+                                    parts,
+                                    rot,
+                                    oh,
+                                );
+                                if scalar.cost(f, w, rot, oh) != want {
+                                    return Err(format!(
+                                        "scalar != direct at parts={parts} f={f} w={w} rot={rot}"
+                                    ));
+                                }
+                                if table.cost(f, w, rot, oh) != want {
+                                    return Err(format!(
+                                        "{name} != direct at parts={parts} f={f} w={w} rot={rot}"
+                                    ));
+                                }
+                            }
+                            if table.matched(f, w) != scalar.matched(f, w) {
+                                return Err(format!("{name}: matched mismatch"));
+                            }
+                        }
+                    }
+                    if table.total_matched() != scalar.total_matched() {
+                        return Err(format!("{name}: total_matched mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// A build wide enough to exercise filter tiling (rows >
+    /// FILTER_TILE), non-multiple-of-4 tile tails, and multi-block
+    /// window fan-out stays bit-identical across the serial tiled
+    /// kernel, the forced-parallel path, and the auto dispatcher.
+    #[test]
+    fn wide_parallel_build_matches_serial() {
+        let mut rng = Pcg32::seeded(0x9A7A);
+        let filters = MaskMatrix::random(&mut rng, 67, 96 * CHUNK_BITS, 0.35, 0.2);
+        let windows = MaskMatrix::random(&mut rng, 61, 96 * CHUNK_BITS, 0.5, 0.3);
+        for parts in [1usize, 2, 4, 8] {
+            let serial = PassTable::build_serial(&filters, &windows, parts).unwrap();
+            let parallel = PassTable::build_parallel(&filters, &windows, parts).unwrap();
+            let auto = PassTable::build(&filters, &windows, parts).unwrap();
+            assert_eq!(serial.total_matched(), parallel.total_matched(), "parts={parts}");
+            for f in 0..67 {
+                for w in 0..61 {
+                    let want = serial.cost(f, w, f + w, 1);
+                    assert_eq!(parallel.cost(f, w, f + w, 1), want, "parts={parts}");
+                    assert_eq!(auto.cost(f, w, f + w, 1), want, "parts={parts}");
+                }
+            }
+        }
+    }
+
+    /// `build_bytes` pins the tiled build's peak footprint: the final
+    /// u16 lane table plus both transient SoA plane sets.
+    #[test]
+    fn build_bytes_accounts_table_and_planes() {
+        // 64×256 pairs of 18-chunk rows at parts=4: table 64·256·4·2 B;
+        // planes (64+256) rows × ⌈18/2⌉ = 9 words × 8 B × 4 lanes.
+        assert_eq!(
+            PassTable::build_bytes(64, 256, 18, 4),
+            64 * 256 * 4 * 2 + (64 + 256) * 9 * 8 * 4
+        );
+        // parts=1 packs two words per chunk into a single lane.
+        assert_eq!(
+            PassTable::build_bytes(8, 8, 5, 1),
+            8 * 8 * 2 + (8 + 8) * 10 * 8
+        );
+        // The finished table alone is still what `bytes()` reports.
+        let mut rng = Pcg32::seeded(0x5121);
+        let f = MaskMatrix::random(&mut rng, 5, 700, 0.4, 0.1);
+        let w = MaskMatrix::random(&mut rng, 7, 700, 0.6, 0.2);
+        let t = PassTable::build(&f, &w, 4).unwrap();
+        assert_eq!(t.bytes(), 5 * 7 * 4 * 2);
+        assert!(PassTable::build_bytes(5, 7, 6, 4) > t.bytes());
     }
 
     #[test]

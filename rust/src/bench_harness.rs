@@ -8,6 +8,7 @@
 use std::time::Instant;
 
 use crate::util::stats::Summary;
+use crate::util::Json;
 
 /// Result of timing one closure.
 #[derive(Debug, Clone)]
@@ -63,6 +64,181 @@ pub fn bench_header(what: &str) {
     println!("================================================================");
 }
 
+/// Ignore cost fields whose baseline is below these floors — timings
+/// that small are measurement noise, and a 2× guard on noise flakes.
+/// Smoke-sized per-pass numbers get a much higher floor: at smoke
+/// geometries a pool-parallel build's ns/pass is dominated by batch
+/// hand-off and condvar latency (a ~200 µs hand-off over ~1 K passes
+/// reads as ~200 ns/pass), which scheduler contention on shared CI
+/// runners can swing several-fold with no real regression.
+const GUARD_MIN_MS: f64 = 0.5;
+const GUARD_MIN_NS: f64 = 100.0;
+const GUARD_MIN_NS_SMOKE: f64 = 2000.0;
+
+/// Write the bench summary JSON to `out_path`, then run the regression
+/// guard when `BENCH_GUARD` is set truthy: every wall-clock field in
+/// `summary.rows[]` (suffix `_ms` / `_ns` / `_ns_per_pass`) is
+/// compared against the derived baseline file
+/// (`<out stem>[.smoke].baseline.json`), which is *sealed* from the
+/// current summary on first run (missing file) — the same self-sealing
+/// convention as the golden cycle files. A field fails when current >
+/// ratio × baseline; the ratio defaults to 2.0 (`BENCH_GUARD_RATIO`) —
+/// generous enough to absorb same-machine noise, tight enough to catch
+/// gross regressions. Derived rate fields (`_per_s`) are never
+/// compared: they come from the same samples as the cost fields but
+/// have no magnitude-independent noise floor. Summaries whose `smoke`
+/// flag differs from the baseline's are never compared either.
+pub fn finish_bench(out_path: &str, summary: &Json) {
+    match std::fs::write(out_path, format!("{}\n", summary.pretty())) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("warn: could not write {out_path}: {e}"),
+    }
+    let guard = std::env::var("BENCH_GUARD")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if !guard {
+        return;
+    }
+    let smoke = summary.get("smoke").and_then(Json::as_bool).unwrap_or(false);
+    let baseline_path = &baseline_path_for(out_path, smoke);
+    let ratio = std::env::var("BENCH_GUARD_RATIO")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|r| *r >= 1.0)
+        .unwrap_or(2.0);
+    match std::fs::read_to_string(baseline_path) {
+        Err(_) => seal_baseline(baseline_path, summary, "sealed"),
+        Ok(s) => {
+            let baseline = Json::parse(&s)
+                .unwrap_or_else(|e| panic!("unparseable bench baseline {baseline_path}: {e}"));
+            match check_against_baseline(summary, &baseline, ratio) {
+                // Zero comparable fields means the baseline no longer
+                // covers this summary (smoke-flag or row-name drift) —
+                // saying "OK" here would silently disable the guard,
+                // so reseal instead and say so loudly.
+                Ok(0) => {
+                    println!(
+                        "bench guard WARNING: 0 timed fields matched {baseline_path} \
+                         (smoke-flag or row drift?) — guard did not run"
+                    );
+                    seal_baseline(baseline_path, summary, "re-sealed (drift)");
+                }
+                Ok(n) => {
+                    println!(
+                        "bench guard OK: {n} timed fields within {ratio}x of {baseline_path}"
+                    );
+                    // Rolling baseline (`BENCH_GUARD_RESEAL`): after a
+                    // *passing* comparison, advance the baseline to the
+                    // current numbers so the next run guards against
+                    // this one rather than the first seal ever. CI sets
+                    // it (its cache carries the file across pushes); a
+                    // failing run never reseals, so regressions cannot
+                    // poison the baseline.
+                    let reseal = std::env::var("BENCH_GUARD_RESEAL")
+                        .map(|v| !v.is_empty() && v != "0")
+                        .unwrap_or(false);
+                    if reseal {
+                        seal_baseline(baseline_path, summary, "re-sealed");
+                    }
+                }
+                Err(violations) => panic!(
+                    "bench guard FAILED vs {baseline_path} (ratio {ratio}x):\n{}",
+                    violations.join("\n")
+                ),
+            }
+        }
+    }
+}
+
+fn seal_baseline(path: &str, summary: &Json, verb: &str) {
+    match std::fs::write(path, format!("{}\n", summary.pretty())) {
+        Ok(()) => println!("{verb} bench guard baseline -> {path}"),
+        Err(e) => eprintln!("warn: could not seal baseline {path}: {e}"),
+    }
+}
+
+/// The guard baseline sibling of a summary file:
+/// `BENCH_x.json` → `BENCH_x.baseline.json` (full sizes) or
+/// `BENCH_x.smoke.baseline.json` (smoke sizes) — gitignored,
+/// machine-local.
+fn baseline_path_for(out_path: &str, smoke: bool) -> String {
+    let stem = out_path.strip_suffix(".json").unwrap_or(out_path);
+    if smoke {
+        format!("{stem}.smoke.baseline.json")
+    } else {
+        format!("{stem}.baseline.json")
+    }
+}
+
+/// Row identity for baseline matching: the `name` field, or
+/// `workers:<n>` for the service rows keyed by worker count.
+fn row_key(row: &Json) -> Option<String> {
+    if let Some(n) = row.get("name").and_then(Json::as_str) {
+        return Some(n.to_string());
+    }
+    row.get("workers")
+        .and_then(Json::as_u64)
+        .map(|w| format!("workers:{w}"))
+}
+
+/// The comparison half of the guard, separated for unit testing.
+/// `Ok(n)` = `n` fields checked within bounds; `Err` lists violations.
+pub fn check_against_baseline(
+    current: &Json,
+    baseline: &Json,
+    ratio: f64,
+) -> Result<usize, Vec<String>> {
+    if current.get("smoke").and_then(Json::as_bool)
+        != baseline.get("smoke").and_then(Json::as_bool)
+    {
+        return Ok(0);
+    }
+    let smoke = current.get("smoke").and_then(Json::as_bool) == Some(true);
+    let ns_floor = if smoke { GUARD_MIN_NS_SMOKE } else { GUARD_MIN_NS };
+    let cur_rows = current.get("rows").and_then(Json::as_arr).unwrap_or(&[]);
+    let base_rows = baseline.get("rows").and_then(Json::as_arr).unwrap_or(&[]);
+    let mut violations = Vec::new();
+    let mut checked = 0usize;
+    for row in cur_rows {
+        let Some(key) = row_key(row) else { continue };
+        let Some(base_row) = base_rows
+            .iter()
+            .find(|r| row_key(r).as_deref() == Some(key.as_str()))
+        else {
+            continue;
+        };
+        let Some(fields) = row.as_obj() else { continue };
+        for (field, val) in fields {
+            let is_ms = field.ends_with("_ms");
+            if !is_ms && !field.ends_with("_ns") && !field.ends_with("_ns_per_pass") {
+                continue;
+            }
+            let (Some(cur), Some(base)) =
+                (val.as_f64(), base_row.get(field).and_then(Json::as_f64))
+            else {
+                continue;
+            };
+            if !cur.is_finite() || !base.is_finite() || cur <= 0.0 || base <= 0.0 {
+                continue;
+            }
+            if base < if is_ms { GUARD_MIN_MS } else { ns_floor } {
+                continue;
+            }
+            checked += 1;
+            if cur > base * ratio {
+                violations.push(format!(
+                    "  {key}.{field}: {cur:.4} > {ratio}x baseline {base:.4}"
+                ));
+            }
+        }
+    }
+    if violations.is_empty() {
+        Ok(checked)
+    } else {
+        Err(violations)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +257,85 @@ mod tests {
     fn report_contains_name() {
         let t = bench("xyz", 0, 1, || {});
         assert!(t.report().contains("xyz"));
+    }
+
+    fn summary(smoke: bool, opt_ms: f64, rate: f64) -> Json {
+        let mut row = Json::obj();
+        row.set("name", "barista_alexnet")
+            .set("optimized_ms", opt_ms)
+            .set("optimized_mac_cycles_per_s", rate)
+            .set("cycles", 123.0);
+        let mut s = Json::obj();
+        s.set("bench", "perf_hotpath")
+            .set("smoke", smoke)
+            .set("rows", Json::Arr(vec![row]));
+        s
+    }
+
+    #[test]
+    fn guard_passes_within_ratio_and_counts_fields() {
+        let base = summary(true, 10.0, 1e9);
+        let cur = summary(true, 19.0, 0.6e9);
+        // The cost holds (19 < 2×10) and is the only compared field:
+        // `cycles` has no timed suffix and `_per_s` rates are derived
+        // values, deliberately never guarded.
+        assert_eq!(check_against_baseline(&cur, &base, 2.0), Ok(1));
+    }
+
+    #[test]
+    fn guard_flags_cost_regression() {
+        let base = summary(true, 10.0, 1e9);
+        let slow = summary(true, 21.0, 1e9);
+        let v = check_against_baseline(&slow, &base, 2.0).unwrap_err();
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("optimized_ms"), "{v:?}");
+    }
+
+    #[test]
+    fn guard_skips_smoke_mismatch_unknown_rows_and_noise_floor() {
+        let base = summary(false, 10.0, 1e9);
+        let cur = summary(true, 1000.0, 1.0);
+        assert_eq!(check_against_baseline(&cur, &base, 2.0), Ok(0));
+        // A row absent from the baseline is not comparable.
+        let other = {
+            let mut row = Json::obj();
+            row.set("name", "brand_new_row").set("optimized_ms", 1e6);
+            let mut s = Json::obj();
+            s.set("smoke", true).set("rows", Json::Arr(vec![row]));
+            s
+        };
+        let base2 = summary(true, 10.0, 1e9);
+        assert_eq!(check_against_baseline(&other, &base2, 2.0), Ok(0));
+        // Sub-floor baseline timings are noise, not signal.
+        let tiny_base = summary(true, 0.01, 1e9);
+        let tiny_cur = summary(true, 0.4, 1e9);
+        assert_eq!(check_against_baseline(&tiny_cur, &tiny_base, 2.0), Ok(0));
+    }
+
+    #[test]
+    fn guard_matches_service_rows_by_worker_count() {
+        let mk = |cold_ms: f64| {
+            let mut row = Json::obj();
+            row.set("workers", 4usize)
+                .set("cold_ms", cold_ms)
+                .set("cold_jobs_per_s", 8000.0 / cold_ms);
+            let mut s = Json::obj();
+            s.set("smoke", true).set("rows", Json::Arr(vec![row]));
+            s
+        };
+        assert_eq!(check_against_baseline(&mk(9.0), &mk(10.0), 2.0), Ok(1));
+        assert!(check_against_baseline(&mk(25.0), &mk(10.0), 2.0).is_err());
+    }
+
+    #[test]
+    fn baseline_path_derivation() {
+        assert_eq!(
+            baseline_path_for("/x/BENCH_hotpath.json", false),
+            "/x/BENCH_hotpath.baseline.json"
+        );
+        assert_eq!(
+            baseline_path_for("/x/BENCH_hotpath.json", true),
+            "/x/BENCH_hotpath.smoke.baseline.json"
+        );
     }
 }

@@ -11,7 +11,6 @@
 //! (CSV series + aligned text tables), shared by the CLI, the examples
 //! and the benches.
 
-mod pool;
 pub mod report;
 
 use std::collections::VecDeque;
@@ -20,6 +19,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::arch::simulator_for;
 use crate::config::{ArchKind, SimConfig};
+use crate::pool;
 use crate::sim::{LayerResult, NetworkResult};
 use crate::workload::{Benchmark, NetworkWork};
 

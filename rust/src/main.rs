@@ -22,6 +22,17 @@
 //!   barista batch --networks alexnet,vggnet --archs dense,barista
 //!   barista golden --artifacts artifacts
 
+// Same clippy posture as lib.rs (CI runs `cargo clippy -- -D warnings`
+// over lib + bins): style lints that fight the CLI's explicit
+// match/format idiom are opted out, everything else is a hard error.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_div_ceil,
+    clippy::collapsible_if,
+    clippy::collapsible_else_if,
+)]
+
 use std::time::Instant;
 
 use barista::cli::Args;

@@ -1,14 +1,18 @@
-//! Shared layer-simulation thread pool (DESIGN.md §Perf).
+//! Shared helping thread pool (DESIGN.md §Perf).
 //!
-//! `run_one` fans a job's independent layers out across this pool and
-//! reduces the results in layer order, so a single cold `submit` — the
-//! service's user-facing latency — scales with cores instead of running
-//! layers serially. The pool is global and sized to the machine:
-//! concurrent jobs (scheduler workers, coordinator workers, tests)
-//! share one set of threads instead of each spawning their own, and the
-//! submitting thread *helps* execute its own batch while it waits, so a
-//! batch always makes progress even when every pool thread is busy
-//! elsewhere.
+//! Cross-cutting compute infrastructure with two consumers today:
+//! `coordinator::run_one` fans a job's independent layers out across
+//! this pool ([`run_batch`]) and reduces the results in layer order,
+//! and `arch::PassTable::build` fans a large layer's table tiles out
+//! ([`run_scoped`]) — so a single cold `submit`, the service's
+//! user-facing latency, scales with cores twice over. The pool is
+//! global and sized to the machine: concurrent jobs (scheduler
+//! workers, coordinator workers, tests) share one set of threads
+//! instead of each spawning their own, and the submitting thread
+//! *helps* execute its own batch while it waits, so a batch always
+//! makes progress even when every pool thread is busy elsewhere —
+//! which also makes nested batches (a layer task building its table in
+//! parallel) deadlock-free by construction.
 //!
 //! Determinism: tasks are independent (one per layer, each with its own
 //! simulator) and write to disjoint result slots, so scheduling order
@@ -139,6 +143,34 @@ pub(crate) fn run_batch(tasks: Vec<Task>) {
     }
 }
 
+/// Run a batch of *borrowing* tasks to completion on the pool — the
+/// caller helps drain its own batch exactly like [`run_batch`]. Used by
+/// the parallel pass-table build, whose tile tasks write disjoint
+/// `&mut` slices of one output allocation (no per-tile copies, no
+/// stitch pass).
+///
+/// The lifetime erasure below is sound because this function does not
+/// return until every task has settled: `run_batch` waits on the batch
+/// latch (even when a task panics, the panic is re-raised only after
+/// the whole batch has finished), so no task can run after the `'a`
+/// borrows it captured end.
+// The transmute is lifetime-only; clippy's transmute lints have no
+// model for deliberate scoped-lifetime erasure, so they are opted out
+// for exactly this function.
+#[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+pub(crate) fn run_scoped<'a>(tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+    let tasks: Vec<Task> = tasks
+        .into_iter()
+        .map(|t| {
+            // SAFETY: `Task` differs from the input type only in the
+            // captured lifetime, and all tasks are joined before
+            // `run_scoped` returns (see above).
+            unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(t) }
+        })
+        .collect();
+    run_batch(tasks);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +217,34 @@ mod tests {
     #[test]
     fn empty_batch_is_a_noop() {
         run_batch(Vec::new());
+    }
+
+    /// `run_scoped` tasks may borrow caller data and write disjoint
+    /// `&mut` slices; every element is written exactly once.
+    #[test]
+    fn scoped_tasks_borrow_and_write_disjoint_slices() {
+        let mut out = vec![0u32; 257];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest = out.as_mut_slice();
+            let mut start = 0usize;
+            while !rest.is_empty() {
+                let n = rest.len().min(64);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(n);
+                rest = tail;
+                let base = start;
+                tasks.push(Box::new(move || {
+                    for (i, v) in head.iter_mut().enumerate() {
+                        *v = (base + i) as u32 + 1;
+                    }
+                }));
+                start += n;
+            }
+            run_scoped(tasks);
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1);
+        }
     }
 
     #[test]

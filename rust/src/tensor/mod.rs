@@ -16,6 +16,8 @@
 
 pub mod bitmask;
 pub mod linearize;
+pub mod planes;
 
 pub use bitmask::{ChunkMask, MaskMatrix, SparseChunk, CHUNK_BITS, SUBCHUNK_BITS, SUBCHUNKS};
 pub use linearize::{im2col_dims, LayerGeom};
+pub use planes::MaskPlanes;

@@ -1,0 +1,251 @@
+//! Structure-of-arrays sub-chunk word planes (DESIGN.md §Perf).
+//!
+//! The AoS [`MaskMatrix`] stores one `u128` per chunk — right for the
+//! simulator's ad-hoc row reads, but wrong for the pass-table build
+//! kernel, which wants to stream *one PE lane* across whole rows with
+//! word-parallel popcounts. `MaskPlanes` re-packs a matrix once per
+//! build: for each of the `parts` sub-chunk lanes, that lane's bits
+//! from consecutive chunks are concatenated into a dense `u64` word
+//! stream per row (lane-major, then row-major). Every bit in lane
+//! plane `p` belongs to PE lane `p`, so
+//! `popcount(planeF[p] & planeW[p])` summed over a row pair *is* that
+//! lane's matched count — no variable shifts, no segment masking, and
+//! 64 mask bits per AND+popcount regardless of lane width:
+//!
+//! * `parts == 1` — the lane is the whole 128-bit chunk, stored as two
+//!   words per chunk;
+//! * `parts ∈ {2, 4, 8}` — lane widths 64/32/16 divide 64, so 1/2/4
+//!   consecutive chunks' lane slices pack exactly into each word (the
+//!   tail word is zero-padded; zeros never match, so padding is free).
+
+use crate::tensor::bitmask::{MaskMatrix, CHUNK_BITS};
+
+/// A lane-major repack of one [`MaskMatrix`] for `parts` PE lanes.
+#[derive(Debug, Clone)]
+pub struct MaskPlanes {
+    rows: usize,
+    parts: usize,
+    words_per_row: usize,
+    /// `data[(lane * rows + row) * words_per_row + word]`.
+    data: Vec<u64>,
+}
+
+impl MaskPlanes {
+    /// Whether this layout supports `parts` lanes per chunk. These are
+    /// exactly the divisors of [`CHUNK_BITS`] up to the pass model's
+    /// 8-PE bound, so every tabulatable geometry has a plane layout.
+    pub fn supports(parts: usize) -> bool {
+        matches!(parts, 1 | 2 | 4 | 8)
+    }
+
+    /// Packed `u64` words per row for `chunks` chunks split `parts`
+    /// ways (each lane's tail word is zero-padded).
+    pub fn words_per_row(chunks: usize, parts: usize) -> usize {
+        debug_assert!(Self::supports(parts));
+        if parts == 1 {
+            2 * chunks
+        } else {
+            // Lane width = CHUNK_BITS / parts divides 64, so each word
+            // holds the lane slice of `64 / width` consecutive chunks.
+            let lanes_per_word = 64 / (CHUNK_BITS / parts);
+            (chunks + lanes_per_word - 1) / lanes_per_word
+        }
+    }
+
+    /// Backing bytes a plane set for (`rows` × `chunks`, `parts`) takes
+    /// — scratch accounting for table-build memory budgets, computable
+    /// before any allocation happens.
+    pub fn bytes_for(rows: usize, chunks: usize, parts: usize) -> usize {
+        parts * rows * Self::words_per_row(chunks, parts) * std::mem::size_of::<u64>()
+    }
+
+    /// Re-pack `m` into lane planes. `None` when `parts` is not a
+    /// supported lane split.
+    pub fn build(m: &MaskMatrix, parts: usize) -> Option<MaskPlanes> {
+        if !Self::supports(parts) {
+            return None;
+        }
+        let wpr = Self::words_per_row(m.chunks, parts);
+        let mut data = vec![0u64; parts * m.rows * wpr];
+        if parts == 1 {
+            for r in 0..m.rows {
+                let out = &mut data[r * wpr..(r + 1) * wpr];
+                for (c, ch) in m.row(r).iter().enumerate() {
+                    out[2 * c] = ch.mask as u64;
+                    out[2 * c + 1] = (ch.mask >> 64) as u64;
+                }
+            }
+        } else {
+            let width = CHUNK_BITS / parts;
+            let lanes_per_word = 64 / width;
+            let lane_mask: u128 = (1u128 << width) - 1;
+            for lane in 0..parts {
+                let shift = lane * width;
+                for r in 0..m.rows {
+                    let out = &mut data[(lane * m.rows + r) * wpr..][..wpr];
+                    for (c, ch) in m.row(r).iter().enumerate() {
+                        let bits = ((ch.mask >> shift) & lane_mask) as u64;
+                        out[c / lanes_per_word] |= bits << ((c % lanes_per_word) * width);
+                    }
+                }
+            }
+        }
+        Some(MaskPlanes {
+            rows: m.rows,
+            parts,
+            words_per_row: wpr,
+            data,
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// Packed words per row (identical across lanes).
+    pub fn row_words(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// The packed word stream of `row` in lane `lane`.
+    #[inline]
+    pub fn lane_row(&self, lane: usize, row: usize) -> &[u64] {
+        debug_assert!(lane < self.parts && row < self.rows);
+        &self.data[(lane * self.rows + row) * self.words_per_row..][..self.words_per_row]
+    }
+
+    /// Bytes of backing storage.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Pcg32;
+
+    /// Ground-truth lane count straight from the AoS masks.
+    fn lane_matched(
+        a: &MaskMatrix,
+        ra: usize,
+        b: &MaskMatrix,
+        rb: usize,
+        parts: usize,
+    ) -> Vec<u64> {
+        let width = CHUNK_BITS / parts;
+        let seg: u128 = if width == CHUNK_BITS {
+            u128::MAX
+        } else {
+            (1u128 << width) - 1
+        };
+        let mut out = vec![0u64; parts];
+        for (x, y) in a.row(ra).iter().zip(b.row(rb)) {
+            let m = x.mask & y.mask;
+            for (p, o) in out.iter_mut().enumerate() {
+                *o += ((m >> (p * width)) & seg).count_ones() as u64;
+            }
+        }
+        out
+    }
+
+    /// Lane count through the planes: popcount of the ANDed word streams.
+    fn lane_dot(a: &MaskPlanes, ra: usize, b: &MaskPlanes, rb: usize, lane: usize) -> u64 {
+        a.lane_row(lane, ra)
+            .iter()
+            .zip(b.lane_row(lane, rb))
+            .map(|(x, y)| (x & y).count_ones() as u64)
+            .sum()
+    }
+
+    #[test]
+    fn prop_plane_dot_equals_aos_lane_count() {
+        run_prop("plane dot == AoS lane count", 0x504E5, 120, |rng| {
+            let rows = 1 + rng.gen_range(6) as usize;
+            let chunks = 1 + rng.gen_range(9) as usize;
+            let vec_len = chunks * CHUNK_BITS - rng.gen_range(CHUNK_BITS as u32) as usize;
+            let da = rng.next_f64();
+            let a = MaskMatrix::random(rng, rows, vec_len, da, 0.2);
+            let db = rng.next_f64();
+            let b = MaskMatrix::random(rng, rows, vec_len, db, 0.2);
+            for parts in [1usize, 2, 4, 8] {
+                let pa = MaskPlanes::build(&a, parts).expect("supported");
+                let pb = MaskPlanes::build(&b, parts).expect("supported");
+                for ra in 0..rows {
+                    for rb in 0..rows {
+                        let want = lane_matched(&a, ra, &b, rb, parts);
+                        for (lane, w) in want.iter().enumerate() {
+                            let got = lane_dot(&pa, ra, &pb, rb, lane);
+                            if got != *w {
+                                return Err(format!(
+                                    "parts={parts} lane={lane} rows ({ra},{rb}): {got} != {w}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packing_geometry() {
+        // 5 chunks: parts=1 → 10 words; parts=2 → 5; parts=4 → 3 (tail
+        // padded); parts=8 → 2.
+        assert_eq!(MaskPlanes::words_per_row(5, 1), 10);
+        assert_eq!(MaskPlanes::words_per_row(5, 2), 5);
+        assert_eq!(MaskPlanes::words_per_row(5, 4), 3);
+        assert_eq!(MaskPlanes::words_per_row(5, 8), 2);
+        assert_eq!(MaskPlanes::bytes_for(3, 5, 4), 4 * 3 * 3 * 8);
+    }
+
+    #[test]
+    fn rejects_unsupported_parts() {
+        let mut rng = Pcg32::seeded(1);
+        let m = MaskMatrix::random(&mut rng, 2, 256, 0.5, 0.0);
+        for parts in [0usize, 3, 5, 6, 7, 16] {
+            assert!(!MaskPlanes::supports(parts));
+            assert!(MaskPlanes::build(&m, parts).is_none());
+        }
+    }
+
+    #[test]
+    fn accessors_and_bytes() {
+        let mut rng = Pcg32::seeded(2);
+        let m = MaskMatrix::random(&mut rng, 4, 700, 0.5, 0.1);
+        let p = MaskPlanes::build(&m, 4).unwrap();
+        assert_eq!(p.rows(), 4);
+        assert_eq!(p.parts(), 4);
+        assert_eq!(p.row_words(), 3); // 6 chunks, 2 lane slices per word
+        assert_eq!(p.bytes(), MaskPlanes::bytes_for(4, 6, 4));
+        assert_eq!(p.lane_row(3, 3).len(), 3);
+    }
+
+    /// Total popcount over all planes equals the matrix nnz — packing
+    /// loses and duplicates nothing.
+    #[test]
+    fn planes_partition_all_bits() {
+        let mut rng = Pcg32::seeded(3);
+        let m = MaskMatrix::random(&mut rng, 6, 1000, 0.43, 0.2);
+        for parts in [1usize, 2, 4, 8] {
+            let p = MaskPlanes::build(&m, parts).unwrap();
+            let mut total = 0u64;
+            for lane in 0..parts {
+                for r in 0..m.rows {
+                    total += p
+                        .lane_row(lane, r)
+                        .iter()
+                        .map(|w| w.count_ones() as u64)
+                        .sum::<u64>();
+                }
+            }
+            assert_eq!(total, m.total_nnz(), "parts={parts}");
+        }
+    }
+}

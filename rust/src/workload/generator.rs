@@ -79,7 +79,14 @@ impl LayerWork {
         if let Some(t) = slots.get(&parts) {
             return t.clone();
         }
-        let bytes = self.filters.rows * self.windows.rows * parts * 2;
+        // Budget the tiled build's *peak* footprint — final table plus
+        // the transient SoA plane scratch — not just the table itself.
+        let bytes = PassTable::build_bytes(
+            self.filters.rows,
+            self.windows.rows,
+            self.filters.chunks,
+            parts,
+        );
         let built = if bytes > PASS_TABLE_MAX_BYTES {
             None
         } else {
@@ -509,6 +516,21 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The table budget accounts the tiled build's peak footprint —
+    /// table plus both transient SoA plane sets — and paper-sized
+    /// layers stay comfortably tabulated under it.
+    #[test]
+    fn pass_table_budget_counts_build_scratch() {
+        let cfg = small_cfg();
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let l = &net.layers[1];
+        let want = PassTable::build_bytes(l.filters.rows, l.windows.rows, l.filters.chunks, 4);
+        let table_only = l.filters.rows * l.windows.rows * 4 * 2;
+        assert!(want > table_only, "plane scratch must be accounted");
+        assert!(want <= PASS_TABLE_MAX_BYTES, "paper layers stay tabulated");
+        assert!(l.pass_table(4).is_some());
     }
 
     #[test]

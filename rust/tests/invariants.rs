@@ -17,8 +17,11 @@
 //!    (`matched_macs_sampled_cached == matched_macs_sampled`);
 //! 4. `gb_s_order` is a permutation and even/odd GB-S assignments are
 //!    mutually reversed;
-//! 5. every sparsity model tracks its target density.
+//! 5. every sparsity model tracks its target density;
+//! 6. the tiled-SoA table build (serial and pool-parallel) is
+//!    bit-identical to the scalar reference build.
 
+use barista::arch::PassTable;
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{run_one, sweep_requests, RunRequest};
 use barista::tensor::LayerGeom;
@@ -174,6 +177,42 @@ fn prop_pass_table_equals_direct_path() {
         let direct = l.matched_macs_sampled();
         if cached != direct {
             return Err(format!("table {cached} != direct {direct}"));
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 6: the tiled-SoA table build — serial or fanned across
+/// the layer pool — is bit-identical to the scalar reference build on
+/// random layers (all costs, all rotations, every supported `parts`).
+#[test]
+fn prop_tiled_soa_build_matches_scalar() {
+    run_prop("tiled SoA build == scalar build", prop_seed(), cases(12), |rng| {
+        let l = random_layer(rng);
+        let parts = [1usize, 2, 4, 8][rng.gen_range(4) as usize];
+        let scalar = PassTable::build_scalar(&l.filters, &l.windows, parts);
+        let tiled = PassTable::build_serial(&l.filters, &l.windows, parts);
+        let parallel = PassTable::build_parallel(&l.filters, &l.windows, parts);
+        let (Some(scalar), Some(tiled), Some(parallel)) = (scalar, tiled, parallel) else {
+            return Err(format!("parts={parts}: geometry failed to tabulate"));
+        };
+        let rot = rng.gen_range(parts as u32) as usize;
+        let oh = rng.gen_range(3) as u64;
+        for f in 0..l.filters.rows {
+            for w in 0..l.windows.rows {
+                let want = scalar.cost(f, w, rot, oh);
+                if tiled.cost(f, w, rot, oh) != want {
+                    return Err(format!("serial != scalar at parts={parts} f={f} w={w}"));
+                }
+                if parallel.cost(f, w, rot, oh) != want {
+                    return Err(format!("parallel != scalar at parts={parts} f={f} w={w}"));
+                }
+            }
+        }
+        if tiled.total_matched() != scalar.total_matched()
+            || parallel.total_matched() != scalar.total_matched()
+        {
+            return Err(format!("parts={parts}: total_matched diverged"));
         }
         Ok(())
     });

@@ -8,9 +8,10 @@
 //! breakdown, traffic, energy — for every architecture, and a pinned
 //! golden value catches silent drift across releases.
 
+use barista::arch::{pass_pe_cycles, PassTable};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{run_one, run_one_reference, ExecOptions, RunRequest};
-use barista::workload::Benchmark;
+use barista::workload::{Benchmark, NetworkWork, SparsityModel};
 
 fn req(arch: ArchKind, window_cap: usize, batch: usize) -> RunRequest {
     let mut c = SimConfig::paper(arch);
@@ -127,6 +128,67 @@ fn pinned_golden_barista_alexnet_cycles() {
             std::fs::create_dir_all(dir).expect("create golden dir");
             std::fs::write(path, format!("{got}\n")).expect("seal golden file");
             println!("sealed golden: {got} -> {path}");
+        }
+    }
+}
+
+/// The tiled-SoA table build (PR 4) — auto, serial, and forced pool-
+/// parallel — must equal the scalar AoS reference build *and* the
+/// direct per-pass arithmetic, bit for bit, for every supported
+/// partition count × rotation × sparsity scenario on a real workload
+/// layer. This is the kernel-level contract the end-to-end equivalence
+/// tests above inherit.
+#[test]
+fn tiled_soa_build_bit_identical_across_scenarios() {
+    for model in SparsityModel::ALL {
+        let mut cfg = SimConfig::paper(ArchKind::Barista);
+        cfg.window_cap = 24;
+        cfg.batch = 1;
+        cfg.sparsity = model;
+        let net = NetworkWork::generate(Benchmark::AlexNet, &cfg);
+        let layer = &net.layers[1];
+        for parts in [1usize, 2, 4, 8] {
+            let scalar = PassTable::build_scalar(&layer.filters, &layer.windows, parts)
+                .expect("paper geometry tabulates");
+            let auto = PassTable::build(&layer.filters, &layer.windows, parts).unwrap();
+            let serial = PassTable::build_serial(&layer.filters, &layer.windows, parts).unwrap();
+            let parallel =
+                PassTable::build_parallel(&layer.filters, &layer.windows, parts).unwrap();
+            for f in 0..layer.filters.rows {
+                for w in 0..layer.windows.rows {
+                    for rot in 0..parts {
+                        let want = pass_pe_cycles(
+                            layer.filters.row(f),
+                            layer.windows.row(w),
+                            parts,
+                            rot,
+                            2,
+                        );
+                        assert_eq!(
+                            scalar.cost(f, w, rot, 2),
+                            want,
+                            "{model} parts={parts} scalar f={f} w={w} rot={rot}"
+                        );
+                        assert_eq!(
+                            auto.cost(f, w, rot, 2),
+                            want,
+                            "{model} parts={parts} auto f={f} w={w} rot={rot}"
+                        );
+                        assert_eq!(
+                            serial.cost(f, w, rot, 2),
+                            want,
+                            "{model} parts={parts} serial f={f} w={w} rot={rot}"
+                        );
+                        assert_eq!(
+                            parallel.cost(f, w, rot, 2),
+                            want,
+                            "{model} parts={parts} parallel f={f} w={w} rot={rot}"
+                        );
+                    }
+                }
+            }
+            assert_eq!(scalar.total_matched(), parallel.total_matched());
+            assert_eq!(scalar.total_matched(), layer.matched_macs_sampled());
         }
     }
 }
