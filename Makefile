@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt clippy prop examples bench bench-smoke bench-table bench-figs artifacts serve clean
+.PHONY: build test fmt clippy prop examples test-store ci bench bench-smoke bench-table bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -20,21 +20,47 @@ fmt:
 clippy:
 	cd rust && cargo clippy -- -D warnings
 
-# Deep local run of the property-based invariant suite (tests/invariants.rs):
-# 8x the CI case counts. Override the (decimal) seed to explore new ground:
+# Deep local run of the property suites (tests/invariants.rs +
+# tests/store_persistence.rs — the same pair the nightly CI job runs):
+# 8x the CI case counts. Override the (decimal) seed to explore new
+# ground or reproduce a nightly failure:
 #   make prop PROP_SEED=12345
 prop:
 	cd rust && PROP_CASES=8 $(if $(PROP_SEED),PROP_SEED=$(PROP_SEED)) \
 		cargo test --release --test invariants -- --nocapture
+	cd rust && PROP_CASES=8 $(if $(PROP_SEED),PROP_SEED=$(PROP_SEED)) \
+		cargo test --release --test store_persistence -- --nocapture
 
 # Examples must keep compiling (CI enforces this too).
 examples:
 	cd rust && cargo build --examples
 
-# Perf benches: writes BENCH_hotpath.json / BENCH_service.json at the
-# repo root (machine-readable before/after numbers for DESIGN.md §Perf).
+# Store crash-recovery + warm-restart integration tests, release mode
+# (what the CI `test` job runs; nightly reruns them at PROP_CASES=8).
+test-store:
+	cd rust && cargo test --release --test store_persistence
+
+# Local mirror of the CI push jobs — `make ci` green implies the
+# workflow's `lint` + `test` jobs are green (same steps, same order:
+# lint first, then the test job's build/test/invariants/store/example/
+# bench-smoke sequence).
+ci:
+	cd rust && cargo fmt --check
+	cd rust && cargo clippy -- -D warnings
+	cd rust && cargo build --examples
+	cd rust && cargo build --release
+	cd rust && cargo test -q
+	cd rust && PROP_SEED=195499386 PROP_CASES=2 cargo test --release --test invariants
+	cd rust && cargo test --release --test store_persistence
+	cd rust && cargo run --release --example scenarios
+	$(MAKE) bench-smoke
+
+# Perf benches: writes BENCH_hotpath.json / BENCH_service.json /
+# BENCH_table.json at the repo root (machine-readable before/after
+# numbers for DESIGN.md §Perf) — the same bench set as bench-smoke, at
+# full sizes.
 bench:
-	cd rust && cargo bench --bench perf_hotpath --bench service_throughput
+	cd rust && cargo bench --bench perf_hotpath --bench service_throughput --bench table_build
 
 # CI-sized variant of the perf benches (same JSON artifacts, tiny
 # sizes) with the regression guard on: the first run seals

@@ -3,16 +3,20 @@
 //! workload (all distinct jobs, cold cache) and a 100% cache-hit
 //! workload (the same jobs resubmitted). The gap is the service layer's
 //! amortization headroom; the cold scaling curve is the worker-pool
-//! speedup. Prints one JSON summary line (`service_throughput_summary`)
-//! for the perf trajectory.
+//! speedup. A final warm-restart row kills a store-backed scheduler and
+//! replays the corpus through a fresh one (cold hot-tier, warm journal):
+//! the cold-tier hit rate vs the simulate rate is what `--cache-dir`
+//! buys across a deploy. Prints one JSON summary line
+//! (`service_throughput_summary`) for the perf trajectory.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use barista::bench_harness::{bench_header, finish_bench};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::RunRequest;
-use barista::service::{Scheduler, SchedulerConfig};
-use barista::util::Json;
+use barista::service::{Scheduler, SchedulerConfig, Source, Store};
+use barista::util::{scratch_dir, Json};
 use barista::workload::Benchmark;
 
 fn job(seed: u64) -> RunRequest {
@@ -28,7 +32,7 @@ fn job(seed: u64) -> RunRequest {
 
 fn main() {
     let smoke = std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
-    bench_header("service throughput: scheduler jobs/sec (cold vs cached)");
+    bench_header("service throughput: scheduler jobs/sec (cold vs cached vs warm restart)");
     let jobs: usize = if smoke { 8 } else { 32 };
     let worker_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 16] };
     let reqs: Vec<RunRequest> = (0..jobs as u64).map(job).collect();
@@ -44,6 +48,7 @@ fn main() {
             shards: 4,
             queue_cap: 256,
             cache_bytes: 64 << 20,
+            store: None,
         });
 
         // 0% hit: every job distinct, cache cold.
@@ -76,6 +81,59 @@ fn main() {
             .set("cached_jobs_per_s", warm_jps);
         rows.push(row);
     }
+
+    // Warm restart: simulate + journal in one scheduler lifetime, kill
+    // it, then replay the whole corpus through a fresh scheduler whose
+    // only warmth is the on-disk journal. Everything must come back as
+    // store hits (zero re-simulation) and the replay rate dwarfs the
+    // simulate rate — the acceptance bar is >=10x.
+    let dir = scratch_dir("bench-store");
+    let sim_s = {
+        let sched = Scheduler::new(SchedulerConfig {
+            workers: 4,
+            shards: 4,
+            queue_cap: 256,
+            cache_bytes: 64 << 20,
+            store: Some(Arc::new(Store::open(&dir).expect("open store"))),
+        });
+        let t0 = Instant::now();
+        sched.run_results(&reqs).expect("simulate + journal");
+        t0.elapsed().as_secs_f64()
+    }; // scheduler dropped = process "killed"
+    let sched = Scheduler::new(SchedulerConfig {
+        workers: 4,
+        shards: 4,
+        queue_cap: 256,
+        cache_bytes: 64 << 20,
+        store: Some(Arc::new(Store::open(&dir).expect("reopen store"))),
+    });
+    let t0 = Instant::now();
+    let replay = sched.run_all(&reqs).expect("warm-restart replay");
+    let restart_s = t0.elapsed().as_secs_f64();
+    assert!(
+        replay.iter().all(|o| o.source == Source::StoreHit),
+        "every replayed job must be a cold-tier hit"
+    );
+    assert_eq!(sched.stats().executed, 0, "zero re-simulation after restart");
+    drop(sched);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let sim_jps = jobs as f64 / sim_s.max(1e-9);
+    let restart_jps = jobs as f64 / restart_s.max(1e-9);
+    println!(
+        "{:<8} {sim_jps:>12.1} {restart_jps:>12.1} {:>9.1}x   (cold-tier replay after restart)",
+        "restart",
+        restart_jps / sim_jps.max(1e-9)
+    );
+    let mut row = Json::obj();
+    row.set("name", "warm_restart")
+        .set("jobs", jobs)
+        .set("simulate_ms", sim_s * 1e3)
+        .set("replay_ms", restart_s * 1e3)
+        .set("simulate_jobs_per_s", sim_jps)
+        .set("replay_jobs_per_s", restart_jps)
+        .set("replay_speedup", restart_jps / sim_jps.max(1e-9));
+    rows.push(row);
 
     let mut summary = Json::obj();
     summary

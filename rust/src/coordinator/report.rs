@@ -236,6 +236,27 @@ pub fn results_json(results: &[RunResult]) -> Json {
     Json::Arr(results.iter().map(|r| r.network.to_json()).collect())
 }
 
+/// One-line job accounting for a figure/sweep run through the
+/// cache-aware scheduler: how many jobs were simulated vs served from
+/// each reuse path (hot cache, persistent store, in-flight dedup).
+/// Shared by `barista report` (per figure) and `barista sweep`; on a
+/// warm `--cache-dir` store the interesting line reads
+/// `0 simulated, ... N store hits`.
+pub fn job_accounting(
+    label: &str,
+    jobs: usize,
+    executed: u64,
+    cache_hits: u64,
+    store_hits: u64,
+    deduped: u64,
+    wall_ms: f64,
+) -> String {
+    format!(
+        "[{label}] {jobs} jobs: {executed} simulated, {cache_hits} cache hits, \
+         {store_hits} store hits, {deduped} deduped — {wall_ms:.0} ms wall"
+    )
+}
+
 /// Write a report file under `out/`, creating the directory.
 pub fn write_out(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::Path::new("out");
@@ -330,6 +351,15 @@ mod tests {
             let g: f64 = line.rsplit(',').next().unwrap().parse().unwrap();
             assert!((g - 1.0).abs() < 1e-9, "{line}");
         }
+    }
+
+    #[test]
+    fn job_accounting_line_names_every_reuse_path() {
+        let line = job_accounting("fig7", 40, 0, 3, 37, 0, 12.0);
+        assert!(line.starts_with("[fig7] 40 jobs:"), "{line}");
+        assert!(line.contains("0 simulated"), "{line}");
+        assert!(line.contains("37 store hits"), "{line}");
+        assert!(line.contains("3 cache hits"), "{line}");
     }
 
     #[test]

@@ -33,12 +33,15 @@
     clippy::collapsible_else_if,
 )]
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use barista::cli::Args;
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{self, report, run_one, RunRequest};
-use barista::service::{Client, JobSpec, Scheduler, SchedulerConfig, Server, DEFAULT_ADDR};
+use barista::service::{
+    Client, JobSpec, Scheduler, SchedulerConfig, Server, Store, DEFAULT_ADDR,
+};
 use barista::util::Json;
 use barista::workload::{load_network_file, network, Benchmark, SparsityModel};
 
@@ -83,14 +86,15 @@ fn print_help() {
          \x20 simulate  --network <name|file.json> --arch <name> [--window-cap N] [--batch N]\n\
          \x20           [--seed N] [--sparsity MODEL]\n\
          \x20 sweep     [--window-cap N] [--batch N] [--seed N] [--sparsity MODEL] [--out FILE]\n\
-         \x20           [--workers N]\n\
+         \x20           [--workers N] [--cache-dir DIR]\n\
          \x20 report    --figure <fig7|fig8|fig9|scenarios|all|comma,list> [--window-cap N]\n\
-         \x20           [--sparsity MODEL] [--workers N]\n\
+         \x20           [--sparsity MODEL] [--workers N] [--cache-dir DIR]\n\
          \x20 serve     [--addr HOST:PORT] [--workers N] [--shards N] [--queue-cap N] [--cache-mb N]\n\
+         \x20           [--cache-dir DIR]   (persistent result store; survives restarts)\n\
          \x20 submit    [--addr HOST:PORT] --network <name|file.json> [--arch <name>]\n\
-         \x20           [--window-cap N] [--sparsity MODEL] [--json]\n\
+         \x20           [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
          \x20 batch     [--addr HOST:PORT] [--networks a,b|all] [--archs x,y|fig7]\n\
-         \x20           [--window-cap N] [--sparsity MODEL]\n\
+         \x20           [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
          \x20 golden    [--artifacts DIR]\n\
          \x20 info      [--network <name|file.json>]\n\
          \n\
@@ -145,7 +149,7 @@ fn parse_benchmark(args: &Args) -> Result<Benchmark, String> {
 }
 
 /// Scheduler sizing from the shared `--workers`/`--shards`/`--queue-cap`
-/// /`--cache-mb` options (0 / absent keeps the default).
+/// /`--cache-mb`/`--cache-dir` options (0 / absent keeps the default).
 fn scheduler_config(args: &Args) -> Result<SchedulerConfig, String> {
     let mut cfg = SchedulerConfig::default();
     let workers = args.get_usize("workers", 0)?;
@@ -163,6 +167,27 @@ fn scheduler_config(args: &Args) -> Result<SchedulerConfig, String> {
     let cache_mb = args.get_usize("cache-mb", 0)?;
     if cache_mb > 0 {
         cfg.cache_bytes = cache_mb << 20;
+    }
+    if let Some(dir) = args.get("cache-dir") {
+        let store = Store::open(std::path::Path::new(dir))
+            .map_err(|e| format!("open --cache-dir {dir}: {e}"))?;
+        let st = store.stats();
+        eprintln!(
+            "cache-dir {dir}: {} records recovered ({} KB journal{}{})",
+            st.recovered_records,
+            st.journal_bytes >> 10,
+            if st.dropped_tail {
+                ", torn tail truncated"
+            } else {
+                ""
+            },
+            if st.stale_records > 0 {
+                ", stale records pending compaction"
+            } else {
+                ""
+            },
+        );
+        cfg.store = Some(Arc::new(store));
     }
     Ok(cfg)
 }
@@ -212,15 +237,38 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     args.finish(
-        &["window-cap", "batch", "seed", "sparsity", "out", "workers"],
+        &[
+            "window-cap",
+            "batch",
+            "seed",
+            "sparsity",
+            "out",
+            "workers",
+            "cache-dir",
+        ],
         &[],
     )?;
     let base = parse_common(args, ArchKind::Barista)?;
     let sched = Scheduler::new(scheduler_config(args)?);
     let reqs = coordinator::sweep_requests(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    let t0 = Instant::now();
     let results = sched.run_results(&reqs).map_err(|e| e.to_string())?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let (txt, _csv) = report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7);
     println!("{txt}");
+    let st = sched.stats();
+    println!(
+        "{}",
+        report::job_accounting(
+            "sweep",
+            reqs.len(),
+            st.executed,
+            st.cache_hits,
+            st.store_hits,
+            st.deduped,
+            wall_ms
+        )
+    );
     if let Some(out) = args.get("out") {
         std::fs::write(out, report::results_json(&results).pretty())
             .map_err(|e| format!("write {out}: {e}"))?;
@@ -251,6 +299,7 @@ fn cmd_report(args: &Args) -> Result<(), String> {
             "shards",
             "queue-cap",
             "cache-mb",
+            "cache-dir",
         ],
         &[],
     )?;
@@ -324,12 +373,16 @@ fn cmd_report(args: &Args) -> Result<(), String> {
             .map_err(|e| format!("write out/{fig}.csv: {e}"))?;
         println!("wrote {}", path.display());
         println!(
-            "[{fig}] {} jobs: {} simulated, {} cache hits, {} deduped — {:.0} ms wall",
-            jobs,
-            after.executed - before.executed,
-            after.cache_hits - before.cache_hits,
-            after.deduped - before.deduped,
-            wall_ms
+            "{}",
+            report::job_accounting(
+                fig,
+                jobs,
+                after.executed - before.executed,
+                after.cache_hits - before.cache_hits,
+                after.store_hits - before.store_hits,
+                after.deduped - before.deduped,
+                wall_ms
+            )
         );
     }
     println!("scheduler totals: {}", sched.stats().to_json().to_string());
@@ -337,14 +390,28 @@ fn cmd_report(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
-    args.finish(&["addr", "workers", "shards", "queue-cap", "cache-mb"], &[])?;
+    args.finish(
+        &[
+            "addr",
+            "workers",
+            "shards",
+            "queue-cap",
+            "cache-mb",
+            "cache-dir",
+        ],
+        &[],
+    )?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
     let cfg = scheduler_config(args)?;
     let (workers, shards, queue_cap, cache_mb) =
         (cfg.workers, cfg.shards, cfg.queue_cap, cfg.cache_bytes >> 20);
+    let store_note = match &cfg.store {
+        Some(store) => format!(", store {}", store.dir().display()),
+        None => String::new(),
+    };
     let server = Server::bind(addr, cfg).map_err(|e| format!("bind {addr}: {e}"))?;
     println!(
-        "barista serve: listening on {} ({workers} workers, {shards} shards, queue cap {queue_cap}, cache {cache_mb} MB)",
+        "barista serve: listening on {} ({workers} workers, {shards} shards, queue cap {queue_cap}, cache {cache_mb} MB{store_note})",
         server.local_addr()
     );
     server.run().map_err(|e| format!("serve: {e}"))
@@ -390,12 +457,23 @@ fn cmd_submit(args: &Args) -> Result<(), String> {
         &[
             "addr", "network", "arch", "window-cap", "batch", "seed", "sparsity",
         ],
-        &["json"],
+        &["json", "stream"],
     )?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
     let spec = job_from_args(args)?;
     let mut client = Client::connect(addr)?;
-    let resp = client.submit(&spec)?;
+    let resp = if args.flag("stream") {
+        // Streaming: the server acks (with the job's content address)
+        // before the seconds-long simulation, then sends the result.
+        client.submit_stream(&spec, |ev| {
+            if ev.get("event").and_then(Json::as_str) == Some("accepted") {
+                let key = ev.get("key").and_then(Json::as_str).unwrap_or("?");
+                println!("accepted {key}");
+            }
+        })?
+    } else {
+        client.submit(&spec)?
+    };
     if let Some(e) = response_err(&resp) {
         return Err(e);
     }
@@ -433,7 +511,7 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
         &[
             "addr", "networks", "archs", "window-cap", "batch", "seed", "sparsity",
         ],
-        &["json"],
+        &["json", "stream"],
     )?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
     let benchmarks = parse_network_list(args.get_or("networks", "all"))?;
@@ -448,6 +526,57 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
         .collect();
     let mut client = Client::connect(addr)?;
     let t0 = Instant::now();
+    if args.flag("stream") {
+        // Streaming: per-job lines print as each completes (completion
+        // order, labelled by index) instead of after the whole batch.
+        // Progress frames are also kept so `--json` can emit the same
+        // input-ordered `results` array the non-streaming path does.
+        let mut bodies: Vec<Option<Json>> = specs.iter().map(|_| None).collect();
+        let done = client.batch_stream(&specs, |ev| {
+            if ev.get("event").and_then(Json::as_str) != Some("progress") {
+                return;
+            }
+            let idx = ev.get("index").and_then(Json::as_usize).unwrap_or(0);
+            let label = specs
+                .get(idx)
+                .map(|s| format!("{} on {}", s.benchmark, s.config.arch))
+                .unwrap_or_else(|| format!("job {idx}"));
+            print_job_line(&label, ev);
+            if idx < bodies.len() {
+                bodies[idx] = Some(ev.clone());
+            }
+        })?;
+        if let Some(e) = response_err(&done) {
+            return Err(e);
+        }
+        let field = |k: &str| done.get(k).and_then(Json::as_u64).unwrap_or(0);
+        println!(
+            "{} jobs in {:.0} ms wall ({} simulated, {} cache, {} store, {} dedup)",
+            field("jobs"),
+            done.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            field("executed"),
+            field("cache"),
+            field("store"),
+            field("dedup"),
+        );
+        if args.flag("json") {
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("op", "batch")
+                .set(
+                    "results",
+                    Json::Arr(
+                        bodies
+                            .into_iter()
+                            .map(|b| b.unwrap_or(Json::Null))
+                            .collect(),
+                    ),
+                )
+                .set("done", done);
+            println!("{}", j.pretty());
+        }
+        return Ok(());
+    }
     let resp = client.batch(&specs)?;
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Some(e) = response_err(&resp) {

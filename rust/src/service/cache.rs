@@ -12,11 +12,17 @@
 //! shared requests (telescoping/snarfing combine identical chunk
 //! fetches) instead of redundantly recomputing them. See DESIGN.md
 //! §Service.
+//!
+//! [`TieredCache`] stacks the LRU (hot tier) over the persistent
+//! journal [`Store`] (cold tier): write-through on completion,
+//! hot-tier admission on a cold hit, so a result computed once is
+//! served across process restarts. See DESIGN.md §Store.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{RunRequest, RunResult};
+use crate::service::store::{self, Store};
 use crate::util::{fnv1a64, Json, FNV_OFFSET_BASIS};
 
 /// Second FNV basis (the golden-ratio constant) — two independent 64-bit
@@ -250,11 +256,104 @@ impl ResultCache {
     }
 }
 
+/// Which tier served a lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// The in-memory LRU.
+    Hot,
+    /// The on-disk journal store (the entry was admitted to the hot
+    /// tier as part of the lookup).
+    Cold,
+}
+
+/// The hot in-memory LRU stacked over the optional persistent cold
+/// tier. Policy:
+///
+/// * **lookup** — hot first; on a hot miss the cold tier is consulted,
+///   the record decoded (with its canonical string verified against the
+///   request, so a 128-bit collision or a foreign journal can never
+///   serve a wrong result) and *admitted* into the hot tier;
+/// * **insert** — write-through: hot insert plus a durable cold append
+///   (skipped when the key is already journaled — results are
+///   content-addressed and deterministic, so a re-append would be a
+///   byte-identical supersession);
+/// * cold-tier I/O errors degrade to a miss (the job simulates) rather
+///   than failing the submission.
+pub struct TieredCache {
+    hot: ResultCache,
+    cold: Option<Arc<Store>>,
+}
+
+impl TieredCache {
+    pub fn new(budget_bytes: usize, cold: Option<Arc<Store>>) -> TieredCache {
+        TieredCache {
+            hot: ResultCache::new(budget_bytes),
+            cold,
+        }
+    }
+
+    /// The hot tier (stats access).
+    pub fn hot(&self) -> &ResultCache {
+        &self.hot
+    }
+
+    /// The cold tier, if configured.
+    pub fn cold(&self) -> Option<&Arc<Store>> {
+        self.cold.as_ref()
+    }
+
+    /// Tiered lookup, counting a hot hit/miss and admitting cold hits.
+    /// (There is deliberately no tiered `peek`: the scheduler's
+    /// under-shard-lock double check stays hot-only so the store mutex
+    /// — held across an fdatasync by completions — never couples into
+    /// the shard critical section.)
+    pub fn get(&self, key: &JobKey, req: &RunRequest) -> Option<(Arc<CachedEntry>, Tier)> {
+        if let Some(e) = self.hot.get(key) {
+            return Some((e, Tier::Hot));
+        }
+        self.cold_lookup(key, req)
+    }
+
+    fn cold_lookup(&self, key: &JobKey, req: &RunRequest) -> Option<(Arc<CachedEntry>, Tier)> {
+        let store = self.cold.as_ref()?;
+        let payload = store.get(key)?;
+        let canon = canonical_job_string(req);
+        let result = match store::decode_record(&payload, req, &canon) {
+            Ok(r) => r,
+            Err(e) => {
+                // Never serve a questionable record; simulate instead.
+                eprintln!("warn: cold-tier record for {} unusable: {e}", key.hex());
+                return None;
+            }
+        };
+        let entry = Arc::new(CachedEntry::new(result));
+        self.hot.insert(*key, entry.clone());
+        Some((entry, Tier::Cold))
+    }
+
+    /// Write-through insert (worker completion path).
+    pub fn insert(&self, key: JobKey, req: &RunRequest, entry: Arc<CachedEntry>) {
+        self.hot.insert(key, entry.clone());
+        if let Some(store) = &self.cold {
+            if !store.contains(&key) {
+                let canon = canonical_job_string(req);
+                let payload = store::encode_record(&entry.result, &canon);
+                if let Err(e) = store.put(key, &payload) {
+                    // Journal trouble must not fail the submission; the
+                    // result is still served from the hot tier.
+                    eprintln!("warn: cold-tier append for {} failed: {e}", key.hex());
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{ArchKind, SimConfig};
     use crate::coordinator::run_one;
+    use crate::util::scratch_dir;
     use crate::workload::Benchmark;
 
     fn small_req(seed: u64) -> RunRequest {
@@ -343,5 +442,56 @@ mod tests {
         let entry = CachedEntry::new(run_one(&req));
         let direct = run_one(&req).network.to_json().to_string();
         assert_eq!(entry.network_json, direct);
+    }
+
+    #[test]
+    fn tiered_lookup_admits_cold_hits_into_the_hot_tier() {
+        let dir = scratch_dir("tiered-admit");
+        let store = Arc::new(Store::open_with(&dir, false).unwrap());
+        let tiered = TieredCache::new(1 << 20, Some(store.clone()));
+        let req = small_req(21);
+        let key = job_key(&req);
+        assert!(tiered.get(&key, &req).is_none());
+        tiered.insert(key, &req, Arc::new(CachedEntry::new(run_one(&req))));
+        assert!(store.contains(&key), "write-through reaches the journal");
+
+        // A *fresh* tiered cache over the same store: first lookup is a
+        // cold hit, second is hot (admission on miss).
+        let tiered2 = TieredCache::new(1 << 20, Some(store.clone()));
+        let (e1, t1) = tiered2.get(&key, &req).expect("cold tier serves");
+        assert_eq!(t1, Tier::Cold);
+        let (e2, t2) = tiered2.get(&key, &req).expect("hot tier serves");
+        assert_eq!(t2, Tier::Hot);
+        assert_eq!(e1.network_json, e2.network_json);
+        assert_eq!(
+            e1.network_json,
+            run_one(&req).network.to_json().to_string(),
+            "cold-tier round trip is byte-identical to a fresh simulation"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tiered_insert_skips_rejournaling_known_keys() {
+        let dir = scratch_dir("tiered-skip");
+        let store = Arc::new(Store::open_with(&dir, false).unwrap());
+        let tiered = TieredCache::new(1 << 20, Some(store.clone()));
+        let req = small_req(22);
+        let key = job_key(&req);
+        let entry = Arc::new(CachedEntry::new(run_one(&req)));
+        tiered.insert(key, &req, entry.clone());
+        tiered.insert(key, &req, entry);
+        assert_eq!(store.stats().appends, 1, "identical key journaled once");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tiered_without_cold_tier_degrades_to_the_lru() {
+        let tiered = TieredCache::new(1 << 20, None);
+        let req = small_req(23);
+        let key = job_key(&req);
+        assert!(tiered.get(&key, &req).is_none());
+        tiered.insert(key, &req, Arc::new(CachedEntry::new(run_one(&req))));
+        assert_eq!(tiered.get(&key, &req).unwrap().1, Tier::Hot);
     }
 }

@@ -8,21 +8,29 @@
 //! (telescoping/snarfing) at the host layer:
 //!
 //! * [`protocol`] — newline-delimited JSON request/response types
-//!   (`submit`, `batch`, `status`, `stats`, `shutdown`);
+//!   (`submit`, `batch`, `status`, `stats`, `shutdown`) plus the
+//!   streaming event frames (`"stream":true` answers with
+//!   accepted/progress/done frames as jobs complete);
 //! * [`cache`] — content-addressed LRU result cache keyed by the
 //!   canonicalized job (stable hash of benchmark + [`SimConfig`]
-//!   canonical JSON, seed included) with a byte budget;
+//!   canonical JSON, seed included) with a byte budget, stacked over
+//!   the persistent cold tier as [`TieredCache`];
+//! * [`store`] — the disk-backed cold tier: a crash-safe,
+//!   content-addressed journal (fsynced appends, corrupt-tail-tolerant
+//!   recovery, compaction) so results survive restarts;
 //! * [`scheduler`] — sharded bounded work queues over simulation
 //!   workers, with per-job deduplication (concurrent identical
-//!   submissions share one execution) and reject-with-retry-after
-//!   backpressure;
+//!   submissions share one execution), reject-with-retry-after
+//!   backpressure, and tiered-cache consultation (both tiers) before
+//!   any work is scheduled;
 //! * [`server`] — `std::net::TcpListener` thread-per-connection front
 //!   end plus the blocking [`Client`], shared by `barista serve`,
 //!   `barista submit`/`batch` and the integration tests.
 //!
 //! In-process callers (`barista report`, `barista sweep`, benches) use
 //! [`Scheduler`] directly — same cache, no socket. See DESIGN.md
-//! §Service for the wire format and guarantees.
+//! §Service for the wire format and guarantees, and §Store for the
+//! journal format and crash model.
 //!
 //! [`SimConfig`]: crate::config::SimConfig
 
@@ -30,8 +38,10 @@ pub mod cache;
 pub mod protocol;
 pub mod scheduler;
 pub mod server;
+pub mod store;
 
-pub use cache::{job_key, CacheStats, CachedEntry, JobKey, ResultCache};
+pub use cache::{job_key, CacheStats, CachedEntry, JobKey, ResultCache, Tier, TieredCache};
 pub use protocol::{JobSpec, Request, DEFAULT_ADDR};
 pub use scheduler::{Outcome, Scheduler, SchedulerConfig, SchedulerStats, Source, SubmitError};
 pub use server::{Client, Server};
+pub use store::{Store, StoreStats};

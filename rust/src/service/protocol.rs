@@ -8,7 +8,9 @@
 //!
 //! ```text
 //! {"op":"submit","job":{"network":"alexnet","arch":"barista","config":{...}}}
+//! {"op":"submit","job":{...},"stream":true}
 //! {"op":"batch","jobs":[{...},{...}]}
+//! {"op":"batch","jobs":[...],"stream":true}
 //! {"op":"status"}
 //! {"op":"stats"}
 //! {"op":"shutdown"}
@@ -19,6 +21,25 @@
 //! top-level job keys) are protocol errors, never silently ignored.
 //! Responses always carry `"ok"`; failures carry `"error"` and, for
 //! backpressure, `"retry_after_ms"`. See DESIGN.md §Service.
+//!
+//! ## Streaming (`"stream":true`)
+//!
+//! A streaming request answers with *multiple* NDJSON frames instead of
+//! one blocking response; every frame carries `"event"`:
+//!
+//! ```text
+//! submit: {"ok":true,"op":"submit","event":"accepted","key":"<hex>","jobs":1}
+//!         {"ok":true,"op":"submit","event":"result","source":...,"result":{...}}
+//! batch:  {"ok":true,"op":"batch","event":"accepted","jobs":N}
+//!         {"ok":true,"op":"batch","event":"progress","index":i,"source":...,"result":{...}}  ×N
+//!         {"ok":true,"op":"batch","event":"done","jobs":N,"executed":..,"cache":..,"store":..,"dedup":..,"wall_ms":..}
+//! ```
+//!
+//! `progress` frames arrive in *completion* order (the `index` maps each
+//! back to its submitted position), so a client sees per-job results as
+//! they happen instead of blocking on the whole batch. `result` and
+//! `done` are the terminal frames ([`event_is_terminal`]); an error
+//! response (no `event`) is terminal too, streaming or not.
 
 use crate::config::{ArchKind, SimConfig};
 use crate::coordinator::RunRequest;
@@ -110,8 +131,8 @@ impl JobSpec {
 /// A parsed protocol request.
 #[derive(Debug, Clone)]
 pub enum Request {
-    Submit(JobSpec),
-    Batch(Vec<JobSpec>),
+    Submit { spec: JobSpec, stream: bool },
+    Batch { specs: Vec<JobSpec>, stream: bool },
     Status,
     Stats,
     Shutdown,
@@ -125,10 +146,17 @@ impl Request {
             .get("op")
             .and_then(Json::as_str)
             .ok_or("request missing 'op'")?;
+        let stream = match j.get("stream") {
+            None => false,
+            Some(v) => v.as_bool().ok_or("'stream' must be a boolean")?,
+        };
         match op {
             "submit" => {
                 let job = j.get("job").ok_or("submit missing 'job'")?;
-                Ok(Request::Submit(JobSpec::from_json(job)?))
+                Ok(Request::Submit {
+                    spec: JobSpec::from_json(job)?,
+                    stream,
+                })
             }
             "batch" => {
                 let jobs = j
@@ -138,10 +166,11 @@ impl Request {
                 if jobs.is_empty() {
                     return Err("batch with no jobs".into());
                 }
-                jobs.iter()
+                let specs = jobs
+                    .iter()
                     .map(JobSpec::from_json)
-                    .collect::<Result<Vec<_>, _>>()
-                    .map(Request::Batch)
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Request::Batch { specs, stream })
             }
             "status" => Ok(Request::Status),
             "stats" => Ok(Request::Stats),
@@ -150,18 +179,26 @@ impl Request {
         }
     }
 
-    /// Wire form (client side).
+    /// Wire form (client side). `stream:false` serializes without the
+    /// key, so non-streaming lines are byte-identical to the
+    /// pre-streaming protocol.
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         match self {
-            Request::Submit(spec) => {
+            Request::Submit { spec, stream } => {
                 j.set("op", "submit").set("job", spec.to_json());
+                if *stream {
+                    j.set("stream", true);
+                }
             }
-            Request::Batch(specs) => {
+            Request::Batch { specs, stream } => {
                 j.set("op", "batch").set(
                     "jobs",
                     Json::Arr(specs.iter().map(|s| s.to_json()).collect()),
                 );
+                if *stream {
+                    j.set("stream", true);
+                }
             }
             Request::Status => {
                 j.set("op", "status");
@@ -174,6 +211,24 @@ impl Request {
             }
         }
         j
+    }
+}
+
+/// A streaming event frame skeleton: `{"ok":true,"op":op,"event":event}`
+/// (the caller adds the event-specific fields).
+pub fn event_frame(op: &str, event: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", true).set("op", op).set("event", event);
+    j
+}
+
+/// Whether a received frame ends its request's response stream: the
+/// terminal events (`result` for submit, `done` for batch) and any
+/// frame without an `event` field (single-shot responses and errors).
+pub fn event_is_terminal(j: &Json) -> bool {
+    match j.get("event").and_then(Json::as_str) {
+        None => true,
+        Some(e) => matches!(e, "result" | "done"),
     }
 }
 
@@ -207,9 +262,16 @@ mod tests {
             benchmark: Benchmark::ResNet50,
             config,
         };
-        let line = Request::Submit(spec.clone()).to_json().to_string();
+        let line = Request::Submit {
+            spec: spec.clone(),
+            stream: false,
+        }
+        .to_json()
+        .to_string();
+        assert!(!line.contains("stream"), "non-stream wire form unchanged");
         match Request::parse_line(&line).unwrap() {
-            Request::Submit(back) => {
+            Request::Submit { spec: back, stream } => {
+                assert!(!stream);
                 assert_eq!(back.benchmark, spec.benchmark);
                 assert_eq!(
                     back.config.canonical_json().to_string(),
@@ -229,14 +291,54 @@ mod tests {
                 config: SimConfig::paper(a),
             })
             .collect();
-        let line = Request::Batch(specs.clone()).to_json().to_string();
+        let line = Request::Batch {
+            specs: specs.clone(),
+            stream: false,
+        }
+        .to_json()
+        .to_string();
         match Request::parse_line(&line).unwrap() {
-            Request::Batch(back) => {
+            Request::Batch { specs: back, .. } => {
                 assert_eq!(back.len(), 2);
                 assert_eq!(back[1].config.arch, ArchKind::Ideal);
             }
             other => panic!("wrong op: {other:?}"),
         }
+    }
+
+    #[test]
+    fn stream_flag_roundtrips_and_validates() {
+        let spec = JobSpec {
+            benchmark: Benchmark::AlexNet,
+            config: SimConfig::paper(ArchKind::Barista),
+        };
+        let line = Request::Submit {
+            spec,
+            stream: true,
+        }
+        .to_json()
+        .to_string();
+        assert!(line.contains(r#""stream":true"#), "{line}");
+        match Request::parse_line(&line).unwrap() {
+            Request::Submit { stream, .. } => assert!(stream),
+            other => panic!("wrong op: {other:?}"),
+        }
+        // Non-boolean stream is a protocol error, not a silent default.
+        let e = Request::parse_line(
+            r#"{"op":"batch","jobs":[{"network":"alexnet"}],"stream":"yes"}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("boolean"), "{e}");
+    }
+
+    #[test]
+    fn terminal_event_classification() {
+        assert!(event_is_terminal(&event_frame("submit", "result")));
+        assert!(event_is_terminal(&event_frame("batch", "done")));
+        assert!(!event_is_terminal(&event_frame("batch", "accepted")));
+        assert!(!event_is_terminal(&event_frame("batch", "progress")));
+        // Single-shot responses and errors have no event field.
+        assert!(event_is_terminal(&response_error("nope")));
     }
 
     #[test]
@@ -310,10 +412,15 @@ mod tests {
         config.window_cap = 16;
         config.sparsity = crate::workload::SparsityModel::Clustered { run: 8 };
         let spec = JobSpec { benchmark, config };
-        let line = Request::Submit(spec.clone()).to_json().to_string();
+        let line = Request::Submit {
+            spec: spec.clone(),
+            stream: false,
+        }
+        .to_json()
+        .to_string();
         assert!(line.contains("network_spec"), "{line}");
         match Request::parse_line(&line).unwrap() {
-            Request::Submit(back) => {
+            Request::Submit { spec: back, .. } => {
                 assert_eq!(back.benchmark, spec.benchmark);
                 assert_eq!(back.benchmark.cache_token(), spec.benchmark.cache_token());
                 assert_eq!(back.config.sparsity, spec.config.sparsity);

@@ -11,12 +11,16 @@
 //!   in-flight job instead of enqueuing a duplicate;
 //! * **backpressure** — each shard queue is bounded; a full queue
 //!   rejects with a retry-after hint instead of buffering unboundedly;
-//! * **caching** — finished jobs land in the content-addressed
-//!   [`ResultCache`]; repeat submissions return without simulating.
+//! * **tiered caching** — finished jobs land in the content-addressed
+//!   [`TieredCache`]: the in-memory LRU (hot) with write-through to the
+//!   optional persistent journal [`Store`] (cold). Submissions consult
+//!   *both* tiers before any work is scheduled, so a job simulated in a
+//!   previous process lifetime is served from disk ([`Source::StoreHit`])
+//!   with zero re-simulation.
 //!
 //! Determinism: results come from [`run_one`], which is deterministic
-//! per (benchmark, config, seed), so a cached result is byte-identical
-//! to a fresh execution.
+//! per (benchmark, config, seed), so a cached result — hot, cold, or
+//! deduped — is byte-identical to a fresh execution.
 
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
@@ -25,7 +29,8 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::{run_one, RunRequest, RunResult};
-use crate::service::cache::{job_key, CachedEntry, CacheStats, JobKey, ResultCache};
+use crate::service::cache::{job_key, CachedEntry, CacheStats, JobKey, Tier, TieredCache};
+use crate::service::store::{Store, StoreStats};
 use crate::util::Json;
 
 /// Scheduler sizing knobs.
@@ -38,8 +43,12 @@ pub struct SchedulerConfig {
     /// Per-shard pending-job bound; beyond it submissions are rejected
     /// with a retry-after hint.
     pub queue_cap: usize,
-    /// Result-cache byte budget.
+    /// Hot-tier (in-memory LRU) byte budget.
     pub cache_bytes: usize,
+    /// Optional persistent cold tier (`serve --cache-dir`): results are
+    /// written through to it and consulted on hot-tier misses, so the
+    /// cache survives restarts.
+    pub store: Option<Arc<Store>>,
 }
 
 impl Default for SchedulerConfig {
@@ -53,6 +62,7 @@ impl Default for SchedulerConfig {
             shards: 4,
             queue_cap: 256,
             cache_bytes: 256 << 20,
+            store: None,
         }
     }
 }
@@ -64,8 +74,11 @@ pub enum Source {
     Executed,
     /// Attached to an identical in-flight job (one execution shared).
     Deduped,
-    /// Served from the content-addressed cache.
+    /// Served from the in-memory (hot) result cache.
     CacheHit,
+    /// Served from the persistent on-disk (cold) store — typically a
+    /// job simulated in a previous process lifetime.
+    StoreHit,
 }
 
 impl Source {
@@ -74,6 +87,7 @@ impl Source {
             Source::Executed => "executed",
             Source::Deduped => "dedup",
             Source::CacheHit => "cache",
+            Source::StoreHit => "store",
         }
     }
 }
@@ -115,11 +129,15 @@ pub struct SchedulerStats {
     pub executed: u64,
     pub deduped: u64,
     pub cache_hits: u64,
+    /// Submissions served from the persistent cold tier.
+    pub store_hits: u64,
     pub rejected: u64,
     pub queued: usize,
     pub workers: usize,
     pub shards: usize,
     pub cache: CacheStats,
+    /// Cold-tier counters, when a store is configured.
+    pub store: Option<StoreStats>,
 }
 
 impl SchedulerStats {
@@ -129,11 +147,15 @@ impl SchedulerStats {
             .set("executed", self.executed)
             .set("deduped", self.deduped)
             .set("cache_hits", self.cache_hits)
+            .set("store_hits", self.store_hits)
             .set("rejected", self.rejected)
             .set("queued", self.queued)
             .set("workers", self.workers)
             .set("shards", self.shards)
             .set("cache", self.cache.to_json());
+        if let Some(store) = &self.store {
+            j.set("store", store.to_json());
+        }
         j
     }
 }
@@ -144,12 +166,22 @@ struct Counters {
     executed: AtomicU64,
     deduped: AtomicU64,
     cache_hits: AtomicU64,
+    store_hits: AtomicU64,
     rejected: AtomicU64,
+}
+
+/// Completion deliveries are tagged so one shared channel can serve a
+/// whole batch: the tag is the submitter's job index (0 for `execute`).
+type Delivery = (u64, Arc<CachedEntry>);
+
+struct Waiter {
+    tag: u64,
+    tx: mpsc::Sender<Delivery>,
 }
 
 struct Job {
     req: RunRequest,
-    waiters: Vec<mpsc::Sender<Arc<CachedEntry>>>,
+    waiters: Vec<Waiter>,
 }
 
 struct ShardState {
@@ -166,15 +198,19 @@ struct Shard {
 }
 
 enum Enqueued {
+    /// Served immediately (hot or cold cache hit).
     Ready(Outcome),
-    Pending(mpsc::Receiver<Arc<CachedEntry>>, Source),
+    /// A delivery will arrive on the submitted channel, tagged; the
+    /// source records whether this submission started the execution or
+    /// attached to an in-flight one.
+    Pending(Source),
 }
 
 /// The scheduler. Cheap to share behind an `Arc`; dropping it stops the
 /// workers (pending waiters then observe [`SubmitError::Shutdown`]).
 pub struct Scheduler {
     shards: Vec<Arc<Shard>>,
-    cache: Arc<ResultCache>,
+    cache: Arc<TieredCache>,
     counters: Arc<Counters>,
     stop: Arc<AtomicBool>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
@@ -197,7 +233,7 @@ impl Scheduler {
                 })
             })
             .collect();
-        let cache = Arc::new(ResultCache::new(cfg.cache_bytes));
+        let cache = Arc::new(TieredCache::new(cfg.cache_bytes, cfg.store.clone()));
         let counters = Arc::new(Counters::default());
         let stop = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::with_capacity(workers);
@@ -226,20 +262,21 @@ impl Scheduler {
     }
 
     /// Submit without blocking on execution: either an immediate cached
-    /// outcome or a receiver for the eventual result.
-    fn enqueue(&self, req: &RunRequest) -> Result<Enqueued, SubmitError> {
+    /// outcome (hot or cold tier) or a tagged delivery on `tx`.
+    fn enqueue(
+        &self,
+        req: &RunRequest,
+        tag: u64,
+        tx: &mpsc::Sender<Delivery>,
+    ) -> Result<Enqueued, SubmitError> {
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
         if self.stop.load(Ordering::SeqCst) {
             return Err(SubmitError::Shutdown);
         }
         req.config.validate().map_err(SubmitError::Invalid)?;
         let key = job_key(req);
-        if let Some(entry) = self.cache.get(&key) {
-            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Enqueued::Ready(Outcome {
-                entry,
-                source: Source::CacheHit,
-            }));
+        if let Some((entry, tier)) = self.cache.get(&key, req) {
+            return Ok(Enqueued::Ready(self.tier_outcome(entry, tier)));
         }
         let shard = &self.shards[(key.0 % self.shards.len() as u64) as usize];
         let mut st = shard.state.lock().unwrap();
@@ -255,18 +292,21 @@ impl Scheduler {
         // Double-check under the shard lock: a worker inserts into the
         // cache *before* removing the job entry, so a job absent from
         // `jobs` that finished since our miss is now visible here.
-        if let Some(entry) = self.cache.peek(&key) {
-            self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Enqueued::Ready(Outcome {
-                entry,
-                source: Source::CacheHit,
-            }));
+        // Hot tier only, deliberately: the pre-lock get already
+        // consulted the cold tier, anything journaled since then was
+        // write-through (hot first), and a cold probe here would drag
+        // the store mutex — which completions hold across an fdatasync
+        // — into the shard critical section.
+        if let Some(entry) = self.cache.hot().peek(&key) {
+            return Ok(Enqueued::Ready(self.tier_outcome(entry, Tier::Hot)));
         }
         if let Some(job) = st.jobs.get_mut(&key) {
-            let (tx, rx) = mpsc::channel();
-            job.waiters.push(tx);
+            job.waiters.push(Waiter {
+                tag,
+                tx: tx.clone(),
+            });
             self.counters.deduped.fetch_add(1, Ordering::Relaxed);
-            return Ok(Enqueued::Pending(rx, Source::Deduped));
+            return Ok(Enqueued::Pending(Source::Deduped));
         }
         if st.queue.len() >= self.queue_cap {
             self.counters.rejected.fetch_add(1, Ordering::Relaxed);
@@ -274,44 +314,89 @@ impl Scheduler {
                 retry_after_ms: 10 + 2 * st.queue.len() as u64,
             });
         }
-        let (tx, rx) = mpsc::channel();
         st.jobs.insert(
             key,
             Job {
                 req: req.clone(),
-                waiters: vec![tx],
+                waiters: vec![Waiter {
+                    tag,
+                    tx: tx.clone(),
+                }],
             },
         );
         st.queue.push_back(key);
         drop(st);
         shard.ready.notify_one();
-        Ok(Enqueued::Pending(rx, Source::Executed))
+        Ok(Enqueued::Pending(Source::Executed))
+    }
+
+    fn tier_outcome(&self, entry: Arc<CachedEntry>, tier: Tier) -> Outcome {
+        let source = match tier {
+            Tier::Hot => {
+                self.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+                Source::CacheHit
+            }
+            Tier::Cold => {
+                self.counters.store_hits.fetch_add(1, Ordering::Relaxed);
+                Source::StoreHit
+            }
+        };
+        Outcome { entry, source }
     }
 
     /// Submit one job and block until its result is available.
     pub fn execute(&self, req: &RunRequest) -> Result<Outcome, SubmitError> {
-        wait(self.enqueue(req)?)
+        let (tx, rx) = mpsc::channel();
+        match self.enqueue(req, 0, &tx)? {
+            Enqueued::Ready(o) => Ok(o),
+            Enqueued::Pending(source) => {
+                // Drop our sender so a scheduler shutdown (which drops
+                // the job's waiters) disconnects the channel instead of
+                // leaving this recv blocked forever.
+                drop(tx);
+                rx.recv()
+                    .map(|(_, entry)| Outcome { entry, source })
+                    .map_err(|_| SubmitError::Shutdown)
+            }
+        }
     }
 
-    /// Total time a `run_all` submission may spend retrying a full
-    /// queue before the Busy bubbles up to the caller.
+    /// Total time a batch submission may spend retrying a full queue
+    /// before the Busy bubbles up to the caller.
     const MAX_ENQUEUE_WAIT_MS: u64 = 10_000;
 
-    /// Run a batch, preserving input order. All jobs are enqueued before
+    /// Run a batch, preserving input order in the returned vec, and
+    /// report each job *as it completes* through `on_done(index,
+    /// outcome)` — the streaming front end's hook. Cache/store hits
+    /// fire during submission; executed and deduped jobs fire in
+    /// completion order (not input order). All jobs are enqueued before
     /// any result is awaited so independent jobs run concurrently.
     /// Backpressure rejections are retried (workers are draining the
     /// queue, so waiting usually resolves), but only up to
     /// `MAX_ENQUEUE_WAIT_MS` per job — beyond that the Busy error
     /// propagates so a loaded server answers instead of blocking the
     /// connection indefinitely.
-    pub fn run_all(&self, reqs: &[RunRequest]) -> Result<Vec<Outcome>, SubmitError> {
-        let mut slots = Vec::with_capacity(reqs.len());
-        for req in reqs {
+    pub fn run_each<F: FnMut(usize, &Outcome)>(
+        &self,
+        reqs: &[RunRequest],
+        mut on_done: F,
+    ) -> Result<Vec<Outcome>, SubmitError> {
+        let (tx, rx) = mpsc::channel::<Delivery>();
+        let mut slots: Vec<Option<Outcome>> = reqs.iter().map(|_| None).collect();
+        let mut pending_sources: Vec<Option<Source>> = reqs.iter().map(|_| None).collect();
+        let mut pending = 0usize;
+        for (i, req) in reqs.iter().enumerate() {
             let mut waited_ms = 0u64;
             loop {
-                match self.enqueue(req) {
-                    Ok(e) => {
-                        slots.push(e);
+                match self.enqueue(req, i as u64, &tx) {
+                    Ok(Enqueued::Ready(o)) => {
+                        on_done(i, &o);
+                        slots[i] = Some(o);
+                        break;
+                    }
+                    Ok(Enqueued::Pending(source)) => {
+                        pending_sources[i] = Some(source);
+                        pending += 1;
                         break;
                     }
                     Err(SubmitError::Busy { retry_after_ms }) => {
@@ -326,7 +411,26 @@ impl Scheduler {
                 }
             }
         }
-        slots.into_iter().map(wait).collect()
+        // From here only the jobs' waiters hold senders; shutdown drops
+        // them, disconnecting `rx` instead of deadlocking the drain.
+        drop(tx);
+        for _ in 0..pending {
+            let (tag, entry) = rx.recv().map_err(|_| SubmitError::Shutdown)?;
+            let i = tag as usize;
+            let source = pending_sources[i].take().unwrap_or(Source::Executed);
+            let o = Outcome { entry, source };
+            on_done(i, &o);
+            slots[i] = Some(o);
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every submitted job resolved"))
+            .collect())
+    }
+
+    /// Run a batch, preserving input order.
+    pub fn run_all(&self, reqs: &[RunRequest]) -> Result<Vec<Outcome>, SubmitError> {
+        self.run_each(reqs, |_, _| {})
     }
 
     /// Batch helper returning plain results (report/CLI path).
@@ -349,11 +453,13 @@ impl Scheduler {
             executed: self.counters.executed.load(Ordering::Relaxed),
             deduped: self.counters.deduped.load(Ordering::Relaxed),
             cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
+            store_hits: self.counters.store_hits.load(Ordering::Relaxed),
             rejected: self.counters.rejected.load(Ordering::Relaxed),
             queued,
             workers: self.workers,
             shards: self.shards.len(),
-            cache: self.cache.stats(),
+            cache: self.cache.hot().stats(),
+            store: self.cache.cold().map(|s| s.stats()),
         }
     }
 
@@ -385,22 +491,10 @@ impl Drop for Scheduler {
     }
 }
 
-/// Resolve an enqueued submission to its outcome, blocking on the
-/// worker when the job is pending (shared by `execute` and `run_all`).
-fn wait(e: Enqueued) -> Result<Outcome, SubmitError> {
-    match e {
-        Enqueued::Ready(o) => Ok(o),
-        Enqueued::Pending(rx, source) => rx
-            .recv()
-            .map(|entry| Outcome { entry, source })
-            .map_err(|_| SubmitError::Shutdown),
-    }
-}
-
 fn worker_loop(
     shards: &[Arc<Shard>],
     home: usize,
-    cache: &ResultCache,
+    cache: &TieredCache,
     counters: &Counters,
     stop: &AtomicBool,
 ) {
@@ -425,17 +519,18 @@ fn worker_loop(
         match found {
             Some((idx, key, req)) => {
                 let entry = Arc::new(CachedEntry::new(run_one(&req)));
-                // Cache first, then retire the job entry: submitters
-                // re-check the cache under the shard lock, so there is
-                // no window where a job is neither in-flight nor cached.
-                cache.insert(key, entry.clone());
+                // Cache first (write-through to the journal), then
+                // retire the job entry: submitters re-check the cache
+                // under the shard lock, so there is no window where a
+                // job is neither in-flight nor cached.
+                cache.insert(key, &req, entry.clone());
                 let waiters = {
                     let mut st = shards[idx].state.lock().unwrap();
                     st.jobs.remove(&key).map(|j| j.waiters).unwrap_or_default()
                 };
                 counters.executed.fetch_add(1, Ordering::Relaxed);
                 for w in waiters {
-                    let _ = w.send(entry.clone());
+                    let _ = w.tx.send((w.tag, entry.clone()));
                 }
             }
             None => {
@@ -459,6 +554,7 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::config::{ArchKind, SimConfig};
+    use crate::util::scratch_dir;
     use crate::workload::Benchmark;
 
     fn small_req(arch: ArchKind, seed: u64) -> RunRequest {
@@ -478,6 +574,7 @@ mod tests {
             shards: 2,
             queue_cap: 64,
             cache_bytes: 16 << 20,
+            store: None,
         })
     }
 
@@ -493,6 +590,8 @@ mod tests {
         let st = s.stats();
         assert_eq!(st.executed, 1);
         assert_eq!(st.cache_hits, 1);
+        assert_eq!(st.store_hits, 0);
+        assert!(st.store.is_none(), "no cold tier configured");
     }
 
     #[test]
@@ -530,6 +629,52 @@ mod tests {
     }
 
     #[test]
+    fn run_each_reports_every_job_exactly_once() {
+        let s = small_sched(4);
+        let a = small_req(ArchKind::Dense, 17);
+        let b = small_req(ArchKind::Ideal, 17);
+        let reqs = vec![a.clone(), b.clone(), a.clone(), a.clone()];
+        let mut seen: Vec<(usize, Source)> = Vec::new();
+        let out = s
+            .run_each(&reqs, |i, o| seen.push((i, o.source)))
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        let mut indexes: Vec<usize> = seen.iter().map(|(i, _)| *i).collect();
+        indexes.sort_unstable();
+        assert_eq!(indexes, vec![0, 1, 2, 3], "each index reported once");
+        // Callback outcomes agree with the returned (input-ordered) vec.
+        for (i, src) in &seen {
+            assert_eq!(out[*i].source, *src);
+        }
+        // The duplicate jobs shared the two executions.
+        let st = s.stats();
+        assert_eq!(st.executed, 2, "{st:?}");
+    }
+
+    #[test]
+    fn store_backed_scheduler_reports_store_stats() {
+        let dir = scratch_dir("sched-store");
+        let store = Arc::new(Store::open_with(&dir, false).unwrap());
+        let s = Scheduler::new(SchedulerConfig {
+            workers: 2,
+            shards: 2,
+            queue_cap: 64,
+            cache_bytes: 16 << 20,
+            store: Some(store),
+        });
+        let req = small_req(ArchKind::Dense, 29);
+        let a = s.execute(&req).unwrap();
+        assert_eq!(a.source, Source::Executed);
+        let st = s.stats();
+        let store_stats = st.store.expect("cold tier stats present");
+        assert_eq!(store_stats.records, 1, "write-through journaled the job");
+        // Same-process resubmission hits the *hot* tier.
+        assert_eq!(s.execute(&req).unwrap().source, Source::CacheHit);
+        drop(s);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn invalid_config_is_rejected_not_paniced() {
         let s = small_sched(1);
         let mut req = small_req(ArchKind::Barista, 1);
@@ -548,13 +693,16 @@ mod tests {
             shards: 1,
             queue_cap: 1,
             cache_bytes: 1 << 20,
+            store: None,
         });
         // Enqueue distinct jobs without waiting until one is rejected.
+        let (tx, rx) = mpsc::channel();
         let mut rejected = false;
-        let mut pending = Vec::new();
+        let mut pending = 0usize;
         for seed in 0..64 {
-            match s.enqueue(&small_req(ArchKind::Dense, 1000 + seed)) {
-                Ok(e) => pending.push(e),
+            match s.enqueue(&small_req(ArchKind::Dense, 1000 + seed), seed, &tx) {
+                Ok(Enqueued::Pending(_)) => pending += 1,
+                Ok(Enqueued::Ready(_)) => {}
                 Err(SubmitError::Busy { retry_after_ms }) => {
                     assert!(retry_after_ms > 0);
                     rejected = true;
@@ -566,10 +714,9 @@ mod tests {
         assert!(rejected, "queue_cap=1 must reject a burst of 64 jobs");
         assert!(s.stats().rejected >= 1);
         // Drain what was accepted so shutdown is clean.
-        for e in pending {
-            if let Enqueued::Pending(rx, _) = e {
-                let _ = rx.recv();
-            }
+        drop(tx);
+        for _ in 0..pending {
+            let _ = rx.recv();
         }
     }
 

@@ -5,7 +5,12 @@
 //! concurrency — not I/O multiplexing — is the bottleneck that matters).
 //! Every connection speaks the NDJSON protocol from [`super::protocol`];
 //! all connections share one [`Scheduler`], so deduplication and the
-//! content-addressed cache span clients.
+//! content-addressed tiered cache span clients (and — with a
+//! `--cache-dir` store — server restarts).
+//!
+//! Requests with `"stream":true` answer with multiple event frames
+//! (accepted → per-job progress → done) flushed as each job completes;
+//! everything else keeps the one-line-per-request contract.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -13,8 +18,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::service::cache::job_key;
 use crate::service::protocol::{self, JobSpec, Request};
-use crate::service::scheduler::{Outcome, Scheduler, SchedulerConfig, SubmitError};
+use crate::service::scheduler::{Outcome, Scheduler, SchedulerConfig, Source, SubmitError};
 use crate::util::Json;
 
 /// A running (not yet accepting) job server.
@@ -100,10 +106,23 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let (resp, quit) = respond(&line, scheduler, started);
-        writer.write_all(resp.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        // Streaming requests write their own (multi-frame) responses;
+        // everything else goes through the single-response path.
+        let quit = match Request::parse_line(&line) {
+            Ok(Request::Submit { spec, stream: true }) => {
+                stream_submit(&mut writer, scheduler, &spec)?;
+                false
+            }
+            Ok(Request::Batch { specs, stream: true }) => {
+                stream_batch(&mut writer, scheduler, &specs)?;
+                false
+            }
+            parsed => {
+                let (resp, quit) = respond_parsed(parsed, scheduler, started);
+                emit_line(&mut writer, &resp)?;
+                quit
+            }
+        };
         if quit {
             stop.store(true, Ordering::SeqCst);
             // The accept loop is blocked in `accept`; poke it awake so
@@ -127,12 +146,22 @@ fn handle_conn(
 
 /// Handle one request line; returns the response and whether the server
 /// should shut down. Public so an in-process client can speak the same
-/// protocol without a socket.
+/// protocol without a socket. Streaming requests taken through this
+/// single-response path run to completion and answer with the final
+/// frame only (streaming needs the socket path in [`handle_conn`]).
 pub fn respond(line: &str, scheduler: &Scheduler, started: Instant) -> (Json, bool) {
-    match Request::parse_line(line) {
+    respond_parsed(Request::parse_line(line), scheduler, started)
+}
+
+fn respond_parsed(
+    parsed: Result<Request, String>,
+    scheduler: &Scheduler,
+    started: Instant,
+) -> (Json, bool) {
+    match parsed {
         Err(e) => (protocol::response_error(&e), false),
-        Ok(Request::Submit(spec)) => (submit_response(scheduler, &spec), false),
-        Ok(Request::Batch(specs)) => (batch_response(scheduler, &specs), false),
+        Ok(Request::Submit { spec, .. }) => (submit_response(scheduler, &spec), false),
+        Ok(Request::Batch { specs, .. }) => (batch_response(scheduler, &specs), false),
         Ok(Request::Status) => (status_response(scheduler, started), false),
         Ok(Request::Stats) => {
             let mut j = Json::obj();
@@ -149,13 +178,33 @@ pub fn respond(line: &str, scheduler: &Scheduler, started: Instant) -> (Json, bo
     }
 }
 
-/// The per-job response body shared by `submit` and `batch` entries.
-fn outcome_json(outcome: &Outcome) -> Json {
-    let mut j = Json::obj();
+/// Serialize one frame and flush it (streaming clients must see each
+/// event as it happens, not when the buffer fills).
+fn emit_line<W: Write>(writer: &mut W, frame: &Json) -> std::io::Result<()> {
+    writer.write_all(frame.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+/// The per-job response fields shared by `submit`/`batch` entries and
+/// the streaming `progress`/`result` frames.
+fn outcome_fields(j: &mut Json, outcome: &Outcome) {
     j.set("source", outcome.source.name())
         .set("host_ms", outcome.entry.result.host_ms)
         .set("result", outcome.entry.network.clone());
+}
+
+fn outcome_json(outcome: &Outcome) -> Json {
+    let mut j = Json::obj();
+    outcome_fields(&mut j, outcome);
     j
+}
+
+fn submit_error_frame(e: &SubmitError) -> Json {
+    match e {
+        SubmitError::Busy { retry_after_ms } => protocol::response_busy(*retry_after_ms),
+        other => protocol::response_error(&other.to_string()),
+    }
 }
 
 fn submit_response(scheduler: &Scheduler, spec: &JobSpec) -> Json {
@@ -165,8 +214,7 @@ fn submit_response(scheduler: &Scheduler, spec: &JobSpec) -> Json {
             j.set("ok", true).set("op", "submit");
             j
         }
-        Err(SubmitError::Busy { retry_after_ms }) => protocol::response_busy(retry_after_ms),
-        Err(e) => protocol::response_error(&e.to_string()),
+        Err(e) => submit_error_frame(&e),
     }
 }
 
@@ -181,9 +229,76 @@ fn batch_response(scheduler: &Scheduler, specs: &[JobSpec]) -> Json {
             );
             j
         }
-        Err(SubmitError::Busy { retry_after_ms }) => protocol::response_busy(retry_after_ms),
-        Err(e) => protocol::response_error(&e.to_string()),
+        Err(e) => submit_error_frame(&e),
     }
+}
+
+/// `submit` with `"stream":true`: acknowledge the job (with its content
+/// address) before the seconds-long simulation, then send the result.
+fn stream_submit<W: Write>(
+    writer: &mut W,
+    scheduler: &Scheduler,
+    spec: &JobSpec,
+) -> std::io::Result<()> {
+    let req = spec.to_request();
+    let mut acc = protocol::event_frame("submit", "accepted");
+    acc.set("key", job_key(&req).hex()).set("jobs", 1usize);
+    emit_line(writer, &acc)?;
+    let frame = match scheduler.execute(&req) {
+        Ok(outcome) => {
+            let mut f = protocol::event_frame("submit", "result");
+            outcome_fields(&mut f, &outcome);
+            f
+        }
+        Err(e) => submit_error_frame(&e),
+    };
+    emit_line(writer, &frame)
+}
+
+/// `batch` with `"stream":true`: per-job `progress` frames in
+/// completion order, then a `done` summary counting each job's source
+/// (exact — counted from this batch's outcomes, not server-wide
+/// deltas, so concurrent clients cannot skew it).
+fn stream_batch<W: Write>(
+    writer: &mut W,
+    scheduler: &Scheduler,
+    specs: &[JobSpec],
+) -> std::io::Result<()> {
+    let reqs: Vec<_> = specs.iter().map(|s| s.to_request()).collect();
+    let mut acc = protocol::event_frame("batch", "accepted");
+    acc.set("jobs", reqs.len());
+    emit_line(writer, &acc)?;
+    let t0 = Instant::now();
+    let mut io_err: Option<std::io::Error> = None;
+    let res = scheduler.run_each(&reqs, |index, outcome| {
+        if io_err.is_some() {
+            return;
+        }
+        let mut f = protocol::event_frame("batch", "progress");
+        f.set("index", index);
+        outcome_fields(&mut f, outcome);
+        if let Err(e) = emit_line(writer, &f) {
+            io_err = Some(e);
+        }
+    });
+    if let Some(e) = io_err {
+        return Err(e);
+    }
+    let frame = match res {
+        Ok(outcomes) => {
+            let count = |s: Source| outcomes.iter().filter(|o| o.source == s).count();
+            let mut done = protocol::event_frame("batch", "done");
+            done.set("jobs", outcomes.len())
+                .set("executed", count(Source::Executed))
+                .set("cache", count(Source::CacheHit))
+                .set("store", count(Source::StoreHit))
+                .set("dedup", count(Source::Deduped))
+                .set("wall_ms", t0.elapsed().as_secs_f64() * 1e3);
+            done
+        }
+        Err(e) => submit_error_frame(&e),
+    };
+    emit_line(writer, &frame)
 }
 
 fn status_response(scheduler: &Scheduler, started: Instant) -> Json {
@@ -243,11 +358,85 @@ impl Client {
     }
 
     pub fn submit(&mut self, spec: &JobSpec) -> Result<Json, String> {
-        self.roundtrip(&Request::Submit(spec.clone()).to_json())
+        self.roundtrip(
+            &Request::Submit {
+                spec: spec.clone(),
+                stream: false,
+            }
+            .to_json(),
+        )
     }
 
     pub fn batch(&mut self, specs: &[JobSpec]) -> Result<Json, String> {
-        self.roundtrip(&Request::Batch(specs.to_vec()).to_json())
+        self.roundtrip(
+            &Request::Batch {
+                specs: specs.to_vec(),
+                stream: false,
+            }
+            .to_json(),
+        )
+    }
+
+    /// Streaming submit: `on_event` sees every non-terminal frame (the
+    /// `accepted` ack); the returned frame is the terminal `result` (or
+    /// an error response — check `ok`).
+    pub fn submit_stream<F: FnMut(&Json)>(
+        &mut self,
+        spec: &JobSpec,
+        on_event: F,
+    ) -> Result<Json, String> {
+        let req = Request::Submit {
+            spec: spec.clone(),
+            stream: true,
+        };
+        self.stream_roundtrip(&req.to_json(), on_event)
+    }
+
+    /// Streaming batch: `on_event` sees the `accepted` ack and each
+    /// per-job `progress` frame as it completes; the returned frame is
+    /// the terminal `done` summary (or an error response — check `ok`).
+    pub fn batch_stream<F: FnMut(&Json)>(
+        &mut self,
+        specs: &[JobSpec],
+        on_event: F,
+    ) -> Result<Json, String> {
+        let req = Request::Batch {
+            specs: specs.to_vec(),
+            stream: true,
+        };
+        self.stream_roundtrip(&req.to_json(), on_event)
+    }
+
+    /// Send one request, then read frames until a terminal one
+    /// ([`protocol::event_is_terminal`]), reporting the others through
+    /// `on_event` in arrival order.
+    fn stream_roundtrip<F: FnMut(&Json)>(
+        &mut self,
+        req: &Json,
+        mut on_event: F,
+    ) -> Result<Json, String> {
+        let mut line = req.to_string();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .map_err(|e| format!("send: {e}"))?;
+        self.writer.flush().map_err(|e| format!("flush: {e}"))?;
+        loop {
+            let mut buf = String::new();
+            let n = self
+                .reader
+                .read_line(&mut buf)
+                .map_err(|e| format!("recv: {e}"))?;
+            if n == 0 {
+                return Err("server closed the connection mid-stream".into());
+            }
+            let frame =
+                Json::parse(buf.trim_end()).map_err(|e| format!("bad frame JSON: {e}"))?;
+            if protocol::event_is_terminal(&frame) {
+                return Ok(frame);
+            }
+            on_event(&frame);
+        }
     }
 
     pub fn status(&mut self) -> Result<Json, String> {

@@ -1,0 +1,911 @@
+//! Disk-backed cold tier of the result cache: a content-addressed,
+//! crash-safe journal store.
+//!
+//! BARISTA's hardware thesis is that scaled-up designs must never
+//! re-fetch what a peer already fetched (telescoping input-map
+//! requests, snarfed filter requests); the service layer applies the
+//! same principle across *time*: a simulation result computed once is
+//! never recomputed — not even across server restarts, deploys or
+//! crashes. The in-memory LRU ([`super::cache::ResultCache`]) stays the
+//! hot tier; this module is the persistent cold tier underneath it
+//! (see [`super::cache::TieredCache`] for the tiering policy and
+//! DESIGN.md §Store for the full model).
+//!
+//! ## Journal format
+//!
+//! One append-only file, `journal.bjl`, in the store directory:
+//!
+//! ```text
+//! header:  b"BARISTAJ1\n"                      (10 bytes)
+//! record:  len   u32 LE   payload byte length
+//!          key0  u64 LE   JobKey.0 (content address, half 1)
+//!          key1  u64 LE   JobKey.1 (content address, half 2)
+//!          check u64 LE   FNV-1a(payload)
+//!          payload        `len` bytes of compact record JSON
+//! ```
+//!
+//! The payload is the compact per-layer record built by
+//! [`encode_record`] — GrateTile-style, only the irreducible per-layer
+//! counters are stored and every network-level aggregate is re-derived
+//! on load ([`decode_record`] proves bit-identity by construction:
+//! [`NetworkResult::from_layers`] re-runs the exact original reduction).
+//!
+//! ## Crash model
+//!
+//! Appends are flushed and (by default) `fdatasync`ed before the
+//! in-memory index is updated, so a record is either durable or absent.
+//! On open the journal is scanned front to back; the first record whose
+//! header is truncated, whose payload runs past EOF, or whose checksum
+//! mismatches marks the *torn tail*: everything before it is recovered,
+//! the tail is truncated away, and appends resume from the cut. A crash
+//! mid-write therefore loses at most the one in-flight record.
+//!
+//! ## Compaction
+//!
+//! Supersessions (last-wins re-puts of a key) and stale-simulator
+//! records (canonical strings from an older [`crate::SIM_VERSION`],
+//! which can never be queried again because the version is folded into
+//! every key) accumulate as dead bytes. When dead bytes exceed the live
+//! set (and a minimum floor), the journal is rewritten: live records
+//! only, in original append order, into `journal.tmp`, fsync, atomic
+//! rename over `journal.bjl`, directory fsync. Compaction preserves the
+//! live set bit-identically (unit-tested) and runs automatically at
+//! open and after appends, or explicitly via [`Store::compact`].
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::coordinator::{RunRequest, RunResult};
+use crate::service::cache::JobKey;
+use crate::sim::{Breakdown, EnergyCounters, LayerResult, NetworkResult, Traffic};
+use crate::util::{fnv1a64, Json, FNV_OFFSET_BASIS};
+
+/// Journal file name inside the store directory.
+const JOURNAL: &str = "journal.bjl";
+/// Compaction scratch file (atomically renamed over [`JOURNAL`]).
+const JOURNAL_TMP: &str = "journal.tmp";
+/// File header: magic + format version. Bump the digit on any framing
+/// change; an unrecognized header is an open error, never a guess.
+const HEADER: &[u8] = b"BARISTAJ1\n";
+/// Per-record frame bytes ahead of the payload: len + key0 + key1 + check.
+const REC_HEADER: usize = 4 + 8 + 8 + 8;
+/// Sanity bound on a single payload; anything larger is treated as a
+/// torn/corrupt length field.
+const MAX_PAYLOAD: u32 = 1 << 30;
+/// Auto-compaction floor: below this many dead bytes, never bother.
+const COMPACT_MIN_DEAD: u64 = 64 * 1024;
+
+/// One live record's location in the journal.
+#[derive(Debug, Clone, Copy)]
+struct RecordLoc {
+    /// Offset of the record frame (not the payload) from file start.
+    offset: u64,
+    /// Payload length in bytes.
+    len: u32,
+}
+
+impl RecordLoc {
+    /// Total journal bytes the record occupies (frame + payload).
+    fn total(&self) -> u64 {
+        REC_HEADER as u64 + self.len as u64
+    }
+}
+
+/// Counter snapshot for `stats` requests and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreStats {
+    /// Live (queryable) records.
+    pub records: usize,
+    /// Total journal file bytes.
+    pub journal_bytes: u64,
+    /// Journal bytes occupied by live records (frames + payloads).
+    pub live_bytes: u64,
+    /// Records appended through this handle.
+    pub appends: u64,
+    /// Cold-tier lookups that found a record.
+    pub hits: u64,
+    /// Cold-tier lookups that missed.
+    pub misses: u64,
+    /// Compaction passes completed (this handle).
+    pub compactions: u64,
+    /// Live records recovered when the journal was opened.
+    pub recovered_records: usize,
+    /// Stale-simulator-version records found at open (dead weight until
+    /// the next compaction).
+    pub stale_records: usize,
+    /// Whether open found and truncated a torn tail.
+    pub dropped_tail: bool,
+}
+
+impl StoreStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("records", self.records)
+            .set("journal_bytes", self.journal_bytes)
+            .set("live_bytes", self.live_bytes)
+            .set("appends", self.appends)
+            .set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("compactions", self.compactions)
+            .set("recovered_records", self.recovered_records)
+            .set("stale_records", self.stale_records)
+            .set("dropped_tail", self.dropped_tail);
+        j
+    }
+}
+
+struct Inner {
+    /// Live records by content address (last write wins).
+    index: HashMap<JobKey, RecordLoc>,
+    /// Append handle, positioned by explicit seeks.
+    writer: File,
+    /// Separate read handle so gets never disturb the append position.
+    reader: File,
+    /// Valid journal length (everything before it parses).
+    journal_len: u64,
+    /// Frame+payload bytes of the live set.
+    live_bytes: u64,
+    appends: u64,
+    hits: u64,
+    misses: u64,
+    compactions: u64,
+    recovered_records: usize,
+    stale_records: usize,
+    dropped_tail: bool,
+}
+
+/// The persistent cold tier. Thread-safe; cheap to share behind an
+/// `Arc`. All I/O goes through an internal mutex — the store is on the
+/// miss/completion path, never on the hot-tier hit path.
+pub struct Store {
+    dir: PathBuf,
+    /// `fdatasync` each append (on by default; tests that hammer the
+    /// journal can opt out — crash safety is then only as good as the
+    /// OS page cache).
+    sync: bool,
+    inner: Mutex<Inner>,
+}
+
+impl fmt::Debug for Store {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Store").field("dir", &self.dir).finish()
+    }
+}
+
+impl Store {
+    /// Open (or create) a store directory with durable appends.
+    pub fn open(dir: &Path) -> io::Result<Store> {
+        Store::open_with(dir, true)
+    }
+
+    /// [`open`](Store::open) with explicit append durability.
+    pub fn open_with(dir: &Path, sync: bool) -> io::Result<Store> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(JOURNAL);
+        // Clean up a compaction scratch file left by a crash mid-compact
+        // (the rename never happened, so the journal itself is intact).
+        let _ = std::fs::remove_file(dir.join(JOURNAL_TMP));
+        let mut writer = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)?;
+        let file_len = writer.metadata()?.len();
+        let mut index = HashMap::new();
+        let mut stale_records = 0usize;
+        let mut valid_len;
+        if file_len == 0 {
+            writer.write_all(HEADER)?;
+            writer.flush()?;
+            if sync {
+                writer.sync_data()?;
+            }
+            valid_len = HEADER.len() as u64;
+        } else {
+            // Streaming scan: one record in memory at a time, so open
+            // cost is bounded by the largest record, not the journal.
+            writer.seek(SeekFrom::Start(0))?;
+            let mut br = io::BufReader::new(&mut writer);
+            let mut magic = [0u8; HEADER.len()];
+            if br.read_exact(&mut magic).is_err() || &magic[..] != HEADER {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("{}: not a BARISTA journal (bad header)", path.display()),
+                ));
+            }
+            valid_len = HEADER.len() as u64;
+            let stale_prefix = format!("\"canon\":\"sim-v{}|", crate::SIM_VERSION);
+            let mut frame = [0u8; REC_HEADER];
+            // Any framing failure — truncated frame, length field
+            // pointing past EOF or absurd, short payload, checksum
+            // mismatch — marks the torn tail: stop, keeping everything
+            // before it.
+            loop {
+                if br.read_exact(&mut frame).is_err() {
+                    break;
+                }
+                let len = u32::from_le_bytes(frame[0..4].try_into().unwrap());
+                let remaining = file_len.saturating_sub(valid_len + REC_HEADER as u64);
+                if len >= MAX_PAYLOAD || len as u64 > remaining {
+                    break;
+                }
+                let key = JobKey(
+                    u64::from_le_bytes(frame[4..12].try_into().unwrap()),
+                    u64::from_le_bytes(frame[12..20].try_into().unwrap()),
+                );
+                let check = u64::from_le_bytes(frame[20..28].try_into().unwrap());
+                let mut payload = vec![0u8; len as usize];
+                if br.read_exact(&mut payload).is_err() {
+                    break;
+                }
+                if fnv1a64(&payload, FNV_OFFSET_BASIS) != check {
+                    break;
+                }
+                let loc = RecordLoc {
+                    offset: valid_len,
+                    len,
+                };
+                // A record that parses may still belong to an older
+                // simulator version: its key can never be queried again
+                // (the version is folded into every key), so it is dead
+                // weight awaiting compaction. The check is a cheap
+                // substring probe on the canonical string every encoder
+                // embeds; a payload without it is counted stale too (it
+                // could never be decoded).
+                if payload_is_current(&payload, &stale_prefix) {
+                    // Duplicate keys: the later record wins (last-write
+                    // semantics, matching `put`).
+                    index.insert(key, loc);
+                } else {
+                    stale_records += 1;
+                }
+                valid_len += loc.total();
+            }
+        }
+        let dropped_tail = valid_len < file_len;
+        if dropped_tail {
+            // Torn tail from a crash mid-append: truncate it away so
+            // the journal ends on a record boundary again.
+            writer.set_len(valid_len)?;
+            writer.flush()?;
+            if sync {
+                writer.sync_data()?;
+            }
+        }
+        let live_bytes: u64 = index.values().map(RecordLoc::total).sum();
+        let reader = OpenOptions::new().read(true).open(&path)?;
+        let recovered_records = index.len();
+        let store = Store {
+            dir: dir.to_path_buf(),
+            sync,
+            inner: Mutex::new(Inner {
+                index,
+                writer,
+                reader,
+                journal_len: valid_len,
+                live_bytes,
+                appends: 0,
+                hits: 0,
+                misses: 0,
+                compactions: 0,
+                recovered_records,
+                stale_records,
+                dropped_tail,
+            }),
+        };
+        // Fold accumulated garbage (stale versions, supersessions from
+        // previous runs) on startup rather than carrying it forever.
+        {
+            let mut g = store.inner.lock().unwrap();
+            if store.should_compact(&g) {
+                store.compact_locked(&mut g)?;
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of live (queryable) records.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether a record exists for `key`, without reading it (and
+    /// without touching the hit/miss counters).
+    pub fn contains(&self, key: &JobKey) -> bool {
+        self.inner.lock().unwrap().index.contains_key(key)
+    }
+
+    /// Read the payload stored for `key`.
+    pub fn get(&self, key: &JobKey) -> Option<String> {
+        let mut g = self.inner.lock().unwrap();
+        let loc = match g.index.get(key) {
+            Some(loc) => *loc,
+            None => {
+                g.misses += 1;
+                return None;
+            }
+        };
+        match read_payload(&mut g.reader, loc) {
+            Ok(payload) => {
+                g.hits += 1;
+                Some(payload)
+            }
+            Err(_) => {
+                // An indexed record that cannot be read back means the
+                // file shrank or rotted under us; fail the lookup (the
+                // caller simulates) rather than panic a worker.
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Append a record (last write for a key wins). The payload must be
+    /// the compact JSON produced by [`encode_record`] — the store does
+    /// not validate it beyond the checksum it adds.
+    pub fn put(&self, key: JobKey, payload: &str) -> io::Result<()> {
+        if payload.len() as u64 >= MAX_PAYLOAD as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "store payload exceeds the 1 GiB record bound",
+            ));
+        }
+        let mut g = self.inner.lock().unwrap();
+        let offset = g.journal_len;
+        let frame = encode_frame(key, payload.as_bytes());
+        g.writer.seek(SeekFrom::Start(offset))?;
+        g.writer.write_all(&frame)?;
+        g.writer.flush()?;
+        if self.sync {
+            g.writer.sync_data()?;
+        }
+        // Only after the bytes are durable does the record become
+        // visible: a crash between write and index update re-plays the
+        // record from the journal at next open.
+        let loc = RecordLoc {
+            offset,
+            len: payload.len() as u32,
+        };
+        g.journal_len += loc.total();
+        g.live_bytes += loc.total();
+        if let Some(old) = g.index.insert(key, loc) {
+            g.live_bytes -= old.total();
+        }
+        g.appends += 1;
+        if self.should_compact(&g) {
+            self.compact_locked(&mut g)?;
+        }
+        Ok(())
+    }
+
+    /// Dead-byte policy: compact when garbage exceeds both the live set
+    /// and a fixed floor (so tiny journals never churn).
+    fn should_compact(&self, g: &Inner) -> bool {
+        let dead = g
+            .journal_len
+            .saturating_sub(HEADER.len() as u64)
+            .saturating_sub(g.live_bytes);
+        dead >= COMPACT_MIN_DEAD && dead > g.live_bytes
+    }
+
+    /// Rewrite the journal to the live set only. Atomic: the new
+    /// journal is fully written and fsynced as `journal.tmp`, renamed
+    /// over the old file, then the directory entry is fsynced — a crash
+    /// at any point leaves either the old or the new journal intact.
+    pub fn compact(&self) -> io::Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        self.compact_locked(&mut g)
+    }
+
+    fn compact_locked(&self, g: &mut Inner) -> io::Result<()> {
+        // Live records in original append order (offset order), so the
+        // compacted journal replays identically.
+        let mut live: Vec<(JobKey, RecordLoc)> =
+            g.index.iter().map(|(k, l)| (*k, *l)).collect();
+        live.sort_by_key(|(_, l)| l.offset);
+
+        let tmp_path = self.dir.join(JOURNAL_TMP);
+        let mut tmp = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp_path)?;
+        tmp.write_all(HEADER)?;
+        let mut new_index = HashMap::with_capacity(live.len());
+        let mut off = HEADER.len() as u64;
+        for (key, loc) in &live {
+            let payload = read_payload(&mut g.reader, *loc)?;
+            tmp.write_all(&encode_frame(*key, payload.as_bytes()))?;
+            let new_loc = RecordLoc {
+                offset: off,
+                len: loc.len,
+            };
+            off += new_loc.total();
+            new_index.insert(*key, new_loc);
+        }
+        tmp.flush()?;
+        tmp.sync_all()?;
+        drop(tmp);
+        let path = self.dir.join(JOURNAL);
+        std::fs::rename(&tmp_path, &path)?;
+        // Persist the rename itself (the directory entry).
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        // The old handles point at the replaced inode — reopen both.
+        g.writer = OpenOptions::new().read(true).write(true).open(&path)?;
+        g.reader = OpenOptions::new().read(true).open(&path)?;
+        g.index = new_index;
+        g.journal_len = off;
+        g.live_bytes = g.index.values().map(RecordLoc::total).sum();
+        g.stale_records = 0;
+        g.compactions += 1;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let g = self.inner.lock().unwrap();
+        StoreStats {
+            records: g.index.len(),
+            journal_bytes: g.journal_len,
+            live_bytes: g.live_bytes,
+            appends: g.appends,
+            hits: g.hits,
+            misses: g.misses,
+            compactions: g.compactions,
+            recovered_records: g.recovered_records,
+            stale_records: g.stale_records,
+            dropped_tail: g.dropped_tail,
+        }
+    }
+}
+
+/// Frame a record: len + key + checksum + payload.
+fn encode_frame(key: JobKey, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(REC_HEADER + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&key.0.to_le_bytes());
+    out.extend_from_slice(&key.1.to_le_bytes());
+    out.extend_from_slice(&fnv1a64(payload, FNV_OFFSET_BASIS).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Cheap current-version probe: every [`encode_record`] payload embeds
+/// `"canon":"sim-vN|...` near the front, so a substring check avoids a
+/// full JSON parse per record at open.
+fn payload_is_current(payload: &[u8], stale_prefix: &str) -> bool {
+    // The canon key is within the first few fields of a compact JSON
+    // object; search the whole payload anyway — open is not a hot path.
+    payload
+        .windows(stale_prefix.len())
+        .any(|w| w == stale_prefix.as_bytes())
+}
+
+fn read_payload(reader: &mut File, loc: RecordLoc) -> io::Result<String> {
+    reader.seek(SeekFrom::Start(loc.offset + REC_HEADER as u64))?;
+    let mut buf = vec![0u8; loc.len as usize];
+    reader.read_exact(&mut buf)?;
+    String::from_utf8(buf)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, format!("payload not utf8: {e}")))
+}
+
+// ---------------------------------------------------------------------
+// Record payload: compact, lossless serialization of one RunResult.
+// ---------------------------------------------------------------------
+
+/// Serialize a finished job for the journal. Only the irreducible
+/// per-layer counters travel (plus the canonical job string for
+/// collision/version checking and `host_ms` for provenance); all
+/// network-level aggregates are re-derived on decode by the exact
+/// original reduction, so the round trip is bit-identical.
+pub fn encode_record(result: &RunResult, canon: &str) -> String {
+    let mut j = Json::obj();
+    j.set("canon", canon)
+        .set("arch", result.network.arch.as_str())
+        .set("benchmark", result.network.benchmark.as_str())
+        .set("host_ms", result.host_ms)
+        .set(
+            "layers",
+            Json::Arr(result.network.layers.iter().map(layer_json).collect()),
+        );
+    j.to_string()
+}
+
+/// Rebuild a [`RunResult`] from a journal payload for `req`. The stored
+/// canonical string must match `req`'s exactly — a mismatch means a
+/// 128-bit hash collision or a journal reused across incompatible
+/// builds, and the caller falls back to simulating.
+pub fn decode_record(payload: &str, req: &RunRequest, canon: &str) -> Result<RunResult, String> {
+    let j = Json::parse(payload).map_err(|e| format!("record JSON: {e}"))?;
+    let stored_canon = j
+        .get("canon")
+        .and_then(Json::as_str)
+        .ok_or("record missing 'canon'")?;
+    if stored_canon != canon {
+        return Err(format!(
+            "canonical string mismatch: stored '{stored_canon}' vs requested '{canon}'"
+        ));
+    }
+    let host_ms = j
+        .get("host_ms")
+        .and_then(Json::as_f64)
+        .ok_or("record missing 'host_ms'")?;
+    let layers = j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or("record missing 'layers'")?
+        .iter()
+        .map(layer_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    // Re-run the original aggregation (same reduction, same order) —
+    // cycles/breakdown/traffic/energy/peak come out bit-identical.
+    let network = NetworkResult::from_layers(
+        req.config.arch.name(),
+        req.benchmark.name(),
+        layers,
+    );
+    Ok(RunResult {
+        benchmark: req.benchmark,
+        arch: req.config.arch,
+        network,
+        host_ms,
+    })
+}
+
+fn layer_json(l: &LayerResult) -> Json {
+    let mut b = Json::obj();
+    b.set("nonzero", l.breakdown.nonzero)
+        .set("zero", l.breakdown.zero)
+        .set("barrier", l.breakdown.barrier)
+        .set("bandwidth", l.breakdown.bandwidth)
+        .set("other", l.breakdown.other);
+    let mut t = Json::obj();
+    t.set("cache_lines", l.traffic.cache_lines)
+        .set("refetch_lines", l.traffic.refetch_lines)
+        .set("dram_nz_bytes", l.traffic.dram_nz_bytes)
+        .set("dram_zero_bytes", l.traffic.dram_zero_bytes);
+    let mut e = Json::obj();
+    e.set("matched_macs", l.energy.matched_macs)
+        .set("plain_macs", l.energy.plain_macs)
+        .set("zero_macs", l.energy.zero_macs)
+        .set("chunk_ops", l.energy.chunk_ops)
+        .set("chunk_ops_one_sided", l.energy.chunk_ops_one_sided)
+        .set("buffer_bytes", l.energy.buffer_bytes)
+        .set("cache_bytes", l.energy.cache_bytes)
+        .set("dram_nz_bytes", l.energy.dram_nz_bytes)
+        .set("dram_zero_bytes", l.energy.dram_zero_bytes);
+    let mut j = Json::obj();
+    j.set("cycles", l.cycles)
+        .set("breakdown", b)
+        .set("traffic", t)
+        .set("energy", e)
+        .set("peak_buffer_bytes", l.peak_buffer_bytes)
+        .set("refetch_ratio", l.refetch_ratio);
+    j
+}
+
+fn need_f64(j: &Json, ctx: &str, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("record {ctx} missing '{key}'"))
+}
+
+fn need_u64(j: &Json, ctx: &str, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("record {ctx} missing '{key}'"))
+}
+
+fn layer_from_json(j: &Json) -> Result<LayerResult, String> {
+    let b = j.get("breakdown").ok_or("layer missing 'breakdown'")?;
+    let t = j.get("traffic").ok_or("layer missing 'traffic'")?;
+    let e = j.get("energy").ok_or("layer missing 'energy'")?;
+    Ok(LayerResult {
+        cycles: need_f64(j, "layer", "cycles")?,
+        breakdown: Breakdown {
+            nonzero: need_f64(b, "breakdown", "nonzero")?,
+            zero: need_f64(b, "breakdown", "zero")?,
+            barrier: need_f64(b, "breakdown", "barrier")?,
+            bandwidth: need_f64(b, "breakdown", "bandwidth")?,
+            other: need_f64(b, "breakdown", "other")?,
+        },
+        traffic: Traffic {
+            cache_lines: need_u64(t, "traffic", "cache_lines")?,
+            refetch_lines: need_u64(t, "traffic", "refetch_lines")?,
+            dram_nz_bytes: need_u64(t, "traffic", "dram_nz_bytes")?,
+            dram_zero_bytes: need_u64(t, "traffic", "dram_zero_bytes")?,
+        },
+        energy: EnergyCounters {
+            matched_macs: need_u64(e, "energy", "matched_macs")?,
+            plain_macs: need_u64(e, "energy", "plain_macs")?,
+            zero_macs: need_u64(e, "energy", "zero_macs")?,
+            chunk_ops: need_u64(e, "energy", "chunk_ops")?,
+            chunk_ops_one_sided: need_u64(e, "energy", "chunk_ops_one_sided")?,
+            buffer_bytes: need_u64(e, "energy", "buffer_bytes")?,
+            cache_bytes: need_u64(e, "energy", "cache_bytes")?,
+            dram_nz_bytes: need_u64(e, "energy", "dram_nz_bytes")?,
+            dram_zero_bytes: need_u64(e, "energy", "dram_zero_bytes")?,
+        },
+        peak_buffer_bytes: need_u64(j, "layer", "peak_buffer_bytes")?,
+        refetch_ratio: need_f64(j, "layer", "refetch_ratio")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchKind, SimConfig};
+    use crate::coordinator::run_one;
+    use crate::service::cache::{canonical_job_string, job_key};
+    use crate::util::scratch_dir;
+    use crate::workload::Benchmark;
+
+    fn small_req(seed: u64) -> RunRequest {
+        let mut c = SimConfig::paper(ArchKind::Barista);
+        c.window_cap = 16;
+        c.batch = 1;
+        c.seed = seed;
+        RunRequest {
+            benchmark: Benchmark::AlexNet,
+            config: c,
+        }
+    }
+
+    /// A tiny but *valid* record payload (version-current canon) for
+    /// framing tests that never decode it.
+    fn raw_payload(i: u64, pad: usize) -> String {
+        format!(
+            r#"{{"canon":"sim-v{}|test|{}","pad":"{}"}}"#,
+            crate::SIM_VERSION,
+            i,
+            "x".repeat(pad)
+        )
+    }
+
+    #[test]
+    fn put_get_survive_reopen() {
+        let dir = scratch_dir("store-reopen");
+        {
+            let s = Store::open_with(&dir, false).unwrap();
+            s.put(JobKey(1, 2), &raw_payload(1, 10)).unwrap();
+            s.put(JobKey(3, 4), &raw_payload(2, 200)).unwrap();
+            assert_eq!(s.len(), 2);
+            assert_eq!(s.get(&JobKey(1, 2)).unwrap(), raw_payload(1, 10));
+            assert!(s.get(&JobKey(9, 9)).is_none());
+            let st = s.stats();
+            assert_eq!((st.appends, st.hits, st.misses), (2, 1, 1));
+        }
+        let s = Store::open_with(&dir, false).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.stats().recovered_records, 2);
+        assert!(!s.stats().dropped_tail);
+        assert_eq!(s.get(&JobKey(3, 4)).unwrap(), raw_payload(2, 200));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn last_write_wins_within_and_across_opens() {
+        let dir = scratch_dir("store-lww");
+        {
+            let s = Store::open_with(&dir, false).unwrap();
+            s.put(JobKey(7, 7), &raw_payload(1, 5)).unwrap();
+            s.put(JobKey(7, 7), &raw_payload(2, 50)).unwrap();
+            assert_eq!(s.len(), 1);
+            assert_eq!(s.get(&JobKey(7, 7)).unwrap(), raw_payload(2, 50));
+        }
+        let s = Store::open_with(&dir, false).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(&JobKey(7, 7)).unwrap(), raw_payload(2, 50));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_journal_stays_appendable() {
+        let dir = scratch_dir("store-torn");
+        let boundary;
+        {
+            let s = Store::open_with(&dir, false).unwrap();
+            s.put(JobKey(1, 1), &raw_payload(1, 40)).unwrap();
+            boundary = s.stats().journal_bytes;
+            s.put(JobKey(2, 2), &raw_payload(2, 40)).unwrap();
+        }
+        // Tear the second record mid-payload.
+        let path = dir.join(JOURNAL);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..(boundary as usize + REC_HEADER + 3)]).unwrap();
+        let s = Store::open_with(&dir, false).unwrap();
+        let st = s.stats();
+        assert!(st.dropped_tail);
+        assert_eq!(st.recovered_records, 1);
+        assert_eq!(st.journal_bytes, boundary);
+        assert_eq!(s.get(&JobKey(1, 1)).unwrap(), raw_payload(1, 40));
+        assert!(s.get(&JobKey(2, 2)).is_none());
+        // Appends resume cleanly from the cut.
+        s.put(JobKey(3, 3), &raw_payload(3, 8)).unwrap();
+        drop(s);
+        let s = Store::open_with(&dir, false).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(&JobKey(3, 3)).unwrap(), raw_payload(3, 8));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_corruption_drops_the_tail() {
+        let dir = scratch_dir("store-crc");
+        {
+            let s = Store::open_with(&dir, false).unwrap();
+            s.put(JobKey(1, 1), &raw_payload(1, 30)).unwrap();
+            s.put(JobKey(2, 2), &raw_payload(2, 30)).unwrap();
+        }
+        let path = dir.join(JOURNAL);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a byte in the *second* record's payload.
+        let n = bytes.len();
+        bytes[n - 5] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let s = Store::open_with(&dir, false).unwrap();
+        assert_eq!(s.stats().recovered_records, 1);
+        assert!(s.stats().dropped_tail);
+        assert!(s.get(&JobKey(2, 2)).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn garbage_header_is_rejected() {
+        let dir = scratch_dir("store-badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(JOURNAL), b"not a journal at all").unwrap();
+        assert!(Store::open_with(&dir, false).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_preserves_live_set_bit_identically() {
+        let dir = scratch_dir("store-compact");
+        let s = Store::open_with(&dir, false).unwrap();
+        // 8 keys; overwrite half of them so supersessions exist.
+        let mut expected: Vec<(JobKey, String)> = Vec::new();
+        for i in 0..8u64 {
+            let key = JobKey(i, i * 31 + 1);
+            s.put(key, &raw_payload(i, 16)).unwrap();
+        }
+        for i in 0..8u64 {
+            let key = JobKey(i, i * 31 + 1);
+            let payload = if i % 2 == 0 {
+                let p = raw_payload(100 + i, 24);
+                s.put(key, &p).unwrap();
+                p
+            } else {
+                raw_payload(i, 16)
+            };
+            expected.push((key, payload));
+        }
+        let before_bytes = s.stats().journal_bytes;
+        s.compact().unwrap();
+        let st = s.stats();
+        assert_eq!(st.compactions, 1);
+        assert!(
+            st.journal_bytes < before_bytes,
+            "compaction must shrink the journal: {} -> {}",
+            before_bytes,
+            st.journal_bytes
+        );
+        assert_eq!(st.records, 8);
+        for (key, payload) in &expected {
+            assert_eq!(s.get(key).as_deref(), Some(payload.as_str()), "{key:?}");
+        }
+        // The compacted journal replays identically from disk.
+        drop(s);
+        let s = Store::open_with(&dir, false).unwrap();
+        assert_eq!(s.len(), 8);
+        for (key, payload) in &expected {
+            assert_eq!(s.get(key).as_deref(), Some(payload.as_str()), "{key:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_version_records_are_dead_and_compacted_away() {
+        let dir = scratch_dir("store-stale");
+        {
+            let s = Store::open_with(&dir, false).unwrap();
+            s.put(JobKey(1, 1), &raw_payload(1, 10)).unwrap();
+            // A record from a hypothetical older simulator.
+            s.put(
+                JobKey(2, 2),
+                r#"{"canon":"sim-v0|test|old","pad":"y"}"#,
+            )
+            .unwrap();
+        }
+        let s = Store::open_with(&dir, false).unwrap();
+        let st = s.stats();
+        assert_eq!(st.records, 1, "stale record must not be indexed");
+        assert_eq!(st.stale_records, 1);
+        s.compact().unwrap();
+        drop(s);
+        let s = Store::open_with(&dir, false).unwrap();
+        assert_eq!(s.stats().stale_records, 0, "compaction drops stale records");
+        assert_eq!(s.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_is_bit_identical() {
+        let req = small_req(3);
+        let result = run_one(&req);
+        let canon = canonical_job_string(&req);
+        let payload = encode_record(&result, &canon);
+        let back = decode_record(&payload, &req, &canon).unwrap();
+        assert_eq!(back.host_ms, result.host_ms);
+        assert_eq!(back.benchmark, result.benchmark);
+        assert_eq!(back.arch, result.arch);
+        assert_eq!(back.network.cycles, result.network.cycles);
+        assert_eq!(back.network.breakdown, result.network.breakdown);
+        assert_eq!(back.network.traffic, result.network.traffic);
+        assert_eq!(back.network.energy, result.network.energy);
+        assert_eq!(back.network.peak_buffer_bytes, result.network.peak_buffer_bytes);
+        assert_eq!(back.network.layers.len(), result.network.layers.len());
+        for (a, b) in back.network.layers.iter().zip(&result.network.layers) {
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.breakdown, b.breakdown);
+            assert_eq!(a.traffic, b.traffic);
+            assert_eq!(a.energy, b.energy);
+            assert_eq!(a.peak_buffer_bytes, b.peak_buffer_bytes);
+            assert_eq!(a.refetch_ratio, b.refetch_ratio);
+        }
+        // The wire/report serialization — what cached responses embed —
+        // is byte-identical too.
+        assert_eq!(
+            back.network.to_json().to_string(),
+            result.network.to_json().to_string()
+        );
+        // A second encode of the decoded result reproduces the payload.
+        assert_eq!(encode_record(&back, &canon), payload);
+    }
+
+    #[test]
+    fn decode_rejects_canon_mismatch() {
+        let req = small_req(4);
+        let result = run_one(&req);
+        let canon = canonical_job_string(&req);
+        let payload = encode_record(&result, &canon);
+        let other = small_req(5);
+        let err = decode_record(&payload, &other, &canonical_job_string(&other)).unwrap_err();
+        assert!(err.contains("mismatch"), "{err}");
+    }
+
+    #[test]
+    fn store_roundtrips_a_real_job() {
+        let dir = scratch_dir("store-real");
+        let req = small_req(6);
+        let key = job_key(&req);
+        let canon = canonical_job_string(&req);
+        let result = run_one(&req);
+        {
+            let s = Store::open_with(&dir, false).unwrap();
+            s.put(key, &encode_record(&result, &canon)).unwrap();
+        }
+        let s = Store::open_with(&dir, false).unwrap();
+        let payload = s.get(&key).expect("record survives reopen");
+        let back = decode_record(&payload, &req, &canon).unwrap();
+        assert_eq!(
+            back.network.to_json().to_string(),
+            result.network.to_json().to_string()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

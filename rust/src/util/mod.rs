@@ -28,6 +28,22 @@ pub fn ceil_div(a: u64, b: u64) -> u64 {
     (a + b - 1) / b
 }
 
+/// A fresh process-unique scratch directory under the system temp dir
+/// (created). Tests and benches that need disk state (the service
+/// store's journals) use it instead of a `tempfile` dependency; callers
+/// remove it when done (best effort — the OS temp dir is disposable).
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "barista-{tag}-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
 /// Standard FNV-1a 64-bit offset basis.
 pub const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
 

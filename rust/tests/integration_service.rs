@@ -38,6 +38,7 @@ fn test_server() -> (std::net::SocketAddr, std::thread::JoinHandle<std::io::Resu
             shards: 2,
             queue_cap: 128,
             cache_bytes: 32 << 20,
+            store: None,
         },
     )
     .expect("bind ephemeral port")
@@ -214,6 +215,7 @@ fn randomized_job_mix_is_cache_exact_across_sparsity_models() {
         shards: 2,
         queue_cap: 128,
         cache_bytes: 64 << 20,
+        store: None,
     });
     // Deterministic "random" pool: benchmarks × archs × scenarios,
     // with one group differing only in the sparsity model.
@@ -300,6 +302,7 @@ fn in_process_scheduler_reuses_sweep_results_across_figures() {
         shards: 2,
         queue_cap: 64,
         cache_bytes: 32 << 20,
+        store: None,
     });
     let base = small_cfg(ArchKind::Barista, 5);
     let reqs = barista::coordinator::sweep_requests(
@@ -320,4 +323,125 @@ fn in_process_scheduler_reuses_sweep_results_across_figures() {
             b.network.to_json().to_string()
         );
     }
+}
+
+#[test]
+fn streaming_submit_acks_before_the_result() {
+    let (addr, server) = test_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+
+    let spec = small_spec(Benchmark::AlexNet, ArchKind::Barista, 31);
+    let mut events: Vec<Json> = Vec::new();
+    let final_frame = client
+        .submit_stream(&spec, |ev| events.push(ev.clone()))
+        .expect("stream submit");
+
+    // Exactly one non-terminal frame: the accepted ack, carrying the
+    // job's 128-bit content address.
+    assert_eq!(events.len(), 1, "{events:?}");
+    assert_eq!(
+        events[0].get("event").and_then(Json::as_str),
+        Some("accepted")
+    );
+    let key = events[0].get("key").and_then(Json::as_str).unwrap();
+    assert_eq!(key.len(), 32, "hex 128-bit key: {key}");
+
+    // The terminal frame is the result, byte-identical to run_one.
+    assert_eq!(final_frame.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        final_frame.get("event").and_then(Json::as_str),
+        Some("result")
+    );
+    let direct = run_one(&RunRequest {
+        benchmark: spec.benchmark,
+        config: spec.config.clone(),
+    });
+    assert_eq!(
+        final_frame.get("result").unwrap().to_string(),
+        direct.network.to_json().to_string(),
+        "streamed result must be byte-identical to run_one"
+    );
+
+    // The connection still speaks the one-line protocol afterwards.
+    let status = client.status().expect("status after stream");
+    assert_eq!(status.get("ok").and_then(Json::as_bool), Some(true));
+
+    client.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("server io");
+}
+
+#[test]
+fn streaming_batch_reports_each_job_then_a_done_summary() {
+    let (addr, server) = test_server();
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+
+    let specs = vec![
+        small_spec(Benchmark::AlexNet, ArchKind::Dense, 33),
+        small_spec(Benchmark::AlexNet, ArchKind::Ideal, 33),
+        small_spec(Benchmark::AlexNet, ArchKind::Dense, 33), // dup of [0]
+    ];
+    let mut events: Vec<Json> = Vec::new();
+    let done = client
+        .batch_stream(&specs, |ev| events.push(ev.clone()))
+        .expect("stream batch");
+
+    // Frame order: accepted first, then one progress per job.
+    assert!(!events.is_empty());
+    assert_eq!(
+        events[0].get("event").and_then(Json::as_str),
+        Some("accepted")
+    );
+    assert_eq!(events[0].get("jobs").and_then(Json::as_u64), Some(3));
+    let progress: Vec<&Json> = events[1..].iter().collect();
+    assert_eq!(progress.len(), 3, "{events:?}");
+    let mut indexes: Vec<usize> = progress
+        .iter()
+        .map(|e| e.get("index").and_then(Json::as_usize).unwrap())
+        .collect();
+    indexes.sort_unstable();
+    assert_eq!(indexes, vec![0, 1, 2], "each job reported exactly once");
+
+    // Every progress body matches the non-streaming response for the
+    // same job (byte-identical result payloads).
+    let direct: Vec<String> = specs
+        .iter()
+        .map(|s| {
+            run_one(&RunRequest {
+                benchmark: s.benchmark,
+                config: s.config.clone(),
+            })
+            .network
+            .to_json()
+            .to_string()
+        })
+        .collect();
+    for ev in &progress {
+        let idx = ev.get("index").and_then(Json::as_usize).unwrap();
+        assert_eq!(
+            ev.get("result").unwrap().to_string(),
+            direct[idx],
+            "progress frame for job {idx}"
+        );
+    }
+
+    // The done summary counts this batch's sources exactly: two
+    // distinct jobs, one reuse (dedup or cache depending on timing).
+    assert_eq!(done.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(done.get("event").and_then(Json::as_str), Some("done"));
+    assert_eq!(done.get("jobs").and_then(Json::as_u64), Some(3));
+    let field = |k: &str| done.get(k).and_then(Json::as_u64).unwrap();
+    assert_eq!(field("executed"), 2, "{done:?}");
+    assert_eq!(field("cache") + field("dedup"), 1, "{done:?}");
+    assert_eq!(field("store"), 0, "{done:?}");
+
+    // A streamed replay is served without re-execution.
+    let mut replay_events: Vec<Json> = Vec::new();
+    let done2 = client
+        .batch_stream(&specs, |ev| replay_events.push(ev.clone()))
+        .expect("stream replay");
+    assert_eq!(done2.get("executed").and_then(Json::as_u64), Some(0));
+    assert_eq!(done2.get("cache").and_then(Json::as_u64), Some(3));
+
+    client.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("server io");
 }

@@ -1,0 +1,377 @@
+//! Crash-recovery and warm-restart integration tests for the persistent
+//! result store (DESIGN.md §Store).
+//!
+//! The headline guarantees under test:
+//!
+//! 1. **Corrupt-tail tolerance** (property): truncating a valid journal
+//!    at *any* byte recovers every fully-written record and drops only
+//!    the torn tail — never a middle record, never the whole file.
+//! 2. **Warm restart**: a scheduler/server killed and restarted on the
+//!    same `--cache-dir` serves previously submitted configs from the
+//!    cold tier with zero re-simulation (the scheduler records a store
+//!    hit, not a sim run), byte-identical to the original results.
+//!
+//! Like `invariants.rs`, the property test scales with `PROP_CASES` and
+//! reseeds from `PROP_SEED` (decimal) for the nightly deep run.
+
+use std::sync::Arc;
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, sweep_requests, RunRequest};
+use barista::service::store::encode_record;
+use barista::service::{
+    cache::canonical_job_string, job_key, Client, JobKey, JobSpec, Scheduler, SchedulerConfig,
+    Server, Source, Store,
+};
+use barista::util::prop::run_prop;
+use barista::util::{scratch_dir, Json};
+use barista::workload::Benchmark;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(v) => v
+            .parse()
+            .unwrap_or_else(|e| panic!("bad {name}='{v}': {e}")),
+    }
+}
+
+fn prop_seed() -> u64 {
+    env_u64("PROP_SEED", 0xBA7157A)
+}
+
+fn cases(base: u64) -> u64 {
+    base * env_u64("PROP_CASES", 1).max(1)
+}
+
+fn small_cfg(arch: ArchKind, seed: u64) -> SimConfig {
+    let mut c = SimConfig::paper(arch);
+    c.window_cap = 16;
+    c.batch = 1;
+    c.seed = seed;
+    c
+}
+
+fn small_req(arch: ArchKind, seed: u64) -> RunRequest {
+    RunRequest {
+        benchmark: Benchmark::AlexNet,
+        config: small_cfg(arch, seed),
+    }
+}
+
+fn store_sched(store: Arc<Store>) -> Scheduler {
+    Scheduler::new(SchedulerConfig {
+        workers: 2,
+        shards: 2,
+        queue_cap: 64,
+        cache_bytes: 16 << 20,
+        store: Some(store),
+    })
+}
+
+/// A synthetic but version-current record payload of tunable size.
+fn raw_payload(i: u64, pad: usize) -> String {
+    format!(
+        r#"{{"canon":"sim-v{}|prop|{}","pad":"{}"}}"#,
+        barista::SIM_VERSION,
+        i,
+        "p".repeat(pad)
+    )
+}
+
+/// Property: any byte-truncation of a valid journal recovers exactly
+/// the records that were fully written before the cut and drops only
+/// the torn tail.
+#[test]
+fn prop_journal_truncation_recovers_every_complete_record() {
+    run_prop(
+        "journal truncation recovers prefix",
+        prop_seed(),
+        cases(16),
+        |rng| {
+            // Build a journal of 2..=9 records with varied payload sizes.
+            let nrecords = 2 + rng.gen_range(8) as usize;
+            let dir = scratch_dir("prop-journal");
+            let mut records: Vec<(JobKey, String)> = Vec::new();
+            // Record end offsets (journal byte boundaries), in order.
+            let mut boundaries: Vec<u64> = Vec::new();
+            {
+                let store = Store::open_with(&dir, false).map_err(|e| e.to_string())?;
+                for i in 0..nrecords {
+                    let key = JobKey(i as u64 + 1, rng.next_u64());
+                    let payload = raw_payload(i as u64, rng.gen_range(200) as usize);
+                    store.put(key, &payload).map_err(|e| e.to_string())?;
+                    boundaries.push(store.stats().journal_bytes);
+                    records.push((key, payload));
+                }
+            }
+            let journal = dir.join("journal.bjl");
+            let bytes = std::fs::read(&journal).map_err(|e| e.to_string())?;
+            let header_len = boundaries[0]
+                - (records[0].1.len() as u64 + 28 /* record frame */);
+
+            // Truncate at an arbitrary point past the header (a cut
+            // inside the header itself is a different failure class —
+            // open() rejects the file as not-a-journal).
+            let span = (bytes.len() as u64 - header_len + 1) as u32;
+            let cut = header_len + rng.gen_range(span) as u64;
+            let dir2 = scratch_dir("prop-journal-cut");
+            std::fs::write(dir2.join("journal.bjl"), &bytes[..cut as usize])
+                .map_err(|e| e.to_string())?;
+
+            let expect_complete = boundaries.iter().filter(|&&b| b <= cut).count();
+            let store = Store::open_with(&dir2, false).map_err(|e| e.to_string())?;
+            let st = store.stats();
+            if st.recovered_records != expect_complete {
+                return Err(format!(
+                    "cut at {cut}: recovered {} records, expected {expect_complete} \
+                     (boundaries {boundaries:?})",
+                    st.recovered_records
+                ));
+            }
+            // Record ends, the bare header, and the full file are all
+            // clean boundaries — no torn tail to drop there.
+            let at_boundary =
+                cut == bytes.len() as u64 || cut == header_len || boundaries.contains(&cut);
+            if st.dropped_tail == at_boundary {
+                return Err(format!(
+                    "cut at {cut}: dropped_tail={} but at_boundary={at_boundary}",
+                    st.dropped_tail
+                ));
+            }
+            // Every complete record reads back bit-identically; every
+            // torn one is absent.
+            for (i, (key, payload)) in records.iter().enumerate() {
+                let got = store.get(key);
+                if i < expect_complete {
+                    if got.as_deref() != Some(payload.as_str()) {
+                        return Err(format!("cut at {cut}: record {i} corrupted or missing"));
+                    }
+                } else if got.is_some() {
+                    return Err(format!("cut at {cut}: torn record {i} resurrected"));
+                }
+            }
+            // The repaired journal accepts appends and survives reopen.
+            let extra = raw_payload(999, 10);
+            store
+                .put(JobKey(0xFFFF, 0xFFFF), &extra)
+                .map_err(|e| e.to_string())?;
+            drop(store);
+            let store = Store::open_with(&dir2, false).map_err(|e| e.to_string())?;
+            if store.get(&JobKey(0xFFFF, 0xFFFF)).as_deref() != Some(extra.as_str()) {
+                return Err(format!("cut at {cut}: post-repair append lost"));
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+            let _ = std::fs::remove_dir_all(&dir2);
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance-criteria test: kill the scheduler, restart on the
+/// same cache dir, and prove the previously submitted config is served
+/// from the cold tier with zero re-simulation.
+#[test]
+fn scheduler_warm_restart_serves_from_the_cold_tier() {
+    let dir = scratch_dir("warm-restart-sched");
+    let req = small_req(ArchKind::Barista, 41);
+
+    // First lifetime: simulate and journal.
+    let first_json;
+    {
+        let sched = store_sched(Arc::new(Store::open(&dir).unwrap()));
+        let out = sched.execute(&req).unwrap();
+        assert_eq!(out.source, Source::Executed);
+        first_json = out.entry.network_json.clone();
+        let st = sched.stats();
+        assert_eq!(st.executed, 1);
+        assert_eq!(st.store.unwrap().records, 1);
+        sched.shutdown();
+    } // drop = kill
+
+    // Second lifetime: fresh process state, same directory.
+    let sched = store_sched(Arc::new(Store::open(&dir).unwrap()));
+    let out = sched.execute(&req).unwrap();
+    assert_eq!(
+        out.source,
+        Source::StoreHit,
+        "restarted scheduler must record a store hit, not a sim run"
+    );
+    assert_eq!(out.entry.network_json, first_json, "byte-identical replay");
+    let st = sched.stats();
+    assert_eq!(st.executed, 0, "zero re-simulation after restart");
+    assert_eq!(st.store_hits, 1);
+
+    // Full structured fidelity (the report path consumes these fields,
+    // not the JSON): energy/traffic/breakdown all bit-identical.
+    let direct = run_one(&req);
+    let got = &out.entry.result;
+    assert_eq!(got.network.cycles, direct.network.cycles);
+    assert_eq!(got.network.breakdown, direct.network.breakdown);
+    assert_eq!(got.network.traffic, direct.network.traffic);
+    assert_eq!(got.network.energy, direct.network.energy);
+
+    // Third submission in the same lifetime: admitted to the hot tier
+    // by the cold hit, so it is now a plain cache hit.
+    assert_eq!(sched.execute(&req).unwrap().source, Source::CacheHit);
+    drop(sched);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Dedup consults the cold tier before scheduling: a warm store means a
+/// whole batch of repeats produces zero executions.
+#[test]
+fn batch_on_a_warm_store_schedules_no_work() {
+    let dir = scratch_dir("warm-batch");
+    let reqs = sweep_requests(
+        &[Benchmark::AlexNet],
+        &[ArchKind::Dense, ArchKind::Barista, ArchKind::Ideal],
+        &small_cfg(ArchKind::Barista, 43),
+    );
+    {
+        let sched = store_sched(Arc::new(Store::open(&dir).unwrap()));
+        sched.run_all(&reqs).unwrap();
+        assert_eq!(sched.stats().executed, 3);
+    }
+    let sched = store_sched(Arc::new(Store::open(&dir).unwrap()));
+    // Repeats of the same job inside one batch: first is a store hit,
+    // the rest hot-cache hits (admission), never an execution.
+    let mut batch = reqs.clone();
+    batch.extend(reqs.iter().cloned());
+    let out = sched.run_all(&batch).unwrap();
+    let st = sched.stats();
+    assert_eq!(st.executed, 0, "warm store schedules zero work: {st:?}");
+    assert_eq!(st.store_hits, 3, "{st:?}");
+    assert_eq!(st.cache_hits, 3, "{st:?}");
+    for (o, r) in out.iter().zip(&batch) {
+        assert_eq!(o.entry.result.arch, r.config.arch);
+        assert!(
+            matches!(o.source, Source::StoreHit | Source::CacheHit),
+            "{:?}",
+            o.source
+        );
+    }
+    drop(sched);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end over TCP: kill and restart the *server* with the same
+/// --cache-dir; the wire response after restart reports source "store".
+#[test]
+fn server_kill_and_restart_replays_from_disk() {
+    let dir = scratch_dir("warm-restart-server");
+    let spec = JobSpec {
+        benchmark: Benchmark::AlexNet,
+        config: small_cfg(ArchKind::Barista, 47),
+    };
+    let cfg = |store: Arc<Store>| SchedulerConfig {
+        workers: 2,
+        shards: 2,
+        queue_cap: 64,
+        cache_bytes: 16 << 20,
+        store: Some(store),
+    };
+
+    // Lifetime 1: simulate, respond, shut down.
+    let first_result;
+    {
+        let (addr, server) =
+            Server::spawn("127.0.0.1:0", cfg(Arc::new(Store::open(&dir).unwrap()))).unwrap();
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        let resp = client.submit(&spec).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        assert_eq!(
+            resp.get("source").and_then(Json::as_str),
+            Some("executed")
+        );
+        first_result = resp.get("result").unwrap().to_string();
+        client.shutdown().unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    // Lifetime 2: same directory, fresh server; zero re-simulation.
+    let (addr, server) =
+        Server::spawn("127.0.0.1:0", cfg(Arc::new(Store::open(&dir).unwrap()))).unwrap();
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    let resp = client.submit(&spec).unwrap();
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_eq!(
+        resp.get("source").and_then(Json::as_str),
+        Some("store"),
+        "restarted server must serve from the cold tier: {resp:?}"
+    );
+    assert_eq!(
+        resp.get("result").unwrap().to_string(),
+        first_result,
+        "byte-identical across the restart"
+    );
+    let stats = client.stats().unwrap();
+    let sched = stats.get("scheduler").unwrap();
+    assert_eq!(sched.get("executed").and_then(Json::as_u64), Some(0));
+    assert_eq!(sched.get("store_hits").and_then(Json::as_u64), Some(1));
+    assert!(
+        sched.get("store").is_some(),
+        "stats expose cold-tier counters: {stats:?}"
+    );
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `report --figure all` warm path: a full (mini) sweep against a
+/// warm store re-simulates nothing and reproduces every figure input
+/// bit-identically.
+#[test]
+fn warm_sweep_reproduces_results_with_zero_simulation() {
+    let dir = scratch_dir("warm-sweep");
+    let reqs = sweep_requests(
+        &[Benchmark::AlexNet],
+        &[ArchKind::Dense, ArchKind::SparTen, ArchKind::Barista, ArchKind::Ideal],
+        &small_cfg(ArchKind::Barista, 51),
+    );
+    let cold_results;
+    {
+        let sched = store_sched(Arc::new(Store::open(&dir).unwrap()));
+        cold_results = sched.run_results(&reqs).unwrap();
+    }
+    let sched = store_sched(Arc::new(Store::open(&dir).unwrap()));
+    let warm_results = sched.run_results(&reqs).unwrap();
+    assert_eq!(sched.stats().executed, 0);
+    for (a, b) in cold_results.iter().zip(&warm_results) {
+        assert_eq!(
+            a.network.to_json().to_string(),
+            b.network.to_json().to_string()
+        );
+        assert_eq!(a.network.energy, b.network.energy);
+    }
+    drop(sched);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A journal record carries everything the tiered cache needs: priming
+/// a store *by hand* (encode_record) and reading through a fresh
+/// scheduler reproduces run_one exactly.
+#[test]
+fn hand_primed_store_serves_decodable_records() {
+    let dir = scratch_dir("hand-primed");
+    let req = small_req(ArchKind::SparTen, 53);
+    let result = run_one(&req);
+    {
+        let store = Store::open(&dir).unwrap();
+        store
+            .put(
+                job_key(&req),
+                &encode_record(&result, &canonical_job_string(&req)),
+            )
+            .unwrap();
+    }
+    let sched = store_sched(Arc::new(Store::open(&dir).unwrap()));
+    let out = sched.execute(&req).unwrap();
+    assert_eq!(out.source, Source::StoreHit);
+    assert_eq!(
+        out.entry.network_json,
+        result.network.to_json().to_string()
+    );
+    drop(sched);
+    let _ = std::fs::remove_dir_all(&dir);
+}
