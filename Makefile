@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt clippy prop examples test-store ci bench bench-smoke bench-table bench-figs artifacts serve clean
+.PHONY: build test fmt clippy prop examples test-store test-cluster ci bench bench-smoke bench-table bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -40,6 +40,12 @@ examples:
 test-store:
 	cd rust && cargo test --release --test store_persistence
 
+# Cluster integration tests, release mode (real TCP: kill-one-node
+# chaos/failover, cross-node dedup over peer-get, wire backpressure).
+# Part of the CI `test` job.
+test-cluster:
+	cd rust && cargo test --release --test cluster
+
 # Local mirror of the CI push jobs — `make ci` green implies the
 # workflow's `lint` + `test` jobs are green (same steps, same order:
 # lint first, then the test job's build/test/invariants/store/example/
@@ -52,6 +58,7 @@ ci:
 	cd rust && cargo test -q
 	cd rust && PROP_SEED=195499386 PROP_CASES=2 cargo test --release --test invariants
 	cd rust && cargo test --release --test store_persistence
+	cd rust && cargo test --release --test cluster
 	cd rust && cargo run --release --example scenarios
 	$(MAKE) bench-smoke
 

@@ -6,16 +6,20 @@
 //! speedup. A final warm-restart row kills a store-backed scheduler and
 //! replays the corpus through a fresh one (cold hot-tier, warm journal):
 //! the cold-tier hit rate vs the simulate rate is what `--cache-dir`
-//! buys across a deploy. Prints one JSON summary line
-//! (`service_throughput_summary`) for the perf trajectory.
+//! buys across a deploy. A `cluster_3node` row then pushes the corpus
+//! through three store-backed worker nodes behind the consistent-hash
+//! router (real TCP end to end): cold fan-out vs hot-tier replay, plus
+//! the router's steal rate under the burst. Prints one JSON summary
+//! line (`service_throughput_summary`) for the perf trajectory.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use barista::bench_harness::{bench_header, finish_bench};
+use barista::cluster::{RouterConfig, RouterServer};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::RunRequest;
-use barista::service::{Scheduler, SchedulerConfig, Source, Store};
+use barista::service::{Client, JobSpec, Scheduler, SchedulerConfig, Server, Source, Store};
 use barista::util::{scratch_dir, Json};
 use barista::workload::Benchmark;
 
@@ -133,6 +137,96 @@ fn main() {
         .set("simulate_jobs_per_s", sim_jps)
         .set("replay_jobs_per_s", restart_jps)
         .set("replay_speedup", restart_jps / sim_jps.max(1e-9));
+    rows.push(row);
+
+    // Multi-process cluster: the same corpus through 3 store-backed
+    // worker nodes behind the consistent-hash router, over real TCP.
+    // Cold pass = fan-out + simulate + successor replication; warm pass
+    // = every job answered from its owner's hot tier. The steal rate
+    // (steals / routed) shows how often the burst overflowed an owner
+    // past the steal threshold.
+    let mut node_dirs = Vec::new();
+    let mut node_addrs = Vec::new();
+    let mut node_handles = Vec::new();
+    for i in 0..3 {
+        let dir = scratch_dir(&format!("bench-cluster-{i}"));
+        let store = Arc::new(Store::open_with(&dir, false).expect("open node store"));
+        let (addr, handle) = Server::spawn(
+            "127.0.0.1:0",
+            SchedulerConfig {
+                workers: 2,
+                shards: 2,
+                queue_cap: 256,
+                cache_bytes: 32 << 20,
+                store: Some(store),
+            },
+        )
+        .expect("spawn cluster node");
+        node_addrs.push(addr.to_string());
+        node_dirs.push(dir);
+        node_handles.push(handle);
+    }
+    let (raddr, rhandle) = RouterServer::spawn(
+        "127.0.0.1:0",
+        RouterConfig {
+            nodes: node_addrs.clone(),
+            steal_threshold: 2, // low bar: let the burst exercise stealing
+            ..RouterConfig::default()
+        },
+    )
+    .expect("spawn router");
+    let specs: Vec<JobSpec> = reqs
+        .iter()
+        .map(|r| JobSpec {
+            benchmark: r.benchmark,
+            config: r.config.clone(),
+        })
+        .collect();
+    let mut client = Client::connect(&raddr.to_string()).expect("connect router");
+    let t0 = Instant::now();
+    let cold = client.batch(&specs).expect("cluster cold batch");
+    let cluster_cold_s = t0.elapsed().as_secs_f64();
+    assert_eq!(cold.get("ok").and_then(Json::as_bool), Some(true), "{cold:?}");
+    let t0 = Instant::now();
+    let warm = client.batch(&specs).expect("cluster replay batch");
+    let cluster_replay_s = t0.elapsed().as_secs_f64();
+    assert_eq!(warm.get("ok").and_then(Json::as_bool), Some(true), "{warm:?}");
+    let stats = client.stats().expect("router stats");
+    let router = stats.get("router").expect("router section");
+    let stat = |k: &str| router.get(k).and_then(Json::as_u64).unwrap_or(0);
+    let steal_rate = stat("steals") as f64 / stat("routed").max(1) as f64;
+    let failovers = stat("failovers");
+    for addr in &node_addrs {
+        let mut c = Client::connect(addr).expect("connect node");
+        c.shutdown().expect("node shutdown");
+    }
+    client.shutdown().expect("router shutdown");
+    rhandle.join().expect("router thread").expect("router io");
+    for h in node_handles {
+        h.join().expect("node thread").expect("node io");
+    }
+    for dir in &node_dirs {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    let cluster_cold_jps = jobs as f64 / cluster_cold_s.max(1e-9);
+    let cluster_replay_jps = jobs as f64 / cluster_replay_s.max(1e-9);
+    let cluster_speedup = cluster_replay_jps / cluster_cold_jps.max(1e-9);
+    println!(
+        "{:<8} {cluster_cold_jps:>12.1} {cluster_replay_jps:>12.1} {cluster_speedup:>9.1}x   \
+         (3-node cluster via router, steal rate {steal_rate:.2})",
+        "cluster"
+    );
+    let mut row = Json::obj();
+    row.set("name", "cluster_3node")
+        .set("jobs", jobs)
+        .set("cold_ms", cluster_cold_s * 1e3)
+        .set("replay_ms", cluster_replay_s * 1e3)
+        .set("cold_jobs_per_s", cluster_cold_jps)
+        .set("replay_jobs_per_s", cluster_replay_jps)
+        .set("replay_speedup", cluster_speedup)
+        .set("steal_rate", steal_rate)
+        .set("failovers", failovers);
     rows.push(row);
 
     let mut summary = Json::obj();

@@ -1,0 +1,32 @@
+//! Multi-node simulation cluster: BARISTA's barrier-free redundancy
+//! elimination, applied across machines.
+//!
+//! A cluster is N independent `barista serve` worker nodes (each with
+//! its own tiered result store) fronted by one router process
+//! (`barista cluster-serve`). Three mechanisms, mirroring the paper's
+//! on-chip ones:
+//!
+//! * **Consistent-hash sharding** ([`ring`]) — the 128-bit content key
+//!   picks the owning node, so identical jobs from any client collapse
+//!   onto one node's cache (telescoping/request-combining across
+//!   processes). Losing a node remaps only its own keys.
+//! * **Cross-node dedup + replication** ([`peers`], plus the router's
+//!   replicate push) — a node consults peer stores before simulating
+//!   and admits remote hits into its hot tier; completed results are
+//!   copied cold-tier-only to the key's ring successor so failover
+//!   lands on a warm replica (snarfing, at store granularity).
+//! * **Work-stealing** ([`router`]) — overflow past a queue-depth
+//!   threshold re-routes to the least-loaded live node (the dynamic
+//!   round-robin intra-filter balancing, across machines).
+//!
+//! The wire protocol is the worker protocol: clients point `submit` /
+//! `batch` / `stats` at a router address via `--cluster` and nothing
+//! else changes.
+
+pub mod peers;
+pub mod ring;
+pub mod router;
+
+pub use peers::PeerSet;
+pub use ring::{HashRing, NodeId, Route};
+pub use router::{Router, RouterConfig, RouterServer, DEFAULT_ROUTER_ADDR};

@@ -1,0 +1,179 @@
+//! Cross-node dedup: consult peer stores before simulating.
+//!
+//! [`PeerSet`] implements the scheduler's [`PeerLookup`] hook over the
+//! wire. When a worker is about to simulate a job, it asks each peer
+//! (a `barista serve` node, addressed directly) for the key's
+//! journal-format record via the `peer-get` protocol op. A hit is
+//! decoded through [`store::decode_record`] — the embedded canonical
+//! string must match the request exactly, so a confused peer can never
+//! serve a wrong result — and the scheduler admits it into its *hot*
+//! tier only (the durable copies stay with the node that computed the
+//! result and that key's replica). This is BARISTA's telescoping idea
+//! across machines: identical requests collapse onto one execution,
+//! here across processes instead of across PEs.
+//!
+//! All socket work is bounded by a connect/read timeout so a dead peer
+//! degrades a lookup into a (fast) miss, never a stall; connection
+//! errors are counted but otherwise invisible to the submitter.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::coordinator::{RunRequest, RunResult};
+use crate::service::cache::canonical_job_string;
+use crate::service::protocol::JobSpec;
+use crate::service::scheduler::PeerLookup;
+use crate::service::store;
+use crate::util::Json;
+
+/// Connect to `addr` with `timeout` applied to the connect itself and
+/// to subsequent reads/writes, so a dead or wedged host fails fast.
+pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<TcpStream, String> {
+    let mut last = format!("resolve {addr}: no addresses");
+    let addrs = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?;
+    for sa in addrs {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(timeout)).ok();
+                stream.set_write_timeout(Some(timeout)).ok();
+                return Ok(stream);
+            }
+            Err(e) => last = format!("connect {sa}: {e}"),
+        }
+    }
+    Err(last)
+}
+
+/// One NDJSON request/response over a fresh timed connection — the
+/// cluster control path (peer lookups, replication pushes, health
+/// probes), where bounding latency matters more than reusing sockets.
+pub fn roundtrip_once(addr: &str, req: &Json, timeout: Duration) -> Result<Json, String> {
+    let stream = connect_timeout(addr, timeout)?;
+    let mut writer = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+    let mut line = req.to_string();
+    line.push('\n');
+    writer
+        .write_all(line.as_bytes())
+        .map_err(|e| format!("send: {e}"))?;
+    writer.flush().map_err(|e| format!("flush: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    let n = reader
+        .read_line(&mut buf)
+        .map_err(|e| format!("recv: {e}"))?;
+    if n == 0 {
+        return Err("peer closed the connection".into());
+    }
+    Json::parse(buf.trim_end()).map_err(|e| format!("bad response JSON: {e}"))
+}
+
+/// A set of peer node addresses consulted (in order) for completed
+/// results before a local worker simulates.
+pub struct PeerSet {
+    addrs: Vec<String>,
+    timeout: Duration,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl PeerSet {
+    /// Default per-peer connect/read bound. Lookups are sub-second
+    /// record fetches; anything slower is treated as a miss.
+    pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(2);
+
+    pub fn new(addrs: Vec<String>) -> PeerSet {
+        PeerSet::with_timeout(addrs, PeerSet::DEFAULT_TIMEOUT)
+    }
+
+    pub fn with_timeout(addrs: Vec<String>, timeout: Duration) -> PeerSet {
+        PeerSet {
+            addrs,
+            timeout,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }
+    }
+
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    /// `(hits, misses, errors)` counters (errors count per failed peer
+    /// probe, not per lookup).
+    pub fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+        )
+    }
+
+    fn try_peer(
+        &self,
+        addr: &str,
+        spec_json: &Json,
+        req: &RunRequest,
+        canon: &str,
+    ) -> Option<RunResult> {
+        let mut q = Json::obj();
+        q.set("op", "peer-get").set("job", spec_json.clone());
+        let resp = match roundtrip_once(addr, &q, self.timeout) {
+            Ok(r) => r,
+            Err(_) => {
+                // Dead peer: a fast miss, not a failure of the lookup.
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        };
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        if resp.get("found").and_then(Json::as_bool) != Some(true) {
+            return None;
+        }
+        let payload = resp.get("payload").and_then(Json::as_str)?;
+        match store::decode_record(payload, req, canon) {
+            Ok(result) => Some(result),
+            Err(e) => {
+                // Never admit a questionable record; simulate instead.
+                eprintln!("warn: peer {addr} returned an unusable record: {e}");
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+}
+
+impl PeerLookup for PeerSet {
+    fn fetch(&self, req: &RunRequest) -> Option<RunResult> {
+        if self.addrs.is_empty() {
+            return None;
+        }
+        let spec = JobSpec {
+            benchmark: req.benchmark,
+            config: req.config.clone(),
+        };
+        let spec_json = spec.to_json();
+        let canon = canonical_job_string(req);
+        for addr in &self.addrs {
+            if let Some(result) = self.try_peer(addr, &spec_json, req, &canon) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(result);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    fn describe(&self) -> String {
+        format!("{} peers", self.addrs.len())
+    }
+}

@@ -1,0 +1,232 @@
+//! Consistent-hash routing over `NodeId`-tagged destinations.
+//!
+//! The scheduler's in-process shard queues and the cluster router's
+//! worker nodes are the same abstraction one level apart: a set of
+//! [`NodeId`]-tagged destinations that a content key deterministically
+//! routes onto. [`Route`] is that abstraction. The local scheduler
+//! implements it with a modulo map (`ShardRoute` in
+//! `service::scheduler`) — cheap, and fine for queues that live and die
+//! with one process. The router implements it with a virtual-node
+//! consistent-hash ring ([`HashRing`]) so losing a node remaps *only
+//! that node's keys* (to its ring successor — exactly where its results
+//! were replicated) instead of reshuffling the whole key space.
+//!
+//! Ring layout: each node projects [`HashRing::DEFAULT_VNODES`] points
+//! onto the `u64` circle (FNV-1a of `"node-{id}/vnode-{v}"`); a key is
+//! owned by the node of the first point at or after `key.0`, wrapping.
+//! With 1024 vnodes the per-node share of the key space concentrates
+//! within a few percent of uniform (the ±20% invariant in
+//! `tests/invariants.rs` sits many standard deviations out).
+
+use crate::service::cache::JobKey;
+use crate::util::{fnv1a64, FNV_OFFSET_BASIS};
+
+/// One routing destination: an in-process shard queue for the
+/// scheduler, a worker node for the cluster router.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    /// The destination's slot in a dense per-node table.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A deterministic key → destination map with a replica order.
+pub trait Route {
+    /// Number of destinations.
+    fn node_count(&self) -> usize;
+    /// The destination owning `key`. Panics on an empty route.
+    fn route(&self, key: &JobKey) -> NodeId;
+    /// The destination after the owner — where the owner's completed
+    /// results replicate for failover. `None` with a single
+    /// destination (nowhere distinct to replicate to).
+    fn successor(&self, key: &JobKey) -> Option<NodeId>;
+}
+
+/// Virtual-node consistent-hash ring.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(point, node)` sorted by point; a key belongs to the node of
+    /// the first point at or after it (wrapping past the top).
+    points: Vec<(u64, NodeId)>,
+    /// Distinct members, ascending.
+    nodes: Vec<NodeId>,
+}
+
+impl HashRing {
+    /// Vnodes per node: enough that ring shares concentrate tightly
+    /// around uniform while membership changes stay O(vnodes · log).
+    pub const DEFAULT_VNODES: usize = 1024;
+
+    pub fn new(nodes: &[NodeId], vnodes: usize) -> HashRing {
+        let mut points = Vec::with_capacity(nodes.len() * vnodes);
+        for &node in nodes {
+            for v in 0..vnodes {
+                let label = format!("node-{}/vnode-{v}", node.0);
+                points.push((fnv1a64(label.as_bytes(), FNV_OFFSET_BASIS), node));
+            }
+        }
+        // Sort by (point, node): equal points tie-break deterministically.
+        points.sort_unstable();
+        let mut members: Vec<NodeId> = nodes.to_vec();
+        members.sort_unstable();
+        members.dedup();
+        HashRing {
+            points,
+            nodes: members,
+        }
+    }
+
+    /// Current members, ascending.
+    pub fn nodes(&self) -> &[NodeId] {
+        &self.nodes
+    }
+
+    /// Drop a member (its vnodes vanish; every other node's points —
+    /// and therefore every other node's keys — are untouched).
+    pub fn remove(&mut self, node: NodeId) {
+        self.points.retain(|(_, n)| *n != node);
+        self.nodes.retain(|n| *n != node);
+    }
+
+    /// Distinct nodes in ring order from `key`'s position: the owner
+    /// first, then each successive failover/replica candidate, up to
+    /// `max` entries.
+    pub fn preference(&self, key: &JobKey, max: usize) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        if self.points.is_empty() || max == 0 {
+            return out;
+        }
+        let start = self.points.partition_point(|(p, _)| *p < key.0);
+        for i in 0..self.points.len() {
+            let (_, node) = self.points[(start + i) % self.points.len()];
+            if !out.contains(&node) {
+                out.push(node);
+                if out.len() == max || out.len() == self.nodes.len() {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact fraction of the `u64` key space each member owns, computed
+    /// from ring arc lengths (no key sampling, so the balance invariant
+    /// is measured analytically).
+    pub fn shares(&self) -> Vec<(NodeId, f64)> {
+        let mut owned: Vec<u128> = vec![0; self.nodes.len()];
+        let slot = |node: NodeId| {
+            self.nodes
+                .iter()
+                .position(|n| *n == node)
+                .expect("point node is a member")
+        };
+        let total = 1u128 << 64;
+        for (i, &(point, node)) in self.points.iter().enumerate() {
+            // A node owns the arc *ending* at its point. The first
+            // point also owns the wrap-around past the last point.
+            let arc = if i == 0 {
+                let last = self.points[self.points.len() - 1].0;
+                point as u128 + (total - last as u128)
+            } else {
+                (point - self.points[i - 1].0) as u128
+            };
+            owned[slot(node)] += arc;
+        }
+        self.nodes
+            .iter()
+            .zip(&owned)
+            .map(|(&n, &arc)| (n, arc as f64 / total as f64))
+            .collect()
+    }
+}
+
+impl Route for HashRing {
+    fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn route(&self, key: &JobKey) -> NodeId {
+        *self
+            .preference(key, 1)
+            .first()
+            .expect("route on an empty ring")
+    }
+
+    fn successor(&self, key: &JobKey) -> Option<NodeId> {
+        self.preference(key, 2).get(1).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: u32) -> Vec<NodeId> {
+        (0..n).map(NodeId).collect()
+    }
+
+    fn key(i: u64) -> JobKey {
+        // Spread test keys over the space like real FNV keys are.
+        JobKey(fnv1a64(&i.to_le_bytes(), FNV_OFFSET_BASIS), i)
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_owner_leads_preference() {
+        let ring = HashRing::new(&ids(4), 64);
+        for i in 0..200 {
+            let k = key(i);
+            let pref = ring.preference(&k, 4);
+            assert_eq!(pref[0], ring.route(&k));
+            assert_eq!(pref.get(1).copied(), ring.successor(&k));
+            // Preference lists distinct nodes.
+            let mut seen = pref.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), pref.len(), "{pref:?}");
+        }
+    }
+
+    #[test]
+    fn removing_a_node_remaps_only_its_keys_to_its_successor() {
+        let ring = HashRing::new(&ids(5), 64);
+        let mut smaller = ring.clone();
+        let victim = NodeId(2);
+        smaller.remove(victim);
+        assert_eq!(smaller.node_count(), 4);
+        for i in 0..500 {
+            let k = key(i);
+            let before = ring.route(&k);
+            let after = smaller.route(&k);
+            if before == victim {
+                // The dead node's keys land exactly where its results
+                // were replicated: the old ring successor.
+                assert_eq!(Some(after), ring.successor(&k));
+            } else {
+                assert_eq!(after, before, "non-victim key moved");
+            }
+        }
+    }
+
+    #[test]
+    fn shares_cover_the_whole_key_space() {
+        for n in [1u32, 2, 3, 7, 16] {
+            let ring = HashRing::new(&ids(n), HashRing::DEFAULT_VNODES);
+            let shares = ring.shares();
+            assert_eq!(shares.len(), n as usize);
+            let sum: f64 = shares.iter().map(|(_, s)| s).sum();
+            assert!((sum - 1.0).abs() < 1e-9, "shares sum to 1, got {sum}");
+        }
+    }
+
+    #[test]
+    fn single_node_ring_owns_everything_and_has_no_successor() {
+        let ring = HashRing::new(&ids(1), 16);
+        let k = key(9);
+        assert_eq!(ring.route(&k), NodeId(0));
+        assert_eq!(ring.successor(&k), None);
+        assert!((ring.shares()[0].1 - 1.0).abs() < 1e-12);
+    }
+}

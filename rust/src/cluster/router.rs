@@ -1,0 +1,665 @@
+//! The cluster router: consistent-hash dispatch over worker nodes.
+//!
+//! `barista cluster-serve` runs a [`RouterServer`]: a TCP front end
+//! speaking the same NDJSON protocol as a worker node, backed by a
+//! [`Router`] that consistent-hash shards the content-key space across
+//! N `barista serve` nodes. Per job:
+//!
+//! * **routing** — the job's [`JobKey`] walks the [`HashRing`]
+//!   preference order; the owner serves it, so identical jobs always
+//!   land on the same node's tiered cache (the cluster-wide dedup
+//!   domain);
+//! * **work-stealing** — when the owner's load (health-reported queue
+//!   depth + the router's own in-flight count) crosses
+//!   `steal_threshold`, the overflow job is re-routed to the
+//!   least-loaded live node (BARISTA's dynamic round-robin intra-filter
+//!   balancing, applied across machines);
+//! * **failover** — a dead node (connection error now, or flagged by
+//!   the background health monitor) is skipped in ring order; because
+//!   completed results replicate to the key's ring successor, the
+//!   failover node usually answers from its cold tier
+//!   (`source:"store"` — counted as a `replica_hit`) instead of
+//!   re-simulating;
+//! * **replication** — after a fresh execution the router pulls the
+//!   journal-format record from the serving node (`peer-get`) and
+//!   pushes it to the key's first live non-serving candidate
+//!   (`replicate`), which admits it cold-tier-only after re-verifying
+//!   that the payload's canonical string hashes to the key.
+//!
+//! The router holds no results itself and keeps no per-job state — all
+//! durable state lives in the nodes' tiered stores, so the router can
+//! restart freely.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::peers::{connect_timeout, roundtrip_once};
+use crate::cluster::ring::{HashRing, NodeId, Route};
+use crate::service::cache::{job_key, JobKey};
+use crate::service::protocol::{self, JobSpec, Request};
+use crate::util::Json;
+
+/// Default router address (`barista cluster-serve` / `--cluster`);
+/// distinct from the worker default so both run on one host.
+pub const DEFAULT_ROUTER_ADDR: &str = "127.0.0.1:7070";
+
+/// Router sizing and policy knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Worker node addresses; index order defines the `NodeId`s the
+    /// ring hashes over (so keep it stable across router restarts).
+    pub nodes: Vec<String>,
+    /// Owner load (queue depth + in-flight) at or beyond which overflow
+    /// jobs re-route to the least-loaded live node.
+    pub steal_threshold: usize,
+    /// Replicate fresh results to the key's successor candidate.
+    pub replicate: bool,
+    /// Virtual nodes per member on the hash ring.
+    pub vnodes: usize,
+    /// Health monitor poll interval.
+    pub health_interval: Duration,
+    /// Connect/read bound for control traffic (health, peer-get,
+    /// replicate) and for establishing dispatch connections.
+    pub control_timeout: Duration,
+    /// Read bound while waiting on a dispatched job (covers the
+    /// seconds-long simulations).
+    pub dispatch_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            nodes: Vec::new(),
+            steal_threshold: 8,
+            replicate: true,
+            vnodes: HashRing::DEFAULT_VNODES,
+            health_interval: Duration::from_millis(250),
+            control_timeout: Duration::from_secs(2),
+            dispatch_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+#[derive(Default)]
+struct RouterCounters {
+    routed: AtomicU64,
+    steals: AtomicU64,
+    failovers: AtomicU64,
+    replica_hits: AtomicU64,
+    replicated: AtomicU64,
+    replicate_errors: AtomicU64,
+    dead_marks: AtomicU64,
+}
+
+/// Per-node live state. Liveness is a flag, not ring membership: a
+/// flapping node keeps its key ownership and simply gets skipped while
+/// down, so its recovery needs no remapping.
+struct Node {
+    addr: String,
+    alive: AtomicBool,
+    /// Queue depth from the last health frame.
+    queued: AtomicUsize,
+    /// Jobs this router currently has outstanding on the node.
+    inflight: AtomicUsize,
+    /// Jobs this node answered successfully.
+    served: AtomicU64,
+    /// Pooled dispatch connections.
+    idle: Mutex<Vec<TcpStream>>,
+}
+
+impl Node {
+    fn new(addr: String) -> Node {
+        Node {
+            addr,
+            alive: AtomicBool::new(true),
+            queued: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            served: AtomicU64::new(0),
+            idle: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("addr", self.addr.as_str())
+            .set("alive", self.is_alive())
+            .set("queued", self.queued.load(Ordering::Relaxed))
+            .set("inflight", self.inflight.load(Ordering::Relaxed))
+            .set("served", self.served.load(Ordering::Relaxed));
+        j
+    }
+}
+
+/// The dispatch engine. Shared behind an `Arc` by the connection
+/// threads and the health monitor; all state is atomic or mutexed.
+pub struct Router {
+    cfg: RouterConfig,
+    ring: HashRing,
+    nodes: Vec<Node>,
+    counters: RouterCounters,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Result<Router, String> {
+        if cfg.nodes.is_empty() {
+            return Err("cluster router needs at least one worker node".into());
+        }
+        if cfg.steal_threshold == 0 {
+            return Err("steal_threshold must be >= 1".into());
+        }
+        if cfg.vnodes == 0 {
+            return Err("vnodes must be >= 1".into());
+        }
+        let ids: Vec<NodeId> = (0..cfg.nodes.len() as u32).map(NodeId).collect();
+        let ring = HashRing::new(&ids, cfg.vnodes);
+        let nodes = cfg.nodes.iter().map(|a| Node::new(a.clone())).collect();
+        Ok(Router {
+            cfg,
+            ring,
+            nodes,
+            counters: RouterCounters::default(),
+        })
+    }
+
+    /// The membership ring (tests reconstruct ownership from it).
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    /// Steal metric: last health-reported queue depth plus what this
+    /// router already has outstanding there.
+    fn load(&self, id: NodeId) -> usize {
+        let n = self.node(id);
+        n.queued.load(Ordering::Relaxed) + n.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Route one job and return the response frame to forward to the
+    /// client (always a frame — dispatch failures become protocol
+    /// errors, total saturation returns the last busy hint).
+    pub fn dispatch(&self, spec: &JobSpec) -> Json {
+        let key = job_key(&spec.to_request());
+        let pref = self.ring.preference(&key, self.nodes.len());
+        let owner = pref[0];
+        let mut order: Vec<NodeId> =
+            pref.iter().copied().filter(|n| self.node(*n).is_alive()).collect();
+        if order.is_empty() {
+            // Everyone is flagged dead (startup or a flapping health
+            // probe): try the full preference order anyway.
+            order = pref.clone();
+        }
+        // Work-stealing: a live but overloaded owner hands the overflow
+        // to the least-loaded live node; the owner stays as a fallback.
+        if order.first() == Some(&owner) && self.load(owner) >= self.cfg.steal_threshold {
+            if let Some(&best) = order.iter().min_by_key(|n| self.load(**n)) {
+                if best != owner && self.load(best) < self.load(owner) {
+                    order.retain(|n| *n != best);
+                    order.insert(0, best);
+                }
+            }
+        }
+        let line = Request::Submit {
+            spec: spec.clone(),
+            stream: false,
+        }
+        .to_json();
+        let mut owner_down = !self.node(owner).is_alive();
+        let mut busy: Option<Json> = None;
+        let mut last_err = String::from("no nodes configured");
+        for &nid in &order {
+            let node = self.node(nid);
+            node.inflight.fetch_add(1, Ordering::Relaxed);
+            let resp = self.roundtrip_pooled(node, &line);
+            node.inflight.fetch_sub(1, Ordering::Relaxed);
+            match resp {
+                Ok(mut resp) => {
+                    if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                        self.note_served(owner, nid, owner_down, &resp);
+                        self.replicate_fresh(&key, spec, nid, &resp);
+                        resp.set("node", node.addr.as_str());
+                        return resp;
+                    }
+                    let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+                    if err == "busy" {
+                        // Backpressure: fall through to the next
+                        // candidate, remembering the hint in case the
+                        // whole cluster is saturated.
+                        busy = Some(resp);
+                        continue;
+                    }
+                    if err.contains("shutting down") {
+                        // The node is draining for shutdown: treat it
+                        // like a dead node and fail over.
+                        if node.alive.swap(false, Ordering::Relaxed) {
+                            self.counters.dead_marks.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if nid == owner {
+                            owner_down = true;
+                        }
+                        last_err = format!("{}: {err}", node.addr);
+                        continue;
+                    }
+                    // A semantic rejection (invalid job) is identical
+                    // on every node — forward it as-is.
+                    return resp;
+                }
+                Err(e) => {
+                    // Connection-level failure: flag the node dead (the
+                    // health monitor revives it) and fail over.
+                    if node.alive.swap(false, Ordering::Relaxed) {
+                        self.counters.dead_marks.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if nid == owner {
+                        owner_down = true;
+                    }
+                    last_err = format!("{}: {e}", node.addr);
+                }
+            }
+        }
+        if let Some(b) = busy {
+            return b;
+        }
+        protocol::response_error(&format!("no node could serve the job: {last_err}"))
+    }
+
+    fn note_served(&self, owner: NodeId, served: NodeId, owner_down: bool, resp: &Json) {
+        self.counters.routed.fetch_add(1, Ordering::Relaxed);
+        self.node(served).served.fetch_add(1, Ordering::Relaxed);
+        if served == owner {
+            return;
+        }
+        if owner_down {
+            self.counters.failovers.fetch_add(1, Ordering::Relaxed);
+            if resp.get("source").and_then(Json::as_str) == Some("store") {
+                // The dead owner's key answered from a cold-tier
+                // replica — the failover path the chaos test asserts.
+                self.counters.replica_hits.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            self.counters.steals.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// After a fresh execution (`executed`/`dedup`), copy the record to
+    /// the key's first live candidate that is not the serving node.
+    /// Best-effort and synchronous: a failure costs redundancy, never
+    /// correctness, and the node's own submit response is untouched.
+    fn replicate_fresh(&self, key: &JobKey, spec: &JobSpec, served: NodeId, resp: &Json) {
+        if !self.cfg.replicate {
+            return;
+        }
+        let src = resp.get("source").and_then(Json::as_str).unwrap_or("");
+        if src != "executed" && src != "dedup" {
+            // Cache/store/peer hits were replicated when first computed.
+            return;
+        }
+        let pref = self.ring.preference(key, self.nodes.len());
+        let target = pref
+            .iter()
+            .copied()
+            .find(|n| *n != served && self.node(*n).is_alive());
+        let target = match target {
+            Some(t) => t,
+            None => return,
+        };
+        let mut get = Json::obj();
+        get.set("op", "peer-get").set("job", spec.to_json());
+        let payload = self
+            .roundtrip_fresh(served, &get)
+            .ok()
+            .filter(|r| r.get("found").and_then(Json::as_bool) == Some(true))
+            .and_then(|r| r.get("payload").and_then(Json::as_str).map(str::to_string));
+        let payload = match payload {
+            Some(p) => p,
+            None => {
+                self.counters.replicate_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        let mut rep = Json::obj();
+        rep.set("op", "replicate")
+            .set("key", key.hex())
+            .set("payload", payload);
+        let stored = self
+            .roundtrip_fresh(target, &rep)
+            .ok()
+            .map(|r| {
+                r.get("ok").and_then(Json::as_bool) == Some(true)
+                    && r.get("stored").and_then(Json::as_bool) == Some(true)
+            })
+            .unwrap_or(false);
+        if stored {
+            self.counters.replicated.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.replicate_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Dispatch roundtrip on a pooled connection (long read bound). On
+    /// any error the connection is dropped, never reused.
+    fn roundtrip_pooled(&self, node: &Node, req: &Json) -> Result<Json, String> {
+        let mut stream = match node.idle.lock().unwrap().pop() {
+            Some(s) => s,
+            None => {
+                let s = connect_timeout(&node.addr, self.cfg.control_timeout)?;
+                s.set_read_timeout(Some(self.cfg.dispatch_timeout)).ok();
+                s.set_write_timeout(Some(self.cfg.control_timeout)).ok();
+                s
+            }
+        };
+        let resp = roundtrip_on(&mut stream, req)?;
+        node.idle.lock().unwrap().push(stream);
+        Ok(resp)
+    }
+
+    /// Control roundtrip on a fresh timed connection.
+    fn roundtrip_fresh(&self, id: NodeId, req: &Json) -> Result<Json, String> {
+        roundtrip_once(&self.node(id).addr, req, self.cfg.control_timeout)
+    }
+
+    /// Route a whole batch concurrently, preserving input order. Any
+    /// non-busy per-job failure fails the batch (matching a worker
+    /// node's batch semantics).
+    pub fn dispatch_batch(&self, specs: &[JobSpec]) -> Json {
+        let bodies: Vec<Json> = std::thread::scope(|scope| {
+            let handles: Vec<_> = specs
+                .iter()
+                .map(|spec| scope.spawn(move || self.dispatch(spec)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| protocol::response_error("dispatch panicked"))
+                })
+                .collect()
+        });
+        if let Some(err) = bodies
+            .iter()
+            .find(|b| b.get("ok").and_then(Json::as_bool) != Some(true))
+        {
+            return err.clone();
+        }
+        let results: Vec<Json> = bodies
+            .into_iter()
+            .map(|mut b| {
+                // Batch entries carry per-job fields only, like a
+                // worker node's batch response.
+                if let Json::Obj(m) = &mut b {
+                    m.remove("ok");
+                    m.remove("op");
+                }
+                b
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("ok", true)
+            .set("op", "batch")
+            .set("results", Json::Arr(results));
+        j
+    }
+
+    /// One health sweep: a live node reports its queue depth (the steal
+    /// metric); an unreachable one is flagged dead until it answers.
+    pub fn health_pass(&self) {
+        let mut probe = Json::obj();
+        probe.set("op", "health");
+        for node in &self.nodes {
+            let depth = roundtrip_once(&node.addr, &probe, self.cfg.control_timeout)
+                .ok()
+                .filter(|r| r.get("ok").and_then(Json::as_bool) == Some(true))
+                .map(|r| r.get("queued").and_then(Json::as_usize).unwrap_or(0));
+            match depth {
+                Some(d) => {
+                    node.alive.store(true, Ordering::Relaxed);
+                    node.queued.store(d, Ordering::Relaxed);
+                }
+                None => {
+                    if node.alive.swap(false, Ordering::Relaxed) {
+                        self.counters.dead_marks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn status_json(&self, started: Instant) -> Json {
+        let alive = self.nodes.iter().filter(|n| n.is_alive()).count();
+        let mut j = Json::obj();
+        j.set("ok", true)
+            .set("op", "status")
+            .set("role", "router")
+            .set("uptime_ms", started.elapsed().as_millis() as u64)
+            .set("nodes", self.nodes.len())
+            .set("nodes_alive", alive)
+            .set("routed", self.counters.routed.load(Ordering::Relaxed));
+        j
+    }
+
+    /// Router counters + per-node state (the `stats` response body).
+    pub fn stats_json(&self) -> Json {
+        let c = &self.counters;
+        let mut j = Json::obj();
+        j.set("routed", c.routed.load(Ordering::Relaxed))
+            .set("steals", c.steals.load(Ordering::Relaxed))
+            .set("failovers", c.failovers.load(Ordering::Relaxed))
+            .set("replica_hits", c.replica_hits.load(Ordering::Relaxed))
+            .set("replicated", c.replicated.load(Ordering::Relaxed))
+            .set("replicate_errors", c.replicate_errors.load(Ordering::Relaxed))
+            .set("dead_marks", c.dead_marks.load(Ordering::Relaxed))
+            .set(
+                "nodes",
+                Json::Arr(self.nodes.iter().map(|n| n.to_json()).collect()),
+            );
+        j
+    }
+
+    pub fn nodes_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("ok", true).set("op", "nodes").set(
+            "nodes",
+            Json::Arr(
+                self.nodes
+                    .iter()
+                    .map(|n| Json::from(n.addr.as_str()))
+                    .collect(),
+            ),
+        );
+        j
+    }
+}
+
+/// One NDJSON roundtrip on an existing stream. Safe to pool: the
+/// protocol is strictly one response line per request, so a completed
+/// read leaves no residue for the next user.
+fn roundtrip_on(stream: &mut TcpStream, req: &Json) -> Result<Json, String> {
+    let mut line = req.to_string();
+    line.push('\n');
+    stream
+        .write_all(line.as_bytes())
+        .map_err(|e| format!("send: {e}"))?;
+    stream.flush().map_err(|e| format!("flush: {e}"))?;
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| format!("clone stream: {e}"))?,
+    );
+    let mut buf = String::new();
+    let n = reader
+        .read_line(&mut buf)
+        .map_err(|e| format!("recv: {e}"))?;
+    if n == 0 {
+        return Err("node closed the connection".into());
+    }
+    Json::parse(buf.trim_end()).map_err(|e| format!("bad response JSON: {e}"))
+}
+
+/// TCP front end for a [`Router`]: same accept-loop shape as
+/// [`service::server::Server`], speaking the same protocol, so
+/// `barista submit/batch/stats` work against a router unchanged.
+///
+/// [`service::server::Server`]: crate::service::server::Server
+pub struct RouterServer {
+    listener: TcpListener,
+    local: SocketAddr,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    started: Instant,
+}
+
+impl RouterServer {
+    pub fn bind(addr: &str, cfg: RouterConfig) -> Result<RouterServer, String> {
+        let router = Arc::new(Router::new(cfg)?);
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| format!("bind {addr}: {e}"))?;
+        Ok(RouterServer {
+            listener,
+            local,
+            router,
+            stop: Arc::new(AtomicBool::new(false)),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Accept loop plus the background health monitor; returns after a
+    /// `shutdown` request (the worker nodes keep running — shutting
+    /// down the cluster means shutting each node down too).
+    pub fn run(&self) -> std::io::Result<()> {
+        let health = {
+            let router = self.router.clone();
+            let stop = self.stop.clone();
+            let interval = router.cfg.health_interval;
+            std::thread::Builder::new()
+                .name("barista-router-health".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        router.health_pass();
+                        std::thread::sleep(interval);
+                    }
+                })
+                .expect("spawn router health monitor")
+        };
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let router = self.router.clone();
+            let stop = self.stop.clone();
+            let local = self.local;
+            let started = self.started;
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &router, &stop, local, started);
+            });
+        }
+        let _ = health.join();
+        Ok(())
+    }
+
+    /// Bind and serve on a background thread (test/bench harness).
+    pub fn spawn(
+        addr: &str,
+        cfg: RouterConfig,
+    ) -> Result<(SocketAddr, std::thread::JoinHandle<std::io::Result<()>>), String> {
+        let server = RouterServer::bind(addr, cfg)?;
+        let local = server.local_addr();
+        let handle = std::thread::spawn(move || server.run());
+        Ok((local, handle))
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: &Router,
+    stop: &AtomicBool,
+    local: SocketAddr,
+    started: Instant,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, quit) = respond(&line, router, started);
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if quit {
+            stop.store(true, Ordering::SeqCst);
+            poke_accept_loop(local);
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Wake an accept loop blocked in `accept` so it observes the stop
+/// flag (same wildcard-address handling as the worker server).
+fn poke_accept_loop(local: SocketAddr) {
+    let mut wake = local;
+    if wake.ip().is_unspecified() {
+        let loopback: std::net::IpAddr = match wake.ip() {
+            std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+            std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+        };
+        wake.set_ip(loopback);
+    }
+    let _ = TcpStream::connect(wake);
+}
+
+/// Handle one request line against the router; returns the response and
+/// whether the router should shut down. The stream flag is accepted but
+/// answered with a single terminal frame (valid to a streaming client:
+/// a frame without `event` is terminal).
+pub fn respond(line: &str, router: &Router, started: Instant) -> (Json, bool) {
+    match Request::parse_line(line) {
+        Err(e) => (protocol::response_error(&e), false),
+        Ok(Request::Submit { spec, .. }) => (router.dispatch(&spec), false),
+        Ok(Request::Batch { specs, .. }) => (router.dispatch_batch(&specs), false),
+        Ok(Request::Status) => (router.status_json(started), false),
+        Ok(Request::Stats) => {
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("op", "stats")
+                .set("router", router.stats_json());
+            (j, false)
+        }
+        Ok(Request::Nodes) => (router.nodes_json(), false),
+        Ok(Request::Health) => {
+            let mut j = Json::obj();
+            j.set("ok", true).set("op", "health").set("role", "router");
+            (j, false)
+        }
+        Ok(Request::Shutdown) => {
+            let mut j = Json::obj();
+            j.set("ok", true).set("op", "shutdown");
+            (j, true)
+        }
+        Ok(Request::PeerGet { .. }) | Ok(Request::Replicate { .. }) => (
+            protocol::response_error("the router holds no results; peer ops address worker nodes"),
+            false,
+        ),
+    }
+}

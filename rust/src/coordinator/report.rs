@@ -238,22 +238,28 @@ pub fn results_json(results: &[RunResult]) -> Json {
 
 /// One-line job accounting for a figure/sweep run through the
 /// cache-aware scheduler: how many jobs were simulated vs served from
-/// each reuse path (hot cache, persistent store, in-flight dedup).
-/// Shared by `barista report` (per figure) and `barista sweep`; on a
-/// warm `--cache-dir` store the interesting line reads
-/// `0 simulated, ... N store hits`.
+/// each reuse path (hot cache, persistent store, cluster peers,
+/// in-flight dedup). Shared by `barista report` (per figure) and
+/// `barista sweep`; on a warm `--cache-dir` store the interesting line
+/// reads `0 simulated, ... N store hits`. Peer hits (cluster mode) only
+/// print when nonzero, keeping the single-node line unchanged.
 pub fn job_accounting(
     label: &str,
     jobs: usize,
     executed: u64,
     cache_hits: u64,
     store_hits: u64,
+    peer_hits: u64,
     deduped: u64,
     wall_ms: f64,
 ) -> String {
+    let peer_note = match peer_hits {
+        0 => String::new(),
+        p => format!(", {p} peer hits"),
+    };
     format!(
         "[{label}] {jobs} jobs: {executed} simulated, {cache_hits} cache hits, \
-         {store_hits} store hits, {deduped} deduped — {wall_ms:.0} ms wall"
+         {store_hits} store hits{peer_note}, {deduped} deduped — {wall_ms:.0} ms wall"
     )
 }
 
@@ -355,11 +361,17 @@ mod tests {
 
     #[test]
     fn job_accounting_line_names_every_reuse_path() {
-        let line = job_accounting("fig7", 40, 0, 3, 37, 0, 12.0);
+        let line = job_accounting("fig7", 40, 0, 3, 37, 0, 0, 12.0);
         assert!(line.starts_with("[fig7] 40 jobs:"), "{line}");
         assert!(line.contains("0 simulated"), "{line}");
         assert!(line.contains("37 store hits"), "{line}");
         assert!(line.contains("3 cache hits"), "{line}");
+        // Peer hits are cluster-mode only: absent at zero (the
+        // single-node line is unchanged), named when present.
+        assert!(!line.contains("peer"), "{line}");
+        let line = job_accounting("replay", 40, 0, 0, 0, 40, 0, 12.0);
+        assert!(line.contains("40 peer hits"), "{line}");
+        assert!(line.contains("0 simulated"), "{line}");
     }
 
     #[test]

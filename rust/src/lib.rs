@@ -15,7 +15,10 @@
 //!   on-chip cache model, and 45-nm energy/area models. The [`service`]
 //!   layer turns the simulator into a persistent job server (NDJSON over
 //!   TCP) with a content-addressed result cache, request deduplication
-//!   and backpressure — see DESIGN.md §Service.
+//!   and backpressure — see DESIGN.md §Service — and the [`cluster`]
+//!   layer shards that service across machines behind a consistent-hash
+//!   router with cross-node dedup, successor replication and
+//!   work-stealing — see DESIGN.md §Cluster.
 //! * **Layer 2 (python/compile/model.py)** — the functional sparse-CNN
 //!   compute graph in JAX, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — the bitmask sparse-chunk
@@ -54,6 +57,7 @@ pub mod baselines;
 pub mod barista;
 pub mod bench_harness;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

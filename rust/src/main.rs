@@ -7,8 +7,11 @@
 //!              comma list or `all`; figures share one result cache, so
 //!              fig7,fig8,fig9 in one process simulates each job once
 //!   serve      run the persistent job server (NDJSON over TCP)
-//!   submit     submit one job to a running server
+//!   submit     submit one job to a running server (or cluster router)
 //!   batch      submit a benchmark × architecture matrix to a server
+//!   stats      print a server's (or router's) live counters
+//!   cluster-serve  run the consistent-hash cluster router over N
+//!              worker nodes (cross-node dedup, replication, stealing)
 //!   golden     run the AOT artifacts through PJRT and cross-check vs the
 //!              native Rust reference (requires `make artifacts`)
 //!   info       print Table 1 / Table 2 style configuration info
@@ -20,6 +23,9 @@
 //!   barista serve --addr 127.0.0.1:7077 --workers 8
 //!   barista submit --network resnet50 --arch barista
 //!   barista batch --networks alexnet,vggnet --archs dense,barista
+//!   barista cluster-serve --nodes 127.0.0.1:7077,127.0.0.1:7078
+//!   barista batch --cluster 127.0.0.1:7070 --networks all
+//!   barista stats 127.0.0.1:7070
 //!   barista golden --artifacts artifacts
 
 // Same clippy posture as lib.rs (CI runs `cargo clippy -- -D warnings`
@@ -34,13 +40,14 @@
 )]
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use barista::cli::Args;
+use barista::cluster::{PeerSet, RouterConfig, RouterServer, DEFAULT_ROUTER_ADDR};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{self, report, run_one, RunRequest};
 use barista::service::{
-    Client, JobSpec, Scheduler, SchedulerConfig, Server, Store, DEFAULT_ADDR,
+    Client, JobSpec, PeerLookup, Scheduler, SchedulerConfig, Server, Store, DEFAULT_ADDR,
 };
 use barista::util::Json;
 use barista::workload::{load_network_file, network, Benchmark, SparsityModel};
@@ -60,6 +67,8 @@ fn main() {
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "batch" => cmd_batch(&args),
+        "stats" => cmd_stats(&args),
+        "cluster-serve" => cmd_cluster_serve(&args),
         "golden" => cmd_golden(&args),
         "info" => cmd_info(&args),
         "" | "help" | "--help" => {
@@ -91,10 +100,14 @@ fn print_help() {
          \x20           [--sparsity MODEL] [--workers N] [--cache-dir DIR]\n\
          \x20 serve     [--addr HOST:PORT] [--workers N] [--shards N] [--queue-cap N] [--cache-mb N]\n\
          \x20           [--cache-dir DIR]   (persistent result store; survives restarts)\n\
-         \x20 submit    [--addr HOST:PORT] --network <name|file.json> [--arch <name>]\n\
+         \x20           [--peers A,B | --cluster ROUTER]   (consult peer stores before simulating)\n\
+         \x20 submit    [--addr HOST:PORT | --cluster ROUTER] --network <name|file.json>\n\
+         \x20           [--arch <name>] [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
+         \x20 batch     [--addr HOST:PORT | --cluster ROUTER] [--networks a,b|all] [--archs x,y|fig7]\n\
          \x20           [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
-         \x20 batch     [--addr HOST:PORT] [--networks a,b|all] [--archs x,y|fig7]\n\
-         \x20           [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
+         \x20 stats     [ADDR | --addr HOST:PORT] [--json]   (server or router counters)\n\
+         \x20 cluster-serve  --nodes A,B,C [--addr HOST:PORT] [--steal-threshold N]\n\
+         \x20           [--vnodes N] [--health-ms N] [--no-replicate]\n\
          \x20 golden    [--artifacts DIR]\n\
          \x20 info      [--network <name|file.json>]\n\
          \n\
@@ -148,25 +161,36 @@ fn parse_benchmark(args: &Args) -> Result<Benchmark, String> {
     resolve_network(args.get_or("network", "alexnet"))
 }
 
+/// A sizing option: absent keeps the default; an explicit value must be
+/// >= 1. (`--shards 0` used to be silently clamped to 1 deep inside the
+/// scheduler — now it is a parse-time error like any other bad value,
+/// matching the `Args::finish` reject-don't-guess convention.)
+fn sized_opt(args: &Args, name: &str) -> Result<Option<usize>, String> {
+    if args.get(name).is_none() {
+        return Ok(None);
+    }
+    let v = args.get_usize(name, 0)?;
+    if v == 0 {
+        return Err(format!("--{name} must be >= 1"));
+    }
+    Ok(Some(v))
+}
+
 /// Scheduler sizing from the shared `--workers`/`--shards`/`--queue-cap`
-/// /`--cache-mb`/`--cache-dir` options (0 / absent keeps the default).
+/// /`--cache-mb`/`--cache-dir` options (absent keeps the default).
 fn scheduler_config(args: &Args) -> Result<SchedulerConfig, String> {
     let mut cfg = SchedulerConfig::default();
-    let workers = args.get_usize("workers", 0)?;
-    if workers > 0 {
-        cfg.workers = workers;
+    if let Some(v) = sized_opt(args, "workers")? {
+        cfg.workers = v;
     }
-    let shards = args.get_usize("shards", 0)?;
-    if shards > 0 {
-        cfg.shards = shards;
+    if let Some(v) = sized_opt(args, "shards")? {
+        cfg.shards = v;
     }
-    let queue_cap = args.get_usize("queue-cap", 0)?;
-    if queue_cap > 0 {
-        cfg.queue_cap = queue_cap;
+    if let Some(v) = sized_opt(args, "queue-cap")? {
+        cfg.queue_cap = v;
     }
-    let cache_mb = args.get_usize("cache-mb", 0)?;
-    if cache_mb > 0 {
-        cfg.cache_bytes = cache_mb << 20;
+    if let Some(v) = sized_opt(args, "cache-mb")? {
+        cfg.cache_bytes = v << 20;
     }
     if let Some(dir) = args.get("cache-dir") {
         let store = Store::open(std::path::Path::new(dir))
@@ -189,6 +213,7 @@ fn scheduler_config(args: &Args) -> Result<SchedulerConfig, String> {
         );
         cfg.store = Some(Arc::new(store));
     }
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -265,6 +290,7 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             st.executed,
             st.cache_hits,
             st.store_hits,
+            st.peer_hits,
             st.deduped,
             wall_ms
         )
@@ -380,6 +406,7 @@ fn cmd_report(args: &Args) -> Result<(), String> {
                 after.executed - before.executed,
                 after.cache_hits - before.cache_hits,
                 after.store_hits - before.store_hits,
+                after.peer_hits - before.peer_hits,
                 after.deduped - before.deduped,
                 wall_ms
             )
@@ -398,6 +425,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             "queue-cap",
             "cache-mb",
             "cache-dir",
+            "peers",
+            "cluster",
         ],
         &[],
     )?;
@@ -409,12 +438,156 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Some(store) => format!(", store {}", store.dir().display()),
         None => String::new(),
     };
-    let server = Server::bind(addr, cfg).map_err(|e| format!("bind {addr}: {e}"))?;
+    let peers = serve_peers(args, addr)?;
+    let peers_note = match &peers {
+        Some(p) => format!(", dedup against {}", p.describe()),
+        None => String::new(),
+    };
+    let peers = peers.map(|p| Arc::new(p) as Arc<dyn PeerLookup>);
+    let server =
+        Server::bind_with_peers(addr, cfg, peers).map_err(|e| format!("bind {addr}: {e}"))?;
     println!(
-        "barista serve: listening on {} ({workers} workers, {shards} shards, queue cap {queue_cap}, cache {cache_mb} MB{store_note})",
+        "barista serve: listening on {} ({workers} workers, {shards} shards, queue cap {queue_cap}, cache {cache_mb} MB{store_note}{peers_note})",
         server.local_addr()
     );
     server.run().map_err(|e| format!("serve: {e}"))
+}
+
+fn split_addrs(list: &str) -> Vec<String> {
+    list.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// Peer addresses for cross-node dedup: an explicit `--peers a,b` list,
+/// membership fetched from a router via `--cluster <routerAddr>`, or
+/// both — minus this node's own address.
+fn serve_peers(args: &Args, own_addr: &str) -> Result<Option<PeerSet>, String> {
+    let mut addrs: Vec<String> = Vec::new();
+    if let Some(list) = args.get("peers") {
+        addrs.extend(split_addrs(list));
+    }
+    if let Some(router) = args.get("cluster") {
+        let mut client = Client::connect_timeout(router, Duration::from_secs(5))
+            .map_err(|e| format!("cluster router {router}: {e}"))?;
+        let mut q = Json::obj();
+        q.set("op", "nodes");
+        let resp = client.roundtrip(&q)?;
+        if let Some(e) = response_err(&resp) {
+            return Err(format!("cluster router {router}: {e}"));
+        }
+        let nodes = resp
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or("router 'nodes' response carries no node list")?;
+        for n in nodes {
+            if let Some(a) = n.as_str() {
+                addrs.push(a.to_string());
+            }
+        }
+    }
+    // Never dedup against ourselves (the exact-string match is enough:
+    // membership lists and --addr come from the same operator config).
+    addrs.retain(|a| a != own_addr);
+    addrs.dedup();
+    if addrs.is_empty() {
+        return Ok(None);
+    }
+    Ok(Some(PeerSet::new(addrs)))
+}
+
+fn cmd_stats(args: &Args) -> Result<(), String> {
+    args.finish(&["addr"], &["json"])?;
+    let addr = match args.positional.first() {
+        Some(a) => a.as_str(),
+        None => args.get_or("addr", DEFAULT_ADDR),
+    };
+    let mut client = Client::connect_timeout(addr, Duration::from_secs(5))?;
+    let resp = client.stats()?;
+    if let Some(e) = response_err(&resp) {
+        return Err(e);
+    }
+    if args.flag("json") {
+        println!("{}", resp.pretty());
+        return Ok(());
+    }
+    if let Some(s) = resp.get("scheduler") {
+        let n = |k: &str| s.get(k).and_then(Json::as_u64).unwrap_or(0);
+        println!(
+            "{addr}: {} submitted — {} simulated, {} cache, {} store, {} peer, {} dedup, {} rejected; {} queued",
+            n("submitted"),
+            n("executed"),
+            n("cache_hits"),
+            n("store_hits"),
+            n("peer_hits"),
+            n("deduped"),
+            n("rejected"),
+            n("queued"),
+        );
+        if let Some(c) = s.get("cache") {
+            println!("  hot tier:  {}", c.to_string());
+        }
+        if let Some(st) = s.get("store") {
+            println!("  cold tier: {}", st.to_string());
+        }
+    }
+    if let Some(r) = resp.get("router") {
+        let n = |k: &str| r.get(k).and_then(Json::as_u64).unwrap_or(0);
+        println!(
+            "{addr}: router — {} routed, {} steals, {} failovers, {} replica hits, {} replicated ({} errors), {} dead marks",
+            n("routed"),
+            n("steals"),
+            n("failovers"),
+            n("replica_hits"),
+            n("replicated"),
+            n("replicate_errors"),
+            n("dead_marks"),
+        );
+        if let Some(nodes) = r.get("nodes").and_then(Json::as_arr) {
+            for node in nodes {
+                println!("  node {}", node.to_string());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_cluster_serve(args: &Args) -> Result<(), String> {
+    args.finish(
+        &["addr", "nodes", "steal-threshold", "vnodes", "health-ms"],
+        &["no-replicate"],
+    )?;
+    let addr = args.get_or("addr", DEFAULT_ROUTER_ADDR);
+    let nodes = split_addrs(
+        args.get("nodes")
+            .ok_or("cluster-serve needs --nodes a,b,c (worker node addresses)")?,
+    );
+    let mut cfg = RouterConfig {
+        nodes,
+        ..RouterConfig::default()
+    };
+    if let Some(v) = sized_opt(args, "steal-threshold")? {
+        cfg.steal_threshold = v;
+    }
+    if let Some(v) = sized_opt(args, "vnodes")? {
+        cfg.vnodes = v;
+    }
+    if let Some(v) = sized_opt(args, "health-ms")? {
+        cfg.health_interval = Duration::from_millis(v as u64);
+    }
+    if args.flag("no-replicate") {
+        cfg.replicate = false;
+    }
+    let (n, steal, replicate) = (cfg.nodes.len(), cfg.steal_threshold, cfg.replicate);
+    let server = RouterServer::bind(addr, cfg)?;
+    println!(
+        "barista cluster-serve: router on {} over {n} nodes (steal threshold {steal}, replication {})",
+        server.local_addr(),
+        if replicate { "on" } else { "off" }
+    );
+    server.run().map_err(|e| format!("cluster-serve: {e}"))
 }
 
 /// Build a `JobSpec` from the shared job options.
@@ -455,11 +628,14 @@ fn print_job_line(label: &str, body: &Json) {
 fn cmd_submit(args: &Args) -> Result<(), String> {
     args.finish(
         &[
-            "addr", "network", "arch", "window-cap", "batch", "seed", "sparsity",
+            "addr", "cluster", "network", "arch", "window-cap", "batch", "seed", "sparsity",
         ],
         &["json", "stream"],
     )?;
-    let addr = args.get_or("addr", DEFAULT_ADDR);
+    // --cluster is an addr alias: a router speaks the same protocol.
+    let addr = args
+        .get("cluster")
+        .unwrap_or(args.get_or("addr", DEFAULT_ADDR));
     let spec = job_from_args(args)?;
     let mut client = Client::connect(addr)?;
     let resp = if args.flag("stream") {
@@ -509,11 +685,14 @@ fn parse_arch_list(s: &str) -> Result<Vec<ArchKind>, String> {
 fn cmd_batch(args: &Args) -> Result<(), String> {
     args.finish(
         &[
-            "addr", "networks", "archs", "window-cap", "batch", "seed", "sparsity",
+            "addr", "cluster", "networks", "archs", "window-cap", "batch", "seed", "sparsity",
         ],
         &["json", "stream"],
     )?;
-    let addr = args.get_or("addr", DEFAULT_ADDR);
+    // --cluster is an addr alias: a router speaks the same protocol.
+    let addr = args
+        .get("cluster")
+        .unwrap_or(args.get_or("addr", DEFAULT_ADDR));
     let benchmarks = parse_network_list(args.get_or("networks", "all"))?;
     let archs = parse_arch_list(args.get_or("archs", "fig7"))?;
     let base = parse_common(args, ArchKind::Barista)?;
@@ -550,8 +729,13 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
             return Err(e);
         }
         let field = |k: &str| done.get(k).and_then(Json::as_u64).unwrap_or(0);
+        // "peer" only appears on cluster-mode done frames.
+        let peer_note = match field("peer") {
+            0 => String::new(),
+            p => format!(", {p} peer"),
+        };
         println!(
-            "{} jobs in {:.0} ms wall ({} simulated, {} cache, {} store, {} dedup)",
+            "{} jobs in {:.0} ms wall ({} simulated, {} cache, {} store, {} dedup{peer_note})",
             field("jobs"),
             done.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
             field("executed"),

@@ -39,6 +39,19 @@ impl JobKey {
     pub fn hex(&self) -> String {
         format!("{:016x}{:016x}", self.0, self.1)
     }
+
+    /// Parse the 32-hex-digit wire form back into a key (the
+    /// `replicate` protocol op addresses records this way).
+    pub fn from_hex(s: &str) -> Result<JobKey, String> {
+        if !s.is_ascii() || s.len() != 32 {
+            return Err(format!("job key must be 32 hex digits, got {s:?}"));
+        }
+        let hi = u64::from_str_radix(&s[..16], 16)
+            .map_err(|e| format!("bad job key {s:?}: {e}"))?;
+        let lo = u64::from_str_radix(&s[16..], 16)
+            .map_err(|e| format!("bad job key {s:?}: {e}"))?;
+        Ok(JobKey(hi, lo))
+    }
 }
 
 /// The canonical string a job hashes to (also usable as a debug label).
@@ -61,7 +74,13 @@ pub fn canonical_job_string(req: &RunRequest) -> String {
 
 /// Content-addressed key for one simulation job.
 pub fn job_key(req: &RunRequest) -> JobKey {
-    let canon = canonical_job_string(req);
+    key_of_canon(&canonical_job_string(req))
+}
+
+/// Key of an already-canonicalized job string. Split out so replica
+/// verification can re-derive the key from a record's embedded canon
+/// and compare it against the claimed one.
+pub fn key_of_canon(canon: &str) -> JobKey {
     JobKey(
         fnv1a64(canon.as_bytes(), FNV_OFFSET_BASIS),
         fnv1a64(canon.as_bytes(), FNV_BASIS_2),
@@ -375,6 +394,17 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, c);
         assert_eq!(a.hex().len(), 32);
+    }
+
+    #[test]
+    fn job_key_hex_round_trips() {
+        let key = job_key(&small_req(7));
+        assert_eq!(JobKey::from_hex(&key.hex()), Ok(key));
+        assert!(JobKey::from_hex("abc").is_err(), "too short");
+        assert!(
+            JobKey::from_hex("zz000000000000000000000000000000").is_err(),
+            "non-hex digits"
+        );
     }
 
     #[test]

@@ -27,6 +27,12 @@
 //!   end plus the blocking [`Client`], shared by `barista serve`,
 //!   `barista submit`/`batch` and the integration tests.
 //!
+//! Cluster mode ([`crate::cluster`]) runs N of these servers behind a
+//! consistent-hash router: the protocol gains `peer-get`/`replicate`/
+//! `health` control verbs, and the scheduler a [`PeerLookup`] hook so
+//! workers consult peer stores before simulating. The single-node wire
+//! format is unchanged byte-for-byte.
+//!
 //! In-process callers (`barista report`, `barista sweep`, benches) use
 //! [`Scheduler`] directly — same cache, no socket. See DESIGN.md
 //! §Service for the wire format and guarantees, and §Store for the
@@ -42,6 +48,8 @@ pub mod store;
 
 pub use cache::{job_key, CacheStats, CachedEntry, JobKey, ResultCache, Tier, TieredCache};
 pub use protocol::{JobSpec, Request, DEFAULT_ADDR};
-pub use scheduler::{Outcome, Scheduler, SchedulerConfig, SchedulerStats, Source, SubmitError};
+pub use scheduler::{
+    Outcome, PeerLookup, Scheduler, SchedulerConfig, SchedulerStats, Source, SubmitError,
+};
 pub use server::{Client, Server};
 pub use store::{Store, StoreStats};

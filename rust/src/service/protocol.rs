@@ -16,6 +16,24 @@
 //! {"op":"shutdown"}
 //! ```
 //!
+//! Cluster control verbs (spoken between the router and worker nodes,
+//! and by `barista stats`; the client-facing verbs above are unchanged
+//! byte-for-byte):
+//!
+//! ```text
+//! {"op":"peer-get","job":{...}}           → {"ok":true,"op":"peer-get","found":bool[,"payload":"<record>"]}
+//! {"op":"replicate","key":"<32 hex>","payload":"<record>"}
+//!                                         → {"ok":true,"op":"replicate","stored":bool}
+//! {"op":"health"}                         → {"ok":true,"op":"health","queued":N,"workers":N}
+//! {"op":"nodes"}                          → {"ok":true,"op":"nodes","nodes":[addr,...]}  (router only)
+//! ```
+//!
+//! `peer-get` answers with the journal-format record
+//! ([`store::encode_record`](crate::service::store::encode_record)) so
+//! the requester can verify the embedded canonical string before
+//! admitting it; `replicate` pushes such a record into a node's cold
+//! tier (re-verified against the claimed key on receipt).
+//!
 //! `job.config` takes [`SimConfig`] field overrides on top of the
 //! architecture's paper configuration; unknown keys (and unknown
 //! top-level job keys) are protocol errors, never silently ignored.
@@ -43,6 +61,7 @@
 
 use crate::config::{ArchKind, SimConfig};
 use crate::coordinator::RunRequest;
+use crate::service::cache::JobKey;
 use crate::util::Json;
 use crate::workload::Benchmark;
 
@@ -135,6 +154,15 @@ pub enum Request {
     Batch { specs: Vec<JobSpec>, stream: bool },
     Status,
     Stats,
+    /// Cluster: fetch the journal-format record for a job, if this node
+    /// holds its result in either tier.
+    PeerGet { spec: JobSpec },
+    /// Cluster: push a completed record into this node's cold tier.
+    Replicate { key: JobKey, payload: String },
+    /// Cluster: cheap liveness + queue-depth probe.
+    Health,
+    /// Cluster: list worker node addresses (router only).
+    Nodes,
     Shutdown,
 }
 
@@ -174,6 +202,28 @@ impl Request {
             }
             "status" => Ok(Request::Status),
             "stats" => Ok(Request::Stats),
+            "peer-get" => {
+                let job = j.get("job").ok_or("peer-get missing 'job'")?;
+                Ok(Request::PeerGet {
+                    spec: JobSpec::from_json(job)?,
+                })
+            }
+            "replicate" => {
+                let key = j
+                    .get("key")
+                    .and_then(Json::as_str)
+                    .ok_or("replicate missing 'key'")?;
+                let payload = j
+                    .get("payload")
+                    .and_then(Json::as_str)
+                    .ok_or("replicate missing 'payload'")?;
+                Ok(Request::Replicate {
+                    key: JobKey::from_hex(key)?,
+                    payload: payload.to_string(),
+                })
+            }
+            "health" => Ok(Request::Health),
+            "nodes" => Ok(Request::Nodes),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(format!("unknown op '{other}'")),
         }
@@ -205,6 +255,20 @@ impl Request {
             }
             Request::Stats => {
                 j.set("op", "stats");
+            }
+            Request::PeerGet { spec } => {
+                j.set("op", "peer-get").set("job", spec.to_json());
+            }
+            Request::Replicate { key, payload } => {
+                j.set("op", "replicate")
+                    .set("key", key.hex())
+                    .set("payload", payload.as_str());
+            }
+            Request::Health => {
+                j.set("op", "health");
+            }
+            Request::Nodes => {
+                j.set("op", "nodes");
             }
             Request::Shutdown => {
                 j.set("op", "shutdown");
@@ -342,10 +406,52 @@ mod tests {
     }
 
     #[test]
+    fn cluster_ops_roundtrip() {
+        // peer-get carries a full job spec, like submit.
+        let spec = JobSpec {
+            benchmark: Benchmark::AlexNet,
+            config: SimConfig::paper(ArchKind::Barista),
+        };
+        let line = Request::PeerGet { spec: spec.clone() }.to_json().to_string();
+        match Request::parse_line(&line).unwrap() {
+            Request::PeerGet { spec: back } => {
+                assert_eq!(
+                    back.config.canonical_json().to_string(),
+                    spec.config.canonical_json().to_string()
+                );
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+        // replicate addresses a record by its 32-hex-digit key.
+        let key = JobKey(0xdead_beef, 42);
+        let line = Request::Replicate {
+            key,
+            payload: r#"{"canon":"x"}"#.to_string(),
+        }
+        .to_json()
+        .to_string();
+        match Request::parse_line(&line).unwrap() {
+            Request::Replicate { key: back, payload } => {
+                assert_eq!(back, key);
+                assert_eq!(payload, r#"{"canon":"x"}"#);
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+        // A malformed key is a protocol error, not a silent miss.
+        let e = Request::parse_line(r#"{"op":"replicate","key":"xyz","payload":"p"}"#)
+            .unwrap_err();
+        assert!(e.contains("32 hex"), "{e}");
+        assert!(Request::parse_line(r#"{"op":"replicate","key":"ab"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"peer-get"}"#).is_err());
+    }
+
+    #[test]
     fn control_ops_parse() {
         for (line, want) in [
             (r#"{"op":"status"}"#, "status"),
             (r#"{"op":"stats"}"#, "stats"),
+            (r#"{"op":"health"}"#, "health"),
+            (r#"{"op":"nodes"}"#, "nodes"),
             (r#"{"op":"shutdown"}"#, "shutdown"),
         ] {
             let req = Request::parse_line(line).unwrap();

@@ -16,11 +16,22 @@
 //!   optional persistent journal [`Store`] (cold). Submissions consult
 //!   *both* tiers before any work is scheduled, so a job simulated in a
 //!   previous process lifetime is served from disk ([`Source::StoreHit`])
-//!   with zero re-simulation.
+//!   with zero re-simulation;
+//! * **cross-node dedup** (cluster mode) — with a [`PeerLookup`]
+//!   configured, a worker consults peer node stores before simulating
+//!   and admits a remote hit into the *hot* tier only
+//!   ([`Source::PeerHit`]): the durable copies stay with the node that
+//!   computed the result and that key's replica.
+//!
+//! Shard selection goes through the [`Route`] abstraction from
+//! [`cluster::ring`](crate::cluster::ring): here the modulo
+//! `ShardRoute` over in-process queues; the cluster router implements
+//! the same trait with a consistent-hash ring over worker nodes.
 //!
 //! Determinism: results come from [`run_one`], which is deterministic
-//! per (benchmark, config, seed), so a cached result — hot, cold, or
-//! deduped — is byte-identical to a fresh execution.
+//! per (benchmark, config, seed), so a cached result — hot, cold,
+//! deduped, or peer-fetched (the record's canonical string is verified
+//! on decode) — is byte-identical to a fresh execution.
 
 use std::collections::{HashMap, VecDeque};
 use std::fmt;
@@ -28,9 +39,13 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use crate::cluster::ring::{NodeId, Route};
 use crate::coordinator::{run_one, RunRequest, RunResult};
-use crate::service::cache::{job_key, CachedEntry, CacheStats, JobKey, Tier, TieredCache};
-use crate::service::store::{Store, StoreStats};
+use crate::service::cache::{
+    canonical_job_string, job_key, key_of_canon, CachedEntry, CacheStats, JobKey, Tier,
+    TieredCache,
+};
+use crate::service::store::{encode_record, Store, StoreStats};
 use crate::util::Json;
 
 /// Scheduler sizing knobs.
@@ -67,6 +82,64 @@ impl Default for SchedulerConfig {
     }
 }
 
+impl SchedulerConfig {
+    /// Reject unusable sizing before any thread or queue is built.
+    /// Front ends (CLI flag parsing) call this so a bad `--shards 0`
+    /// is a proper error at the edge; [`Scheduler::with_peers`] also
+    /// enforces it (panicking, as a constructor contract violation)
+    /// so no silently-clamped scheduler can exist.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if self.shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("queue-cap must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Cross-node dedup hook: consulted by a worker right before it would
+/// simulate, after every local tier missed. Implemented over the wire
+/// by [`cluster::peers::PeerSet`](crate::cluster::peers::PeerSet);
+/// tests stub it in-process.
+pub trait PeerLookup: Send + Sync {
+    /// A completed, verified result for `req`, if some peer has one.
+    fn fetch(&self, req: &RunRequest) -> Option<RunResult>;
+    /// Human-readable description for banners/logs.
+    fn describe(&self) -> String {
+        "peers".into()
+    }
+}
+
+/// The scheduler's [`Route`]: content key → in-process shard queue by
+/// modulo. Byte-compatible with the pre-cluster `key.0 % shards`
+/// routing, so existing queue placement (and every test built on it)
+/// is unchanged.
+struct ShardRoute {
+    shards: u32,
+}
+
+impl Route for ShardRoute {
+    fn node_count(&self) -> usize {
+        self.shards as usize
+    }
+
+    fn route(&self, key: &JobKey) -> NodeId {
+        NodeId((key.0 % self.shards as u64) as u32)
+    }
+
+    fn successor(&self, key: &JobKey) -> Option<NodeId> {
+        if self.shards < 2 {
+            return None;
+        }
+        Some(NodeId((self.route(key).0 + 1) % self.shards))
+    }
+}
+
 /// Where a job's result came from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Source {
@@ -79,6 +152,9 @@ pub enum Source {
     /// Served from the persistent on-disk (cold) store — typically a
     /// job simulated in a previous process lifetime.
     StoreHit,
+    /// Fetched from a peer node's store (cluster mode) instead of
+    /// simulating; admitted into the local hot tier.
+    PeerHit,
 }
 
 impl Source {
@@ -88,6 +164,7 @@ impl Source {
             Source::Deduped => "dedup",
             Source::CacheHit => "cache",
             Source::StoreHit => "store",
+            Source::PeerHit => "peer",
         }
     }
 }
@@ -131,6 +208,9 @@ pub struct SchedulerStats {
     pub cache_hits: u64,
     /// Submissions served from the persistent cold tier.
     pub store_hits: u64,
+    /// Jobs served from a peer node's store instead of simulating
+    /// (cluster mode; always 0 without a [`PeerLookup`]).
+    pub peer_hits: u64,
     pub rejected: u64,
     pub queued: usize,
     pub workers: usize,
@@ -148,6 +228,7 @@ impl SchedulerStats {
             .set("deduped", self.deduped)
             .set("cache_hits", self.cache_hits)
             .set("store_hits", self.store_hits)
+            .set("peer_hits", self.peer_hits)
             .set("rejected", self.rejected)
             .set("queued", self.queued)
             .set("workers", self.workers)
@@ -167,12 +248,15 @@ struct Counters {
     deduped: AtomicU64,
     cache_hits: AtomicU64,
     store_hits: AtomicU64,
+    peer_hits: AtomicU64,
     rejected: AtomicU64,
 }
 
 /// Completion deliveries are tagged so one shared channel can serve a
-/// whole batch: the tag is the submitter's job index (0 for `execute`).
-type Delivery = (u64, Arc<CachedEntry>);
+/// whole batch: the tag is the submitter's job index (0 for `execute`),
+/// and the source records how the worker resolved the job (executed
+/// locally, or fetched from a peer).
+type Delivery = (u64, Arc<CachedEntry>, Source);
 
 struct Waiter {
     tag: u64,
@@ -210,6 +294,7 @@ enum Enqueued {
 /// workers (pending waiters then observe [`SubmitError::Shutdown`]).
 pub struct Scheduler {
     shards: Vec<Arc<Shard>>,
+    route: ShardRoute,
     cache: Arc<TieredCache>,
     counters: Arc<Counters>,
     stop: Arc<AtomicBool>,
@@ -220,8 +305,19 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Scheduler {
-        let workers = cfg.workers.max(1);
-        let nshards = cfg.shards.max(1);
+        Scheduler::with_peers(cfg, None)
+    }
+
+    /// Build a scheduler with an optional cross-node dedup hook. The
+    /// config must already be valid ([`SchedulerConfig::validate`]);
+    /// front ends validate at parse time, so a failure here is a
+    /// caller bug, not an input error.
+    pub fn with_peers(cfg: SchedulerConfig, peers: Option<Arc<dyn PeerLookup>>) -> Scheduler {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid SchedulerConfig: {e}");
+        }
+        let workers = cfg.workers;
+        let nshards = cfg.shards;
         let shards: Vec<Arc<Shard>> = (0..nshards)
             .map(|_| {
                 Arc::new(Shard {
@@ -242,21 +338,27 @@ impl Scheduler {
             let cache = cache.clone();
             let counters = counters.clone();
             let stop = stop.clone();
+            let peers = peers.clone();
             let home = i % nshards;
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("barista-worker-{i}"))
-                    .spawn(move || worker_loop(&shards, home, &cache, &counters, &stop))
+                    .spawn(move || {
+                        worker_loop(&shards, home, &cache, &counters, &stop, peers.as_deref())
+                    })
                     .expect("spawn worker"),
             );
         }
         Scheduler {
             shards,
+            route: ShardRoute {
+                shards: nshards as u32,
+            },
             cache,
             counters,
             stop,
             handles: Mutex::new(handles),
-            queue_cap: cfg.queue_cap.max(1),
+            queue_cap: cfg.queue_cap,
             workers,
         }
     }
@@ -278,7 +380,7 @@ impl Scheduler {
         if let Some((entry, tier)) = self.cache.get(&key, req) {
             return Ok(Enqueued::Ready(self.tier_outcome(entry, tier)));
         }
-        let shard = &self.shards[(key.0 % self.shards.len() as u64) as usize];
+        let shard = &self.shards[self.route.route(&key).index()];
         let mut st = shard.state.lock().unwrap();
         // Re-check stop under the shard lock: shutdown() drains the
         // shards after joining the workers, and its drain serializes
@@ -355,7 +457,16 @@ impl Scheduler {
                 // leaving this recv blocked forever.
                 drop(tx);
                 rx.recv()
-                    .map(|(_, entry)| Outcome { entry, source })
+                    .map(|(_, entry, delivered)| {
+                        // A dedup submission stays "dedup" however the
+                        // execution resolved; otherwise the worker's
+                        // verdict (executed vs peer) stands.
+                        let source = match source {
+                            Source::Deduped => Source::Deduped,
+                            _ => delivered,
+                        };
+                        Outcome { entry, source }
+                    })
                     .map_err(|_| SubmitError::Shutdown)
             }
         }
@@ -415,9 +526,12 @@ impl Scheduler {
         // them, disconnecting `rx` instead of deadlocking the drain.
         drop(tx);
         for _ in 0..pending {
-            let (tag, entry) = rx.recv().map_err(|_| SubmitError::Shutdown)?;
+            let (tag, entry, delivered) = rx.recv().map_err(|_| SubmitError::Shutdown)?;
             let i = tag as usize;
-            let source = pending_sources[i].take().unwrap_or(Source::Executed);
+            let source = match pending_sources[i].take() {
+                Some(Source::Deduped) => Source::Deduped,
+                _ => delivered,
+            };
             let o = Outcome { entry, source };
             on_done(i, &o);
             slots[i] = Some(o);
@@ -442,6 +556,54 @@ impl Scheduler {
             .collect())
     }
 
+    /// Serve a `peer-get`: the journal-format record for `req` if this
+    /// node has its result in either tier. A hot-only entry is encoded
+    /// on the fly (same [`encode_record`] format the store journals),
+    /// so peers can dedup against results this node never persisted.
+    pub fn peer_payload(&self, req: &RunRequest) -> Option<String> {
+        let key = job_key(req);
+        if let Some(entry) = self.cache.hot().peek(&key) {
+            let canon = canonical_job_string(req);
+            return Some(encode_record(&entry.result, &canon));
+        }
+        self.cache.cold().and_then(|s| s.get(&key))
+    }
+
+    /// Accept a replication push: verify the payload's embedded
+    /// canonical string (simulator version prefix, and that it hashes
+    /// to the claimed key — a replica for the wrong key can never be
+    /// journaled) and append it to the cold tier. `Ok(false)` means
+    /// "valid but not stored" (no store configured, or already
+    /// present); the hot tier is deliberately untouched — replicas are
+    /// failover insurance, not working-set admissions.
+    pub fn accept_replica(&self, key: JobKey, payload: &str) -> Result<bool, String> {
+        let store = match self.cache.cold() {
+            Some(s) => s,
+            None => return Ok(false),
+        };
+        let rec = Json::parse(payload).map_err(|e| format!("replica payload: {e}"))?;
+        let canon = rec
+            .get("canon")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "replica payload has no canon string".to_string())?;
+        let prefix = format!("sim-v{}|", crate::SIM_VERSION);
+        if !canon.starts_with(&prefix) {
+            return Err(format!(
+                "replica is from a different simulator version (need {prefix}...)"
+            ));
+        }
+        if key_of_canon(canon) != key {
+            return Err("replica canon does not hash to the claimed key".into());
+        }
+        if store.contains(&key) {
+            return Ok(false);
+        }
+        store
+            .put(key, payload)
+            .map_err(|e| format!("journal replica: {e}"))?;
+        Ok(true)
+    }
+
     pub fn stats(&self) -> SchedulerStats {
         let queued: usize = self
             .shards
@@ -454,6 +616,7 @@ impl Scheduler {
             deduped: self.counters.deduped.load(Ordering::Relaxed),
             cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
             store_hits: self.counters.store_hits.load(Ordering::Relaxed),
+            peer_hits: self.counters.peer_hits.load(Ordering::Relaxed),
             rejected: self.counters.rejected.load(Ordering::Relaxed),
             queued,
             workers: self.workers,
@@ -497,6 +660,7 @@ fn worker_loop(
     cache: &TieredCache,
     counters: &Counters,
     stop: &AtomicBool,
+    peers: Option<&dyn PeerLookup>,
 ) {
     let n = shards.len();
     loop {
@@ -518,19 +682,39 @@ fn worker_loop(
         }
         match found {
             Some((idx, key, req)) => {
-                let entry = Arc::new(CachedEntry::new(run_one(&req)));
-                // Cache first (write-through to the journal), then
-                // retire the job entry: submitters re-check the cache
-                // under the shard lock, so there is no window where a
-                // job is neither in-flight nor cached.
-                cache.insert(key, &req, entry.clone());
+                // Cluster-mode last stop before simulating: a peer may
+                // already hold this key's result.
+                let (entry, source) = match peers.and_then(|p| p.fetch(&req)) {
+                    Some(result) => {
+                        let entry = Arc::new(CachedEntry::new(result));
+                        // Hot tier only: the durable copies live with
+                        // the peer that computed the result (and its
+                        // ring replica), not with every consumer.
+                        cache.hot().insert(key, entry.clone());
+                        (entry, Source::PeerHit)
+                    }
+                    None => {
+                        let entry = Arc::new(CachedEntry::new(run_one(&req)));
+                        // Cache first (write-through to the journal) —
+                        // see the ordering note below.
+                        cache.insert(key, &req, entry.clone());
+                        (entry, Source::Executed)
+                    }
+                };
+                // Cache above, *then* retire the job entry: submitters
+                // re-check the cache under the shard lock, so there is
+                // no window where a job is neither in-flight nor
+                // cached.
                 let waiters = {
                     let mut st = shards[idx].state.lock().unwrap();
                     st.jobs.remove(&key).map(|j| j.waiters).unwrap_or_default()
                 };
-                counters.executed.fetch_add(1, Ordering::Relaxed);
+                match source {
+                    Source::PeerHit => counters.peer_hits.fetch_add(1, Ordering::Relaxed),
+                    _ => counters.executed.fetch_add(1, Ordering::Relaxed),
+                };
                 for w in waiters {
-                    let _ = w.tx.send((w.tag, entry.clone()));
+                    let _ = w.tx.send((w.tag, entry.clone(), source));
                 }
             }
             None => {
@@ -718,6 +902,91 @@ mod tests {
         for _ in 0..pending {
             let _ = rx.recv();
         }
+    }
+
+    #[test]
+    fn config_validate_rejects_zero_sizes() {
+        assert!(SchedulerConfig::default().validate().is_ok());
+        let cases = [
+            (0usize, 1usize, 1usize, "workers"),
+            (1, 0, 1, "shards"),
+            (1, 1, 0, "queue-cap"),
+        ];
+        for (workers, shards, queue_cap, what) in cases {
+            let cfg = SchedulerConfig {
+                workers,
+                shards,
+                queue_cap,
+                cache_bytes: 1 << 20,
+                store: None,
+            };
+            let err = cfg.validate().unwrap_err();
+            assert!(err.contains(what), "expected {what} in: {err}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shards must be >= 1")]
+    fn zero_shards_panics_at_construction() {
+        let _ = Scheduler::new(SchedulerConfig {
+            workers: 1,
+            shards: 0,
+            queue_cap: 1,
+            cache_bytes: 1 << 20,
+            store: None,
+        });
+    }
+
+    #[test]
+    fn shard_route_matches_legacy_modulo() {
+        let route = ShardRoute { shards: 4 };
+        assert_eq!(route.node_count(), 4);
+        for i in 0..64u64 {
+            let key = JobKey(i * 0x9e37_79b9, i);
+            assert_eq!(route.route(&key).index(), (key.0 % 4) as usize);
+            assert_eq!(
+                route.successor(&key),
+                Some(NodeId((route.route(&key).0 + 1) % 4))
+            );
+        }
+        assert_eq!(ShardRoute { shards: 1 }.successor(&JobKey(5, 5)), None);
+    }
+
+    /// A peer that "already has" every result: fetch simulates on the
+    /// spot, standing in for a warm remote store.
+    struct EchoPeer;
+
+    impl PeerLookup for EchoPeer {
+        fn fetch(&self, req: &RunRequest) -> Option<RunResult> {
+            Some(run_one(req))
+        }
+    }
+
+    #[test]
+    fn peer_hit_skips_execution_and_warms_the_hot_tier() {
+        let s = Scheduler::with_peers(
+            SchedulerConfig {
+                workers: 2,
+                shards: 2,
+                queue_cap: 64,
+                cache_bytes: 16 << 20,
+                store: None,
+            },
+            Some(Arc::new(EchoPeer)),
+        );
+        let req = small_req(ArchKind::Dense, 41);
+        let a = s.execute(&req).unwrap();
+        assert_eq!(a.source, Source::PeerHit);
+        let st = s.stats();
+        assert_eq!(st.executed, 0, "peer hit must not simulate: {st:?}");
+        assert_eq!(st.peer_hits, 1, "{st:?}");
+        // The remote result was admitted into the hot tier.
+        assert_eq!(s.execute(&req).unwrap().source, Source::CacheHit);
+        // And it is byte-identical to a local execution.
+        assert_eq!(
+            a.entry.network_json,
+            run_one(&req).network.to_json().to_string()
+        );
     }
 
     #[test]

@@ -20,7 +20,9 @@ use std::time::Instant;
 
 use crate::service::cache::job_key;
 use crate::service::protocol::{self, JobSpec, Request};
-use crate::service::scheduler::{Outcome, Scheduler, SchedulerConfig, Source, SubmitError};
+use crate::service::scheduler::{
+    Outcome, PeerLookup, Scheduler, SchedulerConfig, Source, SubmitError,
+};
 use crate::util::Json;
 
 /// A running (not yet accepting) job server.
@@ -36,12 +38,23 @@ impl Server {
     /// Bind `addr` (use port 0 for an ephemeral port) and build the
     /// shared scheduler. Call [`run`](Self::run) to start accepting.
     pub fn bind(addr: &str, cfg: SchedulerConfig) -> std::io::Result<Server> {
+        Server::bind_with_peers(addr, cfg, None)
+    }
+
+    /// Like [`bind`](Self::bind), with a cross-node dedup hook: workers
+    /// consult `peers` before simulating (cluster mode — `serve
+    /// --peers`/`--cluster`).
+    pub fn bind_with_peers(
+        addr: &str,
+        cfg: SchedulerConfig,
+        peers: Option<Arc<dyn PeerLookup>>,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         Ok(Server {
             listener,
             local,
-            scheduler: Arc::new(Scheduler::new(cfg)),
+            scheduler: Arc::new(Scheduler::with_peers(cfg, peers)),
             stop: Arc::new(AtomicBool::new(false)),
             started: Instant::now(),
         })
@@ -84,7 +97,16 @@ impl Server {
         addr: &str,
         cfg: SchedulerConfig,
     ) -> std::io::Result<(SocketAddr, std::thread::JoinHandle<std::io::Result<()>>)> {
-        let server = Server::bind(addr, cfg)?;
+        Server::spawn_with_peers(addr, cfg, None)
+    }
+
+    /// [`spawn`](Self::spawn) with a cross-node dedup hook.
+    pub fn spawn_with_peers(
+        addr: &str,
+        cfg: SchedulerConfig,
+        peers: Option<Arc<dyn PeerLookup>>,
+    ) -> std::io::Result<(SocketAddr, std::thread::JoinHandle<std::io::Result<()>>)> {
+        let server = Server::bind_with_peers(addr, cfg, peers)?;
         let local = server.local_addr();
         let handle = std::thread::spawn(move || server.run());
         Ok((local, handle))
@@ -170,12 +192,53 @@ fn respond_parsed(
                 .set("scheduler", scheduler.stats().to_json());
             (j, false)
         }
+        Ok(Request::PeerGet { spec }) => (peer_get_response(scheduler, &spec), false),
+        Ok(Request::Replicate { key, payload }) => {
+            let resp = match scheduler.accept_replica(key, &payload) {
+                Ok(stored) => {
+                    let mut j = Json::obj();
+                    j.set("ok", true).set("op", "replicate").set("stored", stored);
+                    j
+                }
+                Err(e) => protocol::response_error(&e),
+            };
+            (resp, false)
+        }
+        Ok(Request::Health) => {
+            let stats = scheduler.stats();
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("op", "health")
+                .set("queued", stats.queued)
+                .set("workers", stats.workers);
+            (j, false)
+        }
+        Ok(Request::Nodes) => (
+            protocol::response_error("nodes: this is a worker node, not a cluster router"),
+            false,
+        ),
         Ok(Request::Shutdown) => {
             let mut j = Json::obj();
             j.set("ok", true).set("op", "shutdown");
             (j, true)
         }
     }
+}
+
+/// `peer-get`: answer with the journal-format record when this node
+/// holds the job's result, without triggering any simulation.
+fn peer_get_response(scheduler: &Scheduler, spec: &JobSpec) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", true).set("op", "peer-get");
+    match scheduler.peer_payload(&spec.to_request()) {
+        Some(payload) => {
+            j.set("found", true).set("payload", payload);
+        }
+        None => {
+            j.set("found", false);
+        }
+    }
+    j
 }
 
 /// Serialize one frame and flush it (streaming clients must see each
@@ -294,6 +357,12 @@ fn stream_batch<W: Write>(
                 .set("store", count(Source::StoreHit))
                 .set("dedup", count(Source::Deduped))
                 .set("wall_ms", t0.elapsed().as_secs_f64() * 1e3);
+            // Only in cluster mode — the single-node done frame stays
+            // byte-identical to the pre-cluster protocol.
+            let peer = count(Source::PeerHit);
+            if peer > 0 {
+                done.set("peer", peer);
+            }
             done
         }
         Err(e) => submit_error_frame(&e),
@@ -327,6 +396,22 @@ impl Client {
         let stream =
             TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
         stream.set_nodelay(true).ok();
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .map_err(|e| format!("clone stream: {e}"))?,
+        );
+        Ok(Client {
+            reader,
+            writer: stream,
+        })
+    }
+
+    /// Connect with a bound on the connect itself and on subsequent
+    /// reads/writes — the cluster CLI path (`stats`, membership fetch),
+    /// where a dead address must fail fast instead of hanging.
+    pub fn connect_timeout(addr: &str, timeout: std::time::Duration) -> Result<Client, String> {
+        let stream = crate::cluster::peers::connect_timeout(addr, timeout)?;
         let reader = BufReader::new(
             stream
                 .try_clone()

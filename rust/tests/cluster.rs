@@ -1,0 +1,357 @@
+//! Integration: the consistent-hash simulation cluster end-to-end.
+//!
+//! Boots real worker nodes (`Server::spawn`, each with its own tiered
+//! store) behind a real `RouterServer` on ephemeral ports and checks
+//! the cluster's three guarantees over actual TCP sockets:
+//!
+//! * **chaos / failover** — killing one worker mid-batch loses nothing:
+//!   the batch completes byte-identical to direct `run_one`, and a
+//!   replay of the dead node's keys is served from the successor's
+//!   cold-tier replica (router stats count `failovers`/`replica_hits`);
+//! * **cross-node dedup** — a warm batch replayed through a *different*
+//!   node resolves entirely over the `peer-get` verb: the second node
+//!   executes nothing and `report::job_accounting` reads `0 simulated`;
+//! * **wire backpressure** — a cap-1 queue rejects a concurrent burst
+//!   with `busy` + `retry_after_ms` frames, then drains and re-accepts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use barista::cluster::{HashRing, NodeId, PeerSet, Route, RouterConfig, RouterServer};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{report, run_one, RunRequest};
+use barista::service::{
+    job_key, Client, JobSpec, PeerLookup, SchedulerConfig, Server, Store,
+};
+use barista::util::{scratch_dir, Json};
+use barista::workload::Benchmark;
+
+type NodeHandle = std::thread::JoinHandle<std::io::Result<()>>;
+
+fn small_spec(seed: u64) -> JobSpec {
+    let mut c = SimConfig::paper(ArchKind::Dense);
+    c.window_cap = 16;
+    c.batch = 1;
+    c.seed = seed;
+    JobSpec {
+        benchmark: Benchmark::AlexNet,
+        config: c,
+    }
+}
+
+/// Reference bytes: what a fresh single-process simulation returns.
+fn direct(spec: &JobSpec) -> String {
+    run_one(&RunRequest {
+        benchmark: spec.benchmark,
+        config: spec.config.clone(),
+    })
+    .network
+    .to_json()
+    .to_string()
+}
+
+/// One store-backed worker node on an ephemeral port.
+fn spawn_store_node(tag: &str) -> (String, std::path::PathBuf, NodeHandle) {
+    let dir = scratch_dir(tag);
+    let store = Arc::new(Store::open_with(&dir, false).expect("open store"));
+    let cfg = SchedulerConfig {
+        workers: 2,
+        shards: 2,
+        queue_cap: 64,
+        cache_bytes: 16 << 20,
+        store: Some(store),
+    };
+    let (addr, handle) = Server::spawn("127.0.0.1:0", cfg).expect("spawn node");
+    (addr.to_string(), dir, handle)
+}
+
+fn shutdown(addr: &str) {
+    let mut c = Client::connect(addr).expect("connect for shutdown");
+    c.shutdown().expect("shutdown");
+}
+
+fn field(j: &Json, k: &str) -> u64 {
+    j.get(k).and_then(Json::as_u64).unwrap_or_else(|| panic!("field {k} in {j:?}"))
+}
+
+/// Acceptance: start a 3-node cluster, run a batch, kill one worker
+/// mid-batch — the batch completes with results byte-identical to a
+/// single-node run, and the stats report failover replica hits.
+#[test]
+fn kill_one_node_mid_batch_completes_and_replays_from_replicas() {
+    let nodes: Vec<_> = (0..3)
+        .map(|i| spawn_store_node(&format!("cluster-chaos-{i}")))
+        .collect();
+    let addrs: Vec<String> = nodes.iter().map(|(a, _, _)| a.clone()).collect();
+    let (raddr, rhandle) = RouterServer::spawn(
+        "127.0.0.1:0",
+        RouterConfig {
+            nodes: addrs.clone(),
+            // No steals: routing stays owner-first, so phase 1 places
+            // every result on its owner and replicates to the
+            // successor — the pair phase 3 depends on.
+            steal_threshold: 1 << 20,
+            health_interval: Duration::from_millis(50),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("spawn router");
+    let raddr = raddr.to_string();
+    let mut client = Client::connect(&raddr).expect("connect router");
+
+    // Phase 1 — cold batch through the router: byte-identical to
+    // run_one, every fresh result replicated to a successor node.
+    let specs: Vec<JobSpec> = (0..12).map(|i| small_spec(100 + i)).collect();
+    let resp = client.batch(&specs).expect("cold batch");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    let results = resp.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), specs.len());
+    for (i, (spec, r)) in specs.iter().zip(results).enumerate() {
+        assert_eq!(r.get("result").unwrap().to_string(), direct(spec), "cold job {i}");
+    }
+    let stats = client.stats().expect("router stats");
+    let router = stats.get("router").expect("router section");
+    assert_eq!(field(router, "replicated"), 12, "{router:?}");
+    assert_eq!(field(router, "steals"), 0, "{router:?}");
+
+    // Mirror the router's ring to pick the chaos victim: the owner of
+    // specs[0], so the replay below must cross to its successor.
+    let members = [NodeId(0), NodeId(1), NodeId(2)];
+    let ring = HashRing::new(&members, HashRing::DEFAULT_VNODES);
+    let key0 = job_key(&specs[0].to_request());
+    let victim = ring.route(&key0).index();
+    let victim_addr = addrs[victim].clone();
+
+    // Phase 2 — fresh jobs in flight while the victim dies. The batch
+    // must complete anyway, still byte-identical.
+    let fresh: Vec<JobSpec> = (0..12).map(|i| small_spec(200 + i)).collect();
+    let batch_thread = {
+        let raddr = raddr.clone();
+        let fresh = fresh.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&raddr).expect("connect for chaos batch");
+            c.batch(&fresh).expect("chaos batch")
+        })
+    };
+    std::thread::sleep(Duration::from_millis(40));
+    shutdown(&victim_addr); // kill one worker mid-batch
+    let resp = batch_thread.join().expect("batch thread");
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "batch must survive losing a node: {resp:?}"
+    );
+    let results = resp.get("results").and_then(Json::as_arr).unwrap();
+    for (i, (spec, r)) in fresh.iter().zip(results).enumerate() {
+        assert_eq!(r.get("result").unwrap().to_string(), direct(spec), "chaos job {i}");
+    }
+
+    // Phase 3 — after the health monitor flags the victim dead, replay
+    // phase 1: byte-identical again, with the victim's keys answered
+    // from successor replicas (source "store" on a non-victim node).
+    std::thread::sleep(Duration::from_millis(300));
+    let resp = client.batch(&specs).expect("replay batch");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    let results = resp.get("results").and_then(Json::as_arr).unwrap();
+    for (i, (spec, r)) in specs.iter().zip(results).enumerate() {
+        assert_eq!(r.get("result").unwrap().to_string(), direct(spec), "replay job {i}");
+    }
+    let r0 = &results[0];
+    assert_eq!(
+        r0.get("source").and_then(Json::as_str),
+        Some("store"),
+        "the dead owner's key must come off a cold-tier replica: {r0:?}"
+    );
+    assert_ne!(
+        r0.get("node").and_then(Json::as_str),
+        Some(victim_addr.as_str()),
+        "a dead node cannot have served the job"
+    );
+
+    let stats = client.stats().expect("router stats after chaos");
+    let router = stats.get("router").expect("router section");
+    assert!(field(router, "replica_hits") >= 1, "{router:?}");
+    assert!(field(router, "failovers") >= 1, "{router:?}");
+    assert!(field(router, "dead_marks") >= 1, "{router:?}");
+    let rows = router.get("nodes").and_then(Json::as_arr).unwrap();
+    let victim_row = rows
+        .iter()
+        .find(|n| n.get("addr").and_then(Json::as_str) == Some(victim_addr.as_str()))
+        .expect("victim row in stats");
+    assert_eq!(victim_row.get("alive").and_then(Json::as_bool), Some(false), "{victim_row:?}");
+
+    // Teardown: surviving nodes, then the router.
+    for (i, (addr, _, _)) in nodes.iter().enumerate() {
+        if i != victim {
+            shutdown(addr);
+        }
+    }
+    shutdown(&raddr);
+    rhandle.join().expect("router thread").expect("router io");
+    for (_, dir, handle) in nodes {
+        handle.join().expect("node thread").expect("node io");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Acceptance: cross-node dedup — a warm batch replayed through a
+/// different node reports peer hits and `0 simulated` in
+/// `report::job_accounting`.
+#[test]
+fn warm_batch_replayed_through_a_peer_node_simulates_nothing() {
+    // Node A: store-backed, warmed directly. Node B: fresh and
+    // storeless, configured with A as its dedup peer.
+    let (addr_a, dir_a, handle_a) = spawn_store_node("cluster-dedup-a");
+    let peers: Arc<dyn PeerLookup> = Arc::new(PeerSet::new(vec![addr_a.clone()]));
+    let (addr_b, handle_b) = Server::spawn_with_peers(
+        "127.0.0.1:0",
+        SchedulerConfig {
+            workers: 2,
+            shards: 1,
+            queue_cap: 64,
+            cache_bytes: 16 << 20,
+            store: None,
+        },
+        Some(peers),
+    )
+    .expect("spawn node B");
+    let addr_b = addr_b.to_string();
+
+    let specs: Vec<JobSpec> = (0..6).map(|i| small_spec(300 + i)).collect();
+    let mut a = Client::connect(&addr_a).expect("connect A");
+    let warm = a.batch(&specs).expect("warm batch on A");
+    assert_eq!(warm.get("ok").and_then(Json::as_bool), Some(true), "{warm:?}");
+
+    // Replay through B: every job resolves over the peer-get verb.
+    let mut b = Client::connect(&addr_b).expect("connect B");
+    let start = std::time::Instant::now();
+    let replay = b.batch(&specs).expect("replay via B");
+    let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+    let warm_results = warm.get("results").and_then(Json::as_arr).unwrap();
+    let results = replay.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), specs.len());
+    for (i, (w, r)) in warm_results.iter().zip(results).enumerate() {
+        assert_eq!(
+            r.get("source").and_then(Json::as_str),
+            Some("peer"),
+            "job {i} must be a peer hit: {r:?}"
+        );
+        assert_eq!(
+            r.get("result").unwrap().to_string(),
+            w.get("result").unwrap().to_string(),
+            "job {i}: peer-fetched bytes differ from the original"
+        );
+    }
+
+    // B's ledger and the shared accounting line prove zero simulation.
+    let stats = b.stats().expect("stats B");
+    let sched = stats.get("scheduler").expect("scheduler stats");
+    assert_eq!(field(sched, "executed"), 0, "{sched:?}");
+    assert_eq!(field(sched, "peer_hits"), 6, "{sched:?}");
+    let line = report::job_accounting(
+        "cluster-replay",
+        specs.len(),
+        field(sched, "executed"),
+        field(sched, "cache_hits"),
+        field(sched, "store_hits"),
+        field(sched, "peer_hits"),
+        field(sched, "deduped"),
+        wall_ms,
+    );
+    assert!(line.contains("0 simulated"), "{line}");
+    assert!(line.contains("6 peer hits"), "{line}");
+
+    // Peer hits are admitted into B's hot tier: a second replay is
+    // answered locally without touching A.
+    let again = b.batch(&specs).expect("second replay via B");
+    for (i, r) in again.get("results").and_then(Json::as_arr).unwrap().iter().enumerate() {
+        assert_eq!(
+            r.get("source").and_then(Json::as_str),
+            Some("cache"),
+            "job {i} must now be local: {r:?}"
+        );
+    }
+
+    shutdown(&addr_b);
+    shutdown(&addr_a);
+    handle_b.join().expect("node B thread").expect("node B io");
+    handle_a.join().expect("node A thread").expect("node A io");
+    let _ = std::fs::remove_dir_all(&dir_a);
+}
+
+/// Satellite: backpressure on the wire. A deliberately tiny server
+/// (one worker, one shard, queue cap 1) must reject a concurrent
+/// burst with `busy` + a positive `retry_after_ms`, then — once the
+/// queue drains — accept the retried jobs and fresh submissions.
+#[test]
+fn wire_backpressure_rejects_then_drains_and_reaccepts() {
+    let (addr, handle) = Server::spawn(
+        "127.0.0.1:0",
+        SchedulerConfig {
+            workers: 1,
+            shards: 1,
+            queue_cap: 1,
+            cache_bytes: 8 << 20,
+            store: None,
+        },
+    )
+    .expect("spawn");
+    let addr = addr.to_string();
+
+    let n = 16usize;
+    let barrier = Arc::new(std::sync::Barrier::new(n));
+    let mut joins = Vec::new();
+    for i in 0..n {
+        let addr = addr.clone();
+        let barrier = barrier.clone();
+        joins.push(std::thread::spawn(move || {
+            let spec = small_spec(400 + i as u64);
+            let want = direct(&spec);
+            let mut c = Client::connect(&addr).expect("connect");
+            barrier.wait();
+            let mut rejections = 0u64;
+            loop {
+                let resp = c.submit(&spec).expect("submit");
+                if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                    // Drained far enough for this job — and the result
+                    // is still exact.
+                    assert_eq!(resp.get("result").unwrap().to_string(), want);
+                    return rejections;
+                }
+                assert_eq!(
+                    resp.get("error").and_then(Json::as_str),
+                    Some("busy"),
+                    "only backpressure may reject a valid job: {resp:?}"
+                );
+                let hint = resp
+                    .get("retry_after_ms")
+                    .and_then(Json::as_u64)
+                    .expect("busy carries a retry hint");
+                assert!(hint > 0, "{resp:?}");
+                rejections += 1;
+                std::thread::sleep(Duration::from_millis(hint.min(50)));
+            }
+        }));
+    }
+    let rejections: u64 = joins
+        .into_iter()
+        .map(|j| j.join().expect("client thread"))
+        .sum();
+    assert!(
+        rejections >= 1,
+        "16 concurrent distinct jobs against a cap-1 queue must hit busy"
+    );
+
+    // Fully drained: a fresh job is accepted without retrying, and the
+    // stats ledger accounts for every rejection the clients saw.
+    let mut c = Client::connect(&addr).expect("connect after burst");
+    let resp = c.submit(&small_spec(999)).expect("post-drain submit");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    let stats = c.stats().expect("stats");
+    let sched = stats.get("scheduler").expect("scheduler stats");
+    assert_eq!(field(sched, "rejected"), rejections, "{sched:?}");
+    assert_eq!(field(sched, "executed"), n as u64 + 1, "{sched:?}");
+
+    shutdown(&addr);
+    handle.join().expect("server thread").expect("server io");
+}

@@ -19,7 +19,10 @@
 //!    mutually reversed;
 //! 5. every sparsity model tracks its target density;
 //! 6. the tiled-SoA table build (serial and pool-parallel) is
-//!    bit-identical to the scalar reference build.
+//!    bit-identical to the scalar reference build;
+//! 7. the cluster's consistent-hash ring splits the key space within
+//!    ±20% of uniform for 2..=16 nodes, and removing a node remaps
+//!    only that node's keys — each to its old successor.
 
 use barista::arch::PassTable;
 use barista::config::{ArchKind, SimConfig};
@@ -275,6 +278,57 @@ fn prop_scenarios_track_target_density() {
                 return Err(format!(
                     "{model} {label}: density {got:.3} vs target {density:.3}"
                 ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Invariant 7: the cluster router's consistent-hash ring (a) splits
+/// the 2^64 key space near-uniformly — every member's analytic arc
+/// share stays within ±20% of 1/n across 2..=16 nodes — and (b) is
+/// minimally disruptive: removing one node leaves every other node's
+/// keys where they were, and each orphaned key lands exactly on its
+/// old successor (the replica holder, which is what makes cold-tier
+/// replication a usable failover path).
+#[test]
+fn prop_hash_ring_balance_and_minimal_remap() {
+    use barista::cluster::{HashRing, NodeId, Route};
+    use barista::service::JobKey;
+    run_prop("ring balance + minimal remap", prop_seed(), cases(12), |rng| {
+        let n = 2 + rng.gen_range(15) as usize; // 2..=16 nodes
+        let members: Vec<NodeId> = (0..n as u32).map(NodeId).collect();
+        let ring = HashRing::new(&members, HashRing::DEFAULT_VNODES);
+        // (a) balance, measured analytically from arc lengths — no
+        // sampling noise in the acceptance band.
+        let ideal = 1.0 / n as f64;
+        for (node, share) in ring.shares() {
+            if (share - ideal).abs() > 0.2 * ideal {
+                return Err(format!(
+                    "n={n} {node:?}: share {share:.4} vs ideal {ideal:.4} (±20%)"
+                ));
+            }
+        }
+        // (b) minimal remap over random 128-bit job keys.
+        let victim = members[rng.gen_range(n as u32) as usize];
+        let mut shrunk = ring.clone();
+        shrunk.remove(victim);
+        for _ in 0..256 {
+            let key = JobKey(rng.next_u64(), rng.next_u64());
+            let before = ring.route(&key);
+            let after = shrunk.route(&key);
+            if before != victim && after != before {
+                return Err(format!(
+                    "n={n}: a key owned by surviving {before:?} moved to {after:?}"
+                ));
+            }
+            if before == victim {
+                let successor = ring.preference(&key, 2).get(1).copied();
+                if Some(after) != successor {
+                    return Err(format!(
+                        "n={n}: orphaned key went to {after:?}, not its successor {successor:?}"
+                    ));
+                }
             }
         }
         Ok(())
