@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt clippy prop examples test-store test-cluster ci bench bench-smoke bench-table bench-figs artifacts serve clean
+.PHONY: build test fmt clippy prop examples test-store test-cluster test-chaos ci bench bench-smoke bench-table bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -46,6 +46,16 @@ test-store:
 test-cluster:
 	cd rust && cargo test --release --test cluster
 
+# Seeded chaos suite (tests/chaos.rs): scripted wire-fault plans —
+# drops, delays, truncated frames, duplicates, black holes — against a
+# live 3-node cluster, with exact fault/error counter accounting. The
+# (decimal) seed picks the fault schedule; any failure reproduces with
+# the seed CI printed:
+#   make test-chaos FAULT_SEED=12345
+test-chaos:
+	cd rust && $(if $(FAULT_SEED),FAULT_SEED=$(FAULT_SEED)) \
+		cargo test --release --features chaos --test chaos
+
 # Local mirror of the CI push jobs — `make ci` green implies the
 # workflow's `lint` + `test` jobs are green (same steps, same order:
 # lint first, then the test job's build/test/invariants/store/example/
@@ -59,6 +69,7 @@ ci:
 	cd rust && PROP_SEED=195499386 PROP_CASES=2 cargo test --release --test invariants
 	cd rust && cargo test --release --test store_persistence
 	cd rust && cargo test --release --test cluster
+	$(MAKE) test-chaos
 	cd rust && cargo run --release --example scenarios
 	$(MAKE) bench-smoke
 
@@ -67,14 +78,14 @@ ci:
 # numbers for DESIGN.md §Perf) — the same bench set as bench-smoke, at
 # full sizes.
 bench:
-	cd rust && cargo bench --bench perf_hotpath --bench service_throughput --bench table_build
+	cd rust && cargo bench --features chaos --bench perf_hotpath --bench service_throughput --bench table_build
 
 # CI-sized variant of the perf benches (same JSON artifacts, tiny
 # sizes) with the regression guard on: the first run seals
 # BENCH_*.smoke.baseline.json at the repo root, later runs fail on any
 # timed field regressing past 2x (BENCH_GUARD_RATIO overrides).
 bench-smoke:
-	cd rust && BENCH_SMOKE=1 BENCH_GUARD=1 cargo bench --bench perf_hotpath --bench service_throughput --bench table_build
+	cd rust && BENCH_SMOKE=1 BENCH_GUARD=1 cargo bench --features chaos --bench perf_hotpath --bench service_throughput --bench table_build
 
 # Table-build microbench only: scalar AoS kernel vs tiled SoA kernel vs
 # pool-parallel tiles, across layer geometries -> BENCH_table.json.

@@ -9,8 +9,10 @@
 //! buys across a deploy. A `cluster_3node` row then pushes the corpus
 //! through three store-backed worker nodes behind the consistent-hash
 //! router (real TCP end to end): cold fan-out vs hot-tier replay, plus
-//! the router's steal rate under the burst. Prints one JSON summary
-//! line (`service_throughput_summary`) for the perf trajectory.
+//! the router's steal rate under the burst. In chaos builds a final
+//! `degraded_3node` row re-runs the fan-out under a seeded ~10% wire
+//! fault plan and times one forced owner failover. Prints one JSON
+//! summary line (`service_throughput_summary`) for the perf trajectory.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -228,6 +230,135 @@ fn main() {
         .set("steal_rate", steal_rate)
         .set("failovers", failovers);
     rows.push(row);
+
+    // Degraded-mode dispatch (chaos builds only): the same 3-node shape
+    // with a seeded fault plan failing ~10% of submit attempts. Measures
+    // what the retry/backoff/failover machinery costs when the wire is
+    // unreliable, plus the latency of one forced owner failover. The
+    // fixed plan seed makes the fault schedule identical run to run, so
+    // the row tracks code changes, not dice rolls.
+    #[cfg(feature = "chaos")]
+    {
+        use std::time::Duration;
+
+        use barista::cluster::fault::{FaultKind, FaultPlan};
+        use barista::cluster::{Route, Router, TransportPolicy};
+        use barista::service::job_key;
+
+        let mut addrs = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let (addr, handle) = Server::spawn(
+                "127.0.0.1:0",
+                SchedulerConfig {
+                    workers: 2,
+                    shards: 2,
+                    queue_cap: 256,
+                    cache_bytes: 32 << 20,
+                    store: None,
+                },
+            )
+            .expect("spawn degraded node");
+            addrs.push(addr.to_string());
+            handles.push(handle);
+        }
+        let router = Router::new(RouterConfig {
+            nodes: addrs.clone(),
+            health_interval: Duration::from_secs(3600),
+            policy: TransportPolicy {
+                connect_timeout: Duration::from_millis(500),
+                deadline: Duration::from_millis(500),
+                backoff: Duration::from_millis(5),
+                breaker_threshold: 8,
+                breaker_cooldown: Duration::from_millis(250),
+                ..TransportPolicy::default()
+            },
+            ..RouterConfig::default()
+        })
+        .expect("degraded router");
+        let plan = Arc::new(FaultPlan::new(0xC0FFEE));
+        for (i, addr) in addrs.iter().enumerate() {
+            plan.alias(addr, &format!("node{i}"));
+        }
+        plan.add_rate(FaultKind::Drop, Some("submit"), None, 0.08);
+        plan.add_rate(FaultKind::BlackHole, Some("submit"), None, 0.02);
+        router.install_faults(plan.clone());
+
+        let t0 = Instant::now();
+        let mut ok_count = 0usize;
+        let mut degraded = 0usize;
+        for spec in &specs {
+            let resp = router.dispatch(spec);
+            if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                ok_count += 1;
+            } else {
+                assert_eq!(
+                    resp.get("degraded").and_then(Json::as_bool),
+                    Some(true),
+                    "a failed dispatch must be a structured degraded error: {resp:?}"
+                );
+                degraded += 1;
+            }
+        }
+        let faulty_s = t0.elapsed().as_secs_f64();
+        assert_eq!(ok_count + degraded, jobs, "every dispatch must terminate");
+
+        // One forced owner outage: black-hole every submit attempt to
+        // node0, dispatch a fresh node0-owned job, time the failover.
+        plan.force(FaultKind::BlackHole, "submit", "node0", 0, u64::MAX);
+        let owned = (10_000u64..)
+            .map(job)
+            .find(|r| router.ring().route(&job_key(r)).index() == 0)
+            .expect("a node0-owned job");
+        let spec = JobSpec {
+            benchmark: owned.benchmark,
+            config: owned.config.clone(),
+        };
+        let t0 = Instant::now();
+        let resp = router.dispatch(&spec);
+        let failover_s = t0.elapsed().as_secs_f64();
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            assert_ne!(
+                resp.get("node").and_then(Json::as_str),
+                Some(addrs[0].as_str()),
+                "the black-holed owner cannot have served: {resp:?}"
+            );
+        } else {
+            assert_eq!(
+                resp.get("degraded").and_then(Json::as_bool),
+                Some(true),
+                "{resp:?}"
+            );
+        }
+
+        for addr in &addrs {
+            let mut c = Client::connect(addr).expect("connect degraded node");
+            c.shutdown().expect("degraded node shutdown");
+        }
+        for h in handles {
+            h.join().expect("degraded node thread").expect("degraded node io");
+        }
+
+        let faulty_jps = jobs as f64 / faulty_s.max(1e-9);
+        println!(
+            "{:<8} {faulty_jps:>12.1} {:>12} {:>9}    ({degraded} degraded, {} faults injected; failover {:.1} ms)",
+            "degraded",
+            "-",
+            "-",
+            plan.injected_total(),
+            failover_s * 1e3
+        );
+        let mut row = Json::obj();
+        row.set("name", "degraded_3node")
+            .set("jobs", jobs)
+            .set("fault_rate", 0.10)
+            .set("degraded", degraded as u64)
+            .set("injected", plan.injected_total())
+            .set("cold_ms", faulty_s * 1e3)
+            .set("jobs_per_s", faulty_jps)
+            .set("failover_ms", failover_s * 1e3);
+        rows.push(row);
+    }
 
     let mut summary = Json::obj();
     summary

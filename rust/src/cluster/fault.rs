@@ -1,0 +1,445 @@
+//! Deterministic fault injection for the cluster transport.
+//!
+//! A [`FaultPlan`] is a seeded, scriptable schedule of wire faults. The
+//! transport consults it immediately before every outbound attempt
+//! (see [`crate::cluster::transport`]); the plan answers "inject this
+//! fault here" or "leave it alone" as a pure function of
+//! `(seed, verb, node label, attempt index, rule index)` — no wall
+//! clock, no global RNG — so a chaos run replays byte-for-byte from
+//! nothing but its seed.
+//!
+//! Two ways to build a plan:
+//!
+//! * **Env** ([`FaultPlan::from_env`]): `FAULT_PLAN` holds a spec like
+//!   `drop@submit:0.1;delay:0.5:20;blackhole#node0:1.0` and
+//!   `FAULT_SEED` the decimal seed. `barista serve` /
+//!   `barista cluster-serve` read these when built with the `chaos`
+//!   feature; release builds without the feature compile the whole
+//!   module away.
+//! * **Code** ([`FaultPlan::new`] + [`FaultPlan::add_rate`] /
+//!   [`FaultPlan::force`]): what `tests/chaos.rs` uses to script exact
+//!   scenarios (e.g. "black-hole node0's health probe, attempts 0..1").
+//!
+//! Node addresses in tests are ephemeral ports, so rules match on
+//! stable **labels** instead: [`FaultPlan::alias`] registers
+//! `addr -> "node0"` and decisions key on the label. An unaliased
+//! address is its own label.
+//!
+//! The plan also counts what it injected, per [`FaultKind`] — the chaos
+//! suite's "exact counter accounting" asserts the transport's error
+//! counters against these numbers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::Pcg32;
+use crate::util::{fnv1a64, Json, FNV_OFFSET_BASIS};
+
+/// What to do to one connection attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Refuse the connection (as if the node were down).
+    Drop,
+    /// Let the attempt through after an added latency.
+    Delay,
+    /// Complete the round trip, then tear the response frame mid-line.
+    Truncate,
+    /// Send the request twice on one connection (tests idempotency).
+    Duplicate,
+    /// Accept, then never answer: the attempt ends in a read timeout.
+    BlackHole,
+}
+
+/// Every kind, in counter-index order.
+pub const FAULT_KINDS: [FaultKind; 5] = [
+    FaultKind::Drop,
+    FaultKind::Delay,
+    FaultKind::Truncate,
+    FaultKind::Duplicate,
+    FaultKind::BlackHole,
+];
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Drop => "drop",
+            FaultKind::Delay => "delay",
+            FaultKind::Truncate => "truncate",
+            FaultKind::Duplicate => "duplicate",
+            FaultKind::BlackHole => "blackhole",
+        }
+    }
+
+    fn parse(s: &str) -> Result<FaultKind, String> {
+        FAULT_KINDS
+            .iter()
+            .copied()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| {
+                format!("unknown fault kind '{s}' (want drop|delay|truncate|duplicate|blackhole)")
+            })
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultKind::Drop => 0,
+            FaultKind::Delay => 1,
+            FaultKind::Truncate => 2,
+            FaultKind::Duplicate => 3,
+            FaultKind::BlackHole => 4,
+        }
+    }
+}
+
+/// One clause of a plan: inject `fault` with probability `rate` on
+/// attempts in `[from_attempt, to_attempt)` that match the (optional)
+/// verb and node-label filters.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub fault: FaultKind,
+    /// Wire verb filter (`submit`, `health`, `peer-get`, ...); `None`
+    /// matches every verb.
+    pub verb: Option<String>,
+    /// Node-label filter (see [`FaultPlan::alias`]); `None` matches
+    /// every node.
+    pub label: Option<String>,
+    /// Injection probability in `[0, 1]`.
+    pub rate: f64,
+    /// Added latency for [`FaultKind::Delay`]; ignored otherwise.
+    pub delay: Duration,
+    /// Half-open attempt window `[from, to)` per `(verb, label)`.
+    pub attempts: (u64, u64),
+}
+
+/// A seeded schedule of wire faults (see the module docs).
+pub struct FaultPlan {
+    seed: u64,
+    rules: Mutex<Vec<Rule>>,
+    aliases: Mutex<HashMap<String, String>>,
+    /// Attempt counter per `(verb, label)` — advances on every consult
+    /// so "the 3rd health probe of node0" is addressable.
+    attempts: Mutex<HashMap<(String, String), u64>>,
+    injected: [AtomicU64; 5],
+}
+
+impl FaultPlan {
+    /// An empty plan: injects nothing until rules are added.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rules: Mutex::new(Vec::new()),
+            aliases: Mutex::new(HashMap::new()),
+            attempts: Mutex::new(HashMap::new()),
+            injected: Default::default(),
+        }
+    }
+
+    /// Parse a plan spec: clauses separated by `;` or `,`, each
+    /// `kind[@verb][#label][:rate[:delay_ms]]`. Omitted rate means
+    /// `1.0`; omitted delay means 20 ms (only `delay` uses it).
+    ///
+    /// `drop@submit:0.1;blackhole#node0;delay:0.5:40`
+    pub fn parse(seed: u64, spec: &str) -> Result<FaultPlan, String> {
+        let plan = FaultPlan::new(seed);
+        for clause in spec.split([';', ',']) {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let mut parts = clause.split(':');
+            let head = parts.next().unwrap_or("");
+            let rate = match parts.next() {
+                None => 1.0,
+                Some(r) => r
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|e| format!("bad rate in '{clause}': {e}"))?,
+            };
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("rate in '{clause}' must be within [0, 1]"));
+            }
+            let delay_ms = match parts.next() {
+                None => 20,
+                Some(d) => d
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|e| format!("bad delay in '{clause}': {e}"))?,
+            };
+            if parts.next().is_some() {
+                return Err(format!("too many ':' fields in '{clause}'"));
+            }
+            // head = kind[@verb][#label]
+            let (head, label) = match head.split_once('#') {
+                Some((h, l)) => (h, Some(l.trim().to_string())),
+                None => (head, None),
+            };
+            let (kind, verb) = match head.split_once('@') {
+                Some((k, v)) => (k, Some(v.trim().to_string())),
+                None => (head, None),
+            };
+            plan.push(Rule {
+                fault: FaultKind::parse(kind.trim())?,
+                verb,
+                label,
+                rate,
+                delay: Duration::from_millis(delay_ms),
+                attempts: (0, u64::MAX),
+            });
+        }
+        Ok(plan)
+    }
+
+    /// Build a plan from `FAULT_PLAN` (spec) + `FAULT_SEED` (decimal
+    /// seed, default 0). No `FAULT_PLAN` means no plan; a set-but-bad
+    /// value is a hard error, never a silent no-op.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        let spec = match std::env::var("FAULT_PLAN") {
+            Err(_) => return Ok(None),
+            Ok(s) => s,
+        };
+        let seed = match std::env::var("FAULT_SEED") {
+            Err(_) => 0,
+            Ok(s) => s
+                .parse::<u64>()
+                .map_err(|e| format!("FAULT_SEED='{s}' must be a decimal integer: {e}"))?,
+        };
+        FaultPlan::parse(seed, &spec).map(Some)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// One-line human summary of the rules, for startup banners.
+    pub fn describe(&self) -> String {
+        let rules = self.rules.lock().unwrap();
+        if rules.is_empty() {
+            return "no rules".into();
+        }
+        rules
+            .iter()
+            .map(|r| {
+                let mut s = r.fault.name().to_string();
+                if let Some(v) = &r.verb {
+                    s.push('@');
+                    s.push_str(v);
+                }
+                if let Some(l) = &r.label {
+                    s.push('#');
+                    s.push_str(l);
+                }
+                s.push_str(&format!(":{}", r.rate));
+                s
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+
+    /// Register a stable label for an (ephemeral) address so rules can
+    /// target `node0` instead of `127.0.0.1:54122`.
+    pub fn alias(&self, addr: &str, label: &str) {
+        self.aliases
+            .lock()
+            .unwrap()
+            .insert(addr.to_string(), label.to_string());
+    }
+
+    /// Append a rule. Rules are consulted in insertion order; the
+    /// first one whose filters match *and* whose rate fires wins.
+    pub fn push(&self, rule: Rule) {
+        self.rules.lock().unwrap().push(rule);
+    }
+
+    /// Append an always-on rate rule (every attempt window).
+    pub fn add_rate(&self, fault: FaultKind, verb: Option<&str>, label: Option<&str>, rate: f64) {
+        self.push(Rule {
+            fault,
+            verb: verb.map(str::to_string),
+            label: label.map(str::to_string),
+            rate,
+            delay: Duration::from_millis(20),
+            attempts: (0, u64::MAX),
+        });
+    }
+
+    /// Append a certain (rate-1.0) rule over an attempt window
+    /// `[from, to)` — the scripting primitive for exact scenarios.
+    pub fn force(&self, fault: FaultKind, verb: &str, label: &str, from: u64, to: u64) {
+        self.push(Rule {
+            fault,
+            verb: Some(verb.to_string()),
+            label: Some(label.to_string()),
+            rate: 1.0,
+            delay: Duration::from_millis(20),
+            attempts: (from, to),
+        });
+    }
+
+    /// Decide the fate of one attempt. Advances the `(verb, label)`
+    /// attempt counter and, on injection, the per-kind injected count.
+    pub fn decide(&self, verb: &str, addr: &str) -> Option<(FaultKind, Duration)> {
+        let label = self
+            .aliases
+            .lock()
+            .unwrap()
+            .get(addr)
+            .cloned()
+            .unwrap_or_else(|| addr.to_string());
+        let attempt = {
+            let mut attempts = self.attempts.lock().unwrap();
+            let slot = attempts
+                .entry((verb.to_string(), label.clone()))
+                .or_insert(0);
+            let a = *slot;
+            *slot += 1;
+            a
+        };
+        let rules = self.rules.lock().unwrap();
+        for (i, rule) in rules.iter().enumerate() {
+            if let Some(v) = &rule.verb {
+                if v != verb {
+                    continue;
+                }
+            }
+            if let Some(l) = &rule.label {
+                if *l != label {
+                    continue;
+                }
+            }
+            if attempt < rule.attempts.0 || attempt >= rule.attempts.1 {
+                continue;
+            }
+            // The draw is a pure function of (seed, verb, label,
+            // attempt, rule index): same plan, same answer, always.
+            let tag = format!("{verb}|{label}|{attempt}|{i}");
+            let stream = fnv1a64(tag.as_bytes(), FNV_OFFSET_BASIS);
+            if Pcg32::new(self.seed, stream).next_f64() < rule.rate {
+                self.injected[rule.fault.index()].fetch_add(1, Ordering::Relaxed);
+                return Some((rule.fault, rule.delay));
+            }
+        }
+        None
+    }
+
+    /// How many faults of `kind` this plan has injected.
+    pub fn injected(&self, kind: FaultKind) -> u64 {
+        self.injected[kind.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// `{kind: count}` for every kind that fired.
+    pub fn counts_json(&self) -> Json {
+        let mut j = Json::obj();
+        for kind in FAULT_KINDS {
+            let n = self.injected(kind);
+            if n > 0 {
+                j.set(kind.name(), n);
+            }
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan =
+            FaultPlan::parse(7, "drop@submit#node0:0.5; delay:1.0:30, blackhole#node2").unwrap();
+        let rules = plan.rules.lock().unwrap();
+        assert_eq!(rules.len(), 3);
+        assert_eq!(rules[0].fault, FaultKind::Drop);
+        assert_eq!(rules[0].verb.as_deref(), Some("submit"));
+        assert_eq!(rules[0].label.as_deref(), Some("node0"));
+        assert!((rules[0].rate - 0.5).abs() < 1e-12);
+        assert_eq!(rules[1].fault, FaultKind::Delay);
+        assert_eq!(rules[1].verb, None);
+        assert_eq!(rules[1].delay, Duration::from_millis(30));
+        assert_eq!(rules[2].fault, FaultKind::BlackHole);
+        assert!((rules[2].rate - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(FaultPlan::parse(1, "explode:0.5").is_err());
+        assert!(FaultPlan::parse(1, "drop:1.5").is_err());
+        assert!(FaultPlan::parse(1, "drop:x").is_err());
+        assert!(FaultPlan::parse(1, "drop:0.5:10:3").is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let run = || {
+            let plan = FaultPlan::parse(42, "drop@submit:0.4").unwrap();
+            (0..200)
+                .map(|_| plan.decide("submit", "node0").map(|(k, _)| k))
+                .collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(a.iter().any(Option::is_some), "rate 0.4 never fired");
+        assert!(a.iter().any(Option::is_none), "rate 0.4 always fired");
+    }
+
+    #[test]
+    fn aliases_stabilize_ephemeral_addrs() {
+        let direct = FaultPlan::parse(9, "truncate:0.5").unwrap();
+        let aliased = FaultPlan::parse(9, "truncate:0.5").unwrap();
+        aliased.alias("127.0.0.1:54321", "node0");
+        for _ in 0..100 {
+            assert_eq!(
+                direct.decide("submit", "node0").map(|(k, _)| k),
+                aliased.decide("submit", "127.0.0.1:54321").map(|(k, _)| k)
+            );
+        }
+    }
+
+    #[test]
+    fn rate_bounds_and_injected_counts() {
+        let never = FaultPlan::parse(3, "drop:0.0").unwrap();
+        let always = FaultPlan::parse(3, "drop:1.0").unwrap();
+        for _ in 0..50 {
+            assert_eq!(never.decide("submit", "n"), None);
+            assert!(always.decide("submit", "n").is_some());
+        }
+        assert_eq!(never.injected_total(), 0);
+        assert_eq!(always.injected(FaultKind::Drop), 50);
+        assert_eq!(
+            always.counts_json().get("drop").and_then(Json::as_u64),
+            Some(50)
+        );
+    }
+
+    #[test]
+    fn forced_rules_respect_attempt_windows() {
+        let plan = FaultPlan::new(5);
+        plan.force(FaultKind::BlackHole, "health", "node0", 1, 3);
+        // Attempt 0: before the window. 1, 2: inside. 3: past it.
+        assert_eq!(plan.decide("health", "node0"), None);
+        assert!(plan.decide("health", "node0").is_some());
+        assert!(plan.decide("health", "node0").is_some());
+        assert_eq!(plan.decide("health", "node0"), None);
+        // Other verbs/labels never matched.
+        assert_eq!(plan.decide("submit", "node0"), None);
+        assert_eq!(plan.decide("health", "node1"), None);
+        assert_eq!(plan.injected(FaultKind::BlackHole), 2);
+    }
+
+    #[test]
+    fn from_env_requires_a_plan() {
+        // No FAULT_PLAN in the test env => no plan (seed alone is not
+        // a plan). Deliberately does not set env vars: test binaries
+        // run threads in parallel and env mutation races.
+        if std::env::var("FAULT_PLAN").is_err() {
+            assert!(FaultPlan::from_env().unwrap().is_none());
+        }
+    }
+}

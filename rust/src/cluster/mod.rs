@@ -22,11 +22,21 @@
 //! The wire protocol is the worker protocol: clients point `submit` /
 //! `batch` / `stats` at a router address via `--cluster` and nothing
 //! else changes.
+//!
+//! Every outbound connection — dispatch, replication, peer lookups,
+//! health probes — goes through the [`transport`] seam, which carries
+//! the unified deadline/retry/circuit-breaker policy and (in test and
+//! `chaos` builds) the deterministic [`fault`] injection hook the
+//! chaos suite scripts. See DESIGN.md §Faults.
 
+#[cfg(any(test, feature = "chaos"))]
+pub mod fault;
 pub mod peers;
 pub mod ring;
 pub mod router;
+pub mod transport;
 
 pub use peers::PeerSet;
 pub use ring::{HashRing, NodeId, Route};
 pub use router::{Router, RouterConfig, RouterServer, DEFAULT_ROUTER_ADDR};
+pub use transport::{CallError, Transport, TransportPolicy, Verb};

@@ -12,21 +12,30 @@
 //! across machines: identical requests collapse onto one execution,
 //! here across processes instead of across PEs.
 //!
-//! All socket work is bounded by a connect/read timeout so a dead peer
-//! degrades a lookup into a (fast) miss, never a stall; connection
-//! errors are counted but otherwise invisible to the submitter.
+//! Lookups ride the cluster [`Transport`] seam: every probe is bounded
+//! by the policy's connect/read deadlines (a dead peer degrades a
+//! lookup into a fast miss, never a stall), repeated failures open the
+//! peer's circuit breaker so it stops being probed at all until a
+//! half-open check succeeds, and the counters surface in `barista
+//! stats` / `health` (see [`PeerLookup::stats_json`]).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::cluster::transport::{Transport, TransportPolicy, Verb};
 use crate::coordinator::{RunRequest, RunResult};
 use crate::service::cache::canonical_job_string;
 use crate::service::protocol::JobSpec;
 use crate::service::scheduler::PeerLookup;
 use crate::service::store;
 use crate::util::Json;
+
+#[cfg(any(test, feature = "chaos"))]
+use crate::cluster::fault::FaultPlan;
+#[cfg(any(test, feature = "chaos"))]
+use std::sync::Arc;
 
 /// Connect to `addr` with `timeout` applied to the connect itself and
 /// to subsequent reads/writes, so a dead or wedged host fails fast.
@@ -49,9 +58,9 @@ pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<TcpStream, Strin
     Err(last)
 }
 
-/// One NDJSON request/response over a fresh timed connection — the
-/// cluster control path (peer lookups, replication pushes, health
-/// probes), where bounding latency matters more than reusing sockets.
+/// One NDJSON request/response over a fresh timed connection — kept
+/// for callers outside the cluster's transport (e.g. the CLI fetching
+/// a member list), where a one-shot bounded roundtrip is the whole job.
 pub fn roundtrip_once(addr: &str, req: &Json, timeout: Duration) -> Result<Json, String> {
     let stream = connect_timeout(addr, timeout)?;
     let mut writer = stream.try_clone().map_err(|e| format!("clone stream: {e}"))?;
@@ -76,7 +85,7 @@ pub fn roundtrip_once(addr: &str, req: &Json, timeout: Duration) -> Result<Json,
 /// results before a local worker simulates.
 pub struct PeerSet {
     addrs: Vec<String>,
-    timeout: Duration,
+    transport: Transport,
     hits: AtomicU64,
     misses: AtomicU64,
     errors: AtomicU64,
@@ -92,9 +101,24 @@ impl PeerSet {
     }
 
     pub fn with_timeout(addrs: Vec<String>, timeout: Duration) -> PeerSet {
+        PeerSet::with_policy(
+            addrs,
+            TransportPolicy {
+                connect_timeout: timeout,
+                deadline: timeout,
+                // A lookup miss is cheap: never stall a worker thread
+                // on retries — the breaker handles repeat offenders.
+                retries: 0,
+                ..TransportPolicy::default()
+            },
+        )
+    }
+
+    /// Full policy control (`serve --deadline-ms/--breaker-threshold`).
+    pub fn with_policy(addrs: Vec<String>, policy: TransportPolicy) -> PeerSet {
         PeerSet {
             addrs,
-            timeout,
+            transport: Transport::new(policy),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -103,6 +127,17 @@ impl PeerSet {
 
     pub fn addrs(&self) -> &[String] {
         &self.addrs
+    }
+
+    /// The wire seam (resilience counters, breaker state).
+    pub fn transport(&self) -> &Transport {
+        &self.transport
+    }
+
+    /// Script wire faults for every peer probe (chaos testing).
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn install_faults(&self, plan: Arc<FaultPlan>) {
+        self.transport.install_faults(plan);
     }
 
     /// `(hits, misses, errors)` counters (errors count per failed peer
@@ -124,11 +159,15 @@ impl PeerSet {
     ) -> Option<RunResult> {
         let mut q = Json::obj();
         q.set("op", "peer-get").set("job", spec_json.clone());
-        let resp = match roundtrip_once(addr, &q, self.timeout) {
+        let resp = match self.transport.call(addr, Verb::PeerGet, &q) {
             Ok(r) => r,
-            Err(_) => {
+            Err(e) => {
                 // Dead peer: a fast miss, not a failure of the lookup.
-                self.errors.fetch_add(1, Ordering::Relaxed);
+                // An open-breaker fast-fail never touched the wire, so
+                // it is not counted as a probe error.
+                if !matches!(e, crate::cluster::transport::CallError::FastFail) {
+                    self.errors.fetch_add(1, Ordering::Relaxed);
+                }
                 return None;
             }
         };
@@ -175,5 +214,17 @@ impl PeerLookup for PeerSet {
 
     fn describe(&self) -> String {
         format!("{} peers", self.addrs.len())
+    }
+
+    fn stats_json(&self) -> Option<Json> {
+        let (hits, misses, errors) = self.counts();
+        let mut j = Json::obj();
+        j.set("peers", self.addrs.len())
+            .set("hits", hits)
+            .set("misses", misses)
+            .set("errors", errors)
+            .set("breakers_open", self.transport.breakers_open())
+            .set("transport", self.transport.counters_json());
+        Some(j)
     }
 }

@@ -14,33 +14,45 @@
 //!   `steal_threshold`, the overflow job is re-routed to the
 //!   least-loaded live node (BARISTA's dynamic round-robin intra-filter
 //!   balancing, applied across machines);
-//! * **failover** — a dead node (connection error now, or flagged by
-//!   the background health monitor) is skipped in ring order; because
-//!   completed results replicate to the key's ring successor, the
-//!   failover node usually answers from its cold tier
-//!   (`source:"store"` — counted as a `replica_hit`) instead of
-//!   re-simulating;
+//! * **failover** — a node whose circuit breaker is open (tripped by
+//!   `breaker_threshold` consecutive wire failures — one slow probe is
+//!   a strike, not death) is skipped in ring order; because completed
+//!   results replicate to the key's ring successor, the failover node
+//!   usually answers from its cold tier (`source:"store"` — counted as
+//!   a `replica_hit`) instead of re-simulating;
 //! * **replication** — after a fresh execution the router pulls the
 //!   journal-format record from the serving node (`peer-get`) and
 //!   pushes it to the key's first live non-serving candidate
 //!   (`replicate`), which admits it cold-tier-only after re-verifying
-//!   that the payload's canonical string hashes to the key.
+//!   that the payload's canonical string hashes to the key;
+//! * **degradation** — when the owner *and* every replica are
+//!   unreachable, the router tries one breaker-bypassing `peer-get`
+//!   sweep for an already-computed copy and serves it marked
+//!   `"source":"stale"`; only if no copy exists anywhere does the
+//!   client get a structured `degraded` error (never a hang).
 //!
-//! The router holds no results itself and keeps no per-job state — all
-//! durable state lives in the nodes' tiered stores, so the router can
-//! restart freely.
+//! All outbound traffic rides the [`Transport`] seam (deadlines,
+//! retries, breakers, fault injection — DESIGN.md §Faults). The router
+//! holds no results itself and keeps no per-job state — all durable
+//! state lives in the nodes' tiered stores, so the router can restart
+//! freely.
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cluster::peers::{connect_timeout, roundtrip_once};
 use crate::cluster::ring::{HashRing, NodeId, Route};
-use crate::service::cache::{job_key, JobKey};
+use crate::cluster::transport::{Transport, TransportPolicy, Verb};
+use crate::service::cache::{canonical_job_string, job_key, JobKey};
 use crate::service::protocol::{self, JobSpec, Request};
+use crate::service::server::{read_bounded_line, LineRead, MAX_LINE_BYTES};
+use crate::service::store;
 use crate::util::Json;
+
+#[cfg(any(test, feature = "chaos"))]
+use crate::cluster::fault::FaultPlan;
 
 /// Default router address (`barista cluster-serve` / `--cluster`);
 /// distinct from the worker default so both run on one host.
@@ -61,12 +73,11 @@ pub struct RouterConfig {
     pub vnodes: usize,
     /// Health monitor poll interval.
     pub health_interval: Duration,
-    /// Connect/read bound for control traffic (health, peer-get,
-    /// replicate) and for establishing dispatch connections.
-    pub control_timeout: Duration,
-    /// Read bound while waiting on a dispatched job (covers the
-    /// seconds-long simulations).
-    pub dispatch_timeout: Duration,
+    /// The unified wire policy for all outbound traffic: deadlines,
+    /// retry/backoff budget, circuit-breaker threshold + cooldown
+    /// (`--deadline-ms`, `--retries`, `--breaker-threshold`,
+    /// `--breaker-cooldown-ms`).
+    pub policy: TransportPolicy,
 }
 
 impl Default for RouterConfig {
@@ -77,8 +88,7 @@ impl Default for RouterConfig {
             replicate: true,
             vnodes: HashRing::DEFAULT_VNODES,
             health_interval: Duration::from_millis(250),
-            control_timeout: Duration::from_secs(2),
-            dispatch_timeout: Duration::from_secs(600),
+            policy: TransportPolicy::default(),
         }
     }
 }
@@ -91,49 +101,34 @@ struct RouterCounters {
     replica_hits: AtomicU64,
     replicated: AtomicU64,
     replicate_errors: AtomicU64,
-    dead_marks: AtomicU64,
+    /// Degraded-mode saves: a stale store copy served because every
+    /// live path failed.
+    stale_hits: AtomicU64,
+    /// Structured `degraded` errors returned (no node, no stale copy).
+    degraded_responses: AtomicU64,
 }
 
-/// Per-node live state. Liveness is a flag, not ring membership: a
-/// flapping node keeps its key ownership and simply gets skipped while
-/// down, so its recovery needs no remapping.
+/// Per-node live state. Liveness is the transport breaker, not ring
+/// membership: a flapping node keeps its key ownership and simply gets
+/// skipped while its breaker is open, so recovery needs no remapping.
 struct Node {
     addr: String,
-    alive: AtomicBool,
     /// Queue depth from the last health frame.
     queued: AtomicUsize,
     /// Jobs this router currently has outstanding on the node.
     inflight: AtomicUsize,
     /// Jobs this node answered successfully.
     served: AtomicU64,
-    /// Pooled dispatch connections.
-    idle: Mutex<Vec<TcpStream>>,
 }
 
 impl Node {
     fn new(addr: String) -> Node {
         Node {
             addr,
-            alive: AtomicBool::new(true),
             queued: AtomicUsize::new(0),
             inflight: AtomicUsize::new(0),
             served: AtomicU64::new(0),
-            idle: Mutex::new(Vec::new()),
         }
-    }
-
-    fn is_alive(&self) -> bool {
-        self.alive.load(Ordering::Relaxed)
-    }
-
-    fn to_json(&self) -> Json {
-        let mut j = Json::obj();
-        j.set("addr", self.addr.as_str())
-            .set("alive", self.is_alive())
-            .set("queued", self.queued.load(Ordering::Relaxed))
-            .set("inflight", self.inflight.load(Ordering::Relaxed))
-            .set("served", self.served.load(Ordering::Relaxed));
-        j
     }
 }
 
@@ -143,6 +138,7 @@ pub struct Router {
     cfg: RouterConfig,
     ring: HashRing,
     nodes: Vec<Node>,
+    transport: Transport,
     counters: RouterCounters,
 }
 
@@ -160,10 +156,12 @@ impl Router {
         let ids: Vec<NodeId> = (0..cfg.nodes.len() as u32).map(NodeId).collect();
         let ring = HashRing::new(&ids, cfg.vnodes);
         let nodes = cfg.nodes.iter().map(|a| Node::new(a.clone())).collect();
+        let transport = Transport::new(cfg.policy.clone());
         Ok(Router {
             cfg,
             ring,
             nodes,
+            transport,
             counters: RouterCounters::default(),
         })
     }
@@ -173,8 +171,24 @@ impl Router {
         &self.ring
     }
 
+    /// The outbound wire seam (resilience counters, breaker state).
+    pub fn transport(&self) -> &Transport {
+        &self.transport
+    }
+
+    /// Script wire faults for every outbound call (chaos testing).
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn install_faults(&self, plan: Arc<FaultPlan>) {
+        self.transport.install_faults(plan);
+    }
+
     fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.index()]
+    }
+
+    /// Routable = the node's circuit breaker is closed.
+    fn is_alive(&self, id: NodeId) -> bool {
+        self.transport.breaker_is_closed(&self.node(id).addr)
     }
 
     /// Steal metric: last health-reported queue depth plus what this
@@ -185,17 +199,20 @@ impl Router {
     }
 
     /// Route one job and return the response frame to forward to the
-    /// client (always a frame — dispatch failures become protocol
-    /// errors, total saturation returns the last busy hint).
+    /// client (always a frame — never a hang: dispatch failures walk
+    /// the ring, total failure degrades to a stale store copy when one
+    /// exists and a structured `degraded` error otherwise).
     pub fn dispatch(&self, spec: &JobSpec) -> Json {
         let key = job_key(&spec.to_request());
         let pref = self.ring.preference(&key, self.nodes.len());
         let owner = pref[0];
         let mut order: Vec<NodeId> =
-            pref.iter().copied().filter(|n| self.node(*n).is_alive()).collect();
+            pref.iter().copied().filter(|n| self.is_alive(*n)).collect();
         if order.is_empty() {
-            // Everyone is flagged dead (startup or a flapping health
-            // probe): try the full preference order anyway.
+            // Every breaker is open (startup, or a cluster-wide
+            // outage): try the full preference order anyway — open
+            // breakers fast-fail in the transport, so this costs
+            // microseconds and still catches half-open recoveries.
             order = pref.clone();
         }
         // Work-stealing: a live but overloaded owner hands the overflow
@@ -213,13 +230,13 @@ impl Router {
             stream: false,
         }
         .to_json();
-        let mut owner_down = !self.node(owner).is_alive();
+        let mut owner_down = !self.is_alive(owner);
         let mut busy: Option<Json> = None;
         let mut last_err = String::from("no nodes configured");
         for &nid in &order {
             let node = self.node(nid);
             node.inflight.fetch_add(1, Ordering::Relaxed);
-            let resp = self.roundtrip_pooled(node, &line);
+            let resp = self.transport.call(&node.addr, Verb::Submit, &line);
             node.inflight.fetch_sub(1, Ordering::Relaxed);
             match resp {
                 Ok(mut resp) => {
@@ -238,11 +255,10 @@ impl Router {
                         continue;
                     }
                     if err.contains("shutting down") {
-                        // The node is draining for shutdown: treat it
-                        // like a dead node and fail over.
-                        if node.alive.swap(false, Ordering::Relaxed) {
-                            self.counters.dead_marks.fetch_add(1, Ordering::Relaxed);
-                        }
+                        // The node is draining: a semantic failure the
+                        // wire can't see — feed the breaker by hand
+                        // and fail over.
+                        self.transport.penalize(&node.addr);
                         if nid == owner {
                             owner_down = true;
                         }
@@ -254,11 +270,8 @@ impl Router {
                     return resp;
                 }
                 Err(e) => {
-                    // Connection-level failure: flag the node dead (the
-                    // health monitor revives it) and fail over.
-                    if node.alive.swap(false, Ordering::Relaxed) {
-                        self.counters.dead_marks.fetch_add(1, Ordering::Relaxed);
-                    }
+                    // Wire-level failure: the transport already fed the
+                    // node's breaker (and counted it); fail over.
                     if nid == owner {
                         owner_down = true;
                     }
@@ -269,7 +282,57 @@ impl Router {
         if let Some(b) = busy {
             return b;
         }
-        protocol::response_error(&format!("no node could serve the job: {last_err}"))
+        // Degraded mode: no node could run the job. A copy computed
+        // before the outage may still be readable — serve it stale.
+        if let Some(stale) = self.stale_rescue(&key, spec) {
+            self.counters.stale_hits.fetch_add(1, Ordering::Relaxed);
+            return stale;
+        }
+        self.counters
+            .degraded_responses
+            .fetch_add(1, Ordering::Relaxed);
+        protocol::response_degraded(&format!("no node could serve the job: {last_err}"))
+    }
+
+    /// Breaker-bypassing `peer-get` sweep over the key's candidates:
+    /// an open breaker means submits fail, but a store read may still
+    /// work (e.g. a wedged scheduler with a healthy store, or an
+    /// injected submit-only fault). Success is deliberately invisible
+    /// to the breakers — serving stale must not fake a recovery.
+    fn stale_rescue(&self, key: &JobKey, spec: &JobSpec) -> Option<Json> {
+        let mut get = Json::obj();
+        get.set("op", "peer-get").set("job", spec.to_json());
+        let req = spec.to_request();
+        let canon = canonical_job_string(&req);
+        for nid in self.ring.preference(key, self.nodes.len()) {
+            let addr = &self.node(nid).addr;
+            let resp = match self.transport.bypass(addr, Verb::PeerGet, &get) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            if resp.get("found").and_then(Json::as_bool) != Some(true) {
+                continue;
+            }
+            let payload = match resp.get("payload").and_then(Json::as_str) {
+                Some(p) => p,
+                None => continue,
+            };
+            // Same verification a replica admission does: the payload
+            // must decode and hash back to this exact job.
+            let result = match store::decode_record(payload, &req, &canon) {
+                Ok(r) => r,
+                Err(_) => continue,
+            };
+            let mut j = Json::obj();
+            j.set("ok", true)
+                .set("op", "submit")
+                .set("source", "stale")
+                .set("host_ms", result.host_ms)
+                .set("result", result.network.to_json())
+                .set("node", addr.as_str());
+            return Some(j);
+        }
+        None
     }
 
     fn note_served(&self, owner: NodeId, served: NodeId, owner_down: bool, resp: &Json) {
@@ -307,7 +370,7 @@ impl Router {
         let target = pref
             .iter()
             .copied()
-            .find(|n| *n != served && self.node(*n).is_alive());
+            .find(|n| *n != served && self.is_alive(*n));
         let target = match target {
             Some(t) => t,
             None => return,
@@ -315,7 +378,8 @@ impl Router {
         let mut get = Json::obj();
         get.set("op", "peer-get").set("job", spec.to_json());
         let payload = self
-            .roundtrip_fresh(served, &get)
+            .transport
+            .call(&self.node(served).addr, Verb::PeerGet, &get)
             .ok()
             .filter(|r| r.get("found").and_then(Json::as_bool) == Some(true))
             .and_then(|r| r.get("payload").and_then(Json::as_str).map(str::to_string));
@@ -331,7 +395,8 @@ impl Router {
             .set("key", key.hex())
             .set("payload", payload);
         let stored = self
-            .roundtrip_fresh(target, &rep)
+            .transport
+            .call(&self.node(target).addr, Verb::Replicate, &rep)
             .ok()
             .map(|r| {
                 r.get("ok").and_then(Json::as_bool) == Some(true)
@@ -343,28 +408,6 @@ impl Router {
         } else {
             self.counters.replicate_errors.fetch_add(1, Ordering::Relaxed);
         }
-    }
-
-    /// Dispatch roundtrip on a pooled connection (long read bound). On
-    /// any error the connection is dropped, never reused.
-    fn roundtrip_pooled(&self, node: &Node, req: &Json) -> Result<Json, String> {
-        let mut stream = match node.idle.lock().unwrap().pop() {
-            Some(s) => s,
-            None => {
-                let s = connect_timeout(&node.addr, self.cfg.control_timeout)?;
-                s.set_read_timeout(Some(self.cfg.dispatch_timeout)).ok();
-                s.set_write_timeout(Some(self.cfg.control_timeout)).ok();
-                s
-            }
-        };
-        let resp = roundtrip_on(&mut stream, req)?;
-        node.idle.lock().unwrap().push(stream);
-        Ok(resp)
-    }
-
-    /// Control roundtrip on a fresh timed connection.
-    fn roundtrip_fresh(&self, id: NodeId, req: &Json) -> Result<Json, String> {
-        roundtrip_once(&self.node(id).addr, req, self.cfg.control_timeout)
     }
 
     /// Route a whole batch concurrently, preserving input order. Any
@@ -409,32 +452,33 @@ impl Router {
         j
     }
 
-    /// One health sweep: a live node reports its queue depth (the steal
-    /// metric); an unreachable one is flagged dead until it answers.
+    /// One health sweep. Each node gets a single bounded probe, no
+    /// retries: an answer refreshes its queue depth and closes its
+    /// breaker; a failure is one breaker strike — a node is only
+    /// unroutable after `breaker_threshold` *consecutive* strikes, so
+    /// one slow probe no longer marks it dead. An open breaker's
+    /// half-open probe (one per cooldown) is what revives it.
     pub fn health_pass(&self) {
         let mut probe = Json::obj();
         probe.set("op", "health");
         for node in &self.nodes {
-            let depth = roundtrip_once(&node.addr, &probe, self.cfg.control_timeout)
-                .ok()
-                .filter(|r| r.get("ok").and_then(Json::as_bool) == Some(true))
-                .map(|r| r.get("queued").and_then(Json::as_usize).unwrap_or(0));
-            match depth {
-                Some(d) => {
-                    node.alive.store(true, Ordering::Relaxed);
+            // Wire failures and fast-fails feed the breaker inside the
+            // transport; only a semantic "answered but unhealthy" frame
+            // needs a manual strike here.
+            if let Ok(r) = self.transport.probe(&node.addr, &probe) {
+                if r.get("ok").and_then(Json::as_bool) == Some(true) {
+                    let d = r.get("queued").and_then(Json::as_usize).unwrap_or(0);
                     node.queued.store(d, Ordering::Relaxed);
-                }
-                None => {
-                    if node.alive.swap(false, Ordering::Relaxed) {
-                        self.counters.dead_marks.fetch_add(1, Ordering::Relaxed);
-                    }
+                } else {
+                    self.transport.penalize(&node.addr);
                 }
             }
         }
     }
 
     pub fn status_json(&self, started: Instant) -> Json {
-        let alive = self.nodes.iter().filter(|n| n.is_alive()).count();
+        let ids: Vec<NodeId> = (0..self.nodes.len() as u32).map(NodeId).collect();
+        let alive = ids.iter().filter(|id| self.is_alive(**id)).count();
         let mut j = Json::obj();
         j.set("ok", true)
             .set("op", "status")
@@ -446,7 +490,20 @@ impl Router {
         j
     }
 
+    fn node_json(&self, node: &Node) -> Json {
+        let mut j = Json::obj();
+        j.set("addr", node.addr.as_str())
+            .set("alive", self.transport.breaker_is_closed(&node.addr))
+            .set("breaker", self.transport.breaker_state_name(&node.addr))
+            .set("queued", node.queued.load(Ordering::Relaxed))
+            .set("inflight", node.inflight.load(Ordering::Relaxed))
+            .set("served", node.served.load(Ordering::Relaxed));
+        j
+    }
+
     /// Router counters + per-node state (the `stats` response body).
+    /// `dead_marks` is the historical name for what is now the count
+    /// of breaker-open transitions.
     pub fn stats_json(&self) -> Json {
         let c = &self.counters;
         let mut j = Json::obj();
@@ -456,10 +513,16 @@ impl Router {
             .set("replica_hits", c.replica_hits.load(Ordering::Relaxed))
             .set("replicated", c.replicated.load(Ordering::Relaxed))
             .set("replicate_errors", c.replicate_errors.load(Ordering::Relaxed))
-            .set("dead_marks", c.dead_marks.load(Ordering::Relaxed))
+            .set("dead_marks", self.transport.breaker_opens())
+            .set("stale_hits", c.stale_hits.load(Ordering::Relaxed))
+            .set(
+                "degraded_responses",
+                c.degraded_responses.load(Ordering::Relaxed),
+            )
+            .set("transport", self.transport.counters_json())
             .set(
                 "nodes",
-                Json::Arr(self.nodes.iter().map(|n| n.to_json()).collect()),
+                Json::Arr(self.nodes.iter().map(|n| self.node_json(n)).collect()),
             );
         j
     }
@@ -477,29 +540,6 @@ impl Router {
         );
         j
     }
-}
-
-/// One NDJSON roundtrip on an existing stream. Safe to pool: the
-/// protocol is strictly one response line per request, so a completed
-/// read leaves no residue for the next user.
-fn roundtrip_on(stream: &mut TcpStream, req: &Json) -> Result<Json, String> {
-    let mut line = req.to_string();
-    line.push('\n');
-    stream
-        .write_all(line.as_bytes())
-        .map_err(|e| format!("send: {e}"))?;
-    stream.flush().map_err(|e| format!("flush: {e}"))?;
-    let mut reader = BufReader::new(
-        stream.try_clone().map_err(|e| format!("clone stream: {e}"))?,
-    );
-    let mut buf = String::new();
-    let n = reader
-        .read_line(&mut buf)
-        .map_err(|e| format!("recv: {e}"))?;
-    if n == 0 {
-        return Err("node closed the connection".into());
-    }
-    Json::parse(buf.trim_end()).map_err(|e| format!("bad response JSON: {e}"))
 }
 
 /// TCP front end for a [`Router`]: same accept-loop shape as
@@ -595,10 +635,26 @@ fn handle_conn(
     started: Instant,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone()?);
+    // A wedged or malicious client cannot hold the thread forever: the
+    // response write is bounded, and the bounded line reader below
+    // turns oversized frames into an error response, not memory growth.
+    stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    loop {
+        let line = match read_bounded_line(&mut reader, MAX_LINE_BYTES)? {
+            LineRead::Eof => break,
+            LineRead::TooLong(n) => {
+                let resp = protocol::response_error(&format!(
+                    "request line too long ({n} bytes; max {MAX_LINE_BYTES})"
+                ));
+                writer.write_all(resp.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                continue;
+            }
+            LineRead::Line(l) => l,
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -626,7 +682,7 @@ fn poke_accept_loop(local: SocketAddr) {
         };
         wake.set_ip(loopback);
     }
-    let _ = TcpStream::connect(wake);
+    let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(2));
 }
 
 /// Handle one request line against the router; returns the response and

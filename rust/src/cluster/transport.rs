@@ -1,0 +1,613 @@
+//! The one wire seam: every NDJSON/TCP round trip the cluster makes —
+//! router→node dispatch, replication, peer-get lookups, health probes —
+//! goes through a [`Transport`], which carries the unified resilience
+//! policy the pieces used to improvise separately:
+//!
+//! * **deadlines** — per-attempt connect/read/write timeouts (a hung
+//!   peer can no longer wedge a router thread on a bare `read_line`);
+//! * **retries** — jittered exponential backoff under a total retry
+//!   budget, so one torn frame is a retry, not a failover;
+//! * **circuit breakers** — per-node closed/open/half-open state with
+//!   a cooldown, replacing the router's old one-strike `alive` flag:
+//!   a node is "dead" only after `breaker_threshold` *consecutive*
+//!   failures, and an opened breaker re-admits exactly one probe per
+//!   cooldown (which is also how a recovered node comes back).
+//!
+//! Outcomes are counted ([`Transport::counters_json`] feeds
+//! `barista stats`), and — under `cfg(any(test, feature = "chaos"))` —
+//! every attempt first consults an installed
+//! [`FaultPlan`](crate::cluster::fault::FaultPlan), so the chaos suite
+//! injects faults *inside* the production code path rather than
+//! mocking around it.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::{fnv1a64, Json, FNV_OFFSET_BASIS};
+
+#[cfg(any(test, feature = "chaos"))]
+use crate::cluster::fault::{FaultKind, FaultPlan};
+#[cfg(any(test, feature = "chaos"))]
+use std::sync::Arc;
+
+/// Outbound idle connections kept per node.
+const POOL_CAP: usize = 32;
+
+/// The unified wire policy. One struct, one set of knobs
+/// (`--deadline-ms`, `--retries`, `--breaker-threshold`,
+/// `--breaker-cooldown-ms`), shared by the router and `PeerSet`.
+#[derive(Debug, Clone)]
+pub struct TransportPolicy {
+    /// Per-attempt connect bound.
+    pub connect_timeout: Duration,
+    /// Per-attempt read/write deadline for control verbs (health,
+    /// peer-get, replicate, status) — and the write deadline for all.
+    pub deadline: Duration,
+    /// Read deadline for dispatch verbs (`submit`/`batch`), which
+    /// legitimately block for a job's whole runtime.
+    pub dispatch_deadline: Duration,
+    /// Retries after the first attempt (0 = single shot).
+    pub retries: u32,
+    /// Base backoff before the first retry; doubles per retry with
+    /// deterministic jitter, capped at 2 s.
+    pub backoff: Duration,
+    /// Total time budget across one call's retries: no retry starts
+    /// after this much has elapsed.
+    pub retry_budget: Duration,
+    /// Consecutive failures that open a node's breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker fast-fails before re-admitting one
+    /// half-open probe.
+    pub breaker_cooldown: Duration,
+}
+
+impl Default for TransportPolicy {
+    fn default() -> TransportPolicy {
+        TransportPolicy {
+            connect_timeout: Duration::from_secs(2),
+            deadline: Duration::from_secs(2),
+            dispatch_deadline: Duration::from_secs(600),
+            retries: 2,
+            backoff: Duration::from_millis(25),
+            retry_budget: Duration::from_secs(10),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_secs(1),
+        }
+    }
+}
+
+/// What a call is for — picks the read deadline and whether the
+/// connection is pooled, and names the attempt for fault plans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verb {
+    Submit,
+    Health,
+    PeerGet,
+    Replicate,
+    Status,
+}
+
+impl Verb {
+    pub fn name(self) -> &'static str {
+        match self {
+            Verb::Submit => "submit",
+            Verb::Health => "health",
+            Verb::PeerGet => "peer-get",
+            Verb::Replicate => "replicate",
+            Verb::Status => "status",
+        }
+    }
+
+    /// Dispatch-class verbs run jobs: long read deadline, pooled conns.
+    fn is_dispatch(self) -> bool {
+        matches!(self, Verb::Submit)
+    }
+}
+
+/// Why a call failed, by layer — each variant feeds its own counter.
+#[derive(Debug, Clone)]
+pub enum CallError {
+    /// Refused locally without touching the wire: the node's breaker
+    /// is open (or mid half-open probe).
+    FastFail,
+    Connect(String),
+    Timeout(String),
+    Io(String),
+    /// The peer answered, but not with parseable JSON.
+    Protocol(String),
+}
+
+impl fmt::Display for CallError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CallError::FastFail => write!(f, "breaker open: node is cooling down"),
+            CallError::Connect(m) => write!(f, "connect: {m}"),
+            CallError::Timeout(m) => write!(f, "timeout: {m}"),
+            CallError::Io(m) => write!(f, "io: {m}"),
+            CallError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+struct Breaker {
+    state: BreakerState,
+    consecutive: u32,
+    open_until: Instant,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker {
+            state: BreakerState::Closed,
+            consecutive: 0,
+            open_until: Instant::now(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    attempts: AtomicU64,
+    retries: AtomicU64,
+    timeouts: AtomicU64,
+    connect_errors: AtomicU64,
+    io_errors: AtomicU64,
+    protocol_errors: AtomicU64,
+    breaker_opens: AtomicU64,
+    breaker_fast_fails: AtomicU64,
+}
+
+/// One resilient NDJSON/TCP endpoint pool (see the module docs).
+pub struct Transport {
+    policy: TransportPolicy,
+    breakers: Mutex<HashMap<String, Breaker>>,
+    pools: Mutex<HashMap<String, Vec<TcpStream>>>,
+    counters: Counters,
+    #[cfg(any(test, feature = "chaos"))]
+    faults: Mutex<Option<Arc<FaultPlan>>>,
+}
+
+impl Transport {
+    pub fn new(policy: TransportPolicy) -> Transport {
+        Transport {
+            policy,
+            breakers: Mutex::new(HashMap::new()),
+            pools: Mutex::new(HashMap::new()),
+            counters: Counters::default(),
+            #[cfg(any(test, feature = "chaos"))]
+            faults: Mutex::new(None),
+        }
+    }
+
+    pub fn policy(&self) -> &TransportPolicy {
+        &self.policy
+    }
+
+    /// Route every subsequent attempt through `plan` first.
+    #[cfg(any(test, feature = "chaos"))]
+    pub fn install_faults(&self, plan: Arc<FaultPlan>) {
+        *self.faults.lock().unwrap() = Some(plan);
+    }
+
+    /// One policy-governed round trip: breaker gate, retries with
+    /// backoff, counters, breaker feedback.
+    pub fn call(&self, addr: &str, verb: Verb, req: &Json) -> Result<Json, CallError> {
+        self.run_call(addr, verb, req, self.policy.retries, true)
+    }
+
+    /// A single health probe: no retries, so the breaker — not a
+    /// retry loop — decides how many strikes mean dead, and a slow
+    /// node costs at most one deadline per pass.
+    pub fn probe(&self, addr: &str, req: &Json) -> Result<Json, CallError> {
+        self.run_call(addr, Verb::Health, req, 0, true)
+    }
+
+    /// Last-resort call that ignores breaker state entirely (no gate,
+    /// no feedback, no retries): stale-rescue reads must reach a node
+    /// whose breaker submit failures opened, and their success must
+    /// not fake-close it either.
+    pub fn bypass(&self, addr: &str, verb: Verb, req: &Json) -> Result<Json, CallError> {
+        self.run_call(addr, verb, req, 0, false)
+    }
+
+    /// Record a semantic failure (e.g. a node answering "shutting
+    /// down") as a breaker strike, as if the wire call had failed.
+    pub fn penalize(&self, addr: &str) {
+        self.note_failure(addr);
+    }
+
+    fn run_call(
+        &self,
+        addr: &str,
+        verb: Verb,
+        req: &Json,
+        retries: u32,
+        gate: bool,
+    ) -> Result<Json, CallError> {
+        if gate && !self.admit(addr) {
+            self.counters.breaker_fast_fails.fetch_add(1, Ordering::Relaxed);
+            return Err(CallError::FastFail);
+        }
+        let start = Instant::now();
+        let mut attempt: u32 = 0;
+        loop {
+            self.counters.attempts.fetch_add(1, Ordering::Relaxed);
+            // Only the first attempt may reuse a pooled connection: a
+            // failure on a pooled conn might just mean it went stale,
+            // so the retry always gets a fresh socket.
+            match self.attempt_once(addr, verb, req, gate && attempt == 0) {
+                Ok(resp) => {
+                    if gate {
+                        self.note_success(addr);
+                    }
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    self.count_error(&e);
+                    let retry = attempt < retries && start.elapsed() < self.policy.retry_budget;
+                    if !retry {
+                        if gate {
+                            self.note_failure(addr);
+                        }
+                        return Err(e);
+                    }
+                    self.counters.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(self.backoff(addr, attempt));
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// Exponential backoff with deterministic jitter keyed on
+    /// `(addr, attempt)`: spreads synchronized retry storms without a
+    /// global RNG, and stays reproducible under a fault plan.
+    fn backoff(&self, addr: &str, attempt: u32) -> Duration {
+        let base = self.policy.backoff.max(Duration::from_millis(1));
+        let exp = base.saturating_mul(1 << attempt.min(6));
+        let tag = format!("{addr}|{attempt}");
+        let span = (exp.as_millis() as u64) / 2 + 1;
+        let jitter = fnv1a64(tag.as_bytes(), FNV_OFFSET_BASIS) % span;
+        (exp + Duration::from_millis(jitter)).min(Duration::from_secs(2))
+    }
+
+    fn count_error(&self, e: &CallError) {
+        let counter = match e {
+            CallError::Timeout(_) => &self.counters.timeouts,
+            CallError::Connect(_) => &self.counters.connect_errors,
+            CallError::Io(_) => &self.counters.io_errors,
+            CallError::Protocol(_) => &self.counters.protocol_errors,
+            CallError::FastFail => return,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn attempt_once(
+        &self,
+        addr: &str,
+        verb: Verb,
+        req: &Json,
+        pool_ok: bool,
+    ) -> Result<Json, CallError> {
+        // `mut` is exercised only when a fault plan is compiled in.
+        #[allow(unused_mut)]
+        let mut truncate = false;
+        #[allow(unused_mut)]
+        let mut duplicate = false;
+        #[cfg(any(test, feature = "chaos"))]
+        {
+            let plan = self.faults.lock().unwrap().clone();
+            if let Some(plan) = plan {
+                match plan.decide(verb.name(), addr) {
+                    Some((FaultKind::Drop, _)) => {
+                        return Err(CallError::Connect(format!("{addr}: injected drop")));
+                    }
+                    Some((FaultKind::BlackHole, _)) => {
+                        // A peer that accepts and never answers. The
+                        // injected wait is token (the real deadline
+                        // would make chaos runs crawl); the outcome —
+                        // a read timeout — is the production one.
+                        std::thread::sleep(Duration::from_millis(5).min(self.policy.deadline));
+                        return Err(CallError::Timeout(format!("{addr}: injected black hole")));
+                    }
+                    Some((FaultKind::Delay, d)) => std::thread::sleep(d),
+                    Some((FaultKind::Truncate, _)) => truncate = true,
+                    Some((FaultKind::Duplicate, _)) => duplicate = true,
+                    None => {}
+                }
+            }
+        }
+
+        let pooled = verb.is_dispatch() && pool_ok;
+        let reused = if pooled {
+            self.pools.lock().unwrap().get_mut(addr).and_then(Vec::pop)
+        } else {
+            None
+        };
+        let mut stream = match reused {
+            Some(s) => s,
+            None => {
+                let s = super::peers::connect_timeout(addr, self.policy.connect_timeout)
+                    .map_err(CallError::Connect)?;
+                let read = if verb.is_dispatch() {
+                    self.policy.dispatch_deadline
+                } else {
+                    self.policy.deadline
+                };
+                s.set_read_timeout(Some(read)).ok();
+                s.set_write_timeout(Some(self.policy.deadline)).ok();
+                s
+            }
+        };
+
+        let mut line = req.to_string();
+        line.push('\n');
+        stream
+            .write_all(line.as_bytes())
+            .map_err(|e| classify_io(addr, "send", e))?;
+        if duplicate {
+            // Second copy of the same request on the same conn: the
+            // server answers twice, we read once and never pool the
+            // socket, so the duplicate must be absorbed by the
+            // server's idempotency (dedup/cache), not by luck.
+            stream
+                .write_all(line.as_bytes())
+                .map_err(|e| classify_io(addr, "send-dup", e))?;
+        }
+        stream.flush().map_err(|e| classify_io(addr, "flush", e))?;
+
+        let clone = stream
+            .try_clone()
+            .map_err(|e| CallError::Io(format!("clone stream to {addr}: {e}")))?;
+        let mut reader = BufReader::new(clone);
+        let mut buf = String::new();
+        let n = reader
+            .read_line(&mut buf)
+            .map_err(|e| classify_io(addr, "recv", e))?;
+        if n == 0 {
+            return Err(CallError::Io(format!("{addr} closed the connection")));
+        }
+        if truncate {
+            // Tear the frame mid-line (on a char boundary) so the
+            // parse below fails exactly as a half-written frame would.
+            let mut cut = buf.len() / 2;
+            while cut > 0 && !buf.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            buf.truncate(cut);
+        }
+        let resp = Json::parse(buf.trim_end())
+            .map_err(|e| CallError::Protocol(format!("bad response from {addr}: {e}")))?;
+        if pooled && !duplicate {
+            let mut pools = self.pools.lock().unwrap();
+            let idle = pools.entry(addr.to_string()).or_default();
+            if idle.len() < POOL_CAP {
+                idle.push(stream);
+            }
+        }
+        Ok(resp)
+    }
+
+    // ---- breakers ----------------------------------------------------
+
+    fn admit(&self, addr: &str) -> bool {
+        let mut map = self.breakers.lock().unwrap();
+        let b = map.entry(addr.to_string()).or_insert_with(Breaker::new);
+        match b.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if Instant::now() >= b.open_until {
+                    // Cooldown over: exactly one probe goes through.
+                    b.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => false,
+        }
+    }
+
+    fn note_success(&self, addr: &str) {
+        let mut map = self.breakers.lock().unwrap();
+        let b = map.entry(addr.to_string()).or_insert_with(Breaker::new);
+        b.state = BreakerState::Closed;
+        b.consecutive = 0;
+    }
+
+    fn note_failure(&self, addr: &str) {
+        let mut map = self.breakers.lock().unwrap();
+        let b = map.entry(addr.to_string()).or_insert_with(Breaker::new);
+        match b.state {
+            BreakerState::Closed => {
+                b.consecutive += 1;
+                if b.consecutive >= self.policy.breaker_threshold.max(1) {
+                    b.state = BreakerState::Open;
+                    b.open_until = Instant::now() + self.policy.breaker_cooldown;
+                    self.counters.breaker_opens.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            BreakerState::HalfOpen => {
+                // The probe failed: another full cooldown.
+                b.state = BreakerState::Open;
+                b.open_until = Instant::now() + self.policy.breaker_cooldown;
+                self.counters.breaker_opens.fetch_add(1, Ordering::Relaxed);
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// Is `addr` routable (breaker closed)? Unknown nodes are closed.
+    pub fn breaker_is_closed(&self, addr: &str) -> bool {
+        match self.breakers.lock().unwrap().get(addr) {
+            Some(b) => b.state == BreakerState::Closed,
+            None => true,
+        }
+    }
+
+    /// `"closed"` / `"open"` / `"half-open"`, for stats output.
+    pub fn breaker_state_name(&self, addr: &str) -> &'static str {
+        match self.breakers.lock().unwrap().get(addr).map(|b| b.state) {
+            None | Some(BreakerState::Closed) => "closed",
+            Some(BreakerState::Open) => "open",
+            Some(BreakerState::HalfOpen) => "half-open",
+        }
+    }
+
+    /// How many nodes are currently not fully closed.
+    pub fn breakers_open(&self) -> usize {
+        self.breakers
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|b| b.state != BreakerState::Closed)
+            .count()
+    }
+
+    /// Total times any breaker transitioned to open.
+    pub fn breaker_opens(&self) -> u64 {
+        self.counters.breaker_opens.load(Ordering::Relaxed)
+    }
+
+    /// The resilience counters, for `barista stats`.
+    pub fn counters_json(&self) -> Json {
+        let c = &self.counters;
+        let mut j = Json::obj();
+        j.set("attempts", c.attempts.load(Ordering::Relaxed))
+            .set("retries", c.retries.load(Ordering::Relaxed))
+            .set("timeouts", c.timeouts.load(Ordering::Relaxed))
+            .set("connect_errors", c.connect_errors.load(Ordering::Relaxed))
+            .set("io_errors", c.io_errors.load(Ordering::Relaxed))
+            .set("protocol_errors", c.protocol_errors.load(Ordering::Relaxed))
+            .set("breaker_opens", c.breaker_opens.load(Ordering::Relaxed))
+            .set(
+                "breaker_fast_fails",
+                c.breaker_fast_fails.load(Ordering::Relaxed),
+            );
+        j
+    }
+}
+
+fn classify_io(addr: &str, stage: &str, e: std::io::Error) -> CallError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            CallError::Timeout(format!("{stage} {addr}: {e}"))
+        }
+        _ => CallError::Io(format!("{stage} {addr}: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(threshold: u32, cooldown_ms: u64) -> TransportPolicy {
+        TransportPolicy {
+            breaker_threshold: threshold,
+            breaker_cooldown: Duration::from_millis(cooldown_ms),
+            ..TransportPolicy::default()
+        }
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_consecutive_failures() {
+        let t = Transport::new(policy(3, 60_000));
+        assert!(t.breaker_is_closed("n"));
+        t.note_failure("n");
+        t.note_failure("n");
+        assert!(t.breaker_is_closed("n"), "2 strikes < threshold 3");
+        // A success in between resets the count entirely.
+        t.note_success("n");
+        t.note_failure("n");
+        t.note_failure("n");
+        assert!(t.breaker_is_closed("n"));
+        t.note_failure("n");
+        assert!(!t.breaker_is_closed("n"));
+        assert_eq!(t.breaker_state_name("n"), "open");
+        assert_eq!(t.breaker_opens(), 1);
+        assert_eq!(t.breakers_open(), 1);
+        // Open + long cooldown: fast-fail, no wire contact.
+        assert!(!t.admit("n"));
+    }
+
+    #[test]
+    fn breaker_half_open_admits_one_probe() {
+        let t = Transport::new(policy(1, 10));
+        t.note_failure("n");
+        assert_eq!(t.breaker_state_name("n"), "open");
+        std::thread::sleep(Duration::from_millis(20));
+        // Past cooldown: exactly one admit flips to half-open...
+        assert!(t.admit("n"));
+        assert_eq!(t.breaker_state_name("n"), "half-open");
+        assert!(!t.admit("n"), "half-open admits only the one probe");
+        // ...a failed probe re-opens, a successful one closes.
+        t.note_failure("n");
+        assert_eq!(t.breaker_state_name("n"), "open");
+        assert_eq!(t.breaker_opens(), 2);
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(t.admit("n"));
+        t.note_success("n");
+        assert!(t.breaker_is_closed("n"));
+    }
+
+    #[test]
+    fn call_to_unreachable_addr_counts_and_feeds_breaker() {
+        let t = Transport::new(TransportPolicy {
+            connect_timeout: Duration::from_millis(80),
+            retries: 1,
+            backoff: Duration::from_millis(1),
+            breaker_threshold: 1,
+            breaker_cooldown: Duration::from_secs(60),
+            ..TransportPolicy::default()
+        });
+        let mut req = Json::obj();
+        req.set("op", "health");
+        // Reserved TEST-NET-1 address: connects fail or time out fast.
+        let err = t.call("192.0.2.1:1", Verb::Health, &req).unwrap_err();
+        assert!(matches!(err, CallError::Connect(_) | CallError::Timeout(_)));
+        let c = t.counters_json();
+        assert_eq!(c.get("attempts").and_then(Json::as_u64), Some(2));
+        assert_eq!(c.get("retries").and_then(Json::as_u64), Some(1));
+        assert!(!t.breaker_is_closed("192.0.2.1:1"), "threshold 1 opens");
+        // Next call fast-fails without the connect wait.
+        let t0 = Instant::now();
+        assert!(matches!(
+            t.call("192.0.2.1:1", Verb::Health, &req),
+            Err(CallError::FastFail)
+        ));
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        assert_eq!(
+            t.counters_json()
+                .get("breaker_fast_fails")
+                .and_then(Json::as_u64),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn backoff_grows_and_stays_bounded() {
+        let t = Transport::new(TransportPolicy {
+            backoff: Duration::from_millis(10),
+            ..TransportPolicy::default()
+        });
+        let b0 = t.backoff("n", 0);
+        let b3 = t.backoff("n", 3);
+        assert!(b0 >= Duration::from_millis(10));
+        assert!(b3 >= Duration::from_millis(80));
+        assert!(t.backoff("n", 30) <= Duration::from_secs(2));
+        // Deterministic: same (addr, attempt) => same jitter.
+        assert_eq!(t.backoff("n", 2), t.backoff("n", 2));
+    }
+}

@@ -43,7 +43,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use barista::cli::Args;
-use barista::cluster::{PeerSet, RouterConfig, RouterServer, DEFAULT_ROUTER_ADDR};
+use barista::cluster::{PeerSet, RouterConfig, RouterServer, TransportPolicy, DEFAULT_ROUTER_ADDR};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{self, report, run_one, RunRequest};
 use barista::service::{
@@ -101,13 +101,16 @@ fn print_help() {
          \x20 serve     [--addr HOST:PORT] [--workers N] [--shards N] [--queue-cap N] [--cache-mb N]\n\
          \x20           [--cache-dir DIR]   (persistent result store; survives restarts)\n\
          \x20           [--peers A,B | --cluster ROUTER]   (consult peer stores before simulating)\n\
+         \x20           [--deadline-ms N] [--retries N] [--breaker-threshold N] [--breaker-cooldown-ms N]\n\
          \x20 submit    [--addr HOST:PORT | --cluster ROUTER] --network <name|file.json>\n\
          \x20           [--arch <name>] [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
+         \x20           [--deadline-ms N]   (per-response read deadline)\n\
          \x20 batch     [--addr HOST:PORT | --cluster ROUTER] [--networks a,b|all] [--archs x,y|fig7]\n\
-         \x20           [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
+         \x20           [--window-cap N] [--sparsity MODEL] [--json] [--stream] [--deadline-ms N]\n\
          \x20 stats     [ADDR | --addr HOST:PORT] [--json]   (server or router counters)\n\
          \x20 cluster-serve  --nodes A,B,C [--addr HOST:PORT] [--steal-threshold N]\n\
          \x20           [--vnodes N] [--health-ms N] [--no-replicate]\n\
+         \x20           [--deadline-ms N] [--retries N] [--breaker-threshold N] [--breaker-cooldown-ms N]\n\
          \x20 golden    [--artifacts DIR]\n\
          \x20 info      [--network <name|file.json>]\n\
          \n\
@@ -174,6 +177,47 @@ fn sized_opt(args: &Args, name: &str) -> Result<Option<usize>, String> {
         return Err(format!("--{name} must be >= 1"));
     }
     Ok(Some(v))
+}
+
+/// Apply the shared wire-policy flags (`--deadline-ms`, `--retries`,
+/// `--breaker-threshold`, `--breaker-cooldown-ms`) on top of `policy`.
+/// `--retries 0` is legitimate (fail fast), so it bypasses `sized_opt`.
+fn apply_policy_flags(args: &Args, policy: &mut TransportPolicy) -> Result<(), String> {
+    if let Some(v) = sized_opt(args, "deadline-ms")? {
+        let d = Duration::from_millis(v as u64);
+        policy.deadline = d;
+        policy.connect_timeout = d;
+    }
+    if args.get("retries").is_some() {
+        policy.retries = args.get_u64("retries", 0)? as u32;
+    }
+    if let Some(v) = sized_opt(args, "breaker-threshold")? {
+        policy.breaker_threshold = v as u32;
+    }
+    if let Some(v) = sized_opt(args, "breaker-cooldown-ms")? {
+        policy.breaker_cooldown = Duration::from_millis(v as u64);
+    }
+    Ok(())
+}
+
+/// In `chaos` builds, arm the process's fault plan from `FAULT_PLAN` /
+/// `FAULT_SEED`. Returns the plan to install (the caller knows which
+/// transport it owns); a malformed plan is a startup error, never a
+/// silently fault-free run.
+#[cfg(feature = "chaos")]
+fn chaos_plan() -> Result<Option<Arc<barista::cluster::fault::FaultPlan>>, String> {
+    match barista::cluster::fault::FaultPlan::from_env() {
+        Ok(Some(plan)) => {
+            eprintln!(
+                "chaos: FAULT_PLAN active (seed {}): {}",
+                plan.seed(),
+                plan.describe()
+            );
+            Ok(Some(Arc::new(plan)))
+        }
+        Ok(None) => Ok(None),
+        Err(e) => Err(format!("FAULT_PLAN: {e}")),
+    }
 }
 
 /// Scheduler sizing from the shared `--workers`/`--shards`/`--queue-cap`
@@ -427,6 +471,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             "cache-dir",
             "peers",
             "cluster",
+            "deadline-ms",
+            "retries",
+            "breaker-threshold",
+            "breaker-cooldown-ms",
         ],
         &[],
     )?;
@@ -443,6 +491,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Some(p) => format!(", dedup against {}", p.describe()),
         None => String::new(),
     };
+    #[cfg(feature = "chaos")]
+    if let Some(p) = &peers {
+        if let Some(plan) = chaos_plan()? {
+            p.install_faults(plan);
+        }
+    }
     let peers = peers.map(|p| Arc::new(p) as Arc<dyn PeerLookup>);
     let server =
         Server::bind_with_peers(addr, cfg, peers).map_err(|e| format!("bind {addr}: {e}"))?;
@@ -495,7 +549,15 @@ fn serve_peers(args: &Args, own_addr: &str) -> Result<Option<PeerSet>, String> {
     if addrs.is_empty() {
         return Ok(None);
     }
-    Ok(Some(PeerSet::new(addrs)))
+    let mut policy = TransportPolicy {
+        connect_timeout: PeerSet::DEFAULT_TIMEOUT,
+        deadline: PeerSet::DEFAULT_TIMEOUT,
+        // Lookup misses are cheap; the breaker handles repeat offenders.
+        retries: 0,
+        ..TransportPolicy::default()
+    };
+    apply_policy_flags(args, &mut policy)?;
+    Ok(Some(PeerSet::with_policy(addrs, policy)))
 }
 
 fn cmd_stats(args: &Args) -> Result<(), String> {
@@ -532,6 +594,9 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
         if let Some(st) = s.get("store") {
             println!("  cold tier: {}", st.to_string());
         }
+        if let Some(p) = resp.get("peers") {
+            println!("  peers:     {}", p.to_string());
+        }
     }
     if let Some(r) = resp.get("router") {
         let n = |k: &str| r.get(k).and_then(Json::as_u64).unwrap_or(0);
@@ -545,6 +610,24 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
             n("replicate_errors"),
             n("dead_marks"),
         );
+        let t = |k: &str| {
+            r.get("transport")
+                .and_then(|x| x.get(k))
+                .and_then(Json::as_u64)
+                .unwrap_or(0)
+        };
+        println!(
+            "  resilience: {} stale hits, {} degraded responses; wire {} attempts, {} retries, {} timeouts, {} connect errors, {} protocol errors, {} breaker opens ({} fast-fails)",
+            n("stale_hits"),
+            n("degraded_responses"),
+            t("attempts"),
+            t("retries"),
+            t("timeouts"),
+            t("connect_errors"),
+            t("protocol_errors"),
+            t("breaker_opens"),
+            t("breaker_fast_fails"),
+        );
         if let Some(nodes) = r.get("nodes").and_then(Json::as_arr) {
             for node in nodes {
                 println!("  node {}", node.to_string());
@@ -556,7 +639,17 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
 
 fn cmd_cluster_serve(args: &Args) -> Result<(), String> {
     args.finish(
-        &["addr", "nodes", "steal-threshold", "vnodes", "health-ms"],
+        &[
+            "addr",
+            "nodes",
+            "steal-threshold",
+            "vnodes",
+            "health-ms",
+            "deadline-ms",
+            "retries",
+            "breaker-threshold",
+            "breaker-cooldown-ms",
+        ],
         &["no-replicate"],
     )?;
     let addr = args.get_or("addr", DEFAULT_ROUTER_ADDR);
@@ -580,14 +673,27 @@ fn cmd_cluster_serve(args: &Args) -> Result<(), String> {
     if args.flag("no-replicate") {
         cfg.replicate = false;
     }
+    apply_policy_flags(args, &mut cfg.policy)?;
     let (n, steal, replicate) = (cfg.nodes.len(), cfg.steal_threshold, cfg.replicate);
     let server = RouterServer::bind(addr, cfg)?;
+    #[cfg(feature = "chaos")]
+    if let Some(plan) = chaos_plan()? {
+        server.router().install_faults(plan);
+    }
     println!(
         "barista cluster-serve: router on {} over {n} nodes (steal threshold {steal}, replication {})",
         server.local_addr(),
         if replicate { "on" } else { "off" }
     );
     server.run().map_err(|e| format!("cluster-serve: {e}"))
+}
+
+/// Client for `submit`/`batch`: bounded connect, plus a read deadline
+/// when `--deadline-ms` caps how long the caller will wait per frame.
+fn client_with_deadline(args: &Args, addr: &str) -> Result<Client, String> {
+    let read_deadline =
+        sized_opt(args, "deadline-ms")?.map(|ms| Duration::from_millis(ms as u64));
+    Client::connect_with(addr, Duration::from_secs(5), read_deadline)
 }
 
 /// Build a `JobSpec` from the shared job options.
@@ -629,6 +735,7 @@ fn cmd_submit(args: &Args) -> Result<(), String> {
     args.finish(
         &[
             "addr", "cluster", "network", "arch", "window-cap", "batch", "seed", "sparsity",
+            "deadline-ms",
         ],
         &["json", "stream"],
     )?;
@@ -637,7 +744,7 @@ fn cmd_submit(args: &Args) -> Result<(), String> {
         .get("cluster")
         .unwrap_or(args.get_or("addr", DEFAULT_ADDR));
     let spec = job_from_args(args)?;
-    let mut client = Client::connect(addr)?;
+    let mut client = client_with_deadline(args, addr)?;
     let resp = if args.flag("stream") {
         // Streaming: the server acks (with the job's content address)
         // before the seconds-long simulation, then sends the result.
@@ -686,6 +793,7 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
     args.finish(
         &[
             "addr", "cluster", "networks", "archs", "window-cap", "batch", "seed", "sparsity",
+            "deadline-ms",
         ],
         &["json", "stream"],
     )?;
@@ -703,7 +811,7 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
             config: r.config,
         })
         .collect();
-    let mut client = Client::connect(addr)?;
+    let mut client = client_with_deadline(args, addr)?;
     let t0 = Instant::now();
     if args.flag("stream") {
         // Streaming: per-job lines print as each completes (completion

@@ -24,9 +24,20 @@
 //! {"op":"peer-get","job":{...}}           → {"ok":true,"op":"peer-get","found":bool[,"payload":"<record>"]}
 //! {"op":"replicate","key":"<32 hex>","payload":"<record>"}
 //!                                         → {"ok":true,"op":"replicate","stored":bool}
-//! {"op":"health"}                         → {"ok":true,"op":"health","queued":N,"workers":N}
+//! {"op":"health"}                         → {"ok":true,"op":"health","queued":N,"workers":N[,"peers":{...}]}
 //! {"op":"nodes"}                          → {"ok":true,"op":"nodes","nodes":[addr,...]}  (router only)
 //! ```
+//!
+//! Degradation (router only): when a key's ring owner *and* replica
+//! are both unreachable, the router first tries a best-effort stale
+//! read from any node's store — a successful rescue is an ordinary
+//! `ok:true` submit response tagged `"source":"stale"` — and otherwise
+//! answers `{"ok":false,"error":...,"degraded":true}`
+//! ([`response_degraded`]) so clients can tell cluster distress from a
+//! malformed request. The optional `health.peers` object is the
+//! serving node's peer-lookup resilience summary (hit/miss/error
+//! counts, open breakers, transport counters): routers use it to judge
+//! *capacity*, not just liveness.
 //!
 //! `peer-get` answers with the journal-format record
 //! ([`store::encode_record`](crate::service::store::encode_record)) so
@@ -300,6 +311,17 @@ pub fn event_is_terminal(j: &Json) -> bool {
 pub fn response_error(msg: &str) -> Json {
     let mut j = Json::obj();
     j.set("ok", false).set("error", msg);
+    j
+}
+
+/// Degraded-mode response: the cluster could not serve the request
+/// fresh (ring owner and replica both unreachable) and had no stale
+/// copy either. Carries `"degraded":true` so clients can distinguish
+/// "the cluster is limping" from a plain protocol error and decide to
+/// retry later rather than fix their request.
+pub fn response_degraded(msg: &str) -> Json {
+    let mut j = response_error(msg);
+    j.set("degraded", true);
     j
 }
 

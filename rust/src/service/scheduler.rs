@@ -113,6 +113,12 @@ pub trait PeerLookup: Send + Sync {
     fn describe(&self) -> String {
         "peers".into()
     }
+    /// Resilience counters for `stats`/`health` frames, when the
+    /// implementation has any (the wire-backed `PeerSet` does;
+    /// in-process test stubs keep the `None` default).
+    fn stats_json(&self) -> Option<Json> {
+        None
+    }
 }
 
 /// The scheduler's [`Route`]: content key → in-process shard queue by
@@ -301,6 +307,7 @@ pub struct Scheduler {
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     queue_cap: usize,
     workers: usize,
+    peers: Option<Arc<dyn PeerLookup>>,
 }
 
 impl Scheduler {
@@ -360,7 +367,14 @@ impl Scheduler {
             handles: Mutex::new(handles),
             queue_cap: cfg.queue_cap,
             workers,
+            peers,
         }
+    }
+
+    /// Peer-dedup resilience counters (cluster mode), if the installed
+    /// peer hook exposes any.
+    pub fn peers_stats_json(&self) -> Option<Json> {
+        self.peers.as_ref().and_then(|p| p.stats_json())
     }
 
     /// Submit without blocking on execution: either an immediate cached

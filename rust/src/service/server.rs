@@ -13,10 +13,10 @@
 //! everything else keeps the one-line-per-request contract.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::service::cache::job_key;
 use crate::service::protocol::{self, JobSpec, Request};
@@ -113,6 +113,81 @@ impl Server {
     }
 }
 
+/// Upper bound on one request line. Beyond it the rest of the line is
+/// drained and answered with a structured error instead of buffering
+/// attacker-controlled bytes without limit. Generous: the largest
+/// legitimate frames (custom-network batch submits) are a few KiB.
+pub(crate) const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// One bounded, lossy line read (see [`read_bounded_line`]).
+pub(crate) enum LineRead {
+    /// A complete line (newline stripped, lossy UTF-8).
+    Line(String),
+    /// The line exceeded the bound; it was consumed through its
+    /// newline and its total byte length is reported.
+    TooLong(usize),
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes.
+///
+/// Replaces `BufRead::lines()` on server connections, fixing two
+/// robustness holes the fuzz suite pokes at: an unbounded line no
+/// longer grows server memory (it is drained and reported as
+/// [`LineRead::TooLong`]), and invalid UTF-8 no longer kills the
+/// connection — it is replaced lossily and flows into the JSON parser,
+/// which answers with an ordinary structured error. A final unliney
+/// fragment at EOF is surfaced once, then [`LineRead::Eof`].
+pub(crate) fn read_bounded_line<R: BufRead>(
+    reader: &mut R,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut dropped = 0usize;
+    loop {
+        let (used, terminated) = {
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if chunk.is_empty() {
+                if buf.is_empty() && dropped == 0 {
+                    return Ok(LineRead::Eof);
+                }
+                // Torn final line: EOF acts as the terminator.
+                (0, true)
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        let take = pos.min(max.saturating_sub(buf.len()));
+                        buf.extend_from_slice(&chunk[..take]);
+                        dropped += pos - take;
+                        (pos + 1, true)
+                    }
+                    None => {
+                        let take = chunk.len().min(max.saturating_sub(buf.len()));
+                        buf.extend_from_slice(&chunk[..take]);
+                        dropped += chunk.len() - take;
+                        (chunk.len(), false)
+                    }
+                }
+            }
+        };
+        reader.consume(used);
+        if terminated {
+            if dropped > 0 {
+                return Ok(LineRead::TooLong(buf.len() + dropped));
+            }
+            let mut line = String::from_utf8_lossy(&buf).into_owned();
+            if line.ends_with('\r') {
+                line.pop();
+            }
+            return Ok(LineRead::Line(line));
+        }
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     scheduler: &Scheduler,
@@ -121,10 +196,23 @@ fn handle_conn(
     started: Instant,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone()?);
+    // Bounded writes: a client that stops reading cannot wedge this
+    // thread forever mid-response.
+    stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    loop {
+        let line = match read_bounded_line(&mut reader, MAX_LINE_BYTES)? {
+            LineRead::Eof => break,
+            LineRead::TooLong(n) => {
+                let resp = protocol::response_error(&format!(
+                    "request line too long ({n} bytes; max {MAX_LINE_BYTES})"
+                ));
+                emit_line(&mut writer, &resp)?;
+                continue;
+            }
+            LineRead::Line(l) => l,
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -190,6 +278,9 @@ fn respond_parsed(
             j.set("ok", true)
                 .set("op", "stats")
                 .set("scheduler", scheduler.stats().to_json());
+            if let Some(peers) = scheduler.peers_stats_json() {
+                j.set("peers", peers);
+            }
             (j, false)
         }
         Ok(Request::PeerGet { spec }) => (peer_get_response(scheduler, &spec), false),
@@ -205,12 +296,17 @@ fn respond_parsed(
             (resp, false)
         }
         Ok(Request::Health) => {
+            // Queue depth + (in cluster mode) peer breaker state, so a
+            // router's health loop can tell "busy" from "dying".
             let stats = scheduler.stats();
             let mut j = Json::obj();
             j.set("ok", true)
                 .set("op", "health")
                 .set("queued", stats.queued)
                 .set("workers", stats.workers);
+            if let Some(peers) = scheduler.peers_stats_json() {
+                j.set("peers", peers);
+            }
             (j, false)
         }
         Ok(Request::Nodes) => (
@@ -393,18 +489,44 @@ pub struct Client {
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client, String> {
-        let stream =
-            TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
-        stream.set_nodelay(true).ok();
-        let reader = BufReader::new(
-            stream
-                .try_clone()
-                .map_err(|e| format!("clone stream: {e}"))?,
-        );
-        Ok(Client {
-            reader,
-            writer: stream,
-        })
+        // Bounded connect + write deadline; reads stay unbounded by
+        // default (a batch legitimately blocks for its whole runtime).
+        // `barista submit/batch --deadline-ms` adds a read deadline.
+        Client::connect_with(addr, Duration::from_secs(5), None)
+    }
+
+    /// Connect with an explicit connect bound and an optional read
+    /// deadline. Writes always carry a deadline so a wedged server
+    /// cannot stall the send side.
+    pub fn connect_with(
+        addr: &str,
+        connect_bound: Duration,
+        read_deadline: Option<Duration>,
+    ) -> Result<Client, String> {
+        let mut last = format!("resolve {addr}: no addresses");
+        let addrs = addr
+            .to_socket_addrs()
+            .map_err(|e| format!("resolve {addr}: {e}"))?;
+        for sa in addrs {
+            match TcpStream::connect_timeout(&sa, connect_bound) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(read_deadline).ok();
+                    stream.set_write_timeout(Some(Duration::from_secs(30))).ok();
+                    let reader = BufReader::new(
+                        stream
+                            .try_clone()
+                            .map_err(|e| format!("clone stream: {e}"))?,
+                    );
+                    return Ok(Client {
+                        reader,
+                        writer: stream,
+                    });
+                }
+                Err(e) => last = format!("connect {sa}: {e}"),
+            }
+        }
+        Err(last)
     }
 
     /// Connect with a bound on the connect itself and on subsequent
@@ -534,5 +656,54 @@ impl Client {
 
     pub fn shutdown(&mut self) -> Result<Json, String> {
         self.roundtrip(&Request::Shutdown.to_json())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{read_bounded_line, LineRead};
+    use std::io::Cursor;
+
+    fn read_all(input: &[u8], max: usize) -> Vec<String> {
+        let mut reader = Cursor::new(input.to_vec());
+        let mut out = Vec::new();
+        loop {
+            match read_bounded_line(&mut reader, max).unwrap() {
+                LineRead::Eof => break,
+                LineRead::Line(l) => out.push(format!("line:{l}")),
+                LineRead::TooLong(n) => out.push(format!("toolong:{n}")),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn bounded_reader_splits_lines_and_surfaces_final_fragment() {
+        assert_eq!(
+            read_all(b"abc\ndef\nxyz", 64),
+            vec!["line:abc", "line:def", "line:xyz"]
+        );
+        assert_eq!(read_all(b"", 64), Vec::<String>::new());
+        assert_eq!(read_all(b"\n\n", 64), vec!["line:", "line:"]);
+        assert_eq!(read_all(b"a\r\nb", 64), vec!["line:a", "line:b"]);
+    }
+
+    #[test]
+    fn bounded_reader_drains_oversized_lines() {
+        // 10-byte line against a 4-byte bound: reported with its full
+        // length, fully consumed, and the next line still parses.
+        assert_eq!(
+            read_all(b"xxxxxxxxxx\nok\n", 4),
+            vec!["toolong:10", "line:ok"]
+        );
+    }
+
+    #[test]
+    fn bounded_reader_is_lossy_not_fatal_on_bad_utf8() {
+        let out = read_all(b"\xff\xfe{junk\nok\n", 64);
+        assert_eq!(out.len(), 2);
+        assert!(out[0].starts_with("line:"), "{out:?}");
+        assert!(out[0].contains("{junk"), "{out:?}");
+        assert_eq!(out[1], "line:ok");
     }
 }

@@ -1,0 +1,615 @@
+//! Seeded chaos harness: scripted wire-fault plans against a live
+//! 3-node cluster (`cargo test --release --test chaos --features chaos`,
+//! or `make test-chaos`).
+//!
+//! Every test boots real store-backed worker nodes on ephemeral ports,
+//! points a router at them, installs a [`FaultPlan`] keyed on
+//! `FAULT_SEED` (default below; CI rotates it nightly), and drives
+//! dispatches through the *production* transport — faults are injected
+//! inside `Transport::attempt_once`, not mocked around it. The
+//! invariants, for **any** seed:
+//!
+//! * every dispatch returns a frame — byte-identical to a direct
+//!   `run_one` when `ok:true`, a structured `degraded` error otherwise;
+//!   never a hang (each test runs under a watchdog), never a panic;
+//! * exact counter accounting: injected drops == transport
+//!   `connect_errors`, injected black holes == `timeouts`, injected
+//!   truncations == `protocol_errors`; delays and duplicates produce
+//!   no errors at all.
+//!
+//! Reproduce a failed nightly run with
+//! `FAULT_SEED=<seed from the CI log> make test-chaos`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use barista::cluster::fault::{FaultKind, FaultPlan};
+use barista::cluster::{
+    HashRing, NodeId, Route, Router, RouterConfig, RouterServer, TransportPolicy,
+};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::service::{job_key, Client, JobSpec, SchedulerConfig, Server, Store};
+use barista::util::{scratch_dir, Json};
+use barista::workload::Benchmark;
+
+type NodeHandle = std::thread::JoinHandle<std::io::Result<()>>;
+
+/// The plan seed: `FAULT_SEED` env (CI nightly rotates it) or a fixed
+/// default so plain `make test-chaos` is reproducible.
+fn fault_seed() -> u64 {
+    match std::env::var("FAULT_SEED") {
+        Err(_) => 0xBA12_157A,
+        Ok(s) => s
+            .parse()
+            .unwrap_or_else(|e| panic!("FAULT_SEED='{s}' must be a decimal integer: {e}")),
+    }
+}
+
+/// Abort the whole process if a chaos scenario wedges: "never hangs" is
+/// an assertion here, not a hope. Disarmed on drop.
+struct Watchdog {
+    armed: Arc<AtomicBool>,
+}
+
+impl Watchdog {
+    fn arm(tag: &'static str, limit: Duration) -> Watchdog {
+        let armed = Arc::new(AtomicBool::new(true));
+        let flag = armed.clone();
+        std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            while t0.elapsed() < limit {
+                std::thread::sleep(Duration::from_millis(200));
+                if !flag.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            if flag.load(Ordering::SeqCst) {
+                eprintln!(
+                    "watchdog: chaos test '{tag}' still running after {limit:?} \
+                     (seed {}) — aborting",
+                    fault_seed()
+                );
+                std::process::exit(101);
+            }
+        });
+        Watchdog { armed }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.armed.store(false, Ordering::SeqCst);
+    }
+}
+
+fn small_spec(seed: u64) -> JobSpec {
+    let mut c = SimConfig::paper(ArchKind::Dense);
+    c.window_cap = 16;
+    c.batch = 1;
+    c.seed = seed;
+    JobSpec {
+        benchmark: Benchmark::AlexNet,
+        config: c,
+    }
+}
+
+/// Reference bytes: what a fresh single-process simulation returns.
+fn direct(spec: &JobSpec) -> String {
+    run_one(&RunRequest {
+        benchmark: spec.benchmark,
+        config: spec.config.clone(),
+    })
+    .network
+    .to_json()
+    .to_string()
+}
+
+/// One store-backed worker node on an ephemeral port.
+fn spawn_store_node(tag: &str) -> (String, std::path::PathBuf, NodeHandle) {
+    let dir = scratch_dir(tag);
+    let store = Arc::new(Store::open_with(&dir, false).expect("open store"));
+    let cfg = SchedulerConfig {
+        workers: 2,
+        shards: 2,
+        queue_cap: 64,
+        cache_bytes: 16 << 20,
+        store: Some(store),
+    };
+    let (addr, handle) = Server::spawn("127.0.0.1:0", cfg).expect("spawn node");
+    (addr.to_string(), dir, handle)
+}
+
+fn field(j: &Json, k: &str) -> u64 {
+    j.get(k)
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("field {k} in {j:?}"))
+}
+
+/// A 3-node cluster with an in-process router (no router TCP front end:
+/// the tests script `dispatch`/`health_pass` directly for exact attempt
+/// accounting) and an installed, initially-empty fault plan whose rules
+/// target the stable labels `node0`/`node1`/`node2`.
+struct Chaos {
+    addrs: Vec<String>,
+    dirs: Vec<std::path::PathBuf>,
+    handles: Vec<NodeHandle>,
+    router: Router,
+    plan: Arc<FaultPlan>,
+}
+
+impl Chaos {
+    fn boot(tag: &str, policy: TransportPolicy, steal_threshold: usize) -> Chaos {
+        let nodes: Vec<_> = (0..3)
+            .map(|i| spawn_store_node(&format!("{tag}-{i}")))
+            .collect();
+        let addrs: Vec<String> = nodes.iter().map(|(a, _, _)| a.clone()).collect();
+        let mut dirs = Vec::new();
+        let mut handles = Vec::new();
+        for (_, d, h) in nodes {
+            dirs.push(d);
+            handles.push(h);
+        }
+        let router = Router::new(RouterConfig {
+            nodes: addrs.clone(),
+            steal_threshold,
+            // No background health monitor: tests that need probes call
+            // health_pass() themselves, so attempt counters are exact.
+            health_interval: Duration::from_secs(3600),
+            policy,
+            ..RouterConfig::default()
+        })
+        .expect("router");
+        let plan = Arc::new(FaultPlan::new(fault_seed()));
+        for (i, a) in addrs.iter().enumerate() {
+            plan.alias(a, &format!("node{i}"));
+        }
+        router.install_faults(plan.clone());
+        Chaos {
+            addrs,
+            dirs,
+            handles,
+            router,
+            plan,
+        }
+    }
+
+    fn transport_counter(&self, k: &str) -> u64 {
+        field(&self.router.transport().counters_json(), k)
+    }
+
+    /// Every frame must be a clean outcome: `ok:true` byte-identical to
+    /// the reference, or a structured degraded error.
+    fn check_frame(&self, resp: &Json, reference: &str) {
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            assert_eq!(
+                resp.get("result").expect("result field").to_string(),
+                reference,
+                "served result must be byte-identical: {resp:?}"
+            );
+        } else {
+            assert_eq!(
+                resp.get("degraded").and_then(Json::as_bool),
+                Some(true),
+                "a total failure must be a structured degraded frame: {resp:?}"
+            );
+            assert!(
+                resp.get("error").and_then(Json::as_str).is_some(),
+                "{resp:?}"
+            );
+        }
+    }
+
+    fn teardown(self) {
+        for addr in &self.addrs {
+            if let Ok(mut c) = Client::connect(addr) {
+                let _ = c.shutdown();
+            }
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+        for d in self.dirs {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}
+
+/// Specs split by ring ownership, mirroring the router's ring exactly
+/// (same member ids, same vnode count).
+fn specs_by_owner(seed_base: u64, owned_by_node0: usize, others: usize) -> Vec<JobSpec> {
+    let members = [NodeId(0), NodeId(1), NodeId(2)];
+    let ring = HashRing::new(&members, HashRing::DEFAULT_VNODES);
+    let mut owned = Vec::new();
+    let mut rest = Vec::new();
+    let mut seed = seed_base;
+    while owned.len() < owned_by_node0 || rest.len() < others {
+        let spec = small_spec(seed);
+        seed += 1;
+        let owner = ring.route(&job_key(&spec.to_request())).index();
+        if owner == 0 && owned.len() < owned_by_node0 {
+            owned.push(spec);
+        } else if owner != 0 && rest.len() < others {
+            rest.push(spec);
+        }
+        assert!(seed < seed_base + 10_000, "ring never yielded enough keys");
+    }
+    // Interleave so owned keys are hit throughout the run, not first.
+    let mut out = Vec::new();
+    let mut o = owned.into_iter();
+    let mut r = rest.into_iter();
+    loop {
+        match (o.next(), r.next()) {
+            (None, None) => break,
+            (a, b) => {
+                out.extend(a);
+                out.extend(b);
+            }
+        }
+    }
+    out
+}
+
+/// Dropped connections are absorbed by retries: every frame clean, and
+/// every injected drop shows up as exactly one connect error.
+#[test]
+fn dropped_connections_retry_with_exact_accounting() {
+    let _wd = Watchdog::arm("drops", Duration::from_secs(300));
+    let c = Chaos::boot(
+        "chaos-drop",
+        TransportPolicy {
+            retries: 3,
+            backoff: Duration::from_millis(2),
+            // Never open a breaker: this test isolates the retry path.
+            breaker_threshold: 1000,
+            ..TransportPolicy::default()
+        },
+        1 << 20,
+    );
+    c.plan.add_rate(FaultKind::Drop, Some("submit"), None, 0.25);
+    for i in 0..10 {
+        let spec = small_spec(1000 + i);
+        let resp = c.router.dispatch(&spec);
+        c.check_frame(&resp, &direct(&spec));
+    }
+    assert_eq!(
+        c.transport_counter("connect_errors"),
+        c.plan.injected(FaultKind::Drop),
+        "every injected drop is one connect error, nothing else"
+    );
+    assert_eq!(c.transport_counter("timeouts"), 0);
+    assert_eq!(c.transport_counter("protocol_errors"), 0);
+    assert_eq!(c.transport_counter("breaker_opens"), 0);
+    c.teardown();
+}
+
+/// Added latency is transparent: no retries configured, no errors
+/// counted, every result still byte-identical.
+#[test]
+fn delays_are_transparent_and_error_free() {
+    let _wd = Watchdog::arm("delays", Duration::from_secs(300));
+    let c = Chaos::boot(
+        "chaos-delay",
+        TransportPolicy {
+            retries: 0,
+            ..TransportPolicy::default()
+        },
+        1 << 20,
+    );
+    c.plan.add_rate(FaultKind::Delay, Some("submit"), None, 1.0);
+    for i in 0..5 {
+        let spec = small_spec(2000 + i);
+        let resp = c.router.dispatch(&spec);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        assert_eq!(resp.get("result").unwrap().to_string(), direct(&spec));
+    }
+    assert_eq!(c.plan.injected(FaultKind::Delay), 5);
+    for k in ["timeouts", "connect_errors", "io_errors", "protocol_errors"] {
+        assert_eq!(c.transport_counter(k), 0, "{k}");
+    }
+    c.teardown();
+}
+
+/// Torn response frames are protocol errors absorbed by retries (the
+/// job already ran server-side, so the retry is a cache hit).
+#[test]
+fn truncated_frames_are_protocol_errors_absorbed_by_retries() {
+    let _wd = Watchdog::arm("truncate", Duration::from_secs(300));
+    let c = Chaos::boot(
+        "chaos-trunc",
+        TransportPolicy {
+            retries: 3,
+            backoff: Duration::from_millis(2),
+            breaker_threshold: 1000,
+            ..TransportPolicy::default()
+        },
+        1 << 20,
+    );
+    c.plan.add_rate(FaultKind::Truncate, Some("submit"), None, 0.3);
+    for i in 0..10 {
+        let spec = small_spec(3000 + i);
+        let resp = c.router.dispatch(&spec);
+        c.check_frame(&resp, &direct(&spec));
+    }
+    assert_eq!(
+        c.transport_counter("protocol_errors"),
+        c.plan.injected(FaultKind::Truncate),
+        "every torn frame is one protocol error"
+    );
+    assert_eq!(c.transport_counter("connect_errors"), 0);
+    assert_eq!(c.transport_counter("timeouts"), 0);
+    c.teardown();
+}
+
+/// A black-holed node: first contact times out once, the breaker opens,
+/// and every later job fails over without touching the dead node again.
+#[test]
+fn black_holed_node_opens_breaker_and_fails_over() {
+    let _wd = Watchdog::arm("blackhole", Duration::from_secs(300));
+    let c = Chaos::boot(
+        "chaos-bh",
+        TransportPolicy {
+            retries: 0,
+            breaker_threshold: 1,
+            breaker_cooldown: Duration::from_secs(600),
+            ..TransportPolicy::default()
+        },
+        1 << 20,
+    );
+    c.plan
+        .add_rate(FaultKind::BlackHole, Some("submit"), Some("node0"), 1.0);
+    let specs = specs_by_owner(4000, 4, 8);
+    let owned = specs
+        .iter()
+        .filter(|s| {
+            let members = [NodeId(0), NodeId(1), NodeId(2)];
+            let ring = HashRing::new(&members, HashRing::DEFAULT_VNODES);
+            ring.route(&job_key(&s.to_request())).index() == 0
+        })
+        .count();
+    assert_eq!(owned, 4);
+    for spec in &specs {
+        let resp = c.router.dispatch(spec);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+        assert_eq!(resp.get("result").unwrap().to_string(), direct(spec));
+    }
+    // One timeout total: node0 was contacted exactly once, then its
+    // open breaker kept it out of every later preference order.
+    assert_eq!(c.plan.injected(FaultKind::BlackHole), 1);
+    assert_eq!(c.transport_counter("timeouts"), 1);
+    assert_eq!(c.transport_counter("breaker_opens"), 1);
+    let stats = c.router.stats_json();
+    assert_eq!(field(&stats, "failovers"), owned as u64, "{stats:?}");
+    assert_eq!(field(&stats, "steals"), 0);
+    assert_eq!(field(&stats, "replicate_errors"), 0);
+    let nodes = stats.get("nodes").and_then(Json::as_arr).unwrap();
+    assert_eq!(field(&nodes[0], "served"), 0, "{nodes:?}");
+    assert_eq!(nodes[0].get("alive").and_then(Json::as_bool), Some(false));
+    assert_eq!(nodes[0].get("breaker").and_then(Json::as_str), Some("open"));
+    c.teardown();
+}
+
+/// Total submit outage: a previously computed key is rescued stale from
+/// a node's store (tagged `"source":"stale"`); an uncomputed key gets a
+/// clean `degraded` error — and neither path hangs or panics.
+#[test]
+fn total_outage_serves_stale_then_degrades() {
+    let _wd = Watchdog::arm("stale", Duration::from_secs(300));
+    let c = Chaos::boot(
+        "chaos-stale",
+        TransportPolicy {
+            retries: 0,
+            breaker_threshold: 1,
+            breaker_cooldown: Duration::from_secs(600),
+            ..TransportPolicy::default()
+        },
+        1 << 20,
+    );
+    // Warm one key while the wire is healthy.
+    let warm = small_spec(5000);
+    let warm_bytes = direct(&warm);
+    let resp = c.router.dispatch(&warm);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    // Now black-hole every submit, everywhere.
+    c.plan.add_rate(FaultKind::BlackHole, Some("submit"), None, 1.0);
+    let resp = c.router.dispatch(&warm);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_eq!(
+        resp.get("source").and_then(Json::as_str),
+        Some("stale"),
+        "a rescued result must be marked stale: {resp:?}"
+    );
+    assert_eq!(resp.get("result").unwrap().to_string(), warm_bytes);
+    let stats = c.router.stats_json();
+    assert_eq!(field(&stats, "stale_hits"), 1);
+    assert_eq!(c.plan.injected(FaultKind::BlackHole), 3, "one per node");
+    assert_eq!(c.transport_counter("timeouts"), 3);
+    assert_eq!(c.transport_counter("breaker_opens"), 3);
+    // A fresh key: every breaker is open (fast-fails, no new wire
+    // contact) and no node holds a copy — the structured degraded path.
+    let fresh = small_spec(5001);
+    let resp = c.router.dispatch(&fresh);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp:?}");
+    assert_eq!(resp.get("degraded").and_then(Json::as_bool), Some(true));
+    let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(err.contains("no node could serve"), "{resp:?}");
+    let stats = c.router.stats_json();
+    assert_eq!(field(&stats, "degraded_responses"), 1);
+    assert_eq!(c.transport_counter("breaker_fast_fails"), 3);
+    assert_eq!(c.plan.injected(FaultKind::BlackHole), 3, "no new injections");
+    c.teardown();
+}
+
+/// Duplicated request frames over the full TCP path (client → router
+/// server → nodes): absorbed by content-addressed idempotency — each
+/// distinct job executes exactly once cluster-wide.
+#[test]
+fn duplicated_requests_are_idempotent_over_the_wire() {
+    let _wd = Watchdog::arm("duplicate", Duration::from_secs(300));
+    let nodes: Vec<_> = (0..3)
+        .map(|i| spawn_store_node(&format!("chaos-dup-{i}")))
+        .collect();
+    let addrs: Vec<String> = nodes.iter().map(|(a, _, _)| a.clone()).collect();
+    let server = RouterServer::bind(
+        "127.0.0.1:0",
+        RouterConfig {
+            nodes: addrs.clone(),
+            steal_threshold: 1 << 20,
+            health_interval: Duration::from_secs(3600),
+            policy: TransportPolicy {
+                retries: 0,
+                breaker_threshold: 100,
+                ..TransportPolicy::default()
+            },
+            ..RouterConfig::default()
+        },
+    )
+    .expect("bind router");
+    let raddr = server.local_addr().to_string();
+    let plan = Arc::new(FaultPlan::new(fault_seed()));
+    for (i, a) in addrs.iter().enumerate() {
+        plan.alias(a, &format!("node{i}"));
+    }
+    plan.add_rate(FaultKind::Duplicate, Some("submit"), None, 1.0);
+    server.router().install_faults(plan.clone());
+    let rhandle = std::thread::spawn(move || server.run());
+
+    let specs: Vec<JobSpec> = (0..8).map(|i| small_spec(6000 + i)).collect();
+    let mut client = Client::connect(&raddr).expect("connect router");
+    let resp = client.batch(&specs).expect("batch");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    let results = resp.get("results").and_then(Json::as_arr).unwrap();
+    assert_eq!(results.len(), specs.len());
+    for (spec, r) in specs.iter().zip(results) {
+        assert_eq!(r.get("result").unwrap().to_string(), direct(spec));
+    }
+    assert_eq!(plan.injected(FaultKind::Duplicate), 8, "one per dispatch");
+    let stats = client.stats().expect("stats");
+    let router = stats.get("router").expect("router section");
+    assert_eq!(field(router, "routed"), 8);
+    // Idempotency: each distinct job executed exactly once across the
+    // cluster — every duplicate resolved from the dedup/cache layers.
+    let executed: u64 = addrs
+        .iter()
+        .map(|a| {
+            let mut c = Client::connect(a).expect("connect node");
+            let s = c.stats().expect("node stats");
+            field(s.get("scheduler").expect("scheduler"), "executed")
+        })
+        .sum();
+    assert_eq!(executed, 8, "duplicates must not re-execute jobs");
+
+    let _ = client.shutdown();
+    let _ = rhandle.join();
+    for (addr, dir, handle) in nodes {
+        if let Ok(mut c) = Client::connect(&addr) {
+            let _ = c.shutdown();
+        }
+        let _ = handle.join();
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+/// Regression (the old one-strike `alive` flag): a single slow health
+/// probe must NOT mark a node dead — it keeps serving its keys, and
+/// only `breaker_threshold` consecutive probe failures open the
+/// breaker.
+#[test]
+fn one_slow_probe_does_not_kill_a_node() {
+    let _wd = Watchdog::arm("slow-probe", Duration::from_secs(300));
+    let c = Chaos::boot(
+        "chaos-probe",
+        TransportPolicy {
+            retries: 0,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_secs(600),
+            ..TransportPolicy::default()
+        },
+        1 << 20,
+    );
+    // Exactly the first health probe of node0 is black-holed.
+    c.plan.force(FaultKind::BlackHole, "health", "node0", 0, 1);
+    c.router.health_pass();
+    assert_eq!(c.transport_counter("timeouts"), 1);
+    let stats = c.router.stats_json();
+    let nodes = stats.get("nodes").and_then(Json::as_arr).unwrap();
+    assert_eq!(
+        nodes[0].get("alive").and_then(Json::as_bool),
+        Some(true),
+        "one failed probe of three must not mark the node dead: {nodes:?}"
+    );
+    assert_eq!(nodes[0].get("breaker").and_then(Json::as_str), Some("closed"));
+    // The node still receives (and serves) its own keys.
+    let spec = specs_by_owner(7000, 1, 0).remove(0);
+    let reference = direct(&spec);
+    let resp = c.router.dispatch(&spec);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_eq!(
+        resp.get("node").and_then(Json::as_str),
+        Some(c.addrs[0].as_str()),
+        "the owner must keep serving after one slow probe: {resp:?}"
+    );
+    assert_eq!(resp.get("result").unwrap().to_string(), reference);
+    assert_eq!(field(&c.router.stats_json(), "failovers"), 0);
+    // Three *consecutive* probe failures do open it.
+    c.plan.force(FaultKind::BlackHole, "health", "node0", 1, 100);
+    for _ in 0..3 {
+        c.router.health_pass();
+    }
+    assert_eq!(c.transport_counter("breaker_opens"), 1);
+    let stats = c.router.stats_json();
+    let nodes = stats.get("nodes").and_then(Json::as_arr).unwrap();
+    assert_eq!(nodes[0].get("alive").and_then(Json::as_bool), Some(false));
+    assert_eq!(nodes[0].get("breaker").and_then(Json::as_str), Some("open"));
+    // Its keys now fail over — still byte-identical (successor holds
+    // the replica pushed when the key was first computed).
+    let resp = c.router.dispatch(&spec);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_ne!(
+        resp.get("node").and_then(Json::as_str),
+        Some(c.addrs[0].as_str())
+    );
+    assert_eq!(resp.get("result").unwrap().to_string(), reference);
+    c.teardown();
+}
+
+/// The kitchen sink: a ~10% mixed fault plan (drops, black holes, torn
+/// frames) over a sequential workload. Every frame is clean and the
+/// per-kind accounting stays exact, whatever the seed.
+#[test]
+fn mixed_fault_plan_keeps_exact_accounting() {
+    let _wd = Watchdog::arm("mixed", Duration::from_secs(300));
+    let c = Chaos::boot(
+        "chaos-mixed",
+        TransportPolicy {
+            retries: 2,
+            backoff: Duration::from_millis(2),
+            breaker_threshold: 4,
+            breaker_cooldown: Duration::from_millis(100),
+            ..TransportPolicy::default()
+        },
+        1 << 20,
+    );
+    c.plan.add_rate(FaultKind::Drop, Some("submit"), None, 0.10);
+    c.plan.add_rate(FaultKind::BlackHole, Some("submit"), None, 0.05);
+    c.plan.add_rate(FaultKind::Truncate, Some("submit"), None, 0.05);
+    for i in 0..12 {
+        let spec = small_spec(8000 + i);
+        let resp = c.router.dispatch(&spec);
+        c.check_frame(&resp, &direct(&spec));
+    }
+    assert_eq!(
+        c.transport_counter("connect_errors"),
+        c.plan.injected(FaultKind::Drop)
+    );
+    assert_eq!(
+        c.transport_counter("timeouts"),
+        c.plan.injected(FaultKind::BlackHole)
+    );
+    assert_eq!(
+        c.transport_counter("protocol_errors"),
+        c.plan.injected(FaultKind::Truncate)
+    );
+    c.teardown();
+}

@@ -1,0 +1,413 @@
+//! Protocol robustness fuzz: seeded junk against live servers.
+//!
+//! A malformed request line — torn frame, invalid UTF-8, oversized
+//! line, wrong-shape JSON, bad cluster verbs — must always produce a
+//! structured `{"ok":false,"error":...}` response on the same
+//! connection, never a panic, a hang, or a dropped connection (a
+//! disconnect would let one buggy client trigger a reconnect storm).
+//!
+//! Runs in tier-1 (`cargo test`). Seeded like `tests/invariants.rs`:
+//! `PROP_SEED` picks the generator stream, `PROP_CASES` scales volume;
+//! CI logs the nightly seed for replay.
+//!
+//! Also pins the stats/health wire schemas (worker scheduler, router,
+//! peer set, transport counters): `barista stats --json` consumers get
+//! additive evolution only — a renamed or dropped key fails here.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use barista::cluster::{PeerSet, Router, RouterConfig, RouterServer};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::service::{
+    Client, JobSpec, PeerLookup, Request, Scheduler, SchedulerConfig, Server,
+};
+use barista::util::prop::run_prop;
+use barista::util::rng::Pcg32;
+use barista::util::Json;
+use barista::workload::Benchmark;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(s) => s
+            .parse()
+            .unwrap_or_else(|e| panic!("{name}='{s}' must be a u64: {e}")),
+    }
+}
+
+fn prop_seed() -> u64 {
+    env_u64("PROP_SEED", 0xBA7157A)
+}
+
+fn cases(base: u64) -> u64 {
+    base * env_u64("PROP_CASES", 1).max(1)
+}
+
+fn small_cfg() -> SchedulerConfig {
+    SchedulerConfig {
+        workers: 1,
+        shards: 1,
+        queue_cap: 16,
+        cache_bytes: 1 << 20,
+        store: None,
+    }
+}
+
+fn small_spec(seed: u64) -> JobSpec {
+    let mut c = SimConfig::paper(ArchKind::Dense);
+    c.window_cap = 16;
+    c.batch = 1;
+    c.seed = seed;
+    JobSpec {
+        benchmark: Benchmark::AlexNet,
+        config: c,
+    }
+}
+
+/// A raw byte-level protocol connection: no client-side framing help,
+/// so tests can send exactly the bytes they mean to.
+struct RawConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl RawConn {
+    fn open(addr: &str) -> RawConn {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).ok();
+        // A missing response is a test failure, not a hang.
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .ok();
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        RawConn {
+            reader,
+            writer: stream,
+        }
+    }
+
+    /// Send one line (the newline is appended) and read one response.
+    fn roundtrip(&mut self, line: &[u8]) -> Result<Json, String> {
+        self.writer.write_all(line).map_err(|e| format!("send: {e}"))?;
+        self.writer.write_all(b"\n").map_err(|e| format!("send: {e}"))?;
+        self.writer.flush().map_err(|e| format!("flush: {e}"))?;
+        let mut buf = String::new();
+        let n = self
+            .reader
+            .read_line(&mut buf)
+            .map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Err("server closed the connection".into());
+        }
+        Json::parse(buf.trim_end()).map_err(|e| format!("unparseable response: {e}"))
+    }
+}
+
+/// One seeded junk request line. Never empty/whitespace-only (those are
+/// legitimately ignored without a response) and never containing a
+/// newline (that would be two frames).
+fn junk_line(rng: &mut Pcg32, valid_submit: &str) -> Vec<u8> {
+    match rng.gen_range(6) {
+        // Raw bytes, mostly invalid UTF-8.
+        0 => {
+            let mut v = vec![b'x'];
+            for _ in 0..1 + rng.gen_range(63) {
+                let b = rng.gen_range(256) as u8;
+                if b != b'\n' && b != b'\r' {
+                    v.push(b);
+                }
+            }
+            v
+        }
+        // Printable non-JSON junk.
+        1 => {
+            let words = ["hello", "GET / HTTP/1.1", "{unclosed", "]]]]", "op=submit"];
+            words[rng.gen_range(words.len() as u32) as usize]
+                .as_bytes()
+                .to_vec()
+        }
+        // Parseable JSON of the wrong shape.
+        2 => {
+            let shapes = [
+                r#"{"op":12}"#,
+                r#"[]"#,
+                r#"42"#,
+                r#""submit""#,
+                r#"{"no_op":1}"#,
+                r#"{"op":"frobnicate"}"#,
+                r#"{"op":"submit"}"#,
+                r#"{"op":"batch","jobs":[]}"#,
+                r#"{"op":"submit","job":{"network":"nope"}}"#,
+                r#"{"op":"submit","job":{"network":"alexnet","windowcap":9}}"#,
+            ];
+            shapes[rng.gen_range(shapes.len() as u32) as usize]
+                .as_bytes()
+                .to_vec()
+        }
+        // A torn (strict-prefix) copy of a perfectly valid submit.
+        3 => {
+            let cut = 1 + rng.gen_range(valid_submit.len() as u32 - 2) as usize;
+            valid_submit.as_bytes()[..cut].to_vec()
+        }
+        // Bad cluster verbs.
+        4 => {
+            let shapes = [
+                r#"{"op":"peer-get"}"#,
+                r#"{"op":"replicate","key":"xyz","payload":"p"}"#,
+                r#"{"op":"replicate","key":"ab"}"#,
+                r#"{"op":"replicate","key":"00000000000000000000000000000000","payload":"not a record"}"#,
+            ];
+            shapes[rng.gen_range(shapes.len() as u32) as usize]
+                .as_bytes()
+                .to_vec()
+        }
+        // A job that is not even an object.
+        _ => br#"{"op":"submit","job":[]}"#.to_vec(),
+    }
+}
+
+/// Every junk frame gets one structured error on the same connection,
+/// and the connection still answers a real request afterwards.
+#[test]
+fn seeded_junk_never_kills_a_worker_connection() {
+    let (addr, handle) = Server::spawn("127.0.0.1:0", small_cfg()).expect("spawn server");
+    let addr = addr.to_string();
+    let valid_submit = Request::Submit {
+        spec: small_spec(1),
+        stream: false,
+    }
+    .to_json()
+    .to_string();
+    let mut conn = RawConn::open(&addr);
+    run_prop("protocol-junk", prop_seed(), cases(60), |rng| {
+        let junk = junk_line(rng, &valid_submit);
+        let resp = conn.roundtrip(&junk)?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(false) {
+            return Err(format!("junk {junk:?} answered ok: {resp:?}"));
+        }
+        let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+        if err.is_empty() {
+            return Err(format!("junk {junk:?}: error message missing: {resp:?}"));
+        }
+        // The same connection must still serve real traffic.
+        let health = conn.roundtrip(br#"{"op":"health"}"#)?;
+        if health.get("ok").and_then(Json::as_bool) != Some(true) {
+            return Err(format!("health after junk failed: {health:?}"));
+        }
+        Ok(())
+    });
+    let mut c = Client::connect(&addr).expect("connect");
+    c.shutdown().expect("shutdown");
+    let _ = handle.join();
+}
+
+/// A client that dies mid-frame (torn write, no newline) must not take
+/// the server with it.
+#[test]
+fn torn_frame_then_disconnect_leaves_server_healthy() {
+    let (addr, handle) = Server::spawn("127.0.0.1:0", small_cfg()).expect("spawn server");
+    let addr = addr.to_string();
+    let valid_submit = Request::Submit {
+        spec: small_spec(2),
+        stream: false,
+    }
+    .to_json()
+    .to_string();
+    {
+        let mut torn = RawConn::open(&addr);
+        torn.writer
+            .write_all(&valid_submit.as_bytes()[..valid_submit.len() / 2])
+            .expect("torn write");
+        torn.writer.flush().expect("flush");
+        // Drop both halves: the server sees EOF mid-line.
+    }
+    let mut c = Client::connect(&addr).expect("connect after torn frame");
+    let health = c.roundtrip(&{
+        let mut j = Json::obj();
+        j.set("op", "health");
+        j
+    });
+    let health = health.expect("health");
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true), "{health:?}");
+    let stats = c.stats().expect("stats");
+    assert_eq!(stats.get("ok").and_then(Json::as_bool), Some(true), "{stats:?}");
+    c.shutdown().expect("shutdown");
+    let _ = handle.join();
+}
+
+/// An oversized request line is drained and answered with a structured
+/// error — bounded memory, connection intact.
+#[test]
+fn oversized_line_is_rejected_not_fatal() {
+    let (addr, handle) = Server::spawn("127.0.0.1:0", small_cfg()).expect("spawn server");
+    let addr = addr.to_string();
+    let mut conn = RawConn::open(&addr);
+    let big = vec![b'a'; (1 << 20) + 100];
+    let resp = conn.roundtrip(&big).expect("oversized roundtrip");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp:?}");
+    let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+    assert!(err.contains("too long"), "{resp:?}");
+    // Same connection, real request.
+    let health = conn.roundtrip(br#"{"op":"health"}"#).expect("health");
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true), "{health:?}");
+    let mut c = Client::connect(&addr).expect("connect");
+    c.shutdown().expect("shutdown");
+    let _ = handle.join();
+}
+
+/// The router front end survives the same abuse — and then still routes
+/// a real job, byte-identical (exercising the transport in tier-1).
+#[test]
+fn router_survives_junk_and_still_routes() {
+    let (naddr, nhandle) = Server::spawn("127.0.0.1:0", small_cfg()).expect("spawn node");
+    let naddr = naddr.to_string();
+    let (raddr, rhandle) = RouterServer::spawn(
+        "127.0.0.1:0",
+        RouterConfig {
+            nodes: vec![naddr.clone()],
+            health_interval: Duration::from_secs(3600),
+            ..RouterConfig::default()
+        },
+    )
+    .expect("spawn router");
+    let raddr = raddr.to_string();
+    let mut conn = RawConn::open(&raddr);
+    // Invalid UTF-8 junk.
+    let resp = conn.roundtrip(&[b'x', 0xff, 0xfe, b'{']).expect("junk");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp:?}");
+    // A worker-only verb: structured error, not a hang.
+    let resp = conn
+        .roundtrip(br#"{"op":"peer-get","job":{"network":"alexnet"}}"#)
+        .expect("peer-get");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp:?}");
+    assert!(
+        resp.get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .contains("no results"),
+        "{resp:?}"
+    );
+    // Junk JSON.
+    let resp = conn.roundtrip(br#"{"op":[1,2]}"#).expect("junk json");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp:?}");
+    // Still healthy, still a router.
+    let health = conn.roundtrip(br#"{"op":"health"}"#).expect("health");
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true), "{health:?}");
+    assert_eq!(health.get("role").and_then(Json::as_str), Some("router"));
+    // And a real job still routes end-to-end, byte-identical.
+    let spec = small_spec(3);
+    let reference = run_one(&RunRequest {
+        benchmark: spec.benchmark,
+        config: spec.config.clone(),
+    })
+    .network
+    .to_json()
+    .to_string();
+    let mut c = Client::connect(&raddr).expect("connect router");
+    let resp = c.submit(&spec).expect("submit");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    assert_eq!(resp.get("result").unwrap().to_string(), reference);
+    c.shutdown().expect("shutdown router");
+    let _ = rhandle.join();
+    let mut c = Client::connect(&naddr).expect("connect node");
+    c.shutdown().expect("shutdown node");
+    let _ = nhandle.join();
+}
+
+fn keys(j: &Json) -> Vec<String> {
+    j.as_obj()
+        .unwrap_or_else(|| panic!("expected object: {j:?}"))
+        .keys()
+        .cloned()
+        .collect()
+}
+
+/// Schema pins: the resilience counters `barista stats --json` exposes.
+/// Additive evolution only — extend the expected lists when adding
+/// keys; never rename or drop without a deliberate break here.
+#[test]
+fn stats_wire_schemas_are_pinned() {
+    // Router stats body.
+    let router = Router::new(RouterConfig {
+        nodes: vec!["127.0.0.1:9".into()],
+        ..RouterConfig::default()
+    })
+    .expect("router");
+    let stats = router.stats_json();
+    assert_eq!(
+        keys(&stats),
+        [
+            "dead_marks",
+            "degraded_responses",
+            "failovers",
+            "nodes",
+            "replica_hits",
+            "replicate_errors",
+            "replicated",
+            "routed",
+            "stale_hits",
+            "steals",
+            "transport",
+        ]
+    );
+    // Transport counter block (also under PeerSet stats).
+    assert_eq!(
+        keys(stats.get("transport").unwrap()),
+        [
+            "attempts",
+            "breaker_fast_fails",
+            "breaker_opens",
+            "connect_errors",
+            "io_errors",
+            "protocol_errors",
+            "retries",
+            "timeouts",
+        ]
+    );
+    // Per-node row.
+    let node = &stats.get("nodes").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(
+        keys(node),
+        ["addr", "alive", "breaker", "inflight", "queued", "served"]
+    );
+    // Peer-lookup stats (the worker's health/stats "peers" section).
+    let peers = PeerSet::new(vec!["127.0.0.1:9".into()]);
+    let pstats = peers.stats_json().expect("peer stats");
+    assert_eq!(
+        keys(&pstats),
+        ["breakers_open", "errors", "hits", "misses", "peers", "transport"]
+    );
+    // Worker health + scheduler stats bodies (in-process respond).
+    let scheduler = Scheduler::new(small_cfg());
+    let started = Instant::now();
+    let (health, _) = barista::service::server::respond(r#"{"op":"health"}"#, &scheduler, started);
+    assert_eq!(keys(&health), ["ok", "op", "queued", "workers"]);
+    let sched_json = scheduler.stats().to_json();
+    assert_eq!(
+        keys(&sched_json),
+        [
+            "cache",
+            "cache_hits",
+            "deduped",
+            "executed",
+            "peer_hits",
+            "queued",
+            "rejected",
+            "shards",
+            "store_hits",
+            "submitted",
+            "workers",
+        ]
+    );
+    scheduler.shutdown();
+    // A peer-wired scheduler surfaces the peers section in health.
+    let peers: Arc<dyn PeerLookup> = Arc::new(PeerSet::new(vec!["127.0.0.1:9".into()]));
+    let scheduler = Scheduler::with_peers(small_cfg(), Some(peers));
+    let (health, _) = barista::service::server::respond(r#"{"op":"health"}"#, &scheduler, started);
+    assert_eq!(keys(&health), ["ok", "op", "peers", "queued", "workers"]);
+    scheduler.shutdown();
+}
