@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt clippy prop examples test-store test-cluster test-chaos ci bench bench-smoke bench-table bench-figs artifacts serve clean
+.PHONY: build test fmt clippy prop examples test-store test-cluster test-chaos test-kernels ci bench bench-smoke bench-table bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -56,10 +56,19 @@ test-chaos:
 	cd rust && $(if $(FAULT_SEED),FAULT_SEED=$(FAULT_SEED)) \
 		cargo test --release --features chaos --test chaos
 
+# Forced-scalar leg (mirrors the CI step): the table-build kernel is
+# runtime-selected (DESIGN.md §Perf-6, BARISTA_KERNEL env knob), and
+# plain `cargo test` exercises the auto choice. This pins the scalar
+# reference path — the one every other kernel is held bit-identical
+# to — across the kernel unit tests and the equivalence suite.
+test-kernels:
+	cd rust && BARISTA_KERNEL=scalar cargo test --release --lib arch::
+	cd rust && BARISTA_KERNEL=scalar cargo test --release --test perf_equivalence
+
 # Local mirror of the CI push jobs — `make ci` green implies the
 # workflow's `lint` + `test` jobs are green (same steps, same order:
-# lint first, then the test job's build/test/invariants/store/example/
-# bench-smoke sequence).
+# lint first, then the test job's build/test/invariants/forced-scalar/
+# store/example/bench-smoke sequence).
 ci:
 	cd rust && cargo fmt --check
 	cd rust && cargo clippy -- -D warnings
@@ -67,6 +76,7 @@ ci:
 	cd rust && cargo build --release
 	cd rust && cargo test -q
 	cd rust && PROP_SEED=195499386 PROP_CASES=2 cargo test --release --test invariants
+	$(MAKE) test-kernels
 	cd rust && cargo test --release --test store_persistence
 	cd rust && cargo test --release --test cluster
 	$(MAKE) test-chaos
@@ -87,8 +97,10 @@ bench:
 bench-smoke:
 	cd rust && BENCH_SMOKE=1 BENCH_GUARD=1 cargo bench --features chaos --bench perf_hotpath --bench service_throughput --bench table_build
 
-# Table-build microbench only: scalar AoS kernel vs tiled SoA kernel vs
-# pool-parallel tiles, across layer geometries -> BENCH_table.json.
+# Table-build microbench only: the full kernel matrix — scalar AoS vs
+# tiled SWAR vs two-stage prescan vs explicit SIMD (when detected) vs
+# pool-parallel — across dense and spiking-sparsity layer geometries
+# -> BENCH_table.json.
 bench-table:
 	cd rust && cargo bench --bench table_build
 

@@ -1,7 +1,8 @@
 //! Simulator hot-path microbenchmarks (the §Perf deliverable's
 //! before/after instrument): pass-cost mask arithmetic vs the shared
-//! pass table, the table *build* kernels (scalar AoS vs tiled SoA vs
-//! pool-parallel tiles), the telescoping combiner, the banked-cache
+//! pass table, the table *build* kernels (scalar AoS vs tiled SWAR vs
+//! two-stage prescan vs explicit SIMD vs pool-parallel tiles, dense
+//! and spiking sparsity), the telescoping combiner, the banked-cache
 //! queue, full end-to-end layers — the optimized `run_one` against the
 //! pre-§Perf reference path — and a per-phase breakdown (mask gen /
 //! table build / cluster sim) of one cold BARISTA job. Reported as
@@ -12,7 +13,7 @@
 //! additionally seals/compares a smoke baseline (see
 //! `bench_harness::finish_bench`).
 
-use barista::arch::{pass_pe_cycles, PassTable};
+use barista::arch::{kernel, pass_pe_cycles, Kernel, PassTable};
 use barista::barista::telescope::telescope_fetch;
 use barista::bench_harness::{bench, bench_header, finish_bench};
 use barista::config::{ArchKind, SimConfig};
@@ -30,6 +31,11 @@ fn main() {
     } else {
         "perf: simulator hot paths"
     });
+    println!(
+        "  kernels: auto={} | cpu: {}",
+        kernel::active_kernel_label(),
+        kernel::cpu_feature_summary()
+    );
     let mut rows: Vec<Json> = Vec::new();
 
     // --- pass cost (the inner loop: u128 AND + per-part popcount) -------
@@ -56,34 +62,69 @@ fn main() {
     );
     let direct_ns_per_pass = t.mean_s / passes * 1e9;
 
-    // --- table build kernels: scalar AoS vs tiled SoA vs parallel -------
-    // The scalar kernel is the pre-SoA reference (`build_scalar`), the
-    // serial kernel is the tiled SWAR path on one core, and `build` is
-    // the production path (pool fan-out on large tables).
+    // --- table build kernels: scalar AoS vs the explicit matrix ---------
+    // The scalar kernel is the pre-SoA reference (`build_scalar`); the
+    // tiled row is the SWAR path on one core (pinned to `Kernel::Swar`
+    // so its meaning survives the §Perf-6 auto dispatch); prescan and
+    // SIMD are the PR 8 kernels; `build` stays the production path
+    // (env-selected kernel + pool fan-out on large tables).
+    let simd = kernel::detect_simd();
     let tb_scalar = bench(&format!("table build scalar {nf}x{nw}"), 1, 10, || {
         let table = PassTable::build_scalar(&filters, &windows, 4).expect("tabulates");
         sink = sink.wrapping_add(table.total_matched());
     });
     println!("{}", tb_scalar.report());
-    let tb_tiled = bench(&format!("table build tiled-SoA {nf}x{nw}"), 1, 10, || {
-        let table = PassTable::build_serial(&filters, &windows, 4).expect("tabulates");
+    let tb_tiled = bench(&format!("table build swar {nf}x{nw}"), 1, 10, || {
+        let table =
+            PassTable::build_kernel_serial(&filters, &windows, 4, Kernel::Swar).expect("tabulates");
         sink = sink.wrapping_add(table.total_matched());
     });
     println!("{}", tb_tiled.report());
+    let tb_pre = bench(&format!("table build prescan {nf}x{nw}"), 1, 10, || {
+        let table = PassTable::build_kernel_serial(&filters, &windows, 4, Kernel::Prescan)
+            .expect("tabulates");
+        sink = sink.wrapping_add(table.total_matched());
+    });
+    println!("{}", tb_pre.report());
+    let tb_simd = simd.map(|isa| {
+        let t = bench(&format!("table build simd {nf}x{nw}"), 1, 10, || {
+            let table = PassTable::build_kernel_serial(&filters, &windows, 4, Kernel::Simd(isa))
+                .expect("tabulates");
+            sink = sink.wrapping_add(table.total_matched());
+        });
+        println!("{}", t.report());
+        t
+    });
     let tb_par = bench(&format!("table build parallel {nf}x{nw}"), 1, 10, || {
         let table = PassTable::build_parallel(&filters, &windows, 4).expect("tabulates");
         sink = sink.wrapping_add(table.total_matched());
     });
     println!("{}", tb_par.report());
     // The kernels under comparison must agree bit-for-bit.
-    PassTable::build_scalar(&filters, &windows, 4)
-        .unwrap()
-        .assert_bit_identical(&PassTable::build_parallel(&filters, &windows, 4).unwrap());
+    {
+        let reference = PassTable::build_scalar(&filters, &windows, 4).unwrap();
+        for (_, kern) in kernel::all_available() {
+            reference.assert_bit_identical(
+                &PassTable::build_kernel_serial(&filters, &windows, 4, kern).unwrap(),
+            );
+        }
+        reference.assert_bit_identical(&PassTable::build_parallel(&filters, &windows, 4).unwrap());
+    }
     println!(
-        "  -> build: scalar {:.0} ns/pass, tiled {:.0} ns/pass ({:.2}x), parallel {:.0} ns/pass ({:.2}x)",
+        "  -> build: scalar {:.0} ns/pass, swar {:.0} ({:.2}x), prescan {:.0} ({:.2}x vs swar){}, parallel {:.0} ns/pass ({:.2}x)",
         tb_scalar.mean_s / passes * 1e9,
         tb_tiled.mean_s / passes * 1e9,
         tb_scalar.mean_s / tb_tiled.mean_s,
+        tb_pre.mean_s / passes * 1e9,
+        tb_tiled.mean_s / tb_pre.mean_s,
+        match &tb_simd {
+            Some(t) => format!(
+                ", simd {:.0} ({:.2}x vs swar)",
+                t.mean_s / passes * 1e9,
+                tb_tiled.mean_s / t.mean_s
+            ),
+            None => String::new(),
+        },
         tb_par.mean_s / passes * 1e9,
         tb_scalar.mean_s / tb_par.mean_s
     );
@@ -91,10 +132,82 @@ fn main() {
     row.set("name", "table_build")
         .set("scalar_ns_per_pass", tb_scalar.mean_s / passes * 1e9)
         .set("tiled_ns_per_pass", tb_tiled.mean_s / passes * 1e9)
+        .set("prescan_ns_per_pass", tb_pre.mean_s / passes * 1e9)
         .set("parallel_ns_per_pass", tb_par.mean_s / passes * 1e9)
         .set("tiled_speedup", tb_scalar.mean_s / tb_tiled.mean_s)
+        .set("prescan_speedup_vs_swar", tb_tiled.mean_s / tb_pre.mean_s)
         .set("parallel_speedup", tb_scalar.mean_s / tb_par.mean_s);
+    if let Some(t) = &tb_simd {
+        row.set("simd_ns_per_pass", t.mean_s / passes * 1e9)
+            .set("simd_speedup_vs_swar", tb_tiled.mean_s / t.mean_s)
+            .set("simd_kernel", simd.map(|i| i.label()).unwrap_or(""));
+    }
     rows.push(row);
+
+    // --- table build, spiking sparsity: where the prescan earns out ------
+    // ~98% zero maps (SparseFlow's spiking regime): most packed words
+    // are zero, so the two-stage prescan touches a fraction of the
+    // plane the dense kernels grind through.
+    {
+        let mut srng = Pcg32::seeded(0x5317C);
+        let sfilters = MaskMatrix::random(&mut srng, nf, 2304, 0.02, 0.15);
+        let swindows = MaskMatrix::random(&mut srng, nw, 2304, 0.03, 0.30);
+        let sb_swar = bench(&format!("table build swar {nf}x{nw} spiking"), 1, 10, || {
+            let table = PassTable::build_kernel_serial(&sfilters, &swindows, 4, Kernel::Swar)
+                .expect("tabulates");
+            sink = sink.wrapping_add(table.total_matched());
+        });
+        println!("{}", sb_swar.report());
+        let sb_pre = bench(&format!("table build prescan {nf}x{nw} spiking"), 1, 10, || {
+            let table = PassTable::build_kernel_serial(&sfilters, &swindows, 4, Kernel::Prescan)
+                .expect("tabulates");
+            sink = sink.wrapping_add(table.total_matched());
+        });
+        println!("{}", sb_pre.report());
+        let sb_simd = simd.map(|isa| {
+            let t = bench(&format!("table build simd {nf}x{nw} spiking"), 1, 10, || {
+                let table =
+                    PassTable::build_kernel_serial(&sfilters, &swindows, 4, Kernel::Simd(isa))
+                        .expect("tabulates");
+                sink = sink.wrapping_add(table.total_matched());
+            });
+            println!("{}", t.report());
+            t
+        });
+        let reference = PassTable::build_scalar(&sfilters, &swindows, 4).unwrap();
+        for (_, kern) in kernel::all_available() {
+            reference.assert_bit_identical(
+                &PassTable::build_kernel_serial(&sfilters, &swindows, 4, kern).unwrap(),
+            );
+        }
+        println!(
+            "  -> spiking build: swar {:.0} ns/pass, prescan {:.0} ({:.2}x vs swar){}",
+            sb_swar.mean_s / passes * 1e9,
+            sb_pre.mean_s / passes * 1e9,
+            sb_swar.mean_s / sb_pre.mean_s,
+            match &sb_simd {
+                Some(t) => format!(
+                    ", simd {:.0} ({:.2}x vs swar)",
+                    t.mean_s / passes * 1e9,
+                    sb_swar.mean_s / t.mean_s
+                ),
+                None => String::new(),
+            }
+        );
+        let mut row = Json::obj();
+        row.set("name", "table_build_spiking")
+            .set("filter_density", 0.02)
+            .set("map_density", 0.03)
+            .set("tiled_ns_per_pass", sb_swar.mean_s / passes * 1e9)
+            .set("prescan_ns_per_pass", sb_pre.mean_s / passes * 1e9)
+            .set("prescan_speedup_vs_swar", sb_swar.mean_s / sb_pre.mean_s);
+        if let Some(t) = &sb_simd {
+            row.set("simd_ns_per_pass", t.mean_s / passes * 1e9)
+                .set("simd_speedup_vs_swar", sb_swar.mean_s / t.mean_s)
+                .set("simd_kernel", simd.map(|i| i.label()).unwrap_or(""));
+        }
+        rows.push(row);
+    }
 
     // --- shared pass table: one build amortized over lookups ------------
     let table = PassTable::build(&filters, &windows, 4).unwrap();

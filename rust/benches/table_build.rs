@@ -1,11 +1,13 @@
-//! Pass-table build microbenchmark (`make bench-table`): the scalar
-//! AoS reference kernel vs the tiled SoA SWAR kernel vs the
-//! pool-parallel tiled build, across representative layer geometries.
-//! Writes `BENCH_table.json` at the repo root; `BENCH_SMOKE=1` shrinks
-//! sizes, `BENCH_GUARD=1` seals/compares a baseline
-//! (`bench_harness::finish_bench`).
+//! Pass-table build microbenchmark (`make bench-table`): the full
+//! kernel matrix — scalar AoS reference vs tiled SWAR vs two-stage
+//! prescan vs explicit SIMD (when the CPU has it) vs the pool-parallel
+//! auto build — across representative layer geometries, dense *and*
+//! the high-sparsity spiking/layer-decay regimes where the prescan
+//! pays off (DESIGN.md §Perf-6). Writes `BENCH_table.json` at the
+//! repo root; `BENCH_SMOKE=1` shrinks sizes, `BENCH_GUARD=1`
+//! seals/compares a baseline (`bench_harness::finish_bench`).
 
-use barista::arch::PassTable;
+use barista::arch::{kernel, Kernel, PassTable};
 use barista::bench_harness::{bench, bench_header, finish_bench};
 use barista::tensor::MaskMatrix;
 use barista::util::rng::Pcg32;
@@ -14,65 +16,142 @@ use barista::util::Json;
 fn main() {
     let smoke = std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
     bench_header(if smoke {
-        "table build: scalar vs tiled SoA vs parallel (smoke)"
+        "table build: kernel matrix (smoke)"
     } else {
-        "table build: scalar vs tiled SoA vs parallel"
+        "table build: kernel matrix"
     });
-    // (filters, windows, cells): a small AlexNet-conv2-like layer, a
-    // mid VGG-like layer, and a wide late-ResNet-like layer.
-    let geoms: &[(usize, usize, usize)] = if smoke {
-        &[(16, 64, 2304)]
+    println!(
+        "  kernels: auto={} | available: {} | cpu: {}",
+        kernel::active_kernel_label(),
+        kernel::all_available()
+            .iter()
+            .map(|(l, _)| *l)
+            .collect::<Vec<_>>()
+            .join(", "),
+        kernel::cpu_feature_summary()
+    );
+    // (filters, windows, cells, filter density, map density, tag):
+    // the dense rows are PR 4's geometries under PR 4's names (guard
+    // continuity); the tagged rows are the SparseFlow-style regimes —
+    // "spiking" ≈ 97–99% zeros, "layerdecay" ≈ a deep-layer tail with
+    // near-empty maps against moderately sparse filters.
+    let geoms: &[(usize, usize, usize, f64, f64, &str)] = if smoke {
+        &[
+            (16, 64, 2304, 0.37, 0.47, ""),
+            (16, 64, 2304, 0.02, 0.03, "spiking"),
+        ]
     } else {
-        &[(64, 256, 2304), (96, 512, 6912), (256, 512, 27648)]
+        &[
+            (64, 256, 2304, 0.37, 0.47, ""),
+            (96, 512, 6912, 0.37, 0.47, ""),
+            (256, 512, 27648, 0.37, 0.47, ""),
+            (64, 256, 2304, 0.02, 0.03, "spiking"),
+            (256, 512, 27648, 0.02, 0.03, "spiking"),
+            (96, 512, 6912, 0.35, 0.02, "layerdecay"),
+        ]
     };
     let iters = if smoke { 5 } else { 10 };
+    let simd = kernel::detect_simd();
     let mut rows: Vec<Json> = Vec::new();
     let mut sink = 0u64;
-    for &(nf, nw, cells) in geoms {
-        let mut rng = Pcg32::seeded(0x7AB1E ^ ((nf as u64) << 20) ^ (nw as u64));
-        let filters = MaskMatrix::random(&mut rng, nf, cells, 0.37, 0.15);
-        let windows = MaskMatrix::random(&mut rng, nw, cells, 0.47, 0.30);
+    for &(nf, nw, cells, df, dw, tag) in geoms {
+        let mut rng = Pcg32::seeded(0x7AB1E ^ ((nf as u64) << 20) ^ (nw as u64) ^ tag.len() as u64);
+        let filters = MaskMatrix::random(&mut rng, nf, cells, df, 0.15);
+        let windows = MaskMatrix::random(&mut rng, nw, cells, dw, 0.30);
         let passes = (nf * nw) as f64;
+        let label = if tag.is_empty() {
+            format!("{nf}x{nw} ({cells} cells)")
+        } else {
+            format!("{nf}x{nw} ({cells} cells, {tag})")
+        };
 
-        let ts = bench(&format!("scalar   {nf}x{nw} ({cells} cells)"), 1, iters, || {
+        let ts = bench(&format!("scalar   {label}"), 1, iters, || {
             let t = PassTable::build_scalar(&filters, &windows, 4).expect("tabulates");
             sink = sink.wrapping_add(t.total_matched());
         });
         println!("{}", ts.report());
-        let tt = bench(&format!("tiled    {nf}x{nw} ({cells} cells)"), 1, iters, || {
-            let t = PassTable::build_serial(&filters, &windows, 4).expect("tabulates");
+        let tt = bench(&format!("swar     {label}"), 1, iters, || {
+            let t = PassTable::build_kernel_serial(&filters, &windows, 4, Kernel::Swar)
+                .expect("tabulates");
             sink = sink.wrapping_add(t.total_matched());
         });
         println!("{}", tt.report());
-        let tp = bench(&format!("parallel {nf}x{nw} ({cells} cells)"), 1, iters, || {
+        let tz = bench(&format!("prescan  {label}"), 1, iters, || {
+            let t = PassTable::build_kernel_serial(&filters, &windows, 4, Kernel::Prescan)
+                .expect("tabulates");
+            sink = sink.wrapping_add(t.total_matched());
+        });
+        println!("{}", tz.report());
+        let tv = simd.map(|isa| {
+            let tv = bench(&format!("simd     {label}"), 1, iters, || {
+                let t = PassTable::build_kernel_serial(&filters, &windows, 4, Kernel::Simd(isa))
+                    .expect("tabulates");
+                sink = sink.wrapping_add(t.total_matched());
+            });
+            println!("{}", tv.report());
+            tv
+        });
+        let tp = bench(&format!("parallel {label}"), 1, iters, || {
             let t = PassTable::build_parallel(&filters, &windows, 4).expect("tabulates");
             sink = sink.wrapping_add(t.total_matched());
         });
         println!("{}", tp.report());
 
-        // The kernels under comparison must agree bit-for-bit.
-        PassTable::build_scalar(&filters, &windows, 4)
-            .unwrap()
-            .assert_bit_identical(&PassTable::build_parallel(&filters, &windows, 4).unwrap());
+        // Every kernel under comparison must agree bit-for-bit, under
+        // serial and pool-parallel scheduling alike.
+        let reference = PassTable::build_scalar(&filters, &windows, 4).unwrap();
+        for (_, kern) in kernel::all_available() {
+            reference.assert_bit_identical(
+                &PassTable::build_kernel_serial(&filters, &windows, 4, kern).unwrap(),
+            );
+            reference.assert_bit_identical(
+                &PassTable::build_kernel_parallel(&filters, &windows, 4, kern).unwrap(),
+            );
+        }
+        reference.assert_bit_identical(&PassTable::build_parallel(&filters, &windows, 4).unwrap());
 
         println!(
-            "  -> scalar {:.0} ns/pass | tiled {:.0} ns/pass ({:.2}x) | parallel {:.0} ns/pass ({:.2}x)",
+            "  -> scalar {:.0} | swar {:.0} ({:.2}x) | prescan {:.0} ({:.2}x vs swar){} | parallel {:.0} ns/pass ({:.2}x)",
             ts.mean_s / passes * 1e9,
             tt.mean_s / passes * 1e9,
             ts.mean_s / tt.mean_s,
+            tz.mean_s / passes * 1e9,
+            tt.mean_s / tz.mean_s,
+            match &tv {
+                Some(tv) => format!(
+                    " | simd {:.0} ({:.2}x vs swar)",
+                    tv.mean_s / passes * 1e9,
+                    tt.mean_s / tv.mean_s
+                ),
+                None => String::new(),
+            },
             tp.mean_s / passes * 1e9,
             ts.mean_s / tp.mean_s
         );
+        let name = if tag.is_empty() {
+            format!("build_{nf}x{nw}x{cells}")
+        } else {
+            format!("build_{nf}x{nw}x{cells}_{tag}")
+        };
         let mut row = Json::obj();
-        row.set("name", format!("build_{nf}x{nw}x{cells}"))
+        row.set("name", name)
             .set("filters", nf)
             .set("windows", nw)
             .set("cells", cells)
+            .set("filter_density", df)
+            .set("map_density", dw)
             .set("scalar_ns_per_pass", ts.mean_s / passes * 1e9)
             .set("tiled_ns_per_pass", tt.mean_s / passes * 1e9)
+            .set("prescan_ns_per_pass", tz.mean_s / passes * 1e9)
             .set("parallel_ns_per_pass", tp.mean_s / passes * 1e9)
             .set("tiled_speedup", ts.mean_s / tt.mean_s)
+            .set("prescan_speedup_vs_swar", tt.mean_s / tz.mean_s)
             .set("parallel_speedup", ts.mean_s / tp.mean_s);
+        if let Some(tv) = &tv {
+            row.set("simd_ns_per_pass", tv.mean_s / passes * 1e9)
+                .set("simd_speedup_vs_swar", tt.mean_s / tv.mean_s)
+                .set("simd_kernel", simd.map(|i| i.label()).unwrap_or(""));
+        }
         rows.push(row);
     }
 
@@ -80,6 +159,8 @@ fn main() {
     summary
         .set("bench", "table_build")
         .set("smoke", smoke)
+        .set("auto_kernel", kernel::active_kernel_label())
+        .set("cpu", kernel::cpu_feature_summary())
         .set("rows", Json::Arr(rows));
     println!("table_build_summary {}", summary.to_string());
     finish_bench(

@@ -2,8 +2,10 @@
 //! by every two-sided sparse architecture, and the [`Simulator`] trait
 //! the coordinator drives.
 
+pub mod kernel;
 pub mod pass;
 
+pub use kernel::{Kernel, SimdIsa};
 pub use pass::{pass_pe_cycles, PassCost, PassSource, PassTable, MAX_PARTS};
 
 use crate::config::{ArchKind, SimConfig};

@@ -11,6 +11,7 @@
 //! matched pair per cycle through the prefix-sum/priority-encode
 //! pipeline) + a fixed per-chunk pipeline overhead.
 
+use crate::arch::kernel::{self, Kernel};
 use crate::pool;
 use crate::tensor::{MaskMatrix, MaskPlanes, SparseChunk, CHUNK_BITS};
 
@@ -127,12 +128,16 @@ fn pass_pe_cycles4(f: &[SparseChunk], w: &[SparseChunk], rotation: usize, overhe
 /// accounting of the SparTen/one-sided baselines.
 ///
 /// The build itself is the next hot loop up (O(filters × windows ×
-/// chunks)), so [`build`](Self::build) runs a bit-parallel tiled
-/// kernel over SoA lane planes ([`MaskPlanes`]) with SWAR-packed
-/// accumulators, fanned across the shared layer pool for large layers
-/// (DESIGN.md §Perf-5) — bit-identical to the scalar reference kernel
-/// ([`build_scalar`](Self::build_scalar)), which stays first-class for
-/// equivalence tests and the table-build microbench.
+/// chunks)), so [`build`](Self::build) runs a tiled kernel over SoA
+/// lane planes ([`MaskPlanes`]), fanned across the shared layer pool
+/// for large layers (DESIGN.md §Perf-5). The per-tile compute kernel
+/// is dispatched at runtime (DESIGN.md §Perf-6): explicit SIMD
+/// (AVX2 / AVX-512-VPOPCNTDQ / NEON, whatever the CPU reports) atop a
+/// two-stage nonzero-word prescan, with PR 4's SWAR kernel and the
+/// scalar AoS reference ([`build_scalar`](Self::build_scalar)) kept
+/// first-class and selectable via the `BARISTA_KERNEL` env override —
+/// every path bit-identical, proven by the kernel-matrix tests here
+/// and in `tests/perf_equivalence`.
 #[derive(Debug, Clone)]
 pub struct PassTable {
     filters: usize,
@@ -200,6 +205,30 @@ impl PassTable {
         parts: usize,
     ) -> Option<PassTable> {
         Self::build_mode(filters, windows, parts, BuildMode::Parallel)
+    }
+
+    /// Single-threaded build with an explicit compute kernel, bypassing
+    /// both the env override and SIMD auto-detection — the surface the
+    /// kernel-matrix tests and the table-build microbench sweep.
+    pub fn build_kernel_serial(
+        filters: &MaskMatrix,
+        windows: &MaskMatrix,
+        parts: usize,
+        kern: Kernel,
+    ) -> Option<PassTable> {
+        Self::build_mode_kernel(filters, windows, parts, BuildMode::Serial, kern)
+    }
+
+    /// [`build_kernel_serial`](Self::build_kernel_serial) with the pool
+    /// fan-out forced on: proves each kernel bit-identical under
+    /// parallel scheduling too.
+    pub fn build_kernel_parallel(
+        filters: &MaskMatrix,
+        windows: &MaskMatrix,
+        parts: usize,
+        kern: Kernel,
+    ) -> Option<PassTable> {
+        Self::build_mode_kernel(filters, windows, parts, BuildMode::Parallel, kern)
     }
 
     /// The pre-SoA reference kernel: scalar per-chunk `u128` AND +
@@ -280,11 +309,30 @@ impl PassTable {
         filters.chunks * (CHUNK_BITS / parts) <= u16::MAX as usize
     }
 
+    /// Env-driven entry: resolve `BARISTA_KERNEL` (read per call, never
+    /// cached — tests flip it at runtime) and dispatch. A forced
+    /// `scalar` collapses *every* build mode onto the serial AoS
+    /// reference path — by design: the override exists to pin down the
+    /// original arithmetic, and that kernel predates the plane/pool
+    /// machinery.
     fn build_mode(
         filters: &MaskMatrix,
         windows: &MaskMatrix,
         parts: usize,
         mode: BuildMode,
+    ) -> Option<PassTable> {
+        match kernel::KernelChoice::from_env().resolve() {
+            None => Self::build_scalar(filters, windows, parts),
+            Some(kern) => Self::build_mode_kernel(filters, windows, parts, mode, kern),
+        }
+    }
+
+    fn build_mode_kernel(
+        filters: &MaskMatrix,
+        windows: &MaskMatrix,
+        parts: usize,
+        mode: BuildMode,
+        kern: Kernel,
     ) -> Option<PassTable> {
         if !Self::tabulatable(filters, windows, parts) {
             return None;
@@ -320,12 +368,12 @@ impl PassTable {
                 rest = tail;
                 let fp = &fplanes;
                 let wp = &wplanes;
-                tasks.push(Box::new(move || build_block(head, fp, wp, w0, wn)));
+                tasks.push(Box::new(move || build_block(head, fp, wp, w0, wn, kern)));
                 w0 += wn;
             }
             pool::run_scoped(tasks);
         } else {
-            build_block(&mut lanes, &fplanes, &wplanes, 0, nw);
+            build_block(&mut lanes, &fplanes, &wplanes, 0, nw, kern);
         }
         Some(PassTable {
             filters: nf,
@@ -338,9 +386,10 @@ impl PassTable {
 
     /// Peak bytes a tiled build needs for an (`nf` × `nw`, `chunks`,
     /// `parts`) geometry: the final lane table plus both transient SoA
-    /// plane sets. [`LayerWork::pass_table`] budgets against this — not
-    /// just the finished table — so uncapped runs cannot blow past
-    /// their table budget mid-build.
+    /// plane sets (including their prescan summary index — see
+    /// `MaskPlanes::bytes_for`). [`LayerWork::pass_table`] budgets
+    /// against this — not just the finished table — so uncapped runs
+    /// cannot blow past their table budget mid-build.
     ///
     /// [`LayerWork::pass_table`]: crate::workload::LayerWork::pass_table
     pub fn build_bytes(nf: usize, nw: usize, chunks: usize, parts: usize) -> usize {
@@ -395,6 +444,15 @@ impl PassTable {
         self.lanes.iter().map(|&x| x as u64).sum()
     }
 
+    /// Non-panicking bit-identity check: same geometry, same lane
+    /// counts. The property tests use it so a mismatch reports the
+    /// failing seed instead of unwinding.
+    pub fn bit_identical(&self, other: &PassTable) -> bool {
+        (self.filters, self.windows, self.chunks, self.parts)
+            == (other.filters, other.windows, other.chunks, other.parts)
+            && self.lanes == other.lanes
+    }
+
     /// Panic unless `self` and `other` are the same table, bit for bit
     /// — geometry and every lane count. Shared by the benches that
     /// compare builder kernels (a full `u16` compare is cheaper than
@@ -409,12 +467,30 @@ impl PassTable {
     }
 }
 
-/// The tiled SoA build kernel: fill the lane counts for windows
-/// `[w0, w0 + wn)` — all filters, all lanes. `out` is exactly that
+/// Fill the lane counts for windows `[w0, w0 + wn)` — all filters,
+/// all lanes — with the given compute kernel. `out` is exactly that
 /// window span of the window-major lane array
-/// (`wn × filters × parts` entries).
-///
-/// Structure (DESIGN.md §Perf-5):
+/// (`wn × filters × parts` entries). The tiling structure (filter
+/// tiles of [`FILTER_TILE`] rows × streaming window rows, quad
+/// filter groups with a `< 4` tail) is shared by every kernel; only
+/// the innermost AND+popcount sweep differs — so scheduling and
+/// arithmetic stay independently bit-identical.
+fn build_block(
+    out: &mut [u16],
+    fplanes: &MaskPlanes,
+    wplanes: &MaskPlanes,
+    w0: usize,
+    wn: usize,
+    kern: Kernel,
+) {
+    match kern {
+        Kernel::Swar => build_block_swar(out, fplanes, wplanes, w0, wn),
+        Kernel::Prescan => build_block_prescan(out, fplanes, wplanes, w0, wn, None),
+        Kernel::Simd(isa) => build_block_prescan(out, fplanes, wplanes, w0, wn, Some(isa)),
+    }
+}
+
+/// PR 4's tiled SoA kernel (DESIGN.md §Perf-5):
 /// * **Lane planes** — each (lane, row) is a dense `u64` word stream
 ///   ([`MaskPlanes`]), so the innermost op is a full-width
 ///   `AND` + `popcount` with no shifts or segment masks, for every
@@ -426,7 +502,13 @@ impl PassTable {
 ///   (filter, window) pairs. No field can carry into its neighbor: a
 ///   lane count is at most `chunks × lane-width`, which
 ///   `PassTable::tabulatable` bounds by `u16::MAX`.
-fn build_block(out: &mut [u16], fplanes: &MaskPlanes, wplanes: &MaskPlanes, w0: usize, wn: usize) {
+fn build_block_swar(
+    out: &mut [u16],
+    fplanes: &MaskPlanes,
+    wplanes: &MaskPlanes,
+    w0: usize,
+    wn: usize,
+) {
     let nf = fplanes.rows();
     let parts = fplanes.parts();
     let wpr = fplanes.row_words();
@@ -466,6 +548,70 @@ fn build_block(out: &mut [u16], fplanes: &MaskPlanes, wplanes: &MaskPlanes, w0: 
                         acc += (r[j] & wrow[j]).count_ones();
                     }
                     out[base + f * parts] = acc as u16;
+                    f += 1;
+                }
+            }
+        }
+    }
+}
+
+/// The two-stage kernel (DESIGN.md §Perf-6): same tiling as
+/// [`build_block_swar`], but each quad visits only the packed words
+/// the prescan summaries flag as potentially matching, and dense rows
+/// fall through to the explicit SIMD quad kernel when `isa` is
+/// present (the scalar quad otherwise). All popcounts stay exact, so
+/// the output is bit-identical to every other kernel.
+fn build_block_prescan(
+    out: &mut [u16],
+    fplanes: &MaskPlanes,
+    wplanes: &MaskPlanes,
+    w0: usize,
+    wn: usize,
+    isa: Option<kernel::SimdIsa>,
+) {
+    let nf = fplanes.rows();
+    let parts = fplanes.parts();
+    let wpr = fplanes.row_words();
+    debug_assert_eq!(wplanes.parts(), parts);
+    debug_assert_eq!(wplanes.row_words(), wpr);
+    debug_assert_eq!(out.len(), wn * nf * parts);
+    debug_assert!(fplanes.summary_words() <= kernel::MAX_SUMMARY_WORDS);
+    for f0 in (0..nf).step_by(FILTER_TILE) {
+        let ft = FILTER_TILE.min(nf - f0);
+        for lane in 0..parts {
+            for wi in 0..wn {
+                let wrow = wplanes.lane_row(lane, w0 + wi);
+                let wnz = wplanes.nz_row(lane, w0 + wi);
+                let base = (wi * nf + f0) * parts + lane;
+                let mut f = 0usize;
+                while f + 4 <= ft {
+                    let r = [
+                        fplanes.lane_row(lane, f0 + f),
+                        fplanes.lane_row(lane, f0 + f + 1),
+                        fplanes.lane_row(lane, f0 + f + 2),
+                        fplanes.lane_row(lane, f0 + f + 3),
+                    ];
+                    let rnz = [
+                        fplanes.nz_row(lane, f0 + f),
+                        fplanes.nz_row(lane, f0 + f + 1),
+                        fplanes.nz_row(lane, f0 + f + 2),
+                        fplanes.nz_row(lane, f0 + f + 3),
+                    ];
+                    let counts = kernel::quad_rows_prescan(r, rnz, wrow, wnz, isa);
+                    out[base + f * parts] = counts[0] as u16;
+                    out[base + (f + 1) * parts] = counts[1] as u16;
+                    out[base + (f + 2) * parts] = counts[2] as u16;
+                    out[base + (f + 3) * parts] = counts[3] as u16;
+                    f += 4;
+                }
+                while f < ft {
+                    let cnt = kernel::row_count_prescan(
+                        fplanes.lane_row(lane, f0 + f),
+                        fplanes.nz_row(lane, f0 + f),
+                        wrow,
+                        wnz,
+                    );
+                    out[base + f * parts] = cnt as u16;
                     f += 1;
                 }
             }
@@ -716,13 +862,14 @@ mod tests {
         }
     }
 
-    /// Every builder — scalar AoS reference, tiled SoA serial, pool-
-    /// parallel tiles, and the auto dispatcher — produces identical
-    /// tables, and all match the direct per-pass arithmetic, for every
-    /// supported partition count and rotation. This is the tentpole
-    /// bit-equality proof at the kernel level; `tests/perf_equivalence`
-    /// and `tests/invariants` repeat it over real workloads and
-    /// sparsity scenarios.
+    /// Every builder — scalar AoS reference, the env-driven
+    /// serial/parallel/auto dispatchers, and the full explicit kernel
+    /// matrix (SWAR × prescan × SIMD-when-available, serial and
+    /// pool-parallel) — produces identical tables, and all match the
+    /// direct per-pass arithmetic, for every supported partition count
+    /// and rotation. This is the tentpole bit-equality proof at the
+    /// kernel level; `tests/perf_equivalence` and `tests/invariants`
+    /// repeat it over real workloads and sparsity scenarios.
     #[test]
     fn prop_all_builders_bit_identical() {
         type Builder = fn(&MaskMatrix, &MaskMatrix, usize) -> Option<PassTable>;
@@ -777,9 +924,117 @@ mod tests {
                         return Err(format!("{name}: total_matched mismatch"));
                     }
                 }
+                // The explicit kernel matrix: every runnable compute
+                // kernel, serial and pool-parallel, against the scalar
+                // reference (full-table compare — cheaper than a build).
+                for (kname, kern) in kernel::all_available() {
+                    for (mode, t) in [
+                        (
+                            "serial",
+                            PassTable::build_kernel_serial(&filters, &windows, parts, kern),
+                        ),
+                        (
+                            "parallel",
+                            PassTable::build_kernel_parallel(&filters, &windows, parts, kern),
+                        ),
+                    ] {
+                        let t = t
+                            .ok_or_else(|| format!("{kname}/{mode} failed for parts={parts}"))?;
+                        if !scalar.bit_identical(&t) {
+                            return Err(format!("{kname}/{mode} != scalar at parts={parts}"));
+                        }
+                    }
+                }
             }
             Ok(())
         });
+    }
+
+    /// All-ones masks of `vec_len` live cells (`MaskMatrix::random`
+    /// clamps densities away from the endpoints, so build adversarial
+    /// extremes directly).
+    fn all_ones(rows: usize, vec_len: usize) -> MaskMatrix {
+        let chunks = (vec_len + CHUNK_BITS - 1) / CHUNK_BITS;
+        let mut m = MaskMatrix::zeroed(rows, chunks);
+        for r in 0..rows {
+            for c in 0..chunks {
+                let valid = (vec_len - c * CHUNK_BITS).min(CHUNK_BITS);
+                m.set(r, c, SparseChunk::new(u128::MAX).truncate(valid));
+            }
+        }
+        m
+    }
+
+    /// Adversarial plane contents for the prescan kernels: all-zero
+    /// planes (empty candidate sets everywhere), all-ones planes (the
+    /// dense fallback on every quad), and the zero×ones cross (nonzero
+    /// summaries on one side only). Every kernel must stay
+    /// bit-identical and the totals must be exactly right.
+    #[test]
+    fn extreme_planes_bit_identical_across_kernels() {
+        let vec_len = 5 * CHUNK_BITS + 37;
+        let nf = 6;
+        let nw = 5;
+        let chunks = 6;
+        let zeros_f = MaskMatrix::zeroed(nf, chunks);
+        let ones_f = all_ones(nf, vec_len);
+        let zeros_w = MaskMatrix::zeroed(nw, chunks);
+        let ones_w = all_ones(nw, vec_len);
+        let cases: [(&str, &MaskMatrix, &MaskMatrix, Option<u64>); 4] = [
+            ("zero×zero", &zeros_f, &zeros_w, Some(0)),
+            ("zero×ones", &zeros_f, &ones_w, Some(0)),
+            ("ones×zero", &ones_f, &zeros_w, Some(0)),
+            (
+                "ones×ones",
+                &ones_f,
+                &ones_w,
+                Some((nf * nw * vec_len) as u64),
+            ),
+        ];
+        for (case, f, w, want_total) in cases {
+            for parts in [1usize, 2, 4, 8] {
+                let scalar = PassTable::build_scalar(f, w, parts).unwrap();
+                if let Some(total) = want_total {
+                    assert_eq!(scalar.total_matched(), total, "{case} parts={parts}");
+                }
+                for (_kname, kern) in kernel::all_available() {
+                    let serial = PassTable::build_kernel_serial(f, w, parts, kern).unwrap();
+                    scalar.assert_bit_identical(&serial);
+                    let parallel = PassTable::build_kernel_parallel(f, w, parts, kern).unwrap();
+                    scalar.assert_bit_identical(&parallel);
+                }
+            }
+        }
+    }
+
+    /// `BARISTA_KERNEL=scalar` collapses every env-driven builder onto
+    /// the AoS reference path — and the result is still bit-identical,
+    /// so the override can never change an answer. (Sets the process
+    /// env; concurrent tests in this binary may transiently build via
+    /// the scalar kernel, which is harmless for exactly that reason.)
+    #[test]
+    fn forced_scalar_env_override_is_bit_identical() {
+        let prev = std::env::var(kernel::KERNEL_ENV).ok();
+        std::env::set_var(kernel::KERNEL_ENV, "scalar");
+        assert_eq!(kernel::active_kernel_label(), "scalar");
+        let mut rng = Pcg32::seeded(0x5CA1A);
+        let f = MaskMatrix::random(&mut rng, 9, 900, 0.4, 0.1);
+        let w = MaskMatrix::random(&mut rng, 11, 900, 0.5, 0.1);
+        for parts in [1usize, 2, 4, 8] {
+            let scalar = PassTable::build_scalar(&f, &w, parts).unwrap();
+            scalar.assert_bit_identical(&PassTable::build(&f, &w, parts).unwrap());
+            scalar.assert_bit_identical(&PassTable::build_serial(&f, &w, parts).unwrap());
+            scalar.assert_bit_identical(&PassTable::build_parallel(&f, &w, parts).unwrap());
+        }
+        match prev {
+            // Keep an externally forced kernel in force (the CI
+            // forced-scalar leg exports it for the whole test run).
+            Some(v) => std::env::set_var(kernel::KERNEL_ENV, v),
+            None => {
+                std::env::remove_var(kernel::KERNEL_ENV);
+                assert_ne!(kernel::active_kernel_label(), "scalar");
+            }
+        }
     }
 
     /// A build wide enough to exercise filter tiling (rows >
@@ -807,19 +1062,22 @@ mod tests {
     }
 
     /// `build_bytes` pins the tiled build's peak footprint: the final
-    /// u16 lane table plus both transient SoA plane sets.
+    /// u16 lane table plus both transient SoA plane sets (word streams
+    /// + their prescan summary index).
     #[test]
     fn build_bytes_accounts_table_and_planes() {
         // 64×256 pairs of 18-chunk rows at parts=4: table 64·256·4·2 B;
-        // planes (64+256) rows × ⌈18/2⌉ = 9 words × 8 B × 4 lanes.
+        // planes (64+256) rows × (⌈18/2⌉ = 9 words + 1 prescan summary
+        // word) × 8 B × 4 lanes.
         assert_eq!(
             PassTable::build_bytes(64, 256, 18, 4),
-            64 * 256 * 4 * 2 + (64 + 256) * 9 * 8 * 4
+            64 * 256 * 4 * 2 + (64 + 256) * (9 + 1) * 8 * 4
         );
-        // parts=1 packs two words per chunk into a single lane.
+        // parts=1 packs two words per chunk into a single lane (plus
+        // the summary word).
         assert_eq!(
             PassTable::build_bytes(8, 8, 5, 1),
-            8 * 8 * 2 + (8 + 8) * 10 * 8
+            8 * 8 * 2 + (8 + 8) * (10 + 1) * 8
         );
         // The finished table alone is still what `bytes()` reports.
         let mut rng = Pcg32::seeded(0x5121);

@@ -236,6 +236,66 @@ pub fn results_json(results: &[RunResult]) -> Json {
     Json::Arr(results.iter().map(|r| r.network.to_json()).collect())
 }
 
+/// Which CSV field failed to parse back as a number, and why — the
+/// structured replacement for the `rsplit(',').next().unwrap()
+/// .parse().unwrap()` chains that used to panic the report path on a
+/// malformed or empty line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsvFieldError {
+    /// The offending line, verbatim.
+    pub line: String,
+    /// Zero-based index of the offending field.
+    pub column: usize,
+    /// What was wrong with that field.
+    pub reason: String,
+}
+
+impl std::fmt::Display for CsvFieldError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CSV field {} of {:?}: {}",
+            self.column, self.line, self.reason
+        )
+    }
+}
+
+impl std::error::Error for CsvFieldError {}
+
+fn csv_field_f64(line: &str, column: usize, field: &str) -> Result<f64, CsvFieldError> {
+    let t = field.trim();
+    if t.is_empty() {
+        return Err(CsvFieldError {
+            line: line.to_string(),
+            column,
+            reason: "empty field".to_string(),
+        });
+    }
+    t.parse::<f64>().map_err(|e| CsvFieldError {
+        line: line.to_string(),
+        column,
+        reason: format!("{e}: {t:?}"),
+    })
+}
+
+/// Parse the last comma-separated field of a rendered CSV line as
+/// `f64` — the geomean column of the fig7/scenario tables.
+pub fn csv_last_f64(line: &str) -> Result<f64, CsvFieldError> {
+    // rsplit always yields at least one (possibly empty) piece.
+    let field = line.rsplit(',').next().unwrap_or("");
+    csv_field_f64(line, line.matches(',').count(), field)
+}
+
+/// Parse fields `skip..` of a rendered CSV line as `f64`s (the numeric
+/// tail after the label columns).
+pub fn csv_f64_fields(line: &str, skip: usize) -> Result<Vec<f64>, CsvFieldError> {
+    line.split(',')
+        .enumerate()
+        .skip(skip)
+        .map(|(i, s)| csv_field_f64(line, i, s))
+        .collect()
+}
+
 /// One-line job accounting for a figure/sweep run through the
 /// cache-aware scheduler: how many jobs were simulated vs served from
 /// each reuse path (hot cache, persistent store, cluster peers,
@@ -322,11 +382,7 @@ mod tests {
             &[ArchKind::Dense, ArchKind::Barista],
         );
         for line in csv.lines().skip(1) {
-            let f: Vec<f64> = line
-                .split(',')
-                .skip(2)
-                .map(|x| x.parse().unwrap())
-                .collect();
+            let f = csv_f64_fields(line, 2).unwrap_or_else(|e| panic!("{e}"));
             let sum: f64 = f[..5].iter().sum();
             assert!(
                 (sum - f[5]).abs() < 0.02,
@@ -354,9 +410,27 @@ mod tests {
         assert_eq!(csv.lines().count(), 5);
         // Dense vs itself is exactly 1.0 in every scenario block.
         for line in csv.lines().skip(1).filter(|l| l.contains(",dense,")) {
-            let g: f64 = line.rsplit(',').next().unwrap().parse().unwrap();
+            let g = csv_last_f64(line).unwrap_or_else(|e| panic!("{e}"));
             assert!((g - 1.0).abs() < 1e-9, "{line}");
         }
+    }
+
+    /// A malformed or empty CSV line is a structured [`CsvFieldError`]
+    /// naming the line, column and cause — not a panic (it used to
+    /// abort via `unwrap` on `parse`).
+    #[test]
+    fn bad_csv_line_is_a_structured_error_not_a_panic() {
+        let err = csv_last_f64("").unwrap_err();
+        assert_eq!(err.column, 0);
+        assert_eq!(err.reason, "empty field");
+        let err = csv_last_f64("arch,alexnet,not-a-number").unwrap_err();
+        assert_eq!(err.column, 2);
+        assert!(err.to_string().contains("not-a-number"), "{err}");
+        let err = csv_f64_fields("alexnet,dense,1.0,,2.0", 2).unwrap_err();
+        assert_eq!((err.column, err.reason.as_str()), (3, "empty field"));
+        // And the happy paths still parse.
+        assert_eq!(csv_last_f64("arch,3.25").unwrap(), 3.25);
+        assert_eq!(csv_f64_fields("x,y,1.5,2.5", 2).unwrap(), vec![1.5, 2.5]);
     }
 
     #[test]

@@ -28,6 +28,16 @@ pub struct MaskPlanes {
     words_per_row: usize,
     /// `data[(lane * rows + row) * words_per_row + word]`.
     data: Vec<u64>,
+    /// Two-stage prescan index (DESIGN.md §Perf-6): one summary bit per
+    /// packed word — bit `j % 64` of
+    /// `nz[(lane * rows + row) * summary_words + j / 64]` is set iff
+    /// word `j` of that (lane, row) stream is nonzero. The sparse build
+    /// kernels intersect two rows' summaries to skip every word where
+    /// at least one operand is all-zero; zero-padded tail words never
+    /// set a bit, so the index inherits the padding-is-free property.
+    nz: Vec<u64>,
+    /// `⌈words_per_row / 64⌉` — summary words per (lane, row).
+    summary_words: usize,
 }
 
 impl MaskPlanes {
@@ -52,11 +62,19 @@ impl MaskPlanes {
         }
     }
 
+    /// Summary words of the prescan index per (lane, row) for a given
+    /// packed row width: one bit per packed word.
+    pub fn summary_words_for(words_per_row: usize) -> usize {
+        (words_per_row + 63) / 64
+    }
+
     /// Backing bytes a plane set for (`rows` × `chunks`, `parts`) takes
-    /// — scratch accounting for table-build memory budgets, computable
+    /// — the packed word streams plus the prescan summary index —
+    /// scratch accounting for table-build memory budgets, computable
     /// before any allocation happens.
     pub fn bytes_for(rows: usize, chunks: usize, parts: usize) -> usize {
-        parts * rows * Self::words_per_row(chunks, parts) * std::mem::size_of::<u64>()
+        let wpr = Self::words_per_row(chunks, parts);
+        parts * rows * (wpr + Self::summary_words_for(wpr)) * std::mem::size_of::<u64>()
     }
 
     /// Re-pack `m` into lane planes. `None` when `parts` is not a
@@ -90,11 +108,29 @@ impl MaskPlanes {
                 }
             }
         }
+        // Prescan pass: flag every nonzero packed word. One linear
+        // sweep over `data` right after packing, while it is still
+        // cache-hot — the index costs 1/64 of the plane bytes and lets
+        // the sparse kernels skip word loads instead of popcounting
+        // zeros (DESIGN.md §Perf-6).
+        let sw = Self::summary_words_for(wpr);
+        let mut nz = vec![0u64; parts * m.rows * sw];
+        for i in 0..parts * m.rows {
+            let words = &data[i * wpr..(i + 1) * wpr];
+            let bits = &mut nz[i * sw..(i + 1) * sw];
+            for (j, w) in words.iter().enumerate() {
+                if *w != 0 {
+                    bits[j / 64] |= 1u64 << (j % 64);
+                }
+            }
+        }
         Some(MaskPlanes {
             rows: m.rows,
             parts,
             words_per_row: wpr,
             data,
+            nz,
+            summary_words: sw,
         })
     }
 
@@ -118,9 +154,22 @@ impl MaskPlanes {
         &self.data[(lane * self.rows + row) * self.words_per_row..][..self.words_per_row]
     }
 
-    /// Bytes of backing storage.
+    /// Summary words of the prescan index per (lane, row).
+    pub fn summary_words(&self) -> usize {
+        self.summary_words
+    }
+
+    /// The prescan summary of `row` in lane `lane`: bit `j % 64` of
+    /// word `j / 64` is set iff `lane_row(lane, row)[j] != 0`.
+    #[inline]
+    pub fn nz_row(&self, lane: usize, row: usize) -> &[u64] {
+        debug_assert!(lane < self.parts && row < self.rows);
+        &self.nz[(lane * self.rows + row) * self.summary_words..][..self.summary_words]
+    }
+
+    /// Bytes of backing storage (word streams + prescan index).
     pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<u64>()
+        (self.data.len() + self.nz.len()) * std::mem::size_of::<u64>()
     }
 }
 
@@ -202,7 +251,12 @@ mod tests {
         assert_eq!(MaskPlanes::words_per_row(5, 2), 5);
         assert_eq!(MaskPlanes::words_per_row(5, 4), 3);
         assert_eq!(MaskPlanes::words_per_row(5, 8), 2);
-        assert_eq!(MaskPlanes::bytes_for(3, 5, 4), 4 * 3 * 3 * 8);
+        // bytes_for adds one prescan summary word per (lane, row): with
+        // ≤ 64 packed words per row that is exactly +1 word.
+        assert_eq!(MaskPlanes::bytes_for(3, 5, 4), 4 * 3 * (3 + 1) * 8);
+        assert_eq!(MaskPlanes::summary_words_for(3), 1);
+        assert_eq!(MaskPlanes::summary_words_for(64), 1);
+        assert_eq!(MaskPlanes::summary_words_for(65), 2);
     }
 
     #[test]
@@ -225,6 +279,49 @@ mod tests {
         assert_eq!(p.row_words(), 3); // 6 chunks, 2 lane slices per word
         assert_eq!(p.bytes(), MaskPlanes::bytes_for(4, 6, 4));
         assert_eq!(p.lane_row(3, 3).len(), 3);
+        assert_eq!(p.summary_words(), 1);
+        assert_eq!(p.nz_row(3, 3).len(), 1);
+    }
+
+    /// The prescan index flags exactly the nonzero packed words — for
+    /// every lane split, including true all-zero and all-ones planes
+    /// (`MaskMatrix::random` clamps densities away from the endpoints,
+    /// so build those directly).
+    #[test]
+    fn prescan_index_flags_exactly_nonzero_words() {
+        use crate::tensor::bitmask::SparseChunk;
+        let mut rng = Pcg32::seeded(4);
+        let mixed = MaskMatrix::random(&mut rng, 5, 900, 0.07, 0.3);
+        let zeros = MaskMatrix::zeroed(3, 8);
+        let mut ones = MaskMatrix::zeroed(3, 8);
+        for r in 0..3 {
+            for c in 0..8 {
+                let valid = (900 - c * CHUNK_BITS).min(CHUNK_BITS);
+                ones.set(r, c, SparseChunk::new(u128::MAX).truncate(valid));
+            }
+        }
+        for m in [&mixed, &zeros, &ones] {
+            for parts in [1usize, 2, 4, 8] {
+                let p = MaskPlanes::build(m, parts).unwrap();
+                for lane in 0..parts {
+                    for r in 0..m.rows {
+                        let words = p.lane_row(lane, r);
+                        let nz = p.nz_row(lane, r);
+                        for (j, w) in words.iter().enumerate() {
+                            let bit = nz[j / 64] >> (j % 64) & 1;
+                            assert_eq!(bit == 1, *w != 0, "parts={parts} lane={lane} r={r} j={j}");
+                        }
+                        // No summary bit past the packed row width.
+                        for (k, s) in nz.iter().enumerate() {
+                            let live = words.len().saturating_sub(k * 64).min(64);
+                            if live < 64 {
+                                assert_eq!(s >> live, 0, "stray summary bits");
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Total popcount over all planes equals the matrix nnz — packing

@@ -84,12 +84,19 @@ impl Summary {
 }
 
 /// Percentile over a sorted copy. `q` in [0,1].
+///
+/// Sorts with `f64::total_cmp`: `partial_cmp().unwrap()` here used to
+/// abort the whole report when any sample was NaN (e.g. a 0/0 from a
+/// zero-duration bench division). Under the IEEE total order a
+/// (positive) NaN simply sorts after `+inf`, so low/mid percentiles
+/// stay meaningful and only the quantiles that actually land on the
+/// NaN tail report it.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -139,6 +146,20 @@ mod tests {
     fn percentile_unsorted_input() {
         let xs = [9.0, 1.0, 5.0];
         assert_eq!(percentile(&xs, 0.5), 5.0);
+    }
+
+    /// Regression: a NaN sample must not panic the sort (it used to,
+    /// via `partial_cmp().unwrap()`), and must sort after every finite
+    /// value so the lower percentiles remain usable.
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 2.0);
+        assert!(percentile(&xs, 1.0).is_nan());
+        let infs = [f64::INFINITY, f64::NAN, 0.5];
+        assert_eq!(percentile(&infs, 0.5), f64::INFINITY);
+        assert!(percentile(&infs, 1.0).is_nan());
     }
 
     #[test]

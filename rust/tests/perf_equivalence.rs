@@ -8,7 +8,7 @@
 //! breakdown, traffic, energy — for every architecture, and a pinned
 //! golden value catches silent drift across releases.
 
-use barista::arch::{pass_pe_cycles, PassTable};
+use barista::arch::{kernel, pass_pe_cycles, PassTable};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{run_one, run_one_reference, ExecOptions, RunRequest};
 use barista::workload::{Benchmark, NetworkWork, SparsityModel};
@@ -189,7 +189,41 @@ fn tiled_soa_build_bit_identical_across_scenarios() {
             }
             assert_eq!(scalar.total_matched(), parallel.total_matched());
             assert_eq!(scalar.total_matched(), layer.matched_macs_sampled());
+            // The explicit kernel matrix (PR 8): SWAR × prescan ×
+            // SIMD-when-available, serial and pool-parallel, all held
+            // to the scalar reference by a full-table compare — on
+            // this same real workload layer, per sparsity model.
+            for (kname, kern) in kernel::all_available() {
+                let ks =
+                    PassTable::build_kernel_serial(&layer.filters, &layer.windows, parts, kern)
+                        .unwrap_or_else(|| panic!("{model} {kname} serial parts={parts}"));
+                scalar.assert_bit_identical(&ks);
+                let kp =
+                    PassTable::build_kernel_parallel(&layer.filters, &layer.windows, parts, kern)
+                        .unwrap_or_else(|| panic!("{model} {kname} parallel parts={parts}"));
+                scalar.assert_bit_identical(&kp);
+            }
         }
+    }
+}
+
+/// `BARISTA_KERNEL=scalar` end to end: a whole optimized run under the
+/// forced scalar table-build path must still serialize byte-identically
+/// to the reference run. (Sets the process env; the concurrent tests in
+/// this binary may transiently build tables via the scalar kernel,
+/// which is harmless — every kernel is bit-identical, as proved above.)
+#[test]
+fn forced_scalar_env_override_end_to_end() {
+    let prev = std::env::var(kernel::KERNEL_ENV).ok();
+    std::env::set_var(kernel::KERNEL_ENV, "scalar");
+    assert_eq!(kernel::active_kernel_label(), "scalar");
+    let r = req(ArchKind::Barista, 32, 1);
+    let fast = run_one(&r).network.to_json().to_string();
+    let slow = run_one_reference(&r).network.to_json().to_string();
+    assert_eq!(fast, slow, "forced-scalar run diverged from reference");
+    match prev {
+        Some(v) => std::env::set_var(kernel::KERNEL_ENV, v),
+        None => std::env::remove_var(kernel::KERNEL_ENV),
     }
 }
 
