@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt clippy prop examples test-store test-cluster test-chaos test-kernels ci bench bench-smoke bench-table bench-figs artifacts serve clean
+.PHONY: build test fmt clippy prop examples test-store test-cluster test-chaos test-kernels test-qos ci bench bench-smoke bench-table bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -56,6 +56,14 @@ test-chaos:
 	cd rust && $(if $(FAULT_SEED),FAULT_SEED=$(FAULT_SEED)) \
 		cargo test --release --features chaos --test chaos
 
+# QoS suite (tests/qos.rs): weighted-fair-queueing properties (no
+# backlogged class starves past its stride bound; shares track the
+# configured weights), token-bucket admission, and deadline-shed /
+# quota-reject behavior over a live socket with exact per-class
+# counter accounting. Part of the CI `test` job.
+test-qos:
+	cd rust && cargo test --release --test qos
+
 # Forced-scalar leg (mirrors the CI step): the table-build kernel is
 # runtime-selected (DESIGN.md §Perf-6, BARISTA_KERNEL env knob), and
 # plain `cargo test` exercises the auto choice. This pins the scalar
@@ -79,6 +87,7 @@ ci:
 	$(MAKE) test-kernels
 	cd rust && cargo test --release --test store_persistence
 	cd rust && cargo test --release --test cluster
+	$(MAKE) test-qos
 	$(MAKE) test-chaos
 	cd rust && cargo run --release --example scenarios
 	$(MAKE) bench-smoke
@@ -88,14 +97,14 @@ ci:
 # numbers for DESIGN.md §Perf) — the same bench set as bench-smoke, at
 # full sizes.
 bench:
-	cd rust && cargo bench --features chaos --bench perf_hotpath --bench service_throughput --bench table_build
+	cd rust && cargo bench --features chaos --bench perf_hotpath --bench service_throughput --bench load_replay --bench table_build
 
 # CI-sized variant of the perf benches (same JSON artifacts, tiny
 # sizes) with the regression guard on: the first run seals
 # BENCH_*.smoke.baseline.json at the repo root, later runs fail on any
 # timed field regressing past 2x (BENCH_GUARD_RATIO overrides).
 bench-smoke:
-	cd rust && BENCH_SMOKE=1 BENCH_GUARD=1 cargo bench --features chaos --bench perf_hotpath --bench service_throughput --bench table_build
+	cd rust && BENCH_SMOKE=1 BENCH_GUARD=1 cargo bench --features chaos --bench perf_hotpath --bench service_throughput --bench load_replay --bench table_build
 
 # Table-build microbench only: the full kernel matrix — scalar AoS vs
 # tiled SWAR vs two-stage prescan vs explicit SIMD (when detected) vs

@@ -1,0 +1,235 @@
+//! Heavy-tailed load replay through the QoS scheduler: a seeded
+//! generator drives a Zipf-distributed request stream (hot-set
+//! repeats, batch bursts, client restarts) from several concurrent
+//! client threads against a prewarmed scheduler, and reports
+//! per-priority-class latency percentiles. This is the service layer's
+//! "does QoS hold up under realistic skew" row: the Zipf exponent puts
+//! most traffic on a small hot set (cache hits), the tail keeps
+//! touching cold keys, bursts pile batch work onto the queues, and
+//! restarts churn client identities through the admission path.
+//!
+//! Full mode replays ~1M requests; `BENCH_SMOKE=1` replays ~2k with a
+//! smaller job universe. Rows `replay_interactive` / `replay_batch` /
+//! `replay_background` publish `p50_ms` / `p99_ms` / `max_ms` / `count`
+//! into `BENCH_service.json` (shared with `service_throughput` via the
+//! row-merge helper) under the standard self-sealing regression guard.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use barista::bench_harness::{bench_header, finish_bench, merge_rows_from_existing};
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::RunRequest;
+use barista::service::{Priority, QoS, QosConfig, Scheduler, SchedulerConfig};
+use barista::util::stats::percentile;
+use barista::util::{Json, Pcg32};
+use barista::workload::Benchmark;
+
+/// One distinct job in the replay universe, keyed by seed.
+fn job(seed: u64) -> RunRequest {
+    let mut c = SimConfig::paper(ArchKind::Dense);
+    c.window_cap = 16;
+    c.batch = 1;
+    c.seed = seed;
+    RunRequest {
+        benchmark: Benchmark::AlexNet,
+        config: c,
+    }
+}
+
+/// Zipf(s) sampler over `[0, n)` via the precomputed CDF: heavy-tailed
+/// popularity with exponent ~1.1, the classic web/cache skew shape.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for i in 0..n {
+            total += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(total);
+        }
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|c| *c < u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Per-class latency samples (ms), indexed by `Priority::index()`.
+#[derive(Default)]
+struct ClassLatencies {
+    ms: [Vec<f64>; 3],
+}
+
+const CLASS_NAMES: [&str; 3] = ["background", "batch", "interactive"];
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
+    bench_header("load replay: heavy-tailed QoS stream, per-class latency");
+
+    // Generator shape. The class mix is 60% batch / 30% interactive /
+    // 10% background; ~1% of draws open an 8-request batch burst; ~0.2%
+    // restart the thread's client identity (fresh token bucket).
+    let universe: usize = if smoke { 64 } else { 512 };
+    let total_requests: usize = if smoke { 2_000 } else { 1_000_000 };
+    let threads: usize = 4;
+    let per_thread = total_requests / threads;
+    let zipf = Arc::new(Zipf::new(universe, 1.1));
+    let burst_len = 8usize;
+
+    let sched = Scheduler::with_qos(
+        SchedulerConfig {
+            workers: 4,
+            shards: 4,
+            queue_cap: 256,
+            cache_bytes: 64 << 20,
+            store: None,
+        },
+        QosConfig::default(),
+        None,
+    );
+    let reqs: Arc<Vec<RunRequest>> = Arc::new((0..universe as u64).map(job).collect());
+
+    // Prewarm: compute every distinct job once so the replay measures
+    // QoS dispatch + cache behavior, not first-touch simulation.
+    let t0 = Instant::now();
+    sched.run_results(&reqs).expect("prewarm");
+    println!(
+        "prewarmed {universe} distinct jobs in {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    let t0 = Instant::now();
+    let per_thread_lat: Vec<ClassLatencies> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let sched = &sched;
+            let zipf = zipf.clone();
+            let reqs = reqs.clone();
+            handles.push(scope.spawn(move || {
+                let mut rng = Pcg32::new(0xBA4157A0 + t as u64, t as u64);
+                let mut lat = ClassLatencies::default();
+                let mut client_gen = 0u64;
+                let mut issued = 0usize;
+                let mut submit = |req: &RunRequest,
+                                  qos: &QoS,
+                                  lat: &mut ClassLatencies| {
+                    let t0 = Instant::now();
+                    let out = sched.execute_qos(req, qos);
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    assert!(out.is_ok(), "replay request failed: {out:?}");
+                    lat.ms[qos.priority.index()].push(ms);
+                };
+                while issued < per_thread {
+                    if rng.gen_bool(0.002) {
+                        client_gen += 1; // client restart: new identity
+                    }
+                    let client = Some(format!("c{t}_{client_gen}"));
+                    if rng.gen_bool(0.01) {
+                        // Batch burst: a consecutive run of batch-class
+                        // jobs starting at a Zipf-drawn index.
+                        let start = zipf.sample(&mut rng);
+                        for k in 0..burst_len {
+                            let req = &reqs[(start + k) % reqs.len()];
+                            let qos = QoS {
+                                priority: Priority::Batch,
+                                client: client.clone(),
+                                deadline_ms: None,
+                            };
+                            submit(req, &qos, &mut lat);
+                            issued += 1;
+                        }
+                        continue;
+                    }
+                    let roll = rng.next_f64();
+                    let (priority, deadline_ms) = if roll < 0.30 {
+                        (Priority::Interactive, Some(1_000))
+                    } else if roll < 0.90 {
+                        (Priority::Batch, None)
+                    } else {
+                        (Priority::Background, None)
+                    };
+                    let req = &reqs[zipf.sample(&mut rng)];
+                    let qos = QoS {
+                        priority,
+                        client: client.clone(),
+                        deadline_ms,
+                    };
+                    submit(req, &qos, &mut lat);
+                    issued += 1;
+                }
+                lat
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("replay thread")).collect()
+    });
+    let replay_s = t0.elapsed().as_secs_f64();
+
+    let mut merged = ClassLatencies::default();
+    for lat in per_thread_lat {
+        for (i, v) in lat.ms.into_iter().enumerate() {
+            merged.ms[i].extend(v);
+        }
+    }
+    let st = sched.stats();
+    let total: usize = merged.ms.iter().map(Vec::len).sum();
+    println!(
+        "replayed {total} requests in {:.2} s ({:.0} req/s), cache hits {}, executed {}",
+        replay_s,
+        total as f64 / replay_s.max(1e-9),
+        st.cache_hits,
+        st.executed
+    );
+
+    let mut rows = Vec::new();
+    println!(
+        "{:<20} {:>10} {:>10} {:>10} {:>10}",
+        "class", "count", "p50 ms", "p99 ms", "max ms"
+    );
+    for (i, name) in CLASS_NAMES.iter().enumerate() {
+        let xs = &merged.ms[i];
+        assert!(!xs.is_empty(), "class {name} never sampled — generator drift");
+        let p50 = percentile(xs, 0.50);
+        let p99 = percentile(xs, 0.99);
+        let max = xs.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "replay_{name:<13} {:>10} {p50:>10.4} {p99:>10.4} {max:>10.4}",
+            xs.len()
+        );
+        let mut row = Json::obj();
+        row.set("name", format!("replay_{name}"))
+            .set("count", xs.len())
+            .set("p50_ms", p50)
+            .set("p99_ms", p99)
+            .set("max_ms", max);
+        rows.push(row);
+    }
+
+    // A prewarmed universe with no quota and generous deadlines must
+    // shed nothing: every request is admitted and answered.
+    let shed: u64 = (0..3)
+        .map(|i| st.qos.shed_deadline[i] + st.qos.shed_overload[i])
+        .sum();
+    assert_eq!(shed, 0, "prewarmed replay must not shed: {:?}", st.qos);
+    assert_eq!(st.qos.quota_rejected, [0; 3], "no quota configured");
+
+    let mut summary = Json::obj();
+    summary
+        .set("bench", "load_replay")
+        .set("smoke", smoke)
+        .set("requests", total)
+        .set("rows", Json::Arr(rows));
+    println!("load_replay_summary {}", summary.to_string());
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_service.json");
+    // service_throughput publishes into the same file; keep its rows.
+    merge_rows_from_existing(out_path, &mut summary);
+    finish_bench(out_path, &summary);
+}

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use barista::bench_harness::{bench_header, finish_bench};
+use barista::bench_harness::{bench_header, finish_bench, merge_rows_from_existing};
 use barista::cluster::{RouterConfig, RouterServer};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::RunRequest;
@@ -366,8 +366,8 @@ fn main() {
         .set("smoke", smoke)
         .set("rows", Json::Arr(rows));
     println!("service_throughput_summary {}", summary.to_string());
-    finish_bench(
-        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_service.json"),
-        &summary,
-    );
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_service.json");
+    // load_replay publishes into the same file; keep its rows alive.
+    merge_rows_from_existing(out_path, &mut summary);
+    finish_bench(out_path, &summary);
 }

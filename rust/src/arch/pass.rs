@@ -157,8 +157,31 @@ const FILTER_TILE: usize = 64;
 
 /// `PassTable::build` fans tiles across the layer pool once the kernel
 /// has at least this many packed-word operations (pairs × words per
-/// pair); below it the pool hand-off costs more than the build.
+/// pair); below it the pool hand-off costs more than the build. For
+/// the prescan kernels the raw count is first scaled by the plane
+/// summary density ([`auto_effective_word_ops`]).
 const PARALLEL_BUILD_MIN_WORD_OPS: u64 = 1 << 21;
+
+/// The packed-word-op count the auto parallel cutoff compares against
+/// [`PARALLEL_BUILD_MIN_WORD_OPS`]. The SWAR kernel touches every
+/// packed word, so its work is the raw count. The prescan kernels
+/// ([`Kernel::Prescan`] / [`Kernel::Simd`]) intersect the two rows'
+/// nonzero summaries and skip every word where either operand is
+/// all-zero — on sparse planes the raw count overstates their work by
+/// 10×+ and the pool hand-off dwarfs the build. `min(density_f,
+/// density_w)` is an upper bound on the intersected-word share (the
+/// intersection can't flag more words than its sparser operand), so
+/// the scaled count never understates prescan work: large sparse
+/// layers still fan out, and near-empty ones stay on the caller.
+fn auto_effective_word_ops(word_ops: u64, kern: Kernel, fd: f64, wd: f64) -> u64 {
+    match kern {
+        Kernel::Swar => word_ops,
+        Kernel::Prescan | Kernel::Simd(_) => {
+            let density = fd.min(wd).clamp(0.0, 1.0);
+            (word_ops as f64 * density).ceil() as u64
+        }
+    }
+}
 
 /// How a [`PassTable`] build maps onto the machine (all modes are
 /// bit-identical; they differ only in wall-clock).
@@ -348,7 +371,13 @@ impl PassTable {
             BuildMode::Parallel => true,
             BuildMode::Auto => {
                 let word_ops = (nf as u64) * (nw as u64) * (parts * fplanes.row_words()) as u64;
-                threads > 1 && word_ops >= PARALLEL_BUILD_MIN_WORD_OPS
+                let effective = auto_effective_word_ops(
+                    word_ops,
+                    kern,
+                    fplanes.nz_density(),
+                    wplanes.nz_density(),
+                );
+                threads > 1 && effective >= PARALLEL_BUILD_MIN_WORD_OPS
             }
         };
         if parallel && nw > 1 && nf > 0 {
@@ -669,6 +698,38 @@ mod tests {
         (0..n)
             .map(|_| SparseChunk::random_bernoulli(&mut rng, d))
             .collect()
+    }
+
+    /// The auto parallel cutoff's work estimate: raw word ops for the
+    /// dense SWAR kernel, density-scaled (by the sparser operand, an
+    /// upper bound on the intersection) for the prescan kernels.
+    #[test]
+    fn auto_cutoff_scales_prescan_work_by_summary_density() {
+        let ops = 1u64 << 22; // 2x the parallel threshold
+        // Dense kernel: density is irrelevant, raw count passes through.
+        assert_eq!(auto_effective_word_ops(ops, Kernel::Swar, 0.01, 0.01), ops);
+        // Prescan at full density: unchanged.
+        assert_eq!(auto_effective_word_ops(ops, Kernel::Prescan, 1.0, 1.0), ops);
+        // Prescan on sparse planes: scaled by the sparser operand, which
+        // drops this 2x-threshold build below the cutoff.
+        let eff = auto_effective_word_ops(ops, Kernel::Prescan, 0.1, 0.8);
+        assert_eq!(eff, (ops as f64 * 0.1).ceil() as u64);
+        assert!(eff < PARALLEL_BUILD_MIN_WORD_OPS);
+        // Empty planes contribute zero effective work.
+        assert_eq!(auto_effective_word_ops(ops, Kernel::Prescan, 0.0, 1.0), 0);
+        // The SIMD prescan variants scale exactly like Prescan (when
+        // the host has one to detect).
+        if let Some(isa) = kernel::detect_simd() {
+            assert_eq!(
+                auto_effective_word_ops(ops, Kernel::Simd(isa), 0.1, 0.8),
+                eff
+            );
+        }
+        // A sparse build 20x past the threshold still fans out.
+        assert!(
+            auto_effective_word_ops(40 * PARALLEL_BUILD_MIN_WORD_OPS, Kernel::Prescan, 0.1, 0.9)
+                >= PARALLEL_BUILD_MIN_WORD_OPS
+        );
     }
 
     #[test]

@@ -150,6 +150,49 @@ pub fn finish_bench(out_path: &str, summary: &Json) {
     }
 }
 
+/// Carry forward rows from an existing summary file at `out_path` that
+/// the current `summary` does not cover. Two benches
+/// (`service_throughput`, `load_replay`) publish into the same
+/// `BENCH_service.json`; without the merge, whichever ran second would
+/// clobber the other's rows and the guard would "re-seal (drift)" on
+/// every alternation. Rows only carry across runs of the same `smoke`
+/// mode — mixing smoke and full magnitudes in one file would hand the
+/// guard stale numbers at the wrong scale.
+pub fn merge_rows_from_existing(out_path: &str, summary: &mut Json) {
+    let Ok(prev_text) = std::fs::read_to_string(out_path) else {
+        return;
+    };
+    let Ok(prev) = Json::parse(&prev_text) else {
+        return;
+    };
+    if prev.get("smoke").and_then(Json::as_bool) != summary.get("smoke").and_then(Json::as_bool) {
+        return;
+    }
+    let have: Vec<String> = summary
+        .get("rows")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(row_key)
+        .collect();
+    let carried: Vec<Json> = prev
+        .get("rows")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter(|r| row_key(r).is_some_and(|k| !have.contains(&k)))
+        .cloned()
+        .collect();
+    if carried.is_empty() {
+        return;
+    }
+    if let Json::Obj(m) = summary {
+        if let Some(Json::Arr(rows)) = m.get_mut("rows") {
+            rows.extend(carried);
+        }
+    }
+}
+
 fn seal_baseline(path: &str, summary: &Json, verb: &str) {
     match std::fs::write(path, format!("{}\n", summary.pretty())) {
         Ok(()) => println!("{verb} bench guard baseline -> {path}"),
@@ -325,6 +368,51 @@ mod tests {
         };
         assert_eq!(check_against_baseline(&mk(9.0), &mk(10.0), 2.0), Ok(1));
         assert!(check_against_baseline(&mk(25.0), &mk(10.0), 2.0).is_err());
+    }
+
+    #[test]
+    fn merge_carries_foreign_rows_and_respects_smoke_mode() {
+        let dir = std::env::temp_dir().join("barista-merge-rows-test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_merge.json");
+        let path = path.to_str().unwrap();
+
+        // On disk: one service row + one replay row, smoke mode.
+        let mut disk = summary(true, 10.0, 1e9);
+        if let Json::Obj(m) = &mut disk {
+            if let Some(Json::Arr(rows)) = m.get_mut("rows") {
+                let mut replay = Json::obj();
+                replay.set("name", "replay_interactive").set("p99_ms", 4.0);
+                rows.push(replay);
+            }
+        }
+        std::fs::write(path, disk.pretty()).unwrap();
+
+        // A fresh run that only regenerates the service row keeps the
+        // replay row; its own row wins over the on-disk copy.
+        let mut cur = summary(true, 12.0, 1e9);
+        merge_rows_from_existing(path, &mut cur);
+        let rows = cur.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2, "{cur:?}");
+        assert_eq!(
+            rows[0].get("optimized_ms").and_then(Json::as_f64),
+            Some(12.0)
+        );
+        assert_eq!(
+            rows[1].get("name").and_then(Json::as_str),
+            Some("replay_interactive")
+        );
+
+        // Smoke-mode mismatch: nothing carries.
+        let mut full = summary(false, 12.0, 1e9);
+        merge_rows_from_existing(path, &mut full);
+        assert_eq!(full.get("rows").and_then(Json::as_arr).unwrap().len(), 1);
+
+        // Missing or unparseable file: no-op.
+        let mut cur2 = summary(true, 12.0, 1e9);
+        merge_rows_from_existing("/nonexistent/BENCH_x.json", &mut cur2);
+        assert_eq!(cur2.get("rows").and_then(Json::as_arr).unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -47,6 +47,7 @@ use crate::cluster::ring::{HashRing, NodeId, Route};
 use crate::cluster::transport::{Transport, TransportPolicy, Verb};
 use crate::service::cache::{canonical_job_string, job_key, JobKey};
 use crate::service::protocol::{self, JobSpec, Request};
+use crate::service::qos::{ClassWeights, QoS, ALL_CLASSES, CLASSES};
 use crate::service::server::{read_bounded_line, LineRead, MAX_LINE_BYTES};
 use crate::service::store;
 use crate::util::Json;
@@ -78,6 +79,11 @@ pub struct RouterConfig {
     /// (`--deadline-ms`, `--retries`, `--breaker-threshold`,
     /// `--breaker-cooldown-ms`).
     pub policy: TransportPolicy,
+    /// Class weights (`--weights`), mirroring the nodes' schedulers.
+    /// The router uses them for one decision: the minimum-weight class
+    /// never work-steals — overflow from the cheapest traffic waits for
+    /// its owner instead of spilling onto nodes serving better classes.
+    pub weights: ClassWeights,
 }
 
 impl Default for RouterConfig {
@@ -89,6 +95,7 @@ impl Default for RouterConfig {
             vnodes: HashRing::DEFAULT_VNODES,
             health_interval: Duration::from_millis(250),
             policy: TransportPolicy::default(),
+            weights: ClassWeights::default(),
         }
     }
 }
@@ -106,6 +113,15 @@ struct RouterCounters {
     stale_hits: AtomicU64,
     /// Structured `degraded` errors returned (no node, no stale copy).
     degraded_responses: AtomicU64,
+    /// Per-class QoS accounting, indexed by [`Priority::index`]. The
+    /// router counts what it *observes* in node responses — a node's
+    /// own counters remain the ground truth — so cluster tests can
+    /// check client-visible sheds against node-side sheds exactly.
+    ///
+    /// [`Priority::index`]: crate::service::qos::Priority::index
+    qos_routed: [AtomicU64; CLASSES],
+    qos_shed: [AtomicU64; CLASSES],
+    qos_quota_rejected: [AtomicU64; CLASSES],
 }
 
 /// Per-node live state. Liveness is the transport breaker, not ring
@@ -203,7 +219,26 @@ impl Router {
     /// the ring, total failure degrades to a stale store copy when one
     /// exists and a structured `degraded` error otherwise).
     pub fn dispatch(&self, spec: &JobSpec) -> Json {
+        self.dispatch_qos(spec, &QoS::default())
+    }
+
+    /// [`dispatch`](Self::dispatch) with a QoS envelope. The envelope
+    /// rides the forwarded submit verbatim (a default envelope leaves
+    /// the node-bound frame byte-identical to pre-QoS routing); the
+    /// router adds two behaviors of its own:
+    ///
+    /// * the minimum-weight class never work-steals — its overflow
+    ///   waits for the owner instead of spilling onto nodes serving
+    ///   better classes;
+    /// * shed (`"shed":true`) and `quota_exceeded` rejections are
+    ///   terminal — forwarded as-is, never retried on another node.
+    ///   The owner *admitted* and then dropped the job by policy (or
+    ///   throttled the client); re-dispatching would both double-spend
+    ///   cluster capacity on traffic the policy just refused and break
+    ///   the exact client-visible-vs-node-counter accounting.
+    pub fn dispatch_qos(&self, spec: &JobSpec, qos: &QoS) -> Json {
         let key = job_key(&spec.to_request());
+        let class = qos.priority.index();
         let pref = self.ring.preference(&key, self.nodes.len());
         let owner = pref[0];
         let mut order: Vec<NodeId> =
@@ -217,7 +252,11 @@ impl Router {
         }
         // Work-stealing: a live but overloaded owner hands the overflow
         // to the least-loaded live node; the owner stays as a fallback.
-        if order.first() == Some(&owner) && self.load(owner) >= self.cfg.steal_threshold {
+        // The minimum-weight class is exempt: it queues on its owner.
+        if qos.priority != self.cfg.weights.min_class()
+            && order.first() == Some(&owner)
+            && self.load(owner) >= self.cfg.steal_threshold
+        {
             if let Some(&best) = order.iter().min_by_key(|n| self.load(**n)) {
                 if best != owner && self.load(best) < self.load(owner) {
                     order.retain(|n| *n != best);
@@ -228,6 +267,7 @@ impl Router {
         let line = Request::Submit {
             spec: spec.clone(),
             stream: false,
+            qos: qos.clone(),
         }
         .to_json();
         let mut owner_down = !self.is_alive(owner);
@@ -242,6 +282,7 @@ impl Router {
                 Ok(mut resp) => {
                     if resp.get("ok").and_then(Json::as_bool) == Some(true) {
                         self.note_served(owner, nid, owner_down, &resp);
+                        self.counters.qos_routed[class].fetch_add(1, Ordering::Relaxed);
                         self.replicate_fresh(&key, spec, nid, &resp);
                         resp.set("node", node.addr.as_str());
                         return resp;
@@ -253,6 +294,18 @@ impl Router {
                         // whole cluster is saturated.
                         busy = Some(resp);
                         continue;
+                    }
+                    if resp.get("shed").and_then(Json::as_bool) == Some(true) {
+                        // Shed by policy on the node that owns the job:
+                        // terminal (see the method doc).
+                        self.counters.qos_shed[class].fetch_add(1, Ordering::Relaxed);
+                        return resp;
+                    }
+                    if err == "quota_exceeded" {
+                        // The client is throttled cluster-wide as it is
+                        // per-node: admission control, not a node fault.
+                        self.counters.qos_quota_rejected[class].fetch_add(1, Ordering::Relaxed);
+                        return resp;
                     }
                     if err.contains("shutting down") {
                         // The node is draining: a semantic failure the
@@ -410,14 +463,21 @@ impl Router {
         }
     }
 
-    /// Route a whole batch concurrently, preserving input order. Any
-    /// non-busy per-job failure fails the batch (matching a worker
-    /// node's batch semantics).
+    /// Route a whole batch concurrently, preserving input order. A
+    /// shed job becomes its per-job `{error, shed}` entry (matching a
+    /// worker node's batch semantics); any other non-busy per-job
+    /// failure fails the batch.
     pub fn dispatch_batch(&self, specs: &[JobSpec]) -> Json {
+        self.dispatch_batch_qos(specs, &QoS::default())
+    }
+
+    /// [`dispatch_batch`](Self::dispatch_batch) with a QoS envelope
+    /// applying to every job in the batch.
+    pub fn dispatch_batch_qos(&self, specs: &[JobSpec], qos: &QoS) -> Json {
         let bodies: Vec<Json> = std::thread::scope(|scope| {
             let handles: Vec<_> = specs
                 .iter()
-                .map(|spec| scope.spawn(move || self.dispatch(spec)))
+                .map(|spec| scope.spawn(move || self.dispatch_qos(spec, qos)))
                 .collect();
             handles
                 .into_iter()
@@ -427,17 +487,22 @@ impl Router {
                 })
                 .collect()
         });
-        if let Some(err) = bodies
-            .iter()
-            .find(|b| b.get("ok").and_then(Json::as_bool) != Some(true))
-        {
+        if let Some(err) = bodies.iter().find(|b| {
+            b.get("ok").and_then(Json::as_bool) != Some(true)
+                && b.get("shed").and_then(Json::as_bool) != Some(true)
+        }) {
             return err.clone();
         }
+        let shed = bodies
+            .iter()
+            .filter(|b| b.get("shed").and_then(Json::as_bool) == Some(true))
+            .count();
         let results: Vec<Json> = bodies
             .into_iter()
             .map(|mut b| {
                 // Batch entries carry per-job fields only, like a
-                // worker node's batch response.
+                // worker node's batch response (a shed entry keeps just
+                // its `error` and `shed` markers).
                 if let Json::Obj(m) = &mut b {
                     m.remove("ok");
                     m.remove("op");
@@ -449,6 +514,11 @@ impl Router {
         j.set("ok", true)
             .set("op", "batch")
             .set("results", Json::Arr(results));
+        // Only under QoS shedding — fully-served batches stay
+        // byte-identical to the pre-QoS response.
+        if shed > 0 {
+            j.set("shed", shed);
+        }
         j
     }
 
@@ -501,13 +571,34 @@ impl Router {
         j
     }
 
+    /// Per-class QoS accounting as observed by this router: for each
+    /// class, jobs successfully routed, shed responses forwarded, and
+    /// quota rejections forwarded.
+    pub fn qos_json(&self) -> Json {
+        let c = &self.counters;
+        let mut j = Json::obj();
+        for p in ALL_CLASSES {
+            let i = p.index();
+            let mut b = Json::obj();
+            b.set(
+                "quota_rejected",
+                c.qos_quota_rejected[i].load(Ordering::Relaxed),
+            )
+            .set("routed", c.qos_routed[i].load(Ordering::Relaxed))
+            .set("shed", c.qos_shed[i].load(Ordering::Relaxed));
+            j.set(p.name(), b);
+        }
+        j
+    }
+
     /// Router counters + per-node state (the `stats` response body).
     /// `dead_marks` is the historical name for what is now the count
     /// of breaker-open transitions.
     pub fn stats_json(&self) -> Json {
         let c = &self.counters;
         let mut j = Json::obj();
-        j.set("routed", c.routed.load(Ordering::Relaxed))
+        j.set("qos", self.qos_json())
+            .set("routed", c.routed.load(Ordering::Relaxed))
             .set("steals", c.steals.load(Ordering::Relaxed))
             .set("failovers", c.failovers.load(Ordering::Relaxed))
             .set("replica_hits", c.replica_hits.load(Ordering::Relaxed))
@@ -692,8 +783,8 @@ fn poke_accept_loop(local: SocketAddr) {
 pub fn respond(line: &str, router: &Router, started: Instant) -> (Json, bool) {
     match Request::parse_line(line) {
         Err(e) => (protocol::response_error(&e), false),
-        Ok(Request::Submit { spec, .. }) => (router.dispatch(&spec), false),
-        Ok(Request::Batch { specs, .. }) => (router.dispatch_batch(&specs), false),
+        Ok(Request::Submit { spec, qos, .. }) => (router.dispatch_qos(&spec, &qos), false),
+        Ok(Request::Batch { specs, qos, .. }) => (router.dispatch_batch_qos(&specs, &qos), false),
         Ok(Request::Status) => (router.status_json(started), false),
         Ok(Request::Stats) => {
             let mut j = Json::obj();
@@ -705,7 +796,10 @@ pub fn respond(line: &str, router: &Router, started: Instant) -> (Json, bool) {
         Ok(Request::Nodes) => (router.nodes_json(), false),
         Ok(Request::Health) => {
             let mut j = Json::obj();
-            j.set("ok", true).set("op", "health").set("role", "router");
+            j.set("ok", true)
+                .set("op", "health")
+                .set("qos", router.qos_json())
+                .set("role", "router");
             (j, false)
         }
         Ok(Request::Shutdown) => {

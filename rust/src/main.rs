@@ -47,7 +47,8 @@ use barista::cluster::{PeerSet, RouterConfig, RouterServer, TransportPolicy, DEF
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{self, report, run_one, RunRequest};
 use barista::service::{
-    Client, JobSpec, PeerLookup, Scheduler, SchedulerConfig, Server, Store, DEFAULT_ADDR,
+    ClassWeights, Client, JobSpec, PeerLookup, Priority, QoS, QosConfig, Quota, Scheduler,
+    SchedulerConfig, Server, Store, DEFAULT_ADDR,
 };
 use barista::util::Json;
 use barista::workload::{load_network_file, network, Benchmark, SparsityModel};
@@ -101,15 +102,18 @@ fn print_help() {
          \x20 serve     [--addr HOST:PORT] [--workers N] [--shards N] [--queue-cap N] [--cache-mb N]\n\
          \x20           [--cache-dir DIR]   (persistent result store; survives restarts)\n\
          \x20           [--peers A,B | --cluster ROUTER]   (consult peer stores before simulating)\n\
+         \x20           [--weights I,B,G] [--quota RATE]   (QoS: class shares + per-client admission)\n\
          \x20           [--deadline-ms N] [--retries N] [--breaker-threshold N] [--breaker-cooldown-ms N]\n\
          \x20 submit    [--addr HOST:PORT | --cluster ROUTER] --network <name|file.json>\n\
          \x20           [--arch <name>] [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
-         \x20           [--deadline-ms N]   (per-response read deadline)\n\
+         \x20           [--priority interactive|batch|background] [--client ID]\n\
+         \x20           [--deadline-ms N]   (QoS deadline: shed unserved past it; also read bound)\n\
          \x20 batch     [--addr HOST:PORT | --cluster ROUTER] [--networks a,b|all] [--archs x,y|fig7]\n\
          \x20           [--window-cap N] [--sparsity MODEL] [--json] [--stream] [--deadline-ms N]\n\
+         \x20           [--priority interactive|batch|background] [--client ID]\n\
          \x20 stats     [ADDR | --addr HOST:PORT] [--json]   (server or router counters)\n\
          \x20 cluster-serve  --nodes A,B,C [--addr HOST:PORT] [--steal-threshold N]\n\
-         \x20           [--vnodes N] [--health-ms N] [--no-replicate]\n\
+         \x20           [--vnodes N] [--health-ms N] [--no-replicate] [--weights I,B,G]\n\
          \x20           [--deadline-ms N] [--retries N] [--breaker-threshold N] [--breaker-cooldown-ms N]\n\
          \x20 golden    [--artifacts DIR]\n\
          \x20 info      [--network <name|file.json>]\n\
@@ -218,6 +222,44 @@ fn chaos_plan() -> Result<Option<Arc<barista::cluster::fault::FaultPlan>>, Strin
         Ok(None) => Ok(None),
         Err(e) => Err(format!("FAULT_PLAN: {e}")),
     }
+}
+
+/// The QoS envelope from the shared `--priority`/`--client`/
+/// `--deadline-ms` submit options. All optional: absent flags leave the
+/// envelope at its default, which keeps the wire frame byte-identical
+/// to a pre-QoS client.
+fn qos_from_args(args: &Args) -> Result<QoS, String> {
+    let mut qos = QoS::default();
+    if let Some(p) = args.get("priority") {
+        qos.priority = Priority::parse(p)?;
+    }
+    if let Some(c) = args.get("client") {
+        if c.is_empty() {
+            return Err("--client must be a non-empty id".into());
+        }
+        qos.client = Some(c.to_string());
+    }
+    if args.get("deadline-ms").is_some() {
+        qos.deadline_ms = Some(args.get_u64("deadline-ms", 0)?);
+    }
+    Ok(qos)
+}
+
+/// QoS policy from the `serve` flags: `--weights I,B,G` (weighted-fair
+/// shares, interactive first) and `--quota RATE` (per-client admitted
+/// submissions per second, fractional allowed).
+fn qos_config_from_args(args: &Args) -> Result<QosConfig, String> {
+    let mut qos = QosConfig::default();
+    if let Some(w) = args.get("weights") {
+        qos.weights = ClassWeights::parse(w)?;
+    }
+    if let Some(q) = args.get("quota") {
+        let rate: f64 = q
+            .parse()
+            .map_err(|_| format!("--quota expects a rate per second, got '{q}'"))?;
+        qos.quota = Some(Quota::per_second(rate)?);
+    }
+    Ok(qos)
 }
 
 /// Scheduler sizing from the shared `--workers`/`--shards`/`--queue-cap`
@@ -471,6 +513,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             "cache-dir",
             "peers",
             "cluster",
+            "weights",
+            "quota",
             "deadline-ms",
             "retries",
             "breaker-threshold",
@@ -480,11 +524,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     )?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
     let cfg = scheduler_config(args)?;
+    let qos = qos_config_from_args(args)?;
     let (workers, shards, queue_cap, cache_mb) =
         (cfg.workers, cfg.shards, cfg.queue_cap, cfg.cache_bytes >> 20);
     let store_note = match &cfg.store {
         Some(store) => format!(", store {}", store.dir().display()),
         None => String::new(),
+    };
+    let qos_note = {
+        let quota_note = match &qos.quota {
+            Some(q) => format!(", quota {}/s per client", q.rate_per_s),
+            None => String::new(),
+        };
+        format!(", weights {}{quota_note}", qos.weights.describe())
     };
     let peers = serve_peers(args, addr)?;
     let peers_note = match &peers {
@@ -499,9 +551,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     let peers = peers.map(|p| Arc::new(p) as Arc<dyn PeerLookup>);
     let server =
-        Server::bind_with_peers(addr, cfg, peers).map_err(|e| format!("bind {addr}: {e}"))?;
+        Server::bind_full(addr, cfg, qos, peers).map_err(|e| format!("bind {addr}: {e}"))?;
     println!(
-        "barista serve: listening on {} ({workers} workers, {shards} shards, queue cap {queue_cap}, cache {cache_mb} MB{store_note}{peers_note})",
+        "barista serve: listening on {} ({workers} workers, {shards} shards, queue cap {queue_cap}, cache {cache_mb} MB{store_note}{qos_note}{peers_note})",
         server.local_addr()
     );
     server.run().map_err(|e| format!("serve: {e}"))
@@ -588,6 +640,9 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
             n("rejected"),
             n("queued"),
         );
+        if let Some(q) = s.get("qos") {
+            println!("  qos:       {}", q.to_string());
+        }
         if let Some(c) = s.get("cache") {
             println!("  hot tier:  {}", c.to_string());
         }
@@ -628,6 +683,9 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
             t("breaker_opens"),
             t("breaker_fast_fails"),
         );
+        if let Some(q) = r.get("qos") {
+            println!("  qos:       {}", q.to_string());
+        }
         if let Some(nodes) = r.get("nodes").and_then(Json::as_arr) {
             for node in nodes {
                 println!("  node {}", node.to_string());
@@ -645,6 +703,7 @@ fn cmd_cluster_serve(args: &Args) -> Result<(), String> {
             "steal-threshold",
             "vnodes",
             "health-ms",
+            "weights",
             "deadline-ms",
             "retries",
             "breaker-threshold",
@@ -673,6 +732,9 @@ fn cmd_cluster_serve(args: &Args) -> Result<(), String> {
     if args.flag("no-replicate") {
         cfg.replicate = false;
     }
+    if let Some(w) = args.get("weights") {
+        cfg.weights = ClassWeights::parse(w)?;
+    }
     apply_policy_flags(args, &mut cfg.policy)?;
     let (n, steal, replicate) = (cfg.nodes.len(), cfg.steal_threshold, cfg.replicate);
     let server = RouterServer::bind(addr, cfg)?;
@@ -690,9 +752,13 @@ fn cmd_cluster_serve(args: &Args) -> Result<(), String> {
 
 /// Client for `submit`/`batch`: bounded connect, plus a read deadline
 /// when `--deadline-ms` caps how long the caller will wait per frame.
+/// The same value rides the wire as the jobs' QoS deadline (see
+/// [`qos_from_args`]), so the socket bound is padded: the server's
+/// structured `deadline_exceeded` shed must arrive before the client
+/// gives up on the read.
 fn client_with_deadline(args: &Args, addr: &str) -> Result<Client, String> {
-    let read_deadline =
-        sized_opt(args, "deadline-ms")?.map(|ms| Duration::from_millis(ms as u64));
+    let read_deadline = sized_opt(args, "deadline-ms")?
+        .map(|ms| Duration::from_millis(ms as u64) + Duration::from_secs(2));
     Client::connect_with(addr, Duration::from_secs(5), read_deadline)
 }
 
@@ -709,11 +775,14 @@ fn response_err(resp: &Json) -> Option<String> {
     if resp.get("ok").and_then(Json::as_bool) == Some(true) {
         return None;
     }
-    let msg = resp
+    let mut msg = resp
         .get("error")
         .and_then(Json::as_str)
         .unwrap_or("malformed response")
         .to_string();
+    if resp.get("shed").and_then(Json::as_bool) == Some(true) {
+        msg.push_str(" (job shed by server QoS policy)");
+    }
     match resp.get("retry_after_ms").and_then(Json::as_u64) {
         Some(ms) => Some(format!("{msg} (retry after {ms} ms)")),
         None => Some(msg),
@@ -721,6 +790,11 @@ fn response_err(resp: &Json) -> Option<String> {
 }
 
 fn print_job_line(label: &str, body: &Json) {
+    if body.get("shed").and_then(Json::as_bool) == Some(true) {
+        let err = body.get("error").and_then(Json::as_str).unwrap_or("shed");
+        println!("{label:<32} shed by server QoS policy: {err}");
+        return;
+    }
     let cycles = body
         .get("result")
         .and_then(|r| r.get("cycles"))
@@ -735,7 +809,7 @@ fn cmd_submit(args: &Args) -> Result<(), String> {
     args.finish(
         &[
             "addr", "cluster", "network", "arch", "window-cap", "batch", "seed", "sparsity",
-            "deadline-ms",
+            "priority", "client", "deadline-ms",
         ],
         &["json", "stream"],
     )?;
@@ -744,18 +818,19 @@ fn cmd_submit(args: &Args) -> Result<(), String> {
         .get("cluster")
         .unwrap_or(args.get_or("addr", DEFAULT_ADDR));
     let spec = job_from_args(args)?;
+    let qos = qos_from_args(args)?;
     let mut client = client_with_deadline(args, addr)?;
     let resp = if args.flag("stream") {
         // Streaming: the server acks (with the job's content address)
         // before the seconds-long simulation, then sends the result.
-        client.submit_stream(&spec, |ev| {
+        client.submit_stream_qos(&spec, &qos, |ev| {
             if ev.get("event").and_then(Json::as_str) == Some("accepted") {
                 let key = ev.get("key").and_then(Json::as_str).unwrap_or("?");
                 println!("accepted {key}");
             }
         })?
     } else {
-        client.submit(&spec)?
+        client.submit_qos(&spec, &qos)?
     };
     if let Some(e) = response_err(&resp) {
         return Err(e);
@@ -793,7 +868,7 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
     args.finish(
         &[
             "addr", "cluster", "networks", "archs", "window-cap", "batch", "seed", "sparsity",
-            "deadline-ms",
+            "priority", "client", "deadline-ms",
         ],
         &["json", "stream"],
     )?;
@@ -811,6 +886,7 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
             config: r.config,
         })
         .collect();
+    let qos = qos_from_args(args)?;
     let mut client = client_with_deadline(args, addr)?;
     let t0 = Instant::now();
     if args.flag("stream") {
@@ -819,7 +895,7 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
         // Progress frames are also kept so `--json` can emit the same
         // input-ordered `results` array the non-streaming path does.
         let mut bodies: Vec<Option<Json>> = specs.iter().map(|_| None).collect();
-        let done = client.batch_stream(&specs, |ev| {
+        let done = client.batch_stream_qos(&specs, &qos, |ev| {
             if ev.get("event").and_then(Json::as_str) != Some("progress") {
                 return;
             }
@@ -837,13 +913,18 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
             return Err(e);
         }
         let field = |k: &str| done.get(k).and_then(Json::as_u64).unwrap_or(0);
-        // "peer" only appears on cluster-mode done frames.
+        // "peer" only appears on cluster-mode done frames, "shed" only
+        // when the server's QoS policy dropped jobs from this batch.
         let peer_note = match field("peer") {
             0 => String::new(),
             p => format!(", {p} peer"),
         };
+        let shed_note = match field("shed") {
+            0 => String::new(),
+            s => format!(", {s} shed"),
+        };
         println!(
-            "{} jobs in {:.0} ms wall ({} simulated, {} cache, {} store, {} dedup{peer_note})",
+            "{} jobs in {:.0} ms wall ({} simulated, {} cache, {} store, {} dedup{peer_note}{shed_note})",
             field("jobs"),
             done.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
             field("executed"),
@@ -869,7 +950,7 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
         }
         return Ok(());
     }
-    let resp = client.batch(&specs)?;
+    let resp = client.batch_qos(&specs, &qos)?;
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     if let Some(e) = response_err(&resp) {
         return Err(e);

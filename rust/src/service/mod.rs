@@ -18,11 +18,16 @@
 //! * [`store`] — the disk-backed cold tier: a crash-safe,
 //!   content-addressed journal (fsynced appends, corrupt-tail-tolerant
 //!   recovery, compaction) so results survive restarts;
+//! * [`qos`] — the quality-of-service vocabulary: priority classes,
+//!   weighted-fair queueing, per-client token-bucket quotas, shed
+//!   reasons, and the per-class counter block every stats surface
+//!   embeds;
 //! * [`scheduler`] — sharded bounded work queues over simulation
 //!   workers, with per-job deduplication (concurrent identical
-//!   submissions share one execution), reject-with-retry-after
-//!   backpressure, and tiered-cache consultation (both tiers) before
-//!   any work is scheduled;
+//!   submissions share one execution), weighted-fair service across
+//!   priority classes, deadline shedding, lowest-class-first overload
+//!   eviction, reject-with-retry-after backpressure, and tiered-cache
+//!   consultation (both tiers) before any work is scheduled;
 //! * [`server`] — `std::net::TcpListener` thread-per-connection front
 //!   end plus the blocking [`Client`], shared by `barista serve`,
 //!   `barista submit`/`batch` and the integration tests.
@@ -42,14 +47,19 @@
 
 pub mod cache;
 pub mod protocol;
+pub mod qos;
 pub mod scheduler;
 pub mod server;
 pub mod store;
 
 pub use cache::{job_key, CacheStats, CachedEntry, JobKey, ResultCache, Tier, TieredCache};
 pub use protocol::{JobSpec, Request, DEFAULT_ADDR};
+pub use qos::{
+    ClassWeights, Priority, QoS, QosSnapshot, Quota, ShedReason, TokenBuckets, WfqPicker,
+};
 pub use scheduler::{
-    Outcome, PeerLookup, Scheduler, SchedulerConfig, SchedulerStats, Source, SubmitError,
+    Outcome, PeerLookup, QosConfig, Scheduler, SchedulerConfig, SchedulerStats, Source,
+    SubmitError,
 };
 pub use server::{Client, Server};
 pub use store::{Store, StoreStats};

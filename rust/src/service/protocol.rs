@@ -69,10 +69,34 @@
 //! they happen instead of blocking on the whole batch. `result` and
 //! `done` are the terminal frames ([`event_is_terminal`]); an error
 //! response (no `event`) is terminal too, streaming or not.
+//!
+//! ## QoS fields (`priority`, `client`, `deadline_ms`)
+//!
+//! `submit` and `batch` optionally carry a QoS envelope at the top
+//! level of the request line:
+//!
+//! ```text
+//! {"op":"submit","job":{...},"priority":"interactive","client":"ui-7","deadline_ms":250}
+//! ```
+//!
+//! `priority` is one of `interactive|batch|background` (default
+//! `batch`), `client` a non-empty id of at most
+//! [`MAX_CLIENT_ID_BYTES`] bytes for per-client admission quotas, and
+//! `deadline_ms` a non-negative relative deadline: a job still queued
+//! when every submitter's deadline has passed is *shed* —
+//! `{"ok":false,"error":"deadline_exceeded","shed":true}` — instead of
+//! computed. Quota rejections answer
+//! `{"ok":false,"error":"quota_exceeded","retry_after_ms":N}`. All
+//! three fields serialize omit-when-default, so a client that sets
+//! none of them produces frames byte-identical to the pre-QoS
+//! protocol; malformed values (unknown class, negative or fractional
+//! deadline, oversized client id) are structured protocol errors,
+//! never silently defaulted. See DESIGN.md §QoS.
 
 use crate::config::{ArchKind, SimConfig};
 use crate::coordinator::RunRequest;
 use crate::service::cache::JobKey;
+use crate::service::qos::{Priority, QoS, ShedReason, MAX_CLIENT_ID_BYTES};
 use crate::util::Json;
 use crate::workload::Benchmark;
 
@@ -158,11 +182,74 @@ impl JobSpec {
     }
 }
 
+/// Parse the optional QoS envelope off a request line's top level.
+/// Absent fields yield `QoS::default()`; present-but-malformed fields
+/// are hard protocol errors (hostile input must never silently
+/// degrade into a default class or an ignored deadline).
+fn parse_qos(j: &Json) -> Result<QoS, String> {
+    let priority = match j.get("priority") {
+        None => Priority::default(),
+        Some(v) => {
+            let s = v.as_str().ok_or("'priority' must be a string")?;
+            Priority::parse(s)?
+        }
+    };
+    let client = match j.get("client") {
+        None => None,
+        Some(v) => {
+            let s = v.as_str().ok_or("'client' must be a string")?;
+            if s.is_empty() {
+                return Err("'client' must be a non-empty id".into());
+            }
+            if s.len() > MAX_CLIENT_ID_BYTES {
+                return Err(format!(
+                    "'client' id is {} bytes, max {MAX_CLIENT_ID_BYTES}",
+                    s.len()
+                ));
+            }
+            Some(s.to_string())
+        }
+    };
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => Some(v.as_u64().ok_or(
+            "'deadline_ms' must be a non-negative integer number of milliseconds",
+        )?),
+    };
+    Ok(QoS {
+        priority,
+        client,
+        deadline_ms,
+    })
+}
+
+/// Serialize a QoS envelope omit-when-default: a default envelope adds
+/// zero bytes to the frame.
+fn set_qos(j: &mut Json, qos: &QoS) {
+    if qos.priority != Priority::default() {
+        j.set("priority", qos.priority.name());
+    }
+    if let Some(c) = &qos.client {
+        j.set("client", c.as_str());
+    }
+    if let Some(d) = qos.deadline_ms {
+        j.set("deadline_ms", d);
+    }
+}
+
 /// A parsed protocol request.
 #[derive(Debug, Clone)]
 pub enum Request {
-    Submit { spec: JobSpec, stream: bool },
-    Batch { specs: Vec<JobSpec>, stream: bool },
+    Submit {
+        spec: JobSpec,
+        stream: bool,
+        qos: QoS,
+    },
+    Batch {
+        specs: Vec<JobSpec>,
+        stream: bool,
+        qos: QoS,
+    },
     Status,
     Stats,
     /// Cluster: fetch the journal-format record for a job, if this node
@@ -191,13 +278,16 @@ impl Request {
         };
         match op {
             "submit" => {
+                let qos = parse_qos(&j)?;
                 let job = j.get("job").ok_or("submit missing 'job'")?;
                 Ok(Request::Submit {
                     spec: JobSpec::from_json(job)?,
                     stream,
+                    qos,
                 })
             }
             "batch" => {
+                let qos = parse_qos(&j)?;
                 let jobs = j
                     .get("jobs")
                     .and_then(Json::as_arr)
@@ -209,7 +299,7 @@ impl Request {
                     .iter()
                     .map(JobSpec::from_json)
                     .collect::<Result<Vec<_>, _>>()?;
-                Ok(Request::Batch { specs, stream })
+                Ok(Request::Batch { specs, stream, qos })
             }
             "status" => Ok(Request::Status),
             "stats" => Ok(Request::Stats),
@@ -246,13 +336,14 @@ impl Request {
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         match self {
-            Request::Submit { spec, stream } => {
+            Request::Submit { spec, stream, qos } => {
                 j.set("op", "submit").set("job", spec.to_json());
                 if *stream {
                     j.set("stream", true);
                 }
+                set_qos(&mut j, qos);
             }
-            Request::Batch { specs, stream } => {
+            Request::Batch { specs, stream, qos } => {
                 j.set("op", "batch").set(
                     "jobs",
                     Json::Arr(specs.iter().map(|s| s.to_json()).collect()),
@@ -260,6 +351,7 @@ impl Request {
                 if *stream {
                     j.set("stream", true);
                 }
+                set_qos(&mut j, qos);
             }
             Request::Status => {
                 j.set("op", "status");
@@ -334,6 +426,30 @@ pub fn response_busy(retry_after_ms: u64) -> Json {
     j
 }
 
+/// Shed response: the job was admitted but dropped unserved — its
+/// deadline expired while queued, or it was evicted for a higher class
+/// under overload. Carries `"shed":true` so clients can tell "dropped
+/// by policy, resubmitting won't be cheaper" from a plain protocol
+/// error; `error` names the reason (`deadline_exceeded`/`overloaded`).
+pub fn response_shed(reason: ShedReason) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", false)
+        .set("error", reason.wire_error())
+        .set("shed", true);
+    j
+}
+
+/// Admission-quota rejection: the submitting client's token bucket is
+/// empty. Unlike a shed, no work was admitted at all — back off for
+/// `retry_after_ms` and resubmit.
+pub fn response_quota_exceeded(retry_after_ms: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("ok", false)
+        .set("error", "quota_exceeded")
+        .set("retry_after_ms", retry_after_ms);
+    j
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,13 +467,25 @@ mod tests {
         let line = Request::Submit {
             spec: spec.clone(),
             stream: false,
+            qos: QoS::default(),
         }
         .to_json()
         .to_string();
         assert!(!line.contains("stream"), "non-stream wire form unchanged");
+        for qos_key in ["priority", "client", "deadline"] {
+            assert!(
+                !line.contains(qos_key),
+                "default QoS must add nothing to the wire: {line}"
+            );
+        }
         match Request::parse_line(&line).unwrap() {
-            Request::Submit { spec: back, stream } => {
+            Request::Submit {
+                spec: back,
+                stream,
+                qos,
+            } => {
                 assert!(!stream);
+                assert!(qos.is_default());
                 assert_eq!(back.benchmark, spec.benchmark);
                 assert_eq!(
                     back.config.canonical_json().to_string(),
@@ -380,6 +508,7 @@ mod tests {
         let line = Request::Batch {
             specs: specs.clone(),
             stream: false,
+            qos: QoS::default(),
         }
         .to_json()
         .to_string();
@@ -401,6 +530,7 @@ mod tests {
         let line = Request::Submit {
             spec,
             stream: true,
+            qos: QoS::default(),
         }
         .to_json()
         .to_string();
@@ -543,6 +673,7 @@ mod tests {
         let line = Request::Submit {
             spec: spec.clone(),
             stream: false,
+            qos: QoS::default(),
         }
         .to_json()
         .to_string();
@@ -591,5 +722,83 @@ mod tests {
         assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
         let j = response_busy(25);
         assert_eq!(j.get("retry_after_ms").unwrap().as_u64(), Some(25));
+    }
+
+    #[test]
+    fn qos_envelope_roundtrips() {
+        let spec = JobSpec {
+            benchmark: Benchmark::AlexNet,
+            config: SimConfig::paper(ArchKind::Barista),
+        };
+        let qos = QoS {
+            priority: Priority::Interactive,
+            client: Some("ui-7".to_string()),
+            deadline_ms: Some(250),
+        };
+        let line = Request::Submit {
+            spec,
+            stream: false,
+            qos: qos.clone(),
+        }
+        .to_json()
+        .to_string();
+        assert!(line.contains(r#""priority":"interactive""#), "{line}");
+        assert!(line.contains(r#""client":"ui-7""#), "{line}");
+        assert!(line.contains(r#""deadline_ms":250"#), "{line}");
+        match Request::parse_line(&line).unwrap() {
+            Request::Submit { qos: back, .. } => assert_eq!(back, qos),
+            other => panic!("wrong op: {other:?}"),
+        }
+        // Batch carries the same envelope for every job in it.
+        let line = r#"{"op":"batch","jobs":[{"network":"alexnet"}],"priority":"background"}"#;
+        match Request::parse_line(line).unwrap() {
+            Request::Batch { qos, .. } => {
+                assert_eq!(qos.priority, Priority::Background)
+            }
+            other => panic!("wrong op: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_qos_fields_are_structured_errors() {
+        let job = r#"{"network":"alexnet"}"#;
+        // Unknown class.
+        let e = Request::parse_line(&format!(
+            r#"{{"op":"submit","job":{job},"priority":"urgent"}}"#
+        ))
+        .unwrap_err();
+        assert!(e.contains("unknown priority"), "{e}");
+        // Non-string class.
+        let e = Request::parse_line(&format!(
+            r#"{{"op":"submit","job":{job},"priority":3}}"#
+        ))
+        .unwrap_err();
+        assert!(e.contains("string"), "{e}");
+        // Negative and fractional deadlines.
+        for bad in ["-5", "0.5"] {
+            let e = Request::parse_line(&format!(
+                r#"{{"op":"submit","job":{job},"deadline_ms":{bad}}}"#
+            ))
+            .unwrap_err();
+            assert!(e.contains("non-negative integer"), "{bad}: {e}");
+        }
+        // Oversized and empty client ids.
+        let long = "c".repeat(MAX_CLIENT_ID_BYTES + 1);
+        let e = Request::parse_line(&format!(
+            r#"{{"op":"submit","job":{job},"client":"{long}"}}"#
+        ))
+        .unwrap_err();
+        assert!(e.contains("bytes"), "{e}");
+        let e = Request::parse_line(&format!(
+            r#"{{"op":"submit","job":{job},"client":""}}"#
+        ))
+        .unwrap_err();
+        assert!(e.contains("non-empty"), "{e}");
+        // A deadline of zero is valid (expires immediately, but
+        // structurally fine) — boundary, not error.
+        assert!(Request::parse_line(&format!(
+            r#"{{"op":"submit","job":{job},"deadline_ms":0}}"#
+        ))
+        .is_ok());
     }
 }

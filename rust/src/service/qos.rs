@@ -1,0 +1,630 @@
+//! Quality-of-service primitives for the job service: priority
+//! classes, weighted-fair queueing, per-client admission quotas, and
+//! the per-class counters every QoS decision must account into.
+//!
+//! BARISTA's thesis is that shared resources collapse without explicit
+//! load balancing; one level up, a shared scheduler collapses without
+//! explicit *traffic* balancing — one greedy client or a batch burst
+//! starves everyone. This module is the shared vocabulary:
+//!
+//! * [`Priority`] — three classes (`interactive` > `batch` >
+//!   `background`). Frames that say nothing get `batch`, so pre-QoS
+//!   clients keep exactly their old middle-of-the-road service.
+//! * [`ClassWeights`] — the weighted-fair service ratio
+//!   (default 6:3:1). Weights shape *throughput shares*, they are not
+//!   strict priority: a non-empty class always drains at its weight,
+//!   which is what makes starvation impossible by construction.
+//! * [`WfqPicker`] — stride scheduling (Waldspurger & Weihl): each
+//!   class holds a `pass` value advancing by `K/weight` per service;
+//!   the non-empty class with the minimum pass is served next. A class
+//!   returning from empty is clamped to the current virtual time
+//!   ([`WfqPicker::note_nonempty`]) so it cannot monopolize the shard
+//!   by replaying banked credit.
+//! * [`TokenBuckets`] — per-client admission quotas. Clients that
+//!   identify themselves get their own bucket; anonymous traffic (and
+//!   overflow past [`MAX_TRACKED_CLIENTS`], i.e. hostile client-id
+//!   churn) shares one. A rejection carries `retry_after_ms` so
+//!   well-behaved clients can pace themselves.
+//! * [`QosCounters`] — the accounting surface. Doctrine: **every
+//!   submission increments exactly one of `admitted` or
+//!   `quota_rejected`**, and every shed delivery increments exactly one
+//!   of `shed_deadline` or `shed_overload`, all keyed by the
+//!   submission's own class — so the chaos suite can assert wire-level
+//!   observations against these counters exactly.
+//!
+//! The scheduler ([`crate::service::scheduler`]) owns the per-shard
+//! queues and drives the picker; the wire mapping (`priority`,
+//! `client`, `deadline_ms` fields) lives in
+//! [`crate::service::protocol`]. See DESIGN.md §QoS.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::Json;
+
+/// Number of priority classes.
+pub const CLASSES: usize = 3;
+
+/// Client-id length cap on the wire: long enough for a UUID plus a
+/// human tag, short enough that hostile frames cannot bloat the
+/// bucket map's key storage.
+pub const MAX_CLIENT_ID_BYTES: usize = 64;
+
+/// Distinct client buckets tracked before overflow traffic collapses
+/// into the shared anonymous bucket (bounds memory under client-id
+/// churn attacks).
+pub const MAX_TRACKED_CLIENTS: usize = 4096;
+
+/// Job priority class, lowest service share first so `Ord` matches
+/// "more important": `Background < Batch < Interactive`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Background,
+    Batch,
+    Interactive,
+}
+
+/// Every class, in counter-index order (`index()` order).
+pub const ALL_CLASSES: [Priority; CLASSES] =
+    [Priority::Background, Priority::Batch, Priority::Interactive];
+
+impl Default for Priority {
+    /// The class a frame gets when it says nothing — pre-QoS clients
+    /// keep their old middle-of-the-road service.
+    fn default() -> Priority {
+        Priority::Batch
+    }
+}
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Background => "background",
+            Priority::Batch => "batch",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority, String> {
+        ALL_CLASSES
+            .iter()
+            .copied()
+            .find(|p| p.name() == s)
+            .ok_or_else(|| {
+                format!("unknown priority '{s}' (want interactive|batch|background)")
+            })
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Background => 0,
+            Priority::Batch => 1,
+            Priority::Interactive => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Priority {
+        ALL_CLASSES[i]
+    }
+}
+
+/// The QoS envelope a submission carries: class, optional client
+/// identity (for quotas), optional relative deadline. `Default` is the
+/// pre-QoS frame: batch class, anonymous, no deadline.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct QoS {
+    pub priority: Priority,
+    pub client: Option<String>,
+    pub deadline_ms: Option<u64>,
+}
+
+impl QoS {
+    /// True when serializing this envelope must add nothing to the
+    /// frame (the byte-identity guarantee for pre-QoS clients).
+    pub fn is_default(&self) -> bool {
+        self.priority == Priority::default()
+            && self.client.is_none()
+            && self.deadline_ms.is_none()
+    }
+}
+
+/// Weighted-fair service shares per class. A class's long-run fraction
+/// of scheduler service (while it has work queued) is
+/// `weight / sum(weights of backlogged classes)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassWeights {
+    w: [u32; CLASSES],
+}
+
+impl Default for ClassWeights {
+    /// 6:3:1 interactive:batch:background — interactive drains twice
+    /// as fast as batch, background trickles but never starves.
+    fn default() -> ClassWeights {
+        ClassWeights { w: [1, 3, 6] }
+    }
+}
+
+impl ClassWeights {
+    /// Build from explicit weights, each in `[1, 1000]`.
+    pub fn new(interactive: u32, batch: u32, background: u32) -> Result<ClassWeights, String> {
+        let w = [background, batch, interactive];
+        for (i, &wi) in w.iter().enumerate() {
+            if wi == 0 || wi > 1000 {
+                return Err(format!(
+                    "class weight for '{}' must be within [1, 1000], got {wi}",
+                    Priority::from_index(i).name()
+                ));
+            }
+        }
+        Ok(ClassWeights { w })
+    }
+
+    /// Parse the CLI form `I,B,G` (interactive,batch,background),
+    /// e.g. `6,3,1`.
+    pub fn parse(s: &str) -> Result<ClassWeights, String> {
+        let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+        if parts.len() != CLASSES {
+            return Err(format!(
+                "class weights must be 'INTERACTIVE,BATCH,BACKGROUND' (3 integers), got '{s}'"
+            ));
+        }
+        let mut v = [0u32; CLASSES];
+        for (i, p) in parts.iter().enumerate() {
+            v[i] = p
+                .parse::<u32>()
+                .map_err(|e| format!("bad class weight '{p}': {e}"))?;
+        }
+        ClassWeights::new(v[0], v[1], v[2])
+    }
+
+    pub fn get(&self, p: Priority) -> u32 {
+        self.w[p.index()]
+    }
+
+    /// The class with the smallest weight (ties: lower class). This is
+    /// the class the router never steals for — stealing exists to
+    /// protect latency, and the cheapest class has none to protect.
+    pub fn min_class(&self) -> Priority {
+        let mut best = 0;
+        for i in 1..CLASSES {
+            if self.w[i] < self.w[best] {
+                best = i;
+            }
+        }
+        Priority::from_index(best)
+    }
+
+    /// `I,B,G` display form (inverse of [`ClassWeights::parse`]).
+    pub fn describe(&self) -> String {
+        format!("{},{},{}", self.w[2], self.w[1], self.w[0])
+    }
+}
+
+/// Stride granularity: `stride = STRIDE_ONE / weight`. Large enough
+/// that integer division keeps ratios faithful for weights up to 1000.
+const STRIDE_ONE: u64 = 1 << 20;
+
+/// Stride-scheduling weighted-fair picker over the three classes. Not
+/// thread-safe by itself — the scheduler drives it under the shard
+/// lock.
+#[derive(Debug, Clone)]
+pub struct WfqPicker {
+    stride: [u64; CLASSES],
+    pass: [u64; CLASSES],
+    /// Pass value of the most recent pick — the shard's virtual time.
+    vtime: u64,
+}
+
+impl WfqPicker {
+    pub fn new(weights: ClassWeights) -> WfqPicker {
+        let mut stride = [0u64; CLASSES];
+        for (i, s) in stride.iter_mut().enumerate() {
+            *s = STRIDE_ONE / weights.w[i] as u64;
+        }
+        WfqPicker {
+            stride,
+            pass: [0; CLASSES],
+            vtime: 0,
+        }
+    }
+
+    /// Tell the picker a class's queue just went empty -> non-empty.
+    /// Clamps the class's pass to the current virtual time so an idle
+    /// class cannot bank credit and then monopolize the shard.
+    pub fn note_nonempty(&mut self, class: Priority) {
+        let i = class.index();
+        self.pass[i] = self.pass[i].max(self.vtime);
+    }
+
+    /// Pick the next class to serve among those with queued work:
+    /// minimum pass wins, ties go to the higher class. Advances the
+    /// winner's pass by its stride. `None` iff nothing is queued.
+    pub fn pick(&mut self, nonempty: [bool; CLASSES]) -> Option<Priority> {
+        let mut best: Option<usize> = None;
+        for (i, &ne) in nonempty.iter().enumerate() {
+            if !ne {
+                continue;
+            }
+            best = match best {
+                None => Some(i),
+                Some(b) if self.pass[i] <= self.pass[b] => Some(i),
+                keep => keep,
+            };
+        }
+        let b = best?;
+        self.vtime = self.pass[b];
+        self.pass[b] = self.pass[b].saturating_add(self.stride[b]);
+        Some(Priority::from_index(b))
+    }
+}
+
+/// Admission quota: a token-bucket rate per client.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quota {
+    /// Sustained jobs/second each client may submit.
+    pub rate_per_s: f64,
+    /// Bucket capacity: how big a burst is forgiven.
+    pub burst: f64,
+}
+
+impl Quota {
+    /// The CLI's `--quota N` form: N jobs/s sustained, burst 2N
+    /// (at least 1).
+    pub fn per_second(rate: f64) -> Result<Quota, String> {
+        if !rate.is_finite() || rate <= 0.0 {
+            return Err(format!("quota must be a positive jobs/second rate, got {rate}"));
+        }
+        Ok(Quota {
+            rate_per_s: rate,
+            burst: (2.0 * rate).max(1.0),
+        })
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last_ms: u64,
+}
+
+/// Per-client token buckets behind one mutex (admission is a few ns of
+/// arithmetic; contention is dwarfed by the shard locks). Anonymous
+/// clients — and all clients past [`MAX_TRACKED_CLIENTS`] — share the
+/// `""` bucket.
+pub struct TokenBuckets {
+    quota: Quota,
+    epoch: Instant,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl TokenBuckets {
+    pub fn new(quota: Quota) -> TokenBuckets {
+        let mut map = HashMap::new();
+        // Pre-seed the shared anonymous/overflow bucket so overflow
+        // never grows the map past its bound.
+        map.insert(
+            String::new(),
+            Bucket {
+                tokens: quota.burst,
+                last_ms: 0,
+            },
+        );
+        TokenBuckets {
+            quota,
+            epoch: Instant::now(),
+            buckets: Mutex::new(map),
+        }
+    }
+
+    pub fn quota(&self) -> Quota {
+        self.quota
+    }
+
+    /// Take one token from `client`'s bucket (anonymous = shared
+    /// bucket). `Err(retry_after_ms)` when the bucket is dry.
+    pub fn admit(&self, client: Option<&str>) -> Result<(), u64> {
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        self.admit_at(client, now_ms)
+    }
+
+    /// Deterministic core of [`TokenBuckets::admit`]: `now_ms` is
+    /// milliseconds on any monotonic clock. Public for tests.
+    pub fn admit_at(&self, client: Option<&str>, now_ms: u64) -> Result<(), u64> {
+        let mut map = self.buckets.lock().unwrap();
+        let key = match client {
+            Some(c) if map.contains_key(c) || map.len() < MAX_TRACKED_CLIENTS => c,
+            _ => "",
+        };
+        let b = map.entry(key.to_string()).or_insert(Bucket {
+            tokens: self.quota.burst,
+            last_ms: now_ms,
+        });
+        let dt_s = now_ms.saturating_sub(b.last_ms) as f64 / 1000.0;
+        b.tokens = (b.tokens + dt_s * self.quota.rate_per_s).min(self.quota.burst);
+        b.last_ms = now_ms;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            let wait_s = (1.0 - b.tokens) / self.quota.rate_per_s;
+            Err((wait_s * 1000.0).ceil().max(1.0) as u64)
+        }
+    }
+
+    /// Distinct buckets currently tracked (incl. the shared one).
+    pub fn tracked(&self) -> usize {
+        self.buckets.lock().unwrap().len()
+    }
+}
+
+/// Why a queued job was shed instead of computed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Every waiter's deadline had already expired at dequeue time —
+    /// computing it would have been dead work.
+    Deadline,
+    /// Evicted from a full queue to admit a strictly higher class.
+    Overload,
+}
+
+impl ShedReason {
+    /// The wire `error` field for a shed response.
+    pub fn wire_error(self) -> &'static str {
+        match self {
+            ShedReason::Deadline => "deadline_exceeded",
+            ShedReason::Overload => "overloaded",
+        }
+    }
+}
+
+/// Lock-free per-class QoS accounting (see the module docs for the
+/// exactly-one-counter doctrine).
+#[derive(Default)]
+pub struct QosCounters {
+    admitted: [AtomicU64; CLASSES],
+    quota_rejected: [AtomicU64; CLASSES],
+    shed_deadline: [AtomicU64; CLASSES],
+    shed_overload: [AtomicU64; CLASSES],
+    starved_window: [AtomicU64; CLASSES],
+}
+
+impl QosCounters {
+    pub fn new() -> QosCounters {
+        QosCounters::default()
+    }
+
+    pub fn admitted(&self, p: Priority) {
+        self.admitted[p.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn quota_rejected(&self, p: Priority) {
+        self.quota_rejected[p.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shed(&self, p: Priority, reason: ShedReason) {
+        let arr = match reason {
+            ShedReason::Deadline => &self.shed_deadline,
+            ShedReason::Overload => &self.shed_overload,
+        };
+        arr[p.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn starved(&self, p: Priority) {
+        self.starved_window[p.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> QosSnapshot {
+        let load = |a: &[AtomicU64; CLASSES]| {
+            let mut out = [0u64; CLASSES];
+            for (o, c) in out.iter_mut().zip(a.iter()) {
+                *o = c.load(Ordering::Relaxed);
+            }
+            out
+        };
+        QosSnapshot {
+            admitted: load(&self.admitted),
+            quota_rejected: load(&self.quota_rejected),
+            shed_deadline: load(&self.shed_deadline),
+            shed_overload: load(&self.shed_overload),
+            starved_window: load(&self.starved_window),
+        }
+    }
+}
+
+/// Point-in-time copy of [`QosCounters`], indexed by
+/// [`Priority::index`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QosSnapshot {
+    pub admitted: [u64; CLASSES],
+    pub quota_rejected: [u64; CLASSES],
+    pub shed_deadline: [u64; CLASSES],
+    pub shed_overload: [u64; CLASSES],
+    pub starved_window: [u64; CLASSES],
+}
+
+impl QosSnapshot {
+    pub fn shed_total(&self, p: Priority) -> u64 {
+        self.shed_deadline[p.index()] + self.shed_overload[p.index()]
+    }
+
+    /// `{class: {admitted, quota_rejected, shed_deadline,
+    /// shed_overload, starved_window}}` — the block `stats` and
+    /// `health` frames embed under `"qos"`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for p in ALL_CLASSES {
+            let i = p.index();
+            let mut c = Json::obj();
+            c.set("admitted", self.admitted[i])
+                .set("quota_rejected", self.quota_rejected[i])
+                .set("shed_deadline", self.shed_deadline[i])
+                .set("shed_overload", self.shed_overload[i])
+                .set("starved_window", self.starved_window[i]);
+            j.set(p.name(), c);
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_names_roundtrip_and_order() {
+        for p in ALL_CLASSES {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+            assert_eq!(Priority::from_index(p.index()), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        assert!(Priority::Background < Priority::Batch);
+        assert!(Priority::Batch < Priority::Interactive);
+        assert_eq!(Priority::default(), Priority::Batch);
+    }
+
+    #[test]
+    fn weights_parse_and_bounds() {
+        let w = ClassWeights::parse("6,3,1").unwrap();
+        assert_eq!(w, ClassWeights::default());
+        assert_eq!(w.get(Priority::Interactive), 6);
+        assert_eq!(w.get(Priority::Batch), 3);
+        assert_eq!(w.get(Priority::Background), 1);
+        assert_eq!(w.min_class(), Priority::Background);
+        assert_eq!(w.describe(), "6,3,1");
+        assert_eq!(ClassWeights::parse(&w.describe()).unwrap(), w);
+        assert!(ClassWeights::parse("6,3").is_err());
+        assert!(ClassWeights::parse("6,3,0").is_err());
+        assert!(ClassWeights::parse("6,3,x").is_err());
+        assert!(ClassWeights::parse("2000,3,1").is_err());
+        // An inverted weighting makes interactive the never-steal class.
+        let inv = ClassWeights::parse("1,3,6").unwrap();
+        assert_eq!(inv.min_class(), Priority::Interactive);
+    }
+
+    #[test]
+    fn wfq_shares_track_weights() {
+        let mut picker = WfqPicker::new(ClassWeights::default());
+        let mut served = [0u64; CLASSES];
+        let n = 10_000;
+        for _ in 0..n {
+            let p = picker.pick([true, true, true]).unwrap();
+            served[p.index()] += 1;
+        }
+        // 6:3:1 => 60/30/10% within 1%.
+        let frac = |i: usize| served[i] as f64 / n as f64;
+        assert!((frac(Priority::Interactive.index()) - 0.6).abs() < 0.01, "{served:?}");
+        assert!((frac(Priority::Batch.index()) - 0.3).abs() < 0.01, "{served:?}");
+        assert!((frac(Priority::Background.index()) - 0.1).abs() < 0.01, "{served:?}");
+    }
+
+    #[test]
+    fn wfq_serves_the_only_nonempty_class() {
+        let mut picker = WfqPicker::new(ClassWeights::default());
+        for _ in 0..100 {
+            assert_eq!(
+                picker.pick([true, false, false]),
+                Some(Priority::Background)
+            );
+        }
+        assert_eq!(picker.pick([false, false, false]), None);
+    }
+
+    #[test]
+    fn returning_class_cannot_replay_banked_credit() {
+        let mut picker = WfqPicker::new(ClassWeights::default());
+        // Background idles while interactive runs far ahead in pass.
+        for _ in 0..1_000 {
+            picker.pick([false, false, true]);
+        }
+        // Background wakes: without the vtime clamp it would now win
+        // ~6000 consecutive picks. With it, interactive still gets its
+        // 6/7 share of the next window.
+        picker.note_nonempty(Priority::Background);
+        let mut served = [0u64; CLASSES];
+        for _ in 0..700 {
+            let p = picker.pick([true, false, true]).unwrap();
+            served[p.index()] += 1;
+        }
+        let bg = served[Priority::Background.index()];
+        assert!((95..=105).contains(&bg), "background got {bg}/700, want ~100");
+    }
+
+    #[test]
+    fn token_bucket_burst_then_refill() {
+        let tb = TokenBuckets::new(Quota::per_second(10.0).unwrap());
+        // Burst capacity 20: the first 20 all pass at t=0.
+        for _ in 0..20 {
+            assert!(tb.admit_at(Some("alice"), 0).is_ok());
+        }
+        let wait = tb.admit_at(Some("alice"), 0).unwrap_err();
+        assert!((1..=200).contains(&wait), "retry_after {wait} ms");
+        // 100 ms later exactly one token has dripped in.
+        assert!(tb.admit_at(Some("alice"), 100).is_ok());
+        assert!(tb.admit_at(Some("alice"), 100).is_err());
+        // Bob is unaffected by Alice's spend.
+        assert!(tb.admit_at(Some("bob"), 100).is_ok());
+    }
+
+    #[test]
+    fn anonymous_clients_share_one_bucket() {
+        let tb = TokenBuckets::new(Quota::per_second(1.0).unwrap());
+        // Burst 2 shared: two anonymous submissions drain it for all.
+        assert!(tb.admit_at(None, 0).is_ok());
+        assert!(tb.admit_at(None, 0).is_ok());
+        assert!(tb.admit_at(None, 0).is_err());
+    }
+
+    #[test]
+    fn client_churn_overflows_into_the_shared_bucket() {
+        let tb = TokenBuckets::new(Quota::per_second(1000.0).unwrap());
+        for i in 0..(2 * MAX_TRACKED_CLIENTS) {
+            let _ = tb.admit_at(Some(&format!("churn-{i}")), 0);
+        }
+        assert!(
+            tb.tracked() <= MAX_TRACKED_CLIENTS,
+            "bucket map must stay bounded, got {}",
+            tb.tracked()
+        );
+    }
+
+    #[test]
+    fn counters_account_exactly_once_per_event() {
+        let c = QosCounters::new();
+        c.admitted(Priority::Interactive);
+        c.admitted(Priority::Interactive);
+        c.quota_rejected(Priority::Batch);
+        c.shed(Priority::Background, ShedReason::Deadline);
+        c.shed(Priority::Background, ShedReason::Overload);
+        c.starved(Priority::Background);
+        let s = c.snapshot();
+        assert_eq!(s.admitted[Priority::Interactive.index()], 2);
+        assert_eq!(s.quota_rejected[Priority::Batch.index()], 1);
+        assert_eq!(s.shed_deadline[Priority::Background.index()], 1);
+        assert_eq!(s.shed_overload[Priority::Background.index()], 1);
+        assert_eq!(s.shed_total(Priority::Background), 2);
+        assert_eq!(s.starved_window[Priority::Background.index()], 1);
+        let j = s.to_json();
+        let bg = j.get("background").expect("background block");
+        assert_eq!(bg.get("shed_deadline").and_then(Json::as_u64), Some(1));
+        assert_eq!(bg.get("shed_overload").and_then(Json::as_u64), Some(1));
+        let int = j.get("interactive").expect("interactive block");
+        assert_eq!(int.get("admitted").and_then(Json::as_u64), Some(2));
+    }
+
+    #[test]
+    fn shed_reasons_map_to_wire_errors() {
+        assert_eq!(ShedReason::Deadline.wire_error(), "deadline_exceeded");
+        assert_eq!(ShedReason::Overload.wire_error(), "overloaded");
+    }
+
+    #[test]
+    fn qos_default_is_wire_silent() {
+        assert!(QoS::default().is_default());
+        let q = QoS {
+            priority: Priority::Interactive,
+            ..QoS::default()
+        };
+        assert!(!q.is_default());
+    }
+}

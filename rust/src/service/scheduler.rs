@@ -21,7 +21,19 @@
 //!   configured, a worker consults peer node stores before simulating
 //!   and admits a remote hit into the *hot* tier only
 //!   ([`Source::PeerHit`]): the durable copies stay with the node that
-//!   computed the result and that key's replica.
+//!   computed the result and that key's replica;
+//! * **QoS** — each shard queue is really three class queues
+//!   (interactive/batch/background) drained by a weighted-fair stride
+//!   picker ([`WfqPicker`], default 6:3:1), so no backlogged class
+//!   starves and no class monopolizes. Admission runs per-client token
+//!   buckets when a [`Quota`] is configured
+//!   ([`SubmitError::QuotaExceeded`]); a job whose every submitter's
+//!   deadline has expired is *shed* at dequeue instead of computed
+//!   ([`SubmitError::Shed`]), and a full queue evicts the newest
+//!   strictly-lower-class job (lowest class first) before rejecting a
+//!   higher-class submission. Every decision lands in per-class
+//!   [`QosCounters`] surfaced through [`SchedulerStats`]. See
+//!   DESIGN.md §QoS.
 //!
 //! Shard selection goes through the [`Route`] abstraction from
 //! [`cluster::ring`](crate::cluster::ring): here the modulo
@@ -37,13 +49,17 @@ use std::collections::{HashMap, VecDeque};
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::cluster::ring::{NodeId, Route};
 use crate::coordinator::{run_one, RunRequest, RunResult};
 use crate::service::cache::{
     canonical_job_string, job_key, key_of_canon, CachedEntry, CacheStats, JobKey, Tier,
     TieredCache,
+};
+use crate::service::qos::{
+    ClassWeights, Priority, QoS, QosCounters, QosSnapshot, Quota, ShedReason, TokenBuckets,
+    WfqPicker, CLASSES,
 };
 use crate::service::store::{encode_record, Store, StoreStats};
 use crate::util::Json;
@@ -100,6 +116,19 @@ impl SchedulerConfig {
         }
         Ok(())
     }
+}
+
+/// QoS policy knobs. Deliberately separate from [`SchedulerConfig`]
+/// (which many construction sites spell out field-by-field): schedulers
+/// built without one get default weights and no quota — exactly the
+/// pre-QoS behavior for traffic that never sets a class.
+#[derive(Debug, Clone, Default)]
+pub struct QosConfig {
+    /// Weighted-fair service shares (`--weights I,B,G`, default 6:3:1).
+    pub weights: ClassWeights,
+    /// Per-client token-bucket admission quota (`--quota N` jobs/s);
+    /// `None` admits everything.
+    pub quota: Option<Quota>,
 }
 
 /// Cross-node dedup hook: consulted by a worker right before it would
@@ -187,6 +216,13 @@ pub struct Outcome {
 pub enum SubmitError {
     /// Queue full — backpressure. Retry after the hinted delay.
     Busy { retry_after_ms: u64 },
+    /// The submitting client is over its admission quota. Retry after
+    /// the hinted delay (when the bucket has dripped a token back).
+    QuotaExceeded { retry_after_ms: u64 },
+    /// The queued job was shed instead of computed: every submitter's
+    /// deadline expired, or it was evicted under overload to admit a
+    /// higher class.
+    Shed(ShedReason),
     /// The job's configuration failed validation.
     Invalid(String),
     /// The scheduler stopped before the job finished.
@@ -199,6 +235,10 @@ impl fmt::Display for SubmitError {
             SubmitError::Busy { retry_after_ms } => {
                 write!(f, "busy: queue full, retry after {retry_after_ms} ms")
             }
+            SubmitError::QuotaExceeded { retry_after_ms } => {
+                write!(f, "quota exceeded, retry after {retry_after_ms} ms")
+            }
+            SubmitError::Shed(reason) => write!(f, "shed: {}", reason.wire_error()),
             SubmitError::Invalid(e) => write!(f, "invalid job: {e}"),
             SubmitError::Shutdown => f.write_str("scheduler is shutting down"),
         }
@@ -222,6 +262,9 @@ pub struct SchedulerStats {
     pub workers: usize,
     pub shards: usize,
     pub cache: CacheStats,
+    /// Per-class QoS accounting (admitted / quota_rejected /
+    /// shed_deadline / shed_overload / starved_window).
+    pub qos: QosSnapshot,
     /// Cold-tier counters, when a store is configured.
     pub store: Option<StoreStats>,
 }
@@ -239,6 +282,7 @@ impl SchedulerStats {
             .set("queued", self.queued)
             .set("workers", self.workers)
             .set("shards", self.shards)
+            .set("qos", self.qos.to_json())
             .set("cache", self.cache.to_json());
         if let Some(store) = &self.store {
             j.set("store", store.to_json());
@@ -258,28 +302,146 @@ struct Counters {
     rejected: AtomicU64,
 }
 
+/// How a pending submission resolved: a result, or a shed.
+enum Verdict {
+    Done(Arc<CachedEntry>, Source),
+    Shed(ShedReason),
+}
+
 /// Completion deliveries are tagged so one shared channel can serve a
 /// whole batch: the tag is the submitter's job index (0 for `execute`),
-/// and the source records how the worker resolved the job (executed
-/// locally, or fetched from a peer).
-type Delivery = (u64, Arc<CachedEntry>, Source);
+/// and the verdict records how the job resolved — a result (executed
+/// locally, or fetched from a peer) or a shed.
+type Delivery = (u64, Verdict);
 
 struct Waiter {
     tag: u64,
     tx: mpsc::Sender<Delivery>,
+    /// This submission's own class — sheds are accounted per waiter.
+    class: Priority,
+    /// Absolute deadline, if the submission carried `deadline_ms`.
+    deadline: Option<Instant>,
+}
+
+impl Waiter {
+    /// A waiter is expendable when it carried a deadline that has
+    /// passed; deadline-less waiters never are.
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
 }
 
 struct Job {
     req: RunRequest,
     waiters: Vec<Waiter>,
+    /// Effective class: the max over its waiters (a dedup attach from
+    /// a higher class escalates the queued job).
+    class: Priority,
 }
 
+/// A class backlogged past this long with zero service marks a
+/// starvation window — with WFQ running it should never fire; it is
+/// the canary counter, not a control.
+const STARVE_WINDOW: Duration = Duration::from_secs(1);
+
 struct ShardState {
-    /// Keys awaiting a worker (each key appears at most once).
-    queue: VecDeque<JobKey>,
+    /// Keys awaiting a worker, one queue per priority class (each key
+    /// appears at most once, in its job's effective class queue).
+    queues: [VecDeque<JobKey>; CLASSES],
     /// Pending *and* in-flight jobs — present until the result is
     /// cached, so identical submissions dedup onto them.
     jobs: HashMap<JobKey, Job>,
+    /// Weighted-fair class picker (stride scheduling).
+    wfq: WfqPicker,
+    /// Last instant each class was served or observed empty, for the
+    /// starved-window canary.
+    last_service: [Instant; CLASSES],
+}
+
+impl ShardState {
+    fn nonempty(&self) -> [bool; CLASSES] {
+        let mut out = [false; CLASSES];
+        for (o, q) in out.iter_mut().zip(self.queues.iter()) {
+            *o = !q.is_empty();
+        }
+        out
+    }
+
+    fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Append `key` to its class queue, telling the picker about an
+    /// empty -> non-empty transition so a returning class cannot
+    /// replay banked credit.
+    fn push(&mut self, class: Priority, key: JobKey) {
+        let q = &mut self.queues[class.index()];
+        if q.is_empty() {
+            self.wfq.note_nonempty(class);
+        }
+        q.push_back(key);
+    }
+
+    /// Pop the next runnable job under WFQ, shedding (into `shed`, for
+    /// notification outside the lock) every picked job whose waiters'
+    /// deadlines have all expired. Also advances the starved-window
+    /// canary. `None` iff no runnable job remains queued.
+    fn pop_runnable(
+        &mut self,
+        now: Instant,
+        qos: &QosCounters,
+        shed: &mut Vec<Waiter>,
+    ) -> Option<(JobKey, RunRequest)> {
+        loop {
+            // Starvation canary: a class with queued work and no
+            // service for a whole window gets counted (and its stamp
+            // reset, so one stall counts once per window).
+            for (i, q) in self.queues.iter().enumerate() {
+                if q.is_empty() {
+                    self.last_service[i] = now;
+                } else if now.duration_since(self.last_service[i]) >= STARVE_WINDOW {
+                    qos.starved(Priority::from_index(i));
+                    self.last_service[i] = now;
+                }
+            }
+            let class = self.wfq.pick(self.nonempty())?;
+            let key = self.queues[class.index()]
+                .pop_front()
+                .expect("picked class has a queued key");
+            self.last_service[class.index()] = now;
+            let job = self.jobs.get(&key).expect("queued key has a job entry");
+            let dead = !job.waiters.is_empty() && job.waiters.iter().all(|w| w.expired(now));
+            if dead {
+                // Computing this job would be dead work: nobody is
+                // still waiting within their deadline.
+                let job = self.jobs.remove(&key).expect("job entry present");
+                for w in job.waiters {
+                    qos.shed(w.class, ShedReason::Deadline);
+                    shed.push(w);
+                }
+                continue;
+            }
+            return Some((key, job.req.clone()));
+        }
+    }
+
+    /// Evict the newest queued job of the lowest class strictly below
+    /// `incoming` (lowest class first — overload sheds the cheapest
+    /// work). Its waiters are returned for shed notification outside
+    /// the lock. `None` when nothing below `incoming` is queued.
+    fn evict_below(&mut self, incoming: Priority, qos: &QosCounters) -> Option<Vec<Waiter>> {
+        for i in 0..incoming.index() {
+            if let Some(key) = self.queues[i].pop_back() {
+                let job = self.jobs.remove(&key).expect("evicted key has a job entry");
+                let waiters = job.waiters;
+                for w in &waiters {
+                    qos.shed(w.class, ShedReason::Overload);
+                }
+                return Some(waiters);
+            }
+        }
+        None
+    }
 }
 
 struct Shard {
@@ -303,6 +465,9 @@ pub struct Scheduler {
     route: ShardRoute,
     cache: Arc<TieredCache>,
     counters: Arc<Counters>,
+    qos_counters: Arc<QosCounters>,
+    buckets: Option<TokenBuckets>,
+    weights: ClassWeights,
     stop: Arc<AtomicBool>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     queue_cap: usize,
@@ -315,22 +480,35 @@ impl Scheduler {
         Scheduler::with_peers(cfg, None)
     }
 
-    /// Build a scheduler with an optional cross-node dedup hook. The
+    /// Build a scheduler with an optional cross-node dedup hook and
+    /// default QoS policy (6:3:1 weights, no quota).
+    pub fn with_peers(cfg: SchedulerConfig, peers: Option<Arc<dyn PeerLookup>>) -> Scheduler {
+        Scheduler::with_qos(cfg, QosConfig::default(), peers)
+    }
+
+    /// Fully-specified constructor: sizing, QoS policy, peer hook. The
     /// config must already be valid ([`SchedulerConfig::validate`]);
     /// front ends validate at parse time, so a failure here is a
     /// caller bug, not an input error.
-    pub fn with_peers(cfg: SchedulerConfig, peers: Option<Arc<dyn PeerLookup>>) -> Scheduler {
+    pub fn with_qos(
+        cfg: SchedulerConfig,
+        qos_cfg: QosConfig,
+        peers: Option<Arc<dyn PeerLookup>>,
+    ) -> Scheduler {
         if let Err(e) = cfg.validate() {
             panic!("invalid SchedulerConfig: {e}");
         }
         let workers = cfg.workers;
         let nshards = cfg.shards;
+        let now = Instant::now();
         let shards: Vec<Arc<Shard>> = (0..nshards)
             .map(|_| {
                 Arc::new(Shard {
                     state: Mutex::new(ShardState {
-                        queue: VecDeque::new(),
+                        queues: Default::default(),
                         jobs: HashMap::new(),
+                        wfq: WfqPicker::new(qos_cfg.weights),
+                        last_service: [now; CLASSES],
                     }),
                     ready: Condvar::new(),
                 })
@@ -338,12 +516,14 @@ impl Scheduler {
             .collect();
         let cache = Arc::new(TieredCache::new(cfg.cache_bytes, cfg.store.clone()));
         let counters = Arc::new(Counters::default());
+        let qos_counters = Arc::new(QosCounters::new());
         let stop = Arc::new(AtomicBool::new(false));
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
             let shards = shards.clone();
             let cache = cache.clone();
             let counters = counters.clone();
+            let qos_counters = qos_counters.clone();
             let stop = stop.clone();
             let peers = peers.clone();
             let home = i % nshards;
@@ -351,7 +531,15 @@ impl Scheduler {
                 std::thread::Builder::new()
                     .name(format!("barista-worker-{i}"))
                     .spawn(move || {
-                        worker_loop(&shards, home, &cache, &counters, &stop, peers.as_deref())
+                        worker_loop(
+                            &shards,
+                            home,
+                            &cache,
+                            &counters,
+                            &qos_counters,
+                            &stop,
+                            peers.as_deref(),
+                        )
                     })
                     .expect("spawn worker"),
             );
@@ -363,12 +551,20 @@ impl Scheduler {
             },
             cache,
             counters,
+            qos_counters,
+            buckets: qos_cfg.quota.map(TokenBuckets::new),
+            weights: qos_cfg.weights,
             stop,
             handles: Mutex::new(handles),
             queue_cap: cfg.queue_cap,
             workers,
             peers,
         }
+    }
+
+    /// The weighted-fair shares this scheduler serves classes at.
+    pub fn weights(&self) -> ClassWeights {
+        self.weights
     }
 
     /// Peer-dedup resilience counters (cluster mode), if the installed
@@ -379,9 +575,20 @@ impl Scheduler {
 
     /// Submit without blocking on execution: either an immediate cached
     /// outcome (hot or cold tier) or a tagged delivery on `tx`.
+    ///
+    /// QoS order of operations: quota admission first (a throttled
+    /// client is told to back off before any work — even a cache probe
+    /// — happens on its behalf), then the cache tiers, then the shard.
+    /// A full shard evicts the newest strictly-lower-class queued job
+    /// (lowest class first) to admit a higher-class submission; only
+    /// when nothing below is queued does backpressure reject.
+    /// `admitted` counts submissions accepted into service (cache hit,
+    /// dedup attach, or enqueue); busy rejections ride the pre-QoS
+    /// `rejected` counter.
     fn enqueue(
         &self,
         req: &RunRequest,
+        qos: &QoS,
         tag: u64,
         tx: &mpsc::Sender<Delivery>,
     ) -> Result<Enqueued, SubmitError> {
@@ -389,11 +596,23 @@ impl Scheduler {
         if self.stop.load(Ordering::SeqCst) {
             return Err(SubmitError::Shutdown);
         }
+        let class = qos.priority;
+        if let Some(buckets) = &self.buckets {
+            if let Err(retry_after_ms) = buckets.admit(qos.client.as_deref()) {
+                self.qos_counters.quota_rejected(class);
+                return Err(SubmitError::QuotaExceeded { retry_after_ms });
+            }
+        }
         req.config.validate().map_err(SubmitError::Invalid)?;
         let key = job_key(req);
         if let Some((entry, tier)) = self.cache.get(&key, req) {
+            self.qos_counters.admitted(class);
             return Ok(Enqueued::Ready(self.tier_outcome(entry, tier)));
         }
+        // A huge deadline that overflows Instant is "no deadline".
+        let deadline = qos
+            .deadline_ms
+            .and_then(|ms| Instant::now().checked_add(Duration::from_millis(ms)));
         let shard = &self.shards[self.route.route(&key).index()];
         let mut st = shard.state.lock().unwrap();
         // Re-check stop under the shard lock: shutdown() drains the
@@ -414,21 +633,50 @@ impl Scheduler {
         // the store mutex — which completions hold across an fdatasync
         // — into the shard critical section.
         if let Some(entry) = self.cache.hot().peek(&key) {
+            self.qos_counters.admitted(class);
             return Ok(Enqueued::Ready(self.tier_outcome(entry, Tier::Hot)));
         }
+        let mut attached = false;
+        let mut escalated_from: Option<Priority> = None;
         if let Some(job) = st.jobs.get_mut(&key) {
             job.waiters.push(Waiter {
                 tag,
                 tx: tx.clone(),
+                class,
+                deadline,
             });
+            attached = true;
+            if class > job.class {
+                escalated_from = Some(job.class);
+                job.class = class;
+            }
+        }
+        if attached {
+            // A higher-class attach escalates the whole queued job: it
+            // moves to the attacher's class queue (back, keeping FIFO
+            // within the class) so one execution serves everyone at
+            // the urgency of its most urgent waiter. In-flight jobs
+            // (no longer queued) just gain the waiter.
+            if let Some(old) = escalated_from {
+                let old_q = &mut st.queues[old.index()];
+                if let Some(pos) = old_q.iter().position(|k| *k == key) {
+                    old_q.remove(pos);
+                    st.push(class, key);
+                }
+            }
             self.counters.deduped.fetch_add(1, Ordering::Relaxed);
+            self.qos_counters.admitted(class);
             return Ok(Enqueued::Pending(Source::Deduped));
         }
-        if st.queue.len() >= self.queue_cap {
-            self.counters.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(SubmitError::Busy {
-                retry_after_ms: 10 + 2 * st.queue.len() as u64,
-            });
+        let mut evicted: Option<Vec<Waiter>> = None;
+        if st.queued() >= self.queue_cap {
+            evicted = st.evict_below(class, &self.qos_counters);
+            if evicted.is_none() {
+                self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Busy {
+                    retry_after_ms: 10 + 2 * st.queued() as u64,
+                });
+            }
         }
         st.jobs.insert(
             key,
@@ -437,11 +685,19 @@ impl Scheduler {
                 waiters: vec![Waiter {
                     tag,
                     tx: tx.clone(),
+                    class,
+                    deadline,
                 }],
+                class,
             },
         );
-        st.queue.push_back(key);
+        st.push(class, key);
         drop(st);
+        // Shed notifications go out after the lock is released.
+        for w in evicted.into_iter().flatten() {
+            let _ = w.tx.send((w.tag, Verdict::Shed(ShedReason::Overload)));
+        }
+        self.qos_counters.admitted(class);
         shard.ready.notify_one();
         Ok(Enqueued::Pending(Source::Executed))
     }
@@ -462,16 +718,23 @@ impl Scheduler {
 
     /// Submit one job and block until its result is available.
     pub fn execute(&self, req: &RunRequest) -> Result<Outcome, SubmitError> {
+        self.execute_qos(req, &QoS::default())
+    }
+
+    /// Submit one job with a QoS envelope and block until it resolves.
+    /// A shed (deadline expired while queued, or overload eviction)
+    /// surfaces as [`SubmitError::Shed`].
+    pub fn execute_qos(&self, req: &RunRequest, qos: &QoS) -> Result<Outcome, SubmitError> {
         let (tx, rx) = mpsc::channel();
-        match self.enqueue(req, 0, &tx)? {
+        match self.enqueue(req, qos, 0, &tx)? {
             Enqueued::Ready(o) => Ok(o),
             Enqueued::Pending(source) => {
                 // Drop our sender so a scheduler shutdown (which drops
                 // the job's waiters) disconnects the channel instead of
                 // leaving this recv blocked forever.
                 drop(tx);
-                rx.recv()
-                    .map(|(_, entry, delivered)| {
+                match rx.recv() {
+                    Ok((_, Verdict::Done(entry, delivered))) => {
                         // A dedup submission stays "dedup" however the
                         // execution resolved; otherwise the worker's
                         // verdict (executed vs peer) stands.
@@ -479,9 +742,11 @@ impl Scheduler {
                             Source::Deduped => Source::Deduped,
                             _ => delivered,
                         };
-                        Outcome { entry, source }
-                    })
-                    .map_err(|_| SubmitError::Shutdown)
+                        Ok(Outcome { entry, source })
+                    }
+                    Ok((_, Verdict::Shed(reason))) => Err(SubmitError::Shed(reason)),
+                    Err(_) => Err(SubmitError::Shutdown),
+                }
             }
         }
     }
@@ -506,17 +771,45 @@ impl Scheduler {
         reqs: &[RunRequest],
         mut on_done: F,
     ) -> Result<Vec<Outcome>, SubmitError> {
+        let verdicts = self.run_each_verdicts(reqs, &QoS::default(), |i, v| {
+            if let Ok(o) = v {
+                on_done(i, o);
+            }
+        })?;
+        // The pre-QoS contract is all-or-error: a shed (only possible
+        // when concurrent higher-class traffic evicts these jobs)
+        // propagates as the batch's error.
+        verdicts
+            .into_iter()
+            .map(|v| v.map_err(SubmitError::Shed))
+            .collect()
+    }
+
+    /// [`Scheduler::run_each`] with a QoS envelope (applied to every
+    /// job in the batch) and per-job verdicts: each slot resolves to an
+    /// outcome or to the reason it was shed, so one expired deadline
+    /// does not void its batch-mates' results. The batch-level `Err`
+    /// is reserved for whole-batch failures (invalid job, sustained
+    /// backpressure, quota, shutdown).
+    pub fn run_each_verdicts<F: FnMut(usize, &Result<Outcome, ShedReason>)>(
+        &self,
+        reqs: &[RunRequest],
+        qos: &QoS,
+        mut on_done: F,
+    ) -> Result<Vec<Result<Outcome, ShedReason>>, SubmitError> {
+        type Slot = Option<Result<Outcome, ShedReason>>;
         let (tx, rx) = mpsc::channel::<Delivery>();
-        let mut slots: Vec<Option<Outcome>> = reqs.iter().map(|_| None).collect();
+        let mut slots: Vec<Slot> = reqs.iter().map(|_| None).collect();
         let mut pending_sources: Vec<Option<Source>> = reqs.iter().map(|_| None).collect();
         let mut pending = 0usize;
         for (i, req) in reqs.iter().enumerate() {
             let mut waited_ms = 0u64;
             loop {
-                match self.enqueue(req, i as u64, &tx) {
+                match self.enqueue(req, qos, i as u64, &tx) {
                     Ok(Enqueued::Ready(o)) => {
-                        on_done(i, &o);
-                        slots[i] = Some(o);
+                        let v = Ok(o);
+                        on_done(i, &v);
+                        slots[i] = Some(v);
                         break;
                     }
                     Ok(Enqueued::Pending(source)) => {
@@ -540,15 +833,20 @@ impl Scheduler {
         // them, disconnecting `rx` instead of deadlocking the drain.
         drop(tx);
         for _ in 0..pending {
-            let (tag, entry, delivered) = rx.recv().map_err(|_| SubmitError::Shutdown)?;
+            let (tag, verdict) = rx.recv().map_err(|_| SubmitError::Shutdown)?;
             let i = tag as usize;
-            let source = match pending_sources[i].take() {
-                Some(Source::Deduped) => Source::Deduped,
-                _ => delivered,
+            let v = match verdict {
+                Verdict::Done(entry, delivered) => {
+                    let source = match pending_sources[i].take() {
+                        Some(Source::Deduped) => Source::Deduped,
+                        _ => delivered,
+                    };
+                    Ok(Outcome { entry, source })
+                }
+                Verdict::Shed(reason) => Err(reason),
             };
-            let o = Outcome { entry, source };
-            on_done(i, &o);
-            slots[i] = Some(o);
+            on_done(i, &v);
+            slots[i] = Some(v);
         }
         Ok(slots
             .into_iter()
@@ -622,7 +920,7 @@ impl Scheduler {
         let queued: usize = self
             .shards
             .iter()
-            .map(|s| s.state.lock().unwrap().queue.len())
+            .map(|s| s.state.lock().unwrap().queued())
             .sum();
         SchedulerStats {
             submitted: self.counters.submitted.load(Ordering::Relaxed),
@@ -636,6 +934,7 @@ impl Scheduler {
             workers: self.workers,
             shards: self.shards.len(),
             cache: self.cache.hot().stats(),
+            qos: self.qos_counters.snapshot(),
             store: self.cache.cold().map(|s| s.stats()),
         }
     }
@@ -656,7 +955,9 @@ impl Scheduler {
         // `recv`s error out as Shutdown instead of hanging.
         for shard in &self.shards {
             let mut st = shard.state.lock().unwrap();
-            st.queue.clear();
+            for q in st.queues.iter_mut() {
+                q.clear();
+            }
             st.jobs.clear();
         }
     }
@@ -673,26 +974,29 @@ fn worker_loop(
     home: usize,
     cache: &TieredCache,
     counters: &Counters,
+    qos: &QosCounters,
     stop: &AtomicBool,
     peers: Option<&dyn PeerLookup>,
 ) {
     let n = shards.len();
     loop {
-        // Home shard first, then steal in ring order.
+        // Home shard first, then steal in ring order. The WFQ picker
+        // chooses the class within a shard; deadline-dead jobs are
+        // shed here at dequeue — the lazy sweep — so expired work
+        // costs one queue hop, never a simulation.
         let mut found: Option<(usize, JobKey, RunRequest)> = None;
+        let mut shed: Vec<Waiter> = Vec::new();
         for off in 0..n {
             let idx = (home + off) % n;
             let mut st = shards[idx].state.lock().unwrap();
-            if let Some(key) = st.queue.pop_front() {
-                let req = st
-                    .jobs
-                    .get(&key)
-                    .expect("queued key has a job entry")
-                    .req
-                    .clone();
+            if let Some((key, req)) = st.pop_runnable(Instant::now(), qos, &mut shed) {
                 found = Some((idx, key, req));
                 break;
             }
+        }
+        // Notify shed waiters outside the shard locks.
+        for w in shed {
+            let _ = w.tx.send((w.tag, Verdict::Shed(ShedReason::Deadline)));
         }
         match found {
             Some((idx, key, req)) => {
@@ -728,7 +1032,9 @@ fn worker_loop(
                     _ => counters.executed.fetch_add(1, Ordering::Relaxed),
                 };
                 for w in waiters {
-                    let _ = w.tx.send((w.tag, entry.clone(), source));
+                    let _ = w
+                        .tx
+                        .send((w.tag, Verdict::Done(entry.clone(), source)));
                 }
             }
             None => {
@@ -898,7 +1204,7 @@ mod tests {
         let mut rejected = false;
         let mut pending = 0usize;
         for seed in 0..64 {
-            match s.enqueue(&small_req(ArchKind::Dense, 1000 + seed), seed, &tx) {
+            match s.enqueue(&small_req(ArchKind::Dense, 1000 + seed), &QoS::default(), seed, &tx) {
                 Ok(Enqueued::Pending(_)) => pending += 1,
                 Ok(Enqueued::Ready(_)) => {}
                 Err(SubmitError::Busy { retry_after_ms }) => {
@@ -1014,5 +1320,255 @@ mod tests {
             direct.network.to_json().to_string(),
             "scheduler result must be byte-identical to run_one"
         );
+    }
+
+    fn qos(priority: Priority, deadline_ms: Option<u64>) -> QoS {
+        QoS {
+            priority,
+            client: None,
+            deadline_ms,
+        }
+    }
+
+    #[test]
+    fn deadline_expired_jobs_are_shed_not_computed() {
+        // deadline_ms=0 expires at the enqueue instant; the worker pops
+        // strictly after, so the shed is deterministic regardless of
+        // how fast the worker drains.
+        let s = small_sched(1);
+        let (tx, rx) = mpsc::channel();
+        let doomed = small_req(ArchKind::Dense, 900_001);
+        match s
+            .enqueue(&doomed, &qos(Priority::Batch, Some(0)), 7, &tx)
+            .unwrap()
+        {
+            Enqueued::Pending(Source::Executed) => {}
+            _ => panic!("fresh job must enqueue, not resolve from cache"),
+        }
+        drop(tx);
+        match rx.recv().unwrap() {
+            (7, Verdict::Shed(ShedReason::Deadline)) => {}
+            (tag, Verdict::Done(..)) => panic!("tag {tag}: dead job was computed"),
+            (tag, Verdict::Shed(r)) => panic!("tag {tag}: wrong reason {r:?}"),
+        }
+        let st = s.stats();
+        assert_eq!(st.qos.shed_deadline[Priority::Batch.index()], 1, "{st:?}");
+        assert_eq!(
+            st.qos.admitted[Priority::Batch.index()],
+            1,
+            "shed jobs were admitted first: {st:?}"
+        );
+        assert_eq!(st.executed, 0, "dead work must not be computed: {st:?}");
+        // And the blocking front door surfaces it as a structured error.
+        match s.execute_qos(&small_req(ArchKind::Dense, 900_002), &qos(Priority::Batch, Some(0))) {
+            Err(SubmitError::Shed(ShedReason::Deadline)) => {}
+            other => panic!("expected Shed(Deadline), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn overload_eviction_sheds_lowest_class_for_higher_class() {
+        // Burst background jobs until the queue is provably full (Busy),
+        // then submit interactive: if the queue is still full it must
+        // evict a background job rather than bounce the high class.
+        // The worker may drain between the Busy probe and the
+        // interactive submit, so retry a few rounds; each round is a
+        // microsecond-scale burst against millisecond-scale jobs.
+        let s = Scheduler::new(SchedulerConfig {
+            workers: 1,
+            shards: 1,
+            queue_cap: 4,
+            cache_bytes: 16 << 20,
+            store: None,
+        });
+        let (tx, rx) = mpsc::channel();
+        let mut seed = 0u64;
+        let mut shed_seen = false;
+        'rounds: for _ in 0..50 {
+            loop {
+                seed += 1;
+                match s.enqueue(
+                    &small_req(ArchKind::Dense, 920_000 + seed),
+                    &qos(Priority::Background, None),
+                    seed,
+                    &tx,
+                ) {
+                    Ok(_) => {}
+                    Err(SubmitError::Busy { retry_after_ms }) => {
+                        assert!(retry_after_ms > 0);
+                        break;
+                    }
+                    Err(e) => panic!("unexpected {e}"),
+                }
+            }
+            seed += 1;
+            match s.enqueue(
+                &small_req(ArchKind::Dense, 920_000 + seed),
+                &qos(Priority::Interactive, None),
+                seed,
+                &tx,
+            ) {
+                Ok(_) => {}
+                // Leftover interactive jobs from a prior round can fill
+                // the queue with nothing below us; just go again.
+                Err(SubmitError::Busy { .. }) => continue,
+                Err(e) => panic!("unexpected {e}"),
+            }
+            if s.stats().qos.shed_overload[Priority::Background.index()] >= 1 {
+                shed_seen = true;
+                break 'rounds;
+            }
+        }
+        assert!(shed_seen, "a full queue of background jobs must shed for interactive");
+        let snap = s.stats().qos;
+        assert_eq!(
+            snap.shed_overload[Priority::Interactive.index()],
+            0,
+            "only the class below pays for overload: {snap:?}"
+        );
+        // Every eviction delivered a Shed(Overload) verdict to its
+        // waiter — the counter and the wire agree exactly.
+        drop(tx);
+        drop(s);
+        let mut shed_verdicts = 0u64;
+        while let Ok((_, v)) = rx.recv() {
+            if matches!(v, Verdict::Shed(ShedReason::Overload)) {
+                shed_verdicts += 1;
+            }
+        }
+        assert_eq!(
+            shed_verdicts,
+            snap.shed_overload[Priority::Background.index()],
+            "shed counter must match delivered shed verdicts"
+        );
+    }
+
+    #[test]
+    fn quota_rejects_with_retry_hint_and_counts() {
+        let s = Scheduler::with_qos(
+            SchedulerConfig {
+                workers: 1,
+                shards: 1,
+                queue_cap: 64,
+                cache_bytes: 16 << 20,
+                store: None,
+            },
+            QosConfig {
+                weights: ClassWeights::default(),
+                quota: Some(Quota {
+                    rate_per_s: 0.001, // refills far slower than the test
+                    burst: 2.0,
+                }),
+            },
+            None,
+        );
+        let mk = |seed| small_req(ArchKind::Dense, 930_000 + seed);
+        let q = qos(Priority::Interactive, None);
+        assert!(s.execute_qos(&mk(1), &q).is_ok());
+        assert!(s.execute_qos(&mk(2), &q).is_ok());
+        match s.execute_qos(&mk(3), &q) {
+            Err(SubmitError::QuotaExceeded { retry_after_ms }) => {
+                assert!(retry_after_ms >= 1, "{retry_after_ms}");
+            }
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+        let st = s.stats();
+        assert_eq!(st.qos.quota_rejected[Priority::Interactive.index()], 1);
+        assert_eq!(st.qos.admitted[Priority::Interactive.index()], 2);
+        // Distinctly-identified clients have their own buckets.
+        let alice = QoS {
+            priority: Priority::Interactive,
+            client: Some("alice".into()),
+            deadline_ms: None,
+        };
+        assert!(s.execute_qos(&mk(4), &alice).is_ok());
+    }
+
+    #[test]
+    fn dedup_attach_escalates_queued_class() {
+        // Keep the single worker saturated with filler so the probe job
+        // stays queued long enough for its interactive duplicate to
+        // attach; if the race is lost anyway (worker already popped or
+        // even finished it), retry with a fresh job.
+        let s = Scheduler::new(SchedulerConfig {
+            workers: 1,
+            shards: 1,
+            queue_cap: 16,
+            cache_bytes: 16 << 20,
+            store: None,
+        });
+        let (tx, rx) = mpsc::channel();
+        let mut fill = 0u64;
+        let mut escalated = false;
+        for round in 0..50u64 {
+            for _ in 0..4 {
+                fill += 1;
+                let _ = s.enqueue(
+                    &small_req(ArchKind::Dense, 940_000 + fill),
+                    &qos(Priority::Batch, None),
+                    fill,
+                    &tx,
+                );
+            }
+            let req = small_req(ArchKind::Dense, 945_000 + round);
+            let tag = 10_000 + round;
+            if !matches!(
+                s.enqueue(&req, &qos(Priority::Background, None), tag, &tx),
+                Ok(Enqueued::Pending(Source::Executed))
+            ) {
+                continue;
+            }
+            match s.enqueue(&req, &qos(Priority::Interactive, None), tag + 1, &tx) {
+                Ok(Enqueued::Pending(Source::Deduped)) => {}
+                // Resolved before we attached (cache hit) or bounced;
+                // either way the race was lost — next round.
+                _ => continue,
+            }
+            let key = job_key(&req);
+            let st = s.shards[0].state.lock().unwrap();
+            if let Some(job) = st.jobs.get(&key) {
+                assert_eq!(
+                    job.class,
+                    Priority::Interactive,
+                    "attach from a higher class escalates the job"
+                );
+                assert!(
+                    !st.queues[Priority::Background.index()].contains(&key),
+                    "escalated job must leave the background queue"
+                );
+                if st.queues[Priority::Interactive.index()].contains(&key) {
+                    escalated = true;
+                }
+            }
+            drop(st);
+            if escalated {
+                break;
+            }
+        }
+        assert!(
+            escalated,
+            "never observed a queued job escalated by a dedup attach in 50 rounds"
+        );
+        assert!(s.stats().deduped >= 1);
+        // Drain so shutdown is clean.
+        drop(tx);
+        while rx.recv().is_ok() {}
+    }
+
+    #[test]
+    fn default_qos_traffic_sees_no_behavior_change() {
+        // Pre-QoS call sites (execute/run_all) must behave exactly as
+        // before: batch class, no quota, nothing shed.
+        let s = small_sched(2);
+        let req = small_req(ArchKind::Dense, 950_001);
+        let a = s.execute(&req).unwrap();
+        assert_eq!(a.source, Source::Executed);
+        let st = s.stats();
+        assert_eq!(st.qos.admitted[Priority::Batch.index()], 1);
+        assert_eq!(st.qos.shed_total(Priority::Batch), 0);
+        assert_eq!(st.qos.quota_rejected, [0; CLASSES]);
+        let j = st.to_json();
+        let qos_block = j.get("qos").expect("stats json has a qos block");
+        assert!(qos_block.get("interactive").is_some());
     }
 }

@@ -20,8 +20,9 @@ use std::time::{Duration, Instant};
 
 use crate::service::cache::job_key;
 use crate::service::protocol::{self, JobSpec, Request};
+use crate::service::qos::{QoS, ShedReason};
 use crate::service::scheduler::{
-    Outcome, PeerLookup, Scheduler, SchedulerConfig, Source, SubmitError,
+    Outcome, PeerLookup, QosConfig, Scheduler, SchedulerConfig, Source, SubmitError,
 };
 use crate::util::Json;
 
@@ -49,12 +50,24 @@ impl Server {
         cfg: SchedulerConfig,
         peers: Option<Arc<dyn PeerLookup>>,
     ) -> std::io::Result<Server> {
+        Server::bind_full(addr, cfg, QosConfig::default(), peers)
+    }
+
+    /// Fully-specified bind: sizing, QoS policy (class weights plus the
+    /// optional per-client admission quota — `serve --weights/--quota`),
+    /// and the cross-node dedup hook.
+    pub fn bind_full(
+        addr: &str,
+        cfg: SchedulerConfig,
+        qos: QosConfig,
+        peers: Option<Arc<dyn PeerLookup>>,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         Ok(Server {
             listener,
             local,
-            scheduler: Arc::new(Scheduler::with_peers(cfg, peers)),
+            scheduler: Arc::new(Scheduler::with_qos(cfg, qos, peers)),
             stop: Arc::new(AtomicBool::new(false)),
             started: Instant::now(),
         })
@@ -106,7 +119,18 @@ impl Server {
         cfg: SchedulerConfig,
         peers: Option<Arc<dyn PeerLookup>>,
     ) -> std::io::Result<(SocketAddr, std::thread::JoinHandle<std::io::Result<()>>)> {
-        let server = Server::bind_with_peers(addr, cfg, peers)?;
+        Server::spawn_full(addr, cfg, QosConfig::default(), peers)
+    }
+
+    /// [`spawn`](Self::spawn) with an explicit QoS policy — the
+    /// overload/quota test and load-replay harness entry point.
+    pub fn spawn_full(
+        addr: &str,
+        cfg: SchedulerConfig,
+        qos: QosConfig,
+        peers: Option<Arc<dyn PeerLookup>>,
+    ) -> std::io::Result<(SocketAddr, std::thread::JoinHandle<std::io::Result<()>>)> {
+        let server = Server::bind_full(addr, cfg, qos, peers)?;
         let local = server.local_addr();
         let handle = std::thread::spawn(move || server.run());
         Ok((local, handle))
@@ -219,12 +243,20 @@ fn handle_conn(
         // Streaming requests write their own (multi-frame) responses;
         // everything else goes through the single-response path.
         let quit = match Request::parse_line(&line) {
-            Ok(Request::Submit { spec, stream: true }) => {
-                stream_submit(&mut writer, scheduler, &spec)?;
+            Ok(Request::Submit {
+                spec,
+                stream: true,
+                qos,
+            }) => {
+                stream_submit(&mut writer, scheduler, &spec, &qos)?;
                 false
             }
-            Ok(Request::Batch { specs, stream: true }) => {
-                stream_batch(&mut writer, scheduler, &specs)?;
+            Ok(Request::Batch {
+                specs,
+                stream: true,
+                qos,
+            }) => {
+                stream_batch(&mut writer, scheduler, &specs, &qos)?;
                 false
             }
             parsed => {
@@ -270,8 +302,8 @@ fn respond_parsed(
 ) -> (Json, bool) {
     match parsed {
         Err(e) => (protocol::response_error(&e), false),
-        Ok(Request::Submit { spec, .. }) => (submit_response(scheduler, &spec), false),
-        Ok(Request::Batch { specs, .. }) => (batch_response(scheduler, &specs), false),
+        Ok(Request::Submit { spec, qos, .. }) => (submit_response(scheduler, &spec, &qos), false),
+        Ok(Request::Batch { specs, qos, .. }) => (batch_response(scheduler, &specs, &qos), false),
         Ok(Request::Status) => (status_response(scheduler, started), false),
         Ok(Request::Stats) => {
             let mut j = Json::obj();
@@ -302,6 +334,7 @@ fn respond_parsed(
             let mut j = Json::obj();
             j.set("ok", true)
                 .set("op", "health")
+                .set("qos", stats.qos.to_json())
                 .set("queued", stats.queued)
                 .set("workers", stats.workers);
             if let Some(peers) = scheduler.peers_stats_json() {
@@ -362,12 +395,24 @@ fn outcome_json(outcome: &Outcome) -> Json {
 fn submit_error_frame(e: &SubmitError) -> Json {
     match e {
         SubmitError::Busy { retry_after_ms } => protocol::response_busy(*retry_after_ms),
+        SubmitError::QuotaExceeded { retry_after_ms } => {
+            protocol::response_quota_exceeded(*retry_after_ms)
+        }
+        SubmitError::Shed(reason) => protocol::response_shed(*reason),
         other => protocol::response_error(&other.to_string()),
     }
 }
 
-fn submit_response(scheduler: &Scheduler, spec: &JobSpec) -> Json {
-    match scheduler.execute(&spec.to_request()) {
+/// A per-job batch entry for a shed job: the structured shed error in
+/// place of the result fields, so the results array stays positional.
+fn shed_entry(reason: ShedReason) -> Json {
+    let mut j = Json::obj();
+    j.set("error", reason.wire_error()).set("shed", true);
+    j
+}
+
+fn submit_response(scheduler: &Scheduler, spec: &JobSpec, qos: &QoS) -> Json {
+    match scheduler.execute_qos(&spec.to_request(), qos) {
         Ok(outcome) => {
             let mut j = outcome_json(&outcome);
             j.set("ok", true).set("op", "submit");
@@ -377,15 +422,29 @@ fn submit_response(scheduler: &Scheduler, spec: &JobSpec) -> Json {
     }
 }
 
-fn batch_response(scheduler: &Scheduler, specs: &[JobSpec]) -> Json {
+fn batch_response(scheduler: &Scheduler, specs: &[JobSpec], qos: &QoS) -> Json {
     let reqs: Vec<_> = specs.iter().map(|s| s.to_request()).collect();
-    match scheduler.run_all(&reqs) {
-        Ok(outcomes) => {
+    match scheduler.run_each_verdicts(&reqs, qos, |_, _| {}) {
+        Ok(verdicts) => {
+            let shed = verdicts.iter().filter(|v| v.is_err()).count();
             let mut j = Json::obj();
             j.set("ok", true).set("op", "batch").set(
                 "results",
-                Json::Arr(outcomes.iter().map(outcome_json).collect()),
+                Json::Arr(
+                    verdicts
+                        .iter()
+                        .map(|v| match v {
+                            Ok(o) => outcome_json(o),
+                            Err(r) => shed_entry(*r),
+                        })
+                        .collect(),
+                ),
             );
+            // Only when jobs were shed — a fully-served batch response
+            // stays byte-identical to the pre-QoS protocol.
+            if shed > 0 {
+                j.set("shed", shed);
+            }
             j
         }
         Err(e) => submit_error_frame(&e),
@@ -398,12 +457,13 @@ fn stream_submit<W: Write>(
     writer: &mut W,
     scheduler: &Scheduler,
     spec: &JobSpec,
+    qos: &QoS,
 ) -> std::io::Result<()> {
     let req = spec.to_request();
     let mut acc = protocol::event_frame("submit", "accepted");
     acc.set("key", job_key(&req).hex()).set("jobs", 1usize);
     emit_line(writer, &acc)?;
-    let frame = match scheduler.execute(&req) {
+    let frame = match scheduler.execute_qos(&req, qos) {
         Ok(outcome) => {
             let mut f = protocol::event_frame("submit", "result");
             outcome_fields(&mut f, &outcome);
@@ -422,6 +482,7 @@ fn stream_batch<W: Write>(
     writer: &mut W,
     scheduler: &Scheduler,
     specs: &[JobSpec],
+    qos: &QoS,
 ) -> std::io::Result<()> {
     let reqs: Vec<_> = specs.iter().map(|s| s.to_request()).collect();
     let mut acc = protocol::event_frame("batch", "accepted");
@@ -429,13 +490,23 @@ fn stream_batch<W: Write>(
     emit_line(writer, &acc)?;
     let t0 = Instant::now();
     let mut io_err: Option<std::io::Error> = None;
-    let res = scheduler.run_each(&reqs, |index, outcome| {
+    let res = scheduler.run_each_verdicts(&reqs, qos, |index, verdict| {
         if io_err.is_some() {
             return;
         }
         let mut f = protocol::event_frame("batch", "progress");
         f.set("index", index);
-        outcome_fields(&mut f, outcome);
+        match verdict {
+            Ok(outcome) => outcome_fields(&mut f, outcome),
+            // A shed job's progress frame carries the structured shed
+            // error; `event` stays "progress" so stream clients don't
+            // mistake it for the terminal frame.
+            Err(reason) => {
+                f.set("ok", false)
+                    .set("error", reason.wire_error())
+                    .set("shed", true);
+            }
+        }
         if let Err(e) = emit_line(writer, &f) {
             io_err = Some(e);
         }
@@ -444,10 +515,11 @@ fn stream_batch<W: Write>(
         return Err(e);
     }
     let frame = match res {
-        Ok(outcomes) => {
-            let count = |s: Source| outcomes.iter().filter(|o| o.source == s).count();
+        Ok(verdicts) => {
+            let count =
+                |s: Source| verdicts.iter().filter(|v| matches!(v, Ok(o) if o.source == s)).count();
             let mut done = protocol::event_frame("batch", "done");
-            done.set("jobs", outcomes.len())
+            done.set("jobs", verdicts.len())
                 .set("executed", count(Source::Executed))
                 .set("cache", count(Source::CacheHit))
                 .set("store", count(Source::StoreHit))
@@ -458,6 +530,11 @@ fn stream_batch<W: Write>(
             let peer = count(Source::PeerHit);
             if peer > 0 {
                 done.set("peer", peer);
+            }
+            // Likewise only under QoS shedding.
+            let shed = verdicts.iter().filter(|v| v.is_err()).count();
+            if shed > 0 {
+                done.set("shed", shed);
             }
             done
         }
@@ -565,20 +642,34 @@ impl Client {
     }
 
     pub fn submit(&mut self, spec: &JobSpec) -> Result<Json, String> {
+        self.submit_qos(spec, &QoS::default())
+    }
+
+    /// `submit` with a QoS envelope (priority class, client id,
+    /// deadline). The default envelope leaves the wire byte-identical
+    /// to [`submit`](Self::submit).
+    pub fn submit_qos(&mut self, spec: &JobSpec, qos: &QoS) -> Result<Json, String> {
         self.roundtrip(
             &Request::Submit {
                 spec: spec.clone(),
                 stream: false,
+                qos: qos.clone(),
             }
             .to_json(),
         )
     }
 
     pub fn batch(&mut self, specs: &[JobSpec]) -> Result<Json, String> {
+        self.batch_qos(specs, &QoS::default())
+    }
+
+    /// `batch` with a QoS envelope applying to every job in the batch.
+    pub fn batch_qos(&mut self, specs: &[JobSpec], qos: &QoS) -> Result<Json, String> {
         self.roundtrip(
             &Request::Batch {
                 specs: specs.to_vec(),
                 stream: false,
+                qos: qos.clone(),
             }
             .to_json(),
         )
@@ -592,9 +683,20 @@ impl Client {
         spec: &JobSpec,
         on_event: F,
     ) -> Result<Json, String> {
+        self.submit_stream_qos(spec, &QoS::default(), on_event)
+    }
+
+    /// Streaming submit with a QoS envelope.
+    pub fn submit_stream_qos<F: FnMut(&Json)>(
+        &mut self,
+        spec: &JobSpec,
+        qos: &QoS,
+        on_event: F,
+    ) -> Result<Json, String> {
         let req = Request::Submit {
             spec: spec.clone(),
             stream: true,
+            qos: qos.clone(),
         };
         self.stream_roundtrip(&req.to_json(), on_event)
     }
@@ -607,9 +709,20 @@ impl Client {
         specs: &[JobSpec],
         on_event: F,
     ) -> Result<Json, String> {
+        self.batch_stream_qos(specs, &QoS::default(), on_event)
+    }
+
+    /// Streaming batch with a QoS envelope applying to every job.
+    pub fn batch_stream_qos<F: FnMut(&Json)>(
+        &mut self,
+        specs: &[JobSpec],
+        qos: &QoS,
+        on_event: F,
+    ) -> Result<Json, String> {
         let req = Request::Batch {
             specs: specs.to_vec(),
             stream: true,
+            qos: qos.clone(),
         };
         self.stream_roundtrip(&req.to_json(), on_event)
     }

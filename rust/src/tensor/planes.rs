@@ -171,6 +171,22 @@ impl MaskPlanes {
     pub fn bytes(&self) -> usize {
         (self.data.len() + self.nz.len()) * std::mem::size_of::<u64>()
     }
+
+    /// Fraction of packed words the prescan index flags nonzero, over
+    /// every (lane, row) stream — i.e. the share of word loads a
+    /// prescan kernel can NOT skip against an all-ones partner. One
+    /// popcount sweep over the (64× smaller) summary index; the
+    /// parallel-build cutoff uses it to scale raw word-op counts down
+    /// to the work the sparse kernels actually do. `1.0` for an empty
+    /// geometry (no words → nothing to skip).
+    pub fn nz_density(&self) -> f64 {
+        let total = self.parts * self.rows * self.words_per_row;
+        if total == 0 {
+            return 1.0;
+        }
+        let set: u64 = self.nz.iter().map(|w| w.count_ones() as u64).sum();
+        set as f64 / total as f64
+    }
 }
 
 #[cfg(test)]
@@ -321,6 +337,43 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// `nz_density` is the exact flagged-word share: 0 for all-zero
+    /// planes, 1 for saturated ones, strictly between for mixed — and
+    /// always equal to a direct recount of nonzero packed words.
+    #[test]
+    fn nz_density_matches_direct_recount() {
+        use crate::tensor::bitmask::SparseChunk;
+        let mut rng = Pcg32::seeded(5);
+        let mixed = MaskMatrix::random(&mut rng, 5, 900, 0.05, 0.4);
+        let zeros = MaskMatrix::zeroed(3, 8);
+        // Fully valid saturated chunks: a partially-valid tail chunk
+        // would leave genuinely-zero packed words and density < 1.
+        let mut ones = MaskMatrix::zeroed(3, 8);
+        for r in 0..3 {
+            for c in 0..8 {
+                ones.set(r, c, SparseChunk::new(u128::MAX));
+            }
+        }
+        for parts in [1usize, 2, 4, 8] {
+            assert_eq!(MaskPlanes::build(&zeros, parts).unwrap().nz_density(), 0.0);
+            assert_eq!(MaskPlanes::build(&ones, parts).unwrap().nz_density(), 1.0);
+            let p = MaskPlanes::build(&mixed, parts).unwrap();
+            let mut nonzero = 0usize;
+            let mut total = 0usize;
+            for lane in 0..parts {
+                for r in 0..mixed.rows {
+                    for w in p.lane_row(lane, r) {
+                        total += 1;
+                        nonzero += (*w != 0) as usize;
+                    }
+                }
+            }
+            let d = p.nz_density();
+            assert!((d - nonzero as f64 / total as f64).abs() < 1e-12, "parts={parts}");
+            assert!(d > 0.0 && d < 1.0, "mixed matrix must be mixed, got {d}");
         }
     }
 

@@ -30,7 +30,8 @@ use barista::cluster::{
 };
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{run_one, RunRequest};
-use barista::service::{job_key, Client, JobSpec, SchedulerConfig, Server, Store};
+use barista::service::{job_key, Client, JobSpec, Priority, QoS, SchedulerConfig, Server, Store};
+use barista::util::stats::percentile;
 use barista::util::{scratch_dir, Json};
 use barista::workload::Benchmark;
 
@@ -571,6 +572,131 @@ fn one_slow_probe_does_not_kill_a_node() {
         Some(c.addrs[0].as_str())
     );
     assert_eq!(resp.get("result").unwrap().to_string(), reference);
+    c.teardown();
+}
+
+/// Overload QoS composed with wire faults: a background flood whose
+/// deadlines are already expired must be shed class-exactly (the shed
+/// frame is terminal at the router — never retried onto another node,
+/// so client-observed sheds equal the sum of per-node counters), while
+/// interleaved interactive jobs all complete with bounded latency —
+/// even with ~15% of connection attempts dropped on the floor.
+#[test]
+fn overload_sheds_background_exactly_while_interactive_stays_bounded() {
+    let _wd = Watchdog::arm("qos-overload", Duration::from_secs(300));
+    let c = Chaos::boot(
+        "chaos-qos",
+        TransportPolicy {
+            retries: 3,
+            backoff: Duration::from_millis(2),
+            // Never open a breaker: drops are absorbed by retries, so
+            // every submission reaches exactly one node.
+            breaker_threshold: 1000,
+            ..TransportPolicy::default()
+        },
+        1 << 20,
+    );
+    c.plan.add_rate(FaultKind::Drop, Some("submit"), None, 0.15);
+
+    let bg_qos = QoS {
+        priority: Priority::Background,
+        client: None,
+        // Expired on arrival: the node must queue, then shed at pop —
+        // deterministic shedding without real queue-wait races.
+        deadline_ms: Some(0),
+    };
+    let it_qos = QoS {
+        priority: Priority::Interactive,
+        client: Some("dashboard".into()),
+        deadline_ms: Some(30_000),
+    };
+    let interactive = 10u64;
+    let per_round_bg = 3u64;
+    let mut shed_seen = 0u64;
+    let mut degraded_seen = 0u64;
+    let mut interactive_ms: Vec<f64> = Vec::new();
+    for i in 0..interactive {
+        for k in 0..per_round_bg {
+            let spec = small_spec(9000 + i * per_round_bg + k);
+            let resp = c.router.dispatch_qos(&spec, &bg_qos);
+            if resp.get("shed").and_then(Json::as_bool) == Some(true) {
+                assert_eq!(
+                    resp.get("error").and_then(Json::as_str),
+                    Some("deadline_exceeded"),
+                    "{resp:?}"
+                );
+                assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+                shed_seen += 1;
+            } else {
+                // The only other legal outcome under a Drop-only plan:
+                // a fully degraded dispatch that never reached a node.
+                assert_eq!(
+                    resp.get("degraded").and_then(Json::as_bool),
+                    Some(true),
+                    "background must shed or degrade, never compute: {resp:?}"
+                );
+                degraded_seen += 1;
+            }
+        }
+        let spec = small_spec(9500 + i);
+        let t0 = std::time::Instant::now();
+        let resp = c.router.dispatch_qos(&spec, &it_qos);
+        interactive_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "interactive must complete under background overload: {resp:?}"
+        );
+        assert_eq!(resp.get("result").unwrap().to_string(), direct(&spec));
+    }
+    assert_eq!(shed_seen + degraded_seen, interactive * per_round_bg);
+    assert!(shed_seen > 0, "the flood must actually shed");
+    let p99 = percentile(&interactive_ms, 0.99);
+    assert!(
+        p99 < 5_000.0,
+        "interactive p99 must stay bounded under overload, got {p99:.1} ms \
+         (latencies {interactive_ms:?})"
+    );
+
+    // Exact accounting, three ways. Router-observed per-class counters:
+    let rqos = c.router.qos_json();
+    let rq = |class: &str, k: &str| {
+        rqos.get(class)
+            .and_then(|c| c.get(k))
+            .and_then(Json::as_u64)
+            .unwrap_or_else(|| panic!("router qos.{class}.{k}: {rqos:?}"))
+    };
+    assert_eq!(rq("background", "shed"), shed_seen);
+    assert_eq!(rq("background", "routed"), 0);
+    assert_eq!(rq("interactive", "routed"), interactive);
+    assert_eq!(rq("interactive", "shed"), 0);
+    // Node-side scheduler counters, summed across the cluster: every
+    // client-observed shed is exactly one node's deadline shed.
+    let node_sum = |class: &str, k: &str| -> u64 {
+        c.addrs
+            .iter()
+            .map(|a| {
+                let mut cl = Client::connect(a).expect("connect node");
+                let s = cl.stats().expect("node stats");
+                s.get("scheduler")
+                    .and_then(|x| x.get("qos"))
+                    .and_then(|q| q.get(class))
+                    .and_then(|cc| cc.get(k))
+                    .and_then(Json::as_u64)
+                    .unwrap_or_else(|| panic!("node qos.{class}.{k}: {s:?}"))
+            })
+            .sum()
+    };
+    assert_eq!(node_sum("background", "shed_deadline"), shed_seen);
+    assert_eq!(node_sum("background", "shed_overload"), 0);
+    assert_eq!(node_sum("background", "admitted"), shed_seen);
+    assert_eq!(node_sum("interactive", "admitted"), interactive);
+    assert_eq!(node_sum("interactive", "shed_deadline"), 0);
+    // And the wire-fault ledger still balances.
+    assert_eq!(
+        c.transport_counter("connect_errors"),
+        c.plan.injected(FaultKind::Drop)
+    );
     c.teardown();
 }
 

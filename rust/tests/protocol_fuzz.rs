@@ -23,7 +23,7 @@ use barista::cluster::{PeerSet, Router, RouterConfig, RouterServer};
 use barista::config::{ArchKind, SimConfig};
 use barista::coordinator::{run_one, RunRequest};
 use barista::service::{
-    Client, JobSpec, PeerLookup, Request, Scheduler, SchedulerConfig, Server,
+    Client, JobSpec, PeerLookup, QoS, Request, Scheduler, SchedulerConfig, Server,
 };
 use barista::util::prop::run_prop;
 use barista::util::rng::Pcg32;
@@ -179,6 +179,7 @@ fn seeded_junk_never_kills_a_worker_connection() {
     let valid_submit = Request::Submit {
         spec: small_spec(1),
         stream: false,
+        qos: QoS::default(),
     }
     .to_json()
     .to_string();
@@ -214,6 +215,7 @@ fn torn_frame_then_disconnect_leaves_server_healthy() {
     let valid_submit = Request::Submit {
         spec: small_spec(2),
         stream: false,
+        qos: QoS::default(),
     }
     .to_json()
     .to_string();
@@ -345,6 +347,7 @@ fn stats_wire_schemas_are_pinned() {
             "degraded_responses",
             "failovers",
             "nodes",
+            "qos",
             "replica_hits",
             "replicate_errors",
             "replicated",
@@ -353,6 +356,13 @@ fn stats_wire_schemas_are_pinned() {
             "steals",
             "transport",
         ]
+    );
+    // Per-class router QoS block.
+    let rqos = stats.get("qos").unwrap();
+    assert_eq!(keys(rqos), ["background", "batch", "interactive"]);
+    assert_eq!(
+        keys(rqos.get("interactive").unwrap()),
+        ["quota_rejected", "routed", "shed"]
     );
     // Transport counter block (also under PeerSet stats).
     assert_eq!(
@@ -385,7 +395,7 @@ fn stats_wire_schemas_are_pinned() {
     let scheduler = Scheduler::new(small_cfg());
     let started = Instant::now();
     let (health, _) = barista::service::server::respond(r#"{"op":"health"}"#, &scheduler, started);
-    assert_eq!(keys(&health), ["ok", "op", "queued", "workers"]);
+    assert_eq!(keys(&health), ["ok", "op", "qos", "queued", "workers"]);
     let sched_json = scheduler.stats().to_json();
     assert_eq!(
         keys(&sched_json),
@@ -395,6 +405,7 @@ fn stats_wire_schemas_are_pinned() {
             "deduped",
             "executed",
             "peer_hits",
+            "qos",
             "queued",
             "rejected",
             "shards",
@@ -403,11 +414,120 @@ fn stats_wire_schemas_are_pinned() {
             "workers",
         ]
     );
+    // Per-class scheduler QoS block: one object per class, fixed fields.
+    let sqos = sched_json.get("qos").unwrap();
+    assert_eq!(keys(sqos), ["background", "batch", "interactive"]);
+    assert_eq!(
+        keys(sqos.get("batch").unwrap()),
+        [
+            "admitted",
+            "quota_rejected",
+            "shed_deadline",
+            "shed_overload",
+            "starved_window",
+        ]
+    );
     scheduler.shutdown();
     // A peer-wired scheduler surfaces the peers section in health.
     let peers: Arc<dyn PeerLookup> = Arc::new(PeerSet::new(vec!["127.0.0.1:9".into()]));
     let scheduler = Scheduler::with_peers(small_cfg(), Some(peers));
     let (health, _) = barista::service::server::respond(r#"{"op":"health"}"#, &scheduler, started);
-    assert_eq!(keys(&health), ["ok", "op", "peers", "queued", "workers"]);
+    assert_eq!(keys(&health), ["ok", "op", "peers", "qos", "queued", "workers"]);
     scheduler.shutdown();
+}
+
+/// Hostile QoS fields on an otherwise-valid submit: each one must be a
+/// structured per-frame error (never a silent downgrade to defaults,
+/// never a dropped connection), and real traffic must still flow on
+/// the same connection afterwards.
+#[test]
+fn hostile_qos_fields_get_structured_errors() {
+    let (addr, handle) = Server::spawn("127.0.0.1:0", small_cfg()).expect("spawn server");
+    let addr = addr.to_string();
+    let base = Request::Submit {
+        spec: small_spec(4),
+        stream: false,
+        qos: QoS::default(),
+    }
+    .to_json();
+    let hostile: Vec<(&str, Json)> = vec![
+        ("unknown class", {
+            let mut j = base.clone();
+            j.set("priority", "urgent");
+            j
+        }),
+        ("numeric priority", {
+            let mut j = base.clone();
+            j.set("priority", 2u64);
+            j
+        }),
+        ("negative deadline", {
+            let mut j = base.clone();
+            j.set("deadline_ms", -5i64);
+            j
+        }),
+        ("fractional deadline", {
+            let mut j = base.clone();
+            j.set("deadline_ms", 1.5f64);
+            j
+        }),
+        ("string deadline", {
+            let mut j = base.clone();
+            j.set("deadline_ms", "soon");
+            j
+        }),
+        ("empty client id", {
+            let mut j = base.clone();
+            j.set("client", "");
+            j
+        }),
+        ("oversized client id", {
+            let mut j = base.clone();
+            j.set("client", "c".repeat(65));
+            j
+        }),
+        ("non-string client id", {
+            let mut j = base.clone();
+            j.set("client", 7u64);
+            j
+        }),
+    ];
+    let mut conn = RawConn::open(&addr);
+    for (what, frame) in &hostile {
+        let resp = conn
+            .roundtrip(frame.to_string().as_bytes())
+            .unwrap_or_else(|e| panic!("{what}: {e}"));
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(false),
+            "{what} must be rejected: {resp:?}"
+        );
+        let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+        assert!(!err.is_empty(), "{what}: error message missing: {resp:?}");
+    }
+    // The connection survived all of it and a clean QoS submit works.
+    let mut good = base.clone();
+    good.set("priority", "interactive").set("deadline_ms", 30_000u64);
+    let resp = conn
+        .roundtrip(good.to_string().as_bytes())
+        .expect("valid qos submit");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{resp:?}");
+    // None of the hostile frames may have been admitted into a class.
+    let mut c = Client::connect(&addr).expect("connect");
+    let stats = c.stats().expect("stats");
+    let admitted: u64 = ["background", "batch", "interactive"]
+        .iter()
+        .map(|class| {
+            stats
+                .get("scheduler")
+                .and_then(|s| s.get("qos"))
+                .and_then(|q| q.get(class))
+                .and_then(|cl| cl.get("admitted"))
+                .and_then(Json::as_u64)
+                .unwrap_or_else(|| panic!("missing qos.{class}.admitted: {stats:?}"))
+        })
+        .sum();
+    assert_eq!(admitted, 1, "only the one valid submit admits: {stats:?}");
+    c.shutdown().expect("shutdown");
+    let _ = handle.join();
 }

@@ -1,0 +1,291 @@
+//! QoS end-to-end: weighted-fair scheduling properties, token-bucket
+//! admission, deadline shedding and quota rejection over a real TCP
+//! socket, and the per-class counter surfaces in `stats`.
+//!
+//! The property tests pin the scheduler-independent guarantees of the
+//! [`WfqPicker`] (no backlogged class starves beyond its stride bound;
+//! service shares track the configured weights) so a scheduler-side
+//! regression in queue bookkeeping cannot hide behind wall-clock noise.
+
+use barista::config::{ArchKind, SimConfig};
+use barista::service::{
+    Client, ClassWeights, JobSpec, Priority, QoS, QosConfig, Quota, Server, SchedulerConfig,
+    TokenBuckets, WfqPicker,
+};
+use barista::util::prop::run_prop;
+use barista::util::Json;
+use barista::workload::Benchmark;
+
+fn small_spec(seed: u64) -> JobSpec {
+    let mut c = SimConfig::paper(ArchKind::Dense);
+    c.window_cap = 16;
+    c.batch = 1;
+    c.seed = seed;
+    JobSpec {
+        benchmark: Benchmark::AlexNet,
+        config: c,
+    }
+}
+
+fn spawn_qos_server(
+    qos: QosConfig,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<std::io::Result<()>>) {
+    Server::spawn_full(
+        "127.0.0.1:0",
+        SchedulerConfig {
+            workers: 2,
+            shards: 2,
+            queue_cap: 64,
+            cache_bytes: 16 << 20,
+            store: None,
+        },
+        qos,
+        None,
+    )
+    .expect("bind ephemeral port")
+}
+
+/// Per-class QoS counter out of a `stats` response:
+/// `scheduler.qos.<class>.<field>`.
+fn qos_stat(stats: &Json, class: &str, field: &str) -> u64 {
+    stats
+        .get("scheduler")
+        .and_then(|s| s.get("qos"))
+        .and_then(|q| q.get(class))
+        .and_then(|c| c.get(field))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("missing scheduler.qos.{class}.{field} in {stats:?}"))
+}
+
+// ---- WFQ properties ----
+
+/// No-starvation: while a class stays backlogged, consecutive services
+/// of that class are at most `ceil(W / w_i) + CLASSES` picks apart
+/// (stride scheduling's gap bound), and over a long all-backlogged run
+/// each class's service count tracks `T * w_i / W` to within a few
+/// picks.
+#[test]
+fn wfq_no_starvation_and_proportional_shares() {
+    run_prop("wfq-no-starvation", 0xFA18, 200, |rng| {
+        let w = [
+            1 + rng.gen_range(8),
+            1 + rng.gen_range(8),
+            1 + rng.gen_range(8),
+        ];
+        let weights = ClassWeights::new(w[2], w[1], w[0]).expect("positive weights");
+        let w_sum: u32 = w.iter().sum();
+        let mut picker = WfqPicker::new(weights);
+        let picks = (50 * w_sum) as usize;
+        let mut count = [0usize; 3];
+        let mut last = [0usize; 3];
+        for t in 0..picks {
+            let p = picker.pick([true, true, true]).expect("backlogged");
+            let i = p.index();
+            // Gap bound per class: ceil(W/w_j) + number of classes.
+            for (j, &c) in w.iter().enumerate() {
+                let gap = t - last[j];
+                let bound = (w_sum as usize + c as usize - 1) / c as usize + 3;
+                if gap > bound {
+                    return Err(format!(
+                        "class {j} starved for {gap} picks (weights {w:?}, bound {bound})"
+                    ));
+                }
+            }
+            count[i] += 1;
+            last[i] = t;
+        }
+        for (i, &c) in count.iter().enumerate() {
+            let expect = picks as f64 * w[i] as f64 / w_sum as f64;
+            if (c as f64 - expect).abs() > 3.0 {
+                return Err(format!(
+                    "class {i} served {c} times, expected ~{expect:.1} (weights {w:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The picker only ever serves classes with queued work, and returns
+/// `None` exactly when nothing is queued — under arbitrary backlog
+/// masks and idle periods (`note_nonempty` clamping included).
+#[test]
+fn wfq_pick_respects_backlog_mask() {
+    run_prop("wfq-mask", 0xFA19, 200, |rng| {
+        let weights = ClassWeights::new(
+            1 + rng.gen_range(8),
+            1 + rng.gen_range(8),
+            1 + rng.gen_range(8),
+        )
+        .expect("positive weights");
+        let mut picker = WfqPicker::new(weights);
+        for _ in 0..100 {
+            let mask = [rng.gen_bool(0.6), rng.gen_bool(0.6), rng.gen_bool(0.6)];
+            if rng.gen_bool(0.2) {
+                picker.note_nonempty(Priority::from_index(rng.gen_range(3) as usize));
+            }
+            match picker.pick(mask) {
+                None => {
+                    if mask != [false; 3] {
+                        return Err(format!("None despite backlog {mask:?}"));
+                    }
+                }
+                Some(p) => {
+                    if !mask[p.index()] {
+                        return Err(format!("picked empty class {p:?} from {mask:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- token buckets ----
+
+#[test]
+fn token_buckets_enforce_rate_per_client_and_bound_tracking() {
+    let b = TokenBuckets::new(Quota::per_second(10.0).expect("rate")); // burst 20
+    // The burst is forgiven, then admission fails with a real hint.
+    for i in 0..20 {
+        assert!(b.admit_at(Some("alice"), 0).is_ok(), "burst admit {i}");
+    }
+    let retry = b.admit_at(Some("alice"), 0).expect_err("bucket dry");
+    assert!(retry >= 1, "retry hint must be at least 1 ms, got {retry}");
+    // A different client has its own bucket; anonymous has the shared one.
+    assert!(b.admit_at(Some("bob"), 0).is_ok());
+    assert!(b.admit_at(None, 0).is_ok());
+    // Waiting the hinted time refills exactly enough for one admit.
+    assert!(b.admit_at(Some("alice"), retry).is_ok());
+    assert!(b.admit_at(Some("alice"), retry).is_err());
+    // Client-id churn cannot grow the map without bound: past the cap,
+    // new ids share the overflow bucket.
+    for i in 0..5000 {
+        let _ = b.admit_at(Some(&format!("churn{i}")), 1_000_000);
+    }
+    assert!(
+        b.tracked() <= 4096,
+        "tracked clients must stay bounded, got {}",
+        b.tracked()
+    );
+}
+
+// ---- over the wire ----
+
+#[test]
+fn qos_envelope_roundtrips_and_default_traffic_unchanged() {
+    let (addr, server) = spawn_qos_server(QosConfig::default());
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+
+    // Plain submit (no QoS): unchanged behavior, counted as batch class.
+    let plain = client.submit(&small_spec(1)).expect("plain submit");
+    assert_eq!(plain.get("ok").and_then(Json::as_bool), Some(true), "{plain:?}");
+
+    // QoS submit: same result bytes, counted as interactive.
+    let qos = QoS {
+        priority: Priority::Interactive,
+        client: Some("it".into()),
+        deadline_ms: Some(30_000),
+    };
+    let fancy = client.submit_qos(&small_spec(1), &qos).expect("qos submit");
+    assert_eq!(fancy.get("ok").and_then(Json::as_bool), Some(true), "{fancy:?}");
+    assert_eq!(
+        plain.get("result").map(Json::to_string),
+        fancy.get("result").map(Json::to_string),
+        "QoS envelope must not change the result payload"
+    );
+
+    let stats = client.stats().expect("stats");
+    assert_eq!(qos_stat(&stats, "batch", "admitted"), 1);
+    assert_eq!(qos_stat(&stats, "interactive", "admitted"), 1);
+    assert_eq!(qos_stat(&stats, "interactive", "shed_deadline"), 0);
+
+    client.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("server io");
+}
+
+#[test]
+fn expired_deadline_is_shed_over_the_wire_with_exact_counters() {
+    let (addr, server) = spawn_qos_server(QosConfig::default());
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+
+    // deadline_ms = 0 expires at enqueue time: the job must be shed at
+    // pop, never simulated.
+    let qos = QoS {
+        priority: Priority::Background,
+        client: None,
+        deadline_ms: Some(0),
+    };
+    let resp = client.submit_qos(&small_spec(2), &qos).expect("submit");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "{resp:?}");
+    assert_eq!(
+        resp.get("error").and_then(Json::as_str),
+        Some("deadline_exceeded"),
+        "{resp:?}"
+    );
+    assert_eq!(resp.get("shed").and_then(Json::as_bool), Some(true), "{resp:?}");
+
+    let stats = client.stats().expect("stats");
+    assert_eq!(qos_stat(&stats, "background", "shed_deadline"), 1);
+    assert_eq!(qos_stat(&stats, "background", "admitted"), 1);
+    let executed = stats
+        .get("scheduler")
+        .and_then(|s| s.get("executed"))
+        .and_then(Json::as_u64);
+    assert_eq!(executed, Some(0), "shed job must not simulate: {stats:?}");
+
+    // The same job without a deadline computes normally afterwards.
+    let ok = client.submit(&small_spec(2)).expect("resubmit");
+    assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true), "{ok:?}");
+
+    client.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("server io");
+}
+
+#[test]
+fn quota_rejects_over_the_wire_with_retry_hint() {
+    let (addr, server) = spawn_qos_server(QosConfig {
+        weights: ClassWeights::default(),
+        // Effectively non-refilling within the test: burst of 2 only.
+        quota: Some(Quota {
+            rate_per_s: 0.001,
+            burst: 2.0,
+        }),
+    });
+    let mut client = Client::connect(&addr.to_string()).expect("connect");
+
+    let qos = |name: &str| QoS {
+        priority: Priority::Batch,
+        client: Some(name.into()),
+        deadline_ms: None,
+    };
+    for i in 0..2 {
+        let r = client.submit_qos(&small_spec(3), &qos("alice")).expect("submit");
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "admit {i}: {r:?}");
+    }
+    let rejected = client.submit_qos(&small_spec(3), &qos("alice")).expect("submit");
+    assert_eq!(rejected.get("ok").and_then(Json::as_bool), Some(false), "{rejected:?}");
+    assert_eq!(
+        rejected.get("error").and_then(Json::as_str),
+        Some("quota_exceeded"),
+        "{rejected:?}"
+    );
+    assert!(
+        rejected
+            .get("retry_after_ms")
+            .and_then(Json::as_u64)
+            .is_some_and(|ms| ms >= 1),
+        "{rejected:?}"
+    );
+
+    // A different client still has its own burst.
+    let bob = client.submit_qos(&small_spec(3), &qos("bob")).expect("submit");
+    assert_eq!(bob.get("ok").and_then(Json::as_bool), Some(true), "{bob:?}");
+
+    let stats = client.stats().expect("stats");
+    assert_eq!(qos_stat(&stats, "batch", "quota_rejected"), 1);
+    assert_eq!(qos_stat(&stats, "batch", "admitted"), 3);
+
+    client.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("server io");
+}
