@@ -2,7 +2,7 @@
 # `make artifacts` is the only step that needs Python/JAX, and the
 # simulator + service never require it.
 
-.PHONY: build test fmt clippy prop examples test-store test-cluster test-chaos test-kernels test-qos ci bench bench-smoke bench-table bench-figs artifacts serve clean
+.PHONY: build test fmt clippy prop examples test-store test-cluster test-chaos test-kernels test-qos test-traces check-features ci bench bench-smoke bench-table bench-figs artifacts serve clean
 
 build:
 	cd rust && cargo build --release
@@ -30,6 +30,8 @@ prop:
 		cargo test --release --test invariants -- --nocapture
 	cd rust && PROP_CASES=8 $(if $(PROP_SEED),PROP_SEED=$(PROP_SEED)) \
 		cargo test --release --test store_persistence -- --nocapture
+	cd rust && PROP_CASES=8 $(if $(PROP_SEED),PROP_SEED=$(PROP_SEED)) \
+		cargo test --release --test trace_goldens -- --nocapture
 
 # Examples must keep compiling (CI enforces this too).
 examples:
@@ -64,6 +66,29 @@ test-chaos:
 test-qos:
 	cd rust && cargo test --release --test qos
 
+# Trace ingestion suite (tests/trace_goldens.rs: fit goldens, cache-key
+# anti-aliasing, wire round trip, fit-recovers-generator property) plus
+# the CLI path end to end through a fresh cached store: the cold report
+# simulates every trace × arch cell, the warm rerun must be pure store
+# hits ("0 simulated"). Mirrors the CI `test` job's trace steps.
+test-traces:
+	cd rust && cargo test --release --test trace_goldens
+	cd rust && rm -rf target/trace-e2e-cache && \
+		cargo run --release -- report --figure scenarios \
+			--trace traces/spiking_resnet.json,traces/pruned_cnn.json \
+			--window-cap 64 --cache-dir target/trace-e2e-cache && \
+		cargo run --release -- report --figure scenarios \
+			--trace traces/spiking_resnet.json,traces/pruned_cnn.json \
+			--window-cap 64 --cache-dir target/trace-e2e-cache \
+		| tee /dev/stderr | grep -q " 0 simulated"
+
+# Feature-matrix typecheck (mirrors the CI lint step): feature-gated
+# code must at least compile in every combination on every push.
+check-features:
+	cd rust && cargo check --all-targets --features chaos
+	cd rust && cargo check --all-targets --features simd-avx512
+	cd rust && cargo check --all-targets --features chaos,simd-avx512
+
 # Forced-scalar leg (mirrors the CI step): the table-build kernel is
 # runtime-selected (DESIGN.md §Perf-6, BARISTA_KERNEL env knob), and
 # plain `cargo test` exercises the auto choice. This pins the scalar
@@ -81,6 +106,7 @@ ci:
 	cd rust && cargo fmt --check
 	cd rust && cargo clippy -- -D warnings
 	cd rust && cargo build --examples
+	$(MAKE) check-features
 	cd rust && cargo build --release
 	cd rust && cargo test -q
 	cd rust && PROP_SEED=195499386 PROP_CASES=2 cargo test --release --test invariants
@@ -90,6 +116,7 @@ ci:
 	$(MAKE) test-qos
 	$(MAKE) test-chaos
 	cd rust && cargo run --release --example scenarios
+	$(MAKE) test-traces
 	$(MAKE) bench-smoke
 
 # Perf benches: writes BENCH_hotpath.json / BENCH_service.json /

@@ -22,7 +22,7 @@ use barista::sim::BankedCache;
 use barista::tensor::MaskMatrix;
 use barista::util::rng::Pcg32;
 use barista::util::Json;
-use barista::workload::{Benchmark, NetworkWork};
+use barista::workload::{load_trace_json, Benchmark, NetworkWork};
 
 fn main() {
     let smoke = std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false);
@@ -388,6 +388,32 @@ fn main() {
             .set("table_build_scalar_ms", tt_scalar.mean_s * 1e3)
             .set("table_build_speedup", build_speedup)
             .set("cluster_sim_ms", tc.mean_s * 1e3);
+        rows.push(row);
+    }
+
+    // --- trace ingestion: parse + fit + register a shipped preset --------
+    // The fit synthesizes candidate signatures per (model, density), so
+    // this times the whole `--trace` startup cost a CLI user pays. The
+    // spiking preset is the heavier one (8 layers of raw occupancy).
+    {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/traces/spiking_resnet.json");
+        let text = std::fs::read_to_string(path).expect("read spiking preset");
+        let doc = Json::parse(&text).expect("parse spiking preset");
+        let iters = if smoke { 3 } else { 10 };
+        let mut residual = 0.0;
+        let tf = bench("trace load+fit spiking_resnet (8 layers)", 1, iters, || {
+            let lt = load_trace_json(&doc).expect("fit preset");
+            residual = lt.fit.residual;
+        });
+        println!("{}", tf.report());
+        println!(
+            "  -> {:.1} ms per load+fit (network residual {residual:.4})",
+            tf.mean_s * 1e3
+        );
+        let mut row = Json::obj();
+        row.set("name", "trace_fit_spiking")
+            .set("fit_ms", tf.mean_s * 1e3)
+            .set("residual", residual);
         rows.push(row);
     }
 

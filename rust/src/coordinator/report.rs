@@ -231,6 +231,50 @@ pub fn scenario_matrix(
     (txt, csv)
 }
 
+/// Trace × architecture speedup matrix (`report --figure scenarios
+/// --trace a.json,b.json`): one row per loaded trace — each with its
+/// own fitted network and sparsity model — rendered as speedups over
+/// that trace's own Dense run. Rows arrive as `(trace label, fitted
+/// model spec, that trace's single-benchmark sweep across archs)`.
+pub fn trace_matrix(
+    traces: &[(String, String, Vec<RunResult>)],
+    archs: &[ArchKind],
+) -> (String, String) {
+    let mut txt = String::new();
+    let mut csv = String::from("trace,network,model");
+    for a in archs {
+        let _ = write!(csv, ",{}", a.name());
+    }
+    csv.push('\n');
+    let _ = writeln!(
+        txt,
+        "{:<20} {:<28} {:<16} {}",
+        "trace",
+        "network",
+        "fitted model",
+        archs
+            .iter()
+            .map(|a| format!("{:>12}", a.name()))
+            .collect::<String>()
+    );
+    for (label, model, results) in traces {
+        let b = results
+            .first()
+            .map(|r| r.benchmark)
+            .unwrap_or_else(|| panic!("trace '{label}': empty result set"));
+        let rows = fig7_speedups(results, &[b], archs);
+        let _ = write!(txt, "{label:<20} {:<28} {model:<16}", b.name());
+        let _ = write!(csv, "{label},{},{model}", b.name());
+        for (_, per, _) in &rows {
+            let _ = write!(txt, "{:>12.2}", per[0]);
+            let _ = write!(csv, ",{:.4}", per[0]);
+        }
+        let _ = writeln!(txt);
+        csv.push('\n');
+    }
+    (txt, csv)
+}
+
 /// Serialize a sweep to JSON (one object per run).
 pub fn results_json(results: &[RunResult]) -> Json {
     Json::Arr(results.iter().map(|r| r.network.to_json()).collect())
@@ -412,6 +456,26 @@ mod tests {
         for line in csv.lines().skip(1).filter(|l| l.contains(",dense,")) {
             let g = csv_last_f64(line).unwrap_or_else(|e| panic!("{e}"));
             assert!((g - 1.0).abs() < 1e-9, "{line}");
+        }
+    }
+
+    #[test]
+    fn trace_matrix_speedups_vs_each_traces_own_dense() {
+        let res = mini_sweep();
+        let rows = vec![
+            ("spiky".to_string(), "clustered:64".to_string(), res.clone()),
+            ("pruned".to_string(), "bernoulli".to_string(), res),
+        ];
+        let archs = [ArchKind::Dense, ArchKind::Barista, ArchKind::Ideal];
+        let (txt, csv) = trace_matrix(&rows, &archs);
+        assert!(txt.contains("spiky") && txt.contains("clustered:64"));
+        assert!(csv.starts_with("trace,network,model,dense,barista,ideal"));
+        // Header + one row per trace; the dense column is exactly 1.0.
+        assert_eq!(csv.lines().count(), 3);
+        for line in csv.lines().skip(1) {
+            let f = csv_f64_fields(line, 3).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(f.len(), archs.len());
+            assert!((f[0] - 1.0).abs() < 1e-9, "{line}");
         }
     }
 

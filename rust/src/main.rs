@@ -51,7 +51,7 @@ use barista::service::{
     SchedulerConfig, Server, Store, DEFAULT_ADDR,
 };
 use barista::util::Json;
-use barista::workload::{load_network_file, network, Benchmark, SparsityModel};
+use barista::workload::{load_network_file, load_trace_file, network, Benchmark, SparsityModel};
 
 fn main() {
     let args = match Args::from_env() {
@@ -94,36 +94,42 @@ fn print_help() {
          \n\
          COMMANDS:\n\
          \x20 simulate  --network <name|file.json> --arch <name> [--window-cap N] [--batch N]\n\
-         \x20           [--seed N] [--sparsity MODEL]\n\
+         \x20           [--seed N] [--sparsity MODEL] [--trace FILE]\n\
          \x20 sweep     [--window-cap N] [--batch N] [--seed N] [--sparsity MODEL] [--out FILE]\n\
-         \x20           [--workers N] [--cache-dir DIR]\n\
+         \x20           [--workers N] [--cache-dir DIR] [--trace FILE]\n\
          \x20 report    --figure <fig7|fig8|fig9|scenarios|all|comma,list> [--window-cap N]\n\
-         \x20           [--sparsity MODEL] [--workers N] [--cache-dir DIR]\n\
+         \x20           [--sparsity MODEL] [--workers N] [--cache-dir DIR] [--trace F1,F2]\n\
          \x20 serve     [--addr HOST:PORT] [--workers N] [--shards N] [--queue-cap N] [--cache-mb N]\n\
          \x20           [--cache-dir DIR]   (persistent result store; survives restarts)\n\
          \x20           [--peers A,B | --cluster ROUTER]   (consult peer stores before simulating)\n\
          \x20           [--weights I,B,G] [--quota RATE]   (QoS: class shares + per-client admission)\n\
          \x20           [--deadline-ms N] [--retries N] [--breaker-threshold N] [--breaker-cooldown-ms N]\n\
          \x20 submit    [--addr HOST:PORT | --cluster ROUTER] --network <name|file.json>\n\
-         \x20           [--arch <name>] [--window-cap N] [--sparsity MODEL] [--json] [--stream]\n\
+         \x20           [--arch <name>] [--window-cap N] [--sparsity MODEL] [--trace FILE]\n\
+         \x20           [--json] [--stream]\n\
          \x20           [--priority interactive|batch|background] [--client ID]\n\
          \x20           [--deadline-ms N]   (QoS deadline: shed unserved past it; also read bound)\n\
          \x20 batch     [--addr HOST:PORT | --cluster ROUTER] [--networks a,b|all] [--archs x,y|fig7]\n\
-         \x20           [--window-cap N] [--sparsity MODEL] [--json] [--stream] [--deadline-ms N]\n\
+         \x20           [--window-cap N] [--sparsity MODEL] [--trace FILE] [--json] [--stream]\n\
+         \x20           [--deadline-ms N]\n\
          \x20           [--priority interactive|batch|background] [--client ID]\n\
          \x20 stats     [ADDR | --addr HOST:PORT] [--json]   (server or router counters)\n\
          \x20 cluster-serve  --nodes A,B,C [--addr HOST:PORT] [--steal-threshold N]\n\
          \x20           [--vnodes N] [--health-ms N] [--no-replicate] [--weights I,B,G]\n\
          \x20           [--deadline-ms N] [--retries N] [--breaker-threshold N] [--breaker-cooldown-ms N]\n\
          \x20 golden    [--artifacts DIR]\n\
-         \x20 info      [--network <name|file.json>]\n\
+         \x20 info      [--network <name|file.json> | --trace FILE]\n\
          \n\
          NETWORKS: alexnet resnet18 inception-v4 vggnet resnet50, or a JSON\n\
          \x20         spec file (layer geometries + densities; see README)\n\
          ARCHS:    dense one-sided scnn sparten sparten-iso synchronous\n\
          \x20         barista-no-opts barista unlimited-buffer ideal\n\
          SPARSITY: bernoulli (default) clustered[:run] channel-skew[:pct]\n\
-         \x20         bank-balanced[:bank] layer-decay[:pct]"
+         \x20         bank-balanced[:bank] layer-decay[:pct]\n\
+         TRACES:   --trace loads a measured-sparsity trace (rust/traces/*.json,\n\
+         \x20         README \"Measured traces\"): its fitted network rides as a\n\
+         \x20         custom network and its fitted sparsity model becomes the\n\
+         \x20         job's model unless --sparsity overrides it"
     );
 }
 
@@ -166,6 +172,33 @@ fn resolve_network(name: &str) -> Result<Benchmark, String> {
 
 fn parse_benchmark(args: &Args) -> Result<Benchmark, String> {
     resolve_network(args.get_or("network", "alexnet"))
+}
+
+/// Apply `--trace FILE`: load + fit the measured trace, adopt its
+/// fitted sparsity model (an explicit `--sparsity` still wins), and
+/// return the registered custom network to run. `None` when no
+/// `--trace` was given; combining it with `--network`/`--networks` is
+/// an error — the trace carries its own network.
+fn apply_trace(args: &Args, cfg: &mut SimConfig) -> Result<Option<Benchmark>, String> {
+    let Some(path) = args.get("trace") else {
+        return Ok(None);
+    };
+    if args.get("network").is_some() || args.get("networks").is_some() {
+        return Err("--trace carries its own network; drop --network/--networks".into());
+    }
+    let t = load_trace_file(path)?;
+    if args.get("sparsity").is_none() {
+        cfg.sparsity = t.fit.model;
+    }
+    eprintln!(
+        "trace {}: {} layers, fitted {} (residual {:.4}), registered as {}",
+        t.name,
+        t.fit.layers.len(),
+        t.fit.model.spec(),
+        t.fit.residual,
+        t.registered
+    );
+    Ok(Some(t.benchmark))
 }
 
 /// A sizing option: absent keeps the default; an explicit value must be
@@ -305,13 +338,16 @@ fn scheduler_config(args: &Args) -> Result<SchedulerConfig, String> {
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
     args.finish(
-        &["network", "arch", "window-cap", "batch", "seed", "sparsity"],
+        &["network", "arch", "window-cap", "batch", "seed", "sparsity", "trace"],
         &["json"],
     )?;
     let arch_name = args.get_or("arch", "barista");
     let arch = ArchKind::parse(arch_name).ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
-    let cfg = parse_common(args, arch)?;
-    let benchmark = parse_benchmark(args)?;
+    let mut cfg = parse_common(args, arch)?;
+    let benchmark = match apply_trace(args, &mut cfg)? {
+        Some(b) => b,
+        None => parse_benchmark(args)?,
+    };
     let res = run_one(&RunRequest {
         benchmark,
         config: cfg,
@@ -356,16 +392,21 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
             "out",
             "workers",
             "cache-dir",
+            "trace",
         ],
         &[],
     )?;
-    let base = parse_common(args, ArchKind::Barista)?;
+    let mut base = parse_common(args, ArchKind::Barista)?;
+    let benchmarks: Vec<Benchmark> = match apply_trace(args, &mut base)? {
+        Some(b) => vec![b],
+        None => Benchmark::ALL.to_vec(),
+    };
     let sched = Scheduler::new(scheduler_config(args)?);
-    let reqs = coordinator::sweep_requests(&Benchmark::ALL, &ArchKind::FIG7, &base);
+    let reqs = coordinator::sweep_requests(&benchmarks, &ArchKind::FIG7, &base);
     let t0 = Instant::now();
     let results = sched.run_results(&reqs).map_err(|e| e.to_string())?;
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let (txt, _csv) = report::fig7_table(&results, &Benchmark::ALL, &ArchKind::FIG7);
+    let (txt, _csv) = report::fig7_table(&results, &benchmarks, &ArchKind::FIG7);
     println!("{txt}");
     let st = sched.stats();
     println!(
@@ -412,11 +453,24 @@ fn cmd_report(args: &Args) -> Result<(), String> {
             "queue-cap",
             "cache-mb",
             "cache-dir",
+            "trace",
         ],
         &[],
     )?;
     let base = parse_common(args, ArchKind::Barista)?;
-    let figure = args.get_or("figure", "fig7");
+    // `--trace f1,f2` loads measured traces; each becomes one row of
+    // the scenario matrix (its own fitted network + fitted model), so
+    // the default figure flips to `scenarios` when traces are given.
+    let mut traces = Vec::new();
+    if let Some(list) = args.get("trace") {
+        for path in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            traces.push(load_trace_file(path)?);
+        }
+        if traces.is_empty() {
+            return Err("--trace expects one or more trace files".into());
+        }
+    }
+    let figure = args.get_or("figure", if traces.is_empty() { "fig7" } else { "scenarios" });
     let figures: Vec<&str> = if figure == "all" {
         vec!["fig7", "fig8", "fig9"]
     } else {
@@ -426,6 +480,11 @@ fn cmd_report(args: &Args) -> Result<(), String> {
         if !matches!(*fig, "fig7" | "fig8" | "fig9" | "scenarios") {
             return Err(format!(
                 "unknown figure '{fig}' (expected fig7|fig8|fig9|scenarios|all)"
+            ));
+        }
+        if !traces.is_empty() && *fig != "scenarios" {
+            return Err(format!(
+                "--trace only applies to --figure scenarios (got '{fig}')"
             ));
         }
     }
@@ -438,7 +497,26 @@ fn cmd_report(args: &Args) -> Result<(), String> {
     for fig in &figures {
         let before = sched.stats();
         let t0 = Instant::now();
-        let (txt, csv, jobs) = if *fig == "scenarios" {
+        let (txt, csv, jobs) = if *fig == "scenarios" && !traces.is_empty() {
+            // Trace rows: each measured trace runs its own fitted
+            // network under its own fitted model (unless `--sparsity`
+            // overrides) across the scenario archs.
+            let mut rows = Vec::new();
+            let mut jobs = 0usize;
+            for t in &traces {
+                let mut tb = base.clone();
+                if args.get("sparsity").is_none() {
+                    tb.sparsity = t.fit.model;
+                }
+                let sreqs =
+                    coordinator::sweep_requests(&[t.benchmark], &SCENARIO_ARCHS, &tb);
+                jobs += sreqs.len();
+                let results = sched.run_results(&sreqs).map_err(|e| e.to_string())?;
+                rows.push((t.name.clone(), t.fit.model.spec(), results));
+            }
+            let (txt, csv) = report::trace_matrix(&rows, &SCENARIO_ARCHS);
+            (txt, csv, jobs)
+        } else if *fig == "scenarios" {
             let mut rows = Vec::new();
             let mut jobs = 0usize;
             // The scenario axis: one representative per family, with
@@ -766,8 +844,11 @@ fn client_with_deadline(args: &Args, addr: &str) -> Result<Client, String> {
 fn job_from_args(args: &Args) -> Result<JobSpec, String> {
     let arch_name = args.get_or("arch", "barista");
     let arch = ArchKind::parse(arch_name).ok_or_else(|| format!("unknown arch '{arch_name}'"))?;
-    let config = parse_common(args, arch)?;
-    let benchmark = parse_benchmark(args)?;
+    let mut config = parse_common(args, arch)?;
+    let benchmark = match apply_trace(args, &mut config)? {
+        Some(b) => b,
+        None => parse_benchmark(args)?,
+    };
     Ok(JobSpec { benchmark, config })
 }
 
@@ -809,7 +890,7 @@ fn cmd_submit(args: &Args) -> Result<(), String> {
     args.finish(
         &[
             "addr", "cluster", "network", "arch", "window-cap", "batch", "seed", "sparsity",
-            "priority", "client", "deadline-ms",
+            "trace", "priority", "client", "deadline-ms",
         ],
         &["json", "stream"],
     )?;
@@ -868,7 +949,7 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
     args.finish(
         &[
             "addr", "cluster", "networks", "archs", "window-cap", "batch", "seed", "sparsity",
-            "priority", "client", "deadline-ms",
+            "trace", "priority", "client", "deadline-ms",
         ],
         &["json", "stream"],
     )?;
@@ -876,9 +957,12 @@ fn cmd_batch(args: &Args) -> Result<(), String> {
     let addr = args
         .get("cluster")
         .unwrap_or(args.get_or("addr", DEFAULT_ADDR));
-    let benchmarks = parse_network_list(args.get_or("networks", "all"))?;
     let archs = parse_arch_list(args.get_or("archs", "fig7"))?;
-    let base = parse_common(args, ArchKind::Barista)?;
+    let mut base = parse_common(args, ArchKind::Barista)?;
+    let benchmarks = match apply_trace(args, &mut base)? {
+        Some(b) => vec![b],
+        None => parse_network_list(args.get_or("networks", "all"))?,
+    };
     let specs: Vec<JobSpec> = coordinator::sweep_requests(&benchmarks, &archs, &base)
         .into_iter()
         .map(|r| JobSpec {
@@ -990,7 +1074,15 @@ fn cmd_golden(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_info(args: &Args) -> Result<(), String> {
-    args.finish(&["network"], &[])?;
+    args.finish(&["network", "trace"], &[])?;
+    if let Some(path) = args.get("trace") {
+        if args.get("network").is_some() {
+            return Err("--trace carries its own network; drop --network".into());
+        }
+        let t = load_trace_file(path)?;
+        print!("{}", t.describe());
+        return Ok(());
+    }
     if let Some(name) = args.get("network") {
         let b = resolve_network(name)?;
         let spec = network(b);

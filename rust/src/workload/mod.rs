@@ -8,11 +8,15 @@
 //! densities preserve the paper's behaviour); [`sparsity`] decides how
 //! the non-zeros are *distributed* (DESIGN.md §Workloads). [`balance`]
 //! implements the GB-S inter-filter load-balancing variant (§3.3.3).
+//! [`traces`] ingests *measured* sparsity: versioned JSON traces fitted
+//! to the closest [`SparsityModel`] parameters per layer and registered
+//! as ordinary custom networks (DESIGN.md §Traces).
 
 pub mod balance;
 pub mod generator;
 pub mod networks;
 pub mod sparsity;
+pub mod traces;
 
 pub use balance::{alternating_assignment, gb_s_order};
 pub use generator::{LayerWork, NetworkWork};
@@ -20,3 +24,4 @@ pub use networks::{
     load_network_file, network, register_custom_network, Benchmark, NetworkSpec,
 };
 pub use sparsity::SparsityModel;
+pub use traces::{load_trace_file, load_trace_json, synthesize_trace_json, LoadedTrace, TraceFit};

@@ -1,0 +1,979 @@
+//! Trace ingestion for *measured* sparsity (DESIGN.md §Traces).
+//!
+//! Every scenario the simulator runs elsewhere is a synthetic draw from
+//! a parametric [`SparsityModel`]. This module closes the loop with
+//! real networks: a versioned JSON trace carries per-layer measured
+//! sparsity — per-channel density samples, a density histogram, or raw
+//! block-occupancy rows — and a deterministic fitting step selects the
+//! closest existing model parameters per layer (least squares over a
+//! mean-relative density histogram plus, when raw occupancy is
+//! available, adjacent-cell agreement and sub-block Fano factors), with
+//! seeded tie-breaks and reported residuals.
+//!
+//! A loaded trace becomes an ordinary registered custom network whose
+//! per-layer mean densities are pinned *exactly* (the fit never moves
+//! the measured means — it only picks the within-layer structure), so
+//! it rides every existing path unchanged: `--network`-style cache
+//! tokens, `SimConfig::canonical_json`, the workload memo, the service
+//! cache key, and the wire protocol's `network_spec` embedding. The
+//! registry name is mangled to `<name>@<content-hash>`, so two traces
+//! that share a display name but differ in content can never alias — in
+//! the in-process registry or in any cache tier.
+//!
+//! ## Trace format (version 1)
+//!
+//! ```json
+//! {"format": "barista-trace", "version": 1, "name": "pruned-cnn",
+//!  "layers": [
+//!    {"h": 27, "w": 27, "d": 96, "k": 5, "n": 256, "stride": 1, "pad": 2,
+//!     "filter_densities": [0.61, 0.44, 0.52],
+//!     "map_hist": [0, 3, 17, 41, 17, 2]}
+//!  ]}
+//! ```
+//!
+//! Per layer, each side (filters / feature maps) carries exactly one of:
+//!
+//! * `*_densities` — measured per-row (per-output-channel / per-window)
+//!   densities in `[0, 1]`;
+//! * `*_hist` — histogram weights over uniform bins of `[0, 1]`
+//!   (≥ 2 bins, any bin count);
+//! * `*_occupancy` — raw mask rows as equal-length `'0'`/`'1'` strings
+//!   (≥ 64 cells), the richest input: it additionally feeds the
+//!   agreement and Fano features, which is what separates clustered /
+//!   bank-balanced structure from plain Bernoulli.
+//!
+//! Unknown keys are errors, same as the rest of the stack.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::tensor::MaskMatrix;
+use crate::util::rng::Pcg32;
+use crate::util::{fnv1a64, Json, FNV_OFFSET_BASIS};
+use crate::workload::networks::{register_custom_network, Benchmark};
+use crate::workload::sparsity::SparsityModel;
+
+/// The `format` tag every trace document must carry.
+pub const TRACE_FORMAT: &str = "barista-trace";
+/// The (only) supported trace format version.
+pub const TRACE_VERSION: u64 = 1;
+/// Bins of the mean-relative density histogram the fit compares on.
+pub const FIT_BINS: usize = 16;
+/// Seed of the candidate-synthesis draws. Fixed: fits are a pure
+/// function of the trace document, never of call order or wall clock.
+pub const FIT_SEED: u64 = 0x712A_CE5D;
+
+/// Probe geometry for candidate synthesis: enough rows/cells that the
+/// signature features are stable, small enough that a full fit is
+/// milliseconds-scale even in debug builds.
+const PROBE_ROWS: usize = 96;
+const PROBE_CELLS: usize = 768;
+
+/// Feature weights in the residual: the histogram carries FIT_BINS
+/// squared terms, so the scalar features get multipliers to stay
+/// influential when occupancy data is present.
+const W_AGREE: f64 = 4.0;
+const W_FANO: f64 = 2.0;
+
+/// Which mask generator a measured side is compared against (filter
+/// draws and window draws use different jitter and different structured
+/// families, so the signature synthesis must match).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Side {
+    Filter,
+    Window,
+}
+
+/// Measured data for one side (filters or feature maps) of one layer,
+/// reduced to the features the fit compares on.
+#[derive(Debug, Clone)]
+pub struct SideData {
+    /// Mean density over the measured rows — pinned exactly into the
+    /// derived network spec.
+    pub mean: f64,
+    /// Mean-relative per-row density histogram (`x = d / 2·mean`,
+    /// clamped into the last bin), normalized to sum 1.
+    hist: [f64; FIT_BINS],
+    /// Adjacent-cell agreement rate; only from raw occupancy.
+    agreement: Option<f64>,
+    /// Fano factors of 8- and 32-cell block nonzero counts; only from
+    /// raw occupancy.
+    fano: Option<(f64, f64)>,
+    /// Number of measured rows (or histogram mass) behind the features.
+    pub rows: usize,
+}
+
+/// One parsed trace layer: raw geometry (validated at registration) and
+/// the measured data for both sides.
+#[derive(Debug, Clone)]
+pub struct TraceLayer {
+    /// `[h, w, d, k, n, stride, pad]`, passed through to the derived
+    /// network spec.
+    pub geom: [usize; 7],
+    pub filters: SideData,
+    pub maps: SideData,
+}
+
+/// A parsed (not yet fitted) trace document.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub layers: Vec<TraceLayer>,
+}
+
+/// The fitted model for one side of one layer, with its residual and
+/// the Bernoulli residual on the same data (so "how much structure did
+/// the fit actually find" is always reported, never inferred).
+#[derive(Debug, Clone, Copy)]
+pub struct SideFit {
+    pub model: SparsityModel,
+    pub residual: f64,
+    pub bernoulli_residual: f64,
+}
+
+/// Per-layer fit: exact measured mean densities plus the best
+/// within-layer structure for each side.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerFit {
+    pub filter_density: f64,
+    pub map_density: f64,
+    pub filters: SideFit,
+    pub windows: SideFit,
+}
+
+/// The full fit of a trace: per-layer fits plus the single
+/// network-level model (what `--trace` writes into the job's sparsity
+/// spec — the side whose best candidate improves most over Bernoulli,
+/// summed across layers).
+#[derive(Debug, Clone)]
+pub struct TraceFit {
+    pub layers: Vec<LayerFit>,
+    pub model: SparsityModel,
+    /// Summed residual of `model`'s side across layers.
+    pub residual: f64,
+}
+
+/// A trace after parsing, fitting, and registration: an ordinary
+/// `Benchmark` handle (custom network with exact per-layer measured
+/// densities) plus the fit report.
+#[derive(Debug, Clone)]
+pub struct LoadedTrace {
+    /// Registry handle for the derived network; its cache token embeds
+    /// the mangled name, so distinct traces never alias.
+    pub benchmark: Benchmark,
+    /// The trace's display name, as written in the document.
+    pub name: String,
+    /// The mangled registry name: `<name>@<8-hex content hash>`.
+    pub registered: String,
+    /// FNV-1a of the canonical (compact) trace document.
+    pub content_hash: u64,
+    pub fit: TraceFit,
+}
+
+impl LoadedTrace {
+    /// Human-readable fit report (`barista info --trace <file>`); also
+    /// the content of the self-sealing fit goldens, so everything in it
+    /// must be deterministic.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace {} ({} layers, content {:016x})",
+            self.name,
+            self.fit.layers.len(),
+            self.content_hash
+        );
+        let _ = writeln!(
+            out,
+            "  registered as {} (cache token {})",
+            self.registered,
+            self.benchmark.cache_token()
+        );
+        let _ = writeln!(
+            out,
+            "  network model: {} (residual {:.4})",
+            self.fit.model.spec(),
+            self.fit.residual
+        );
+        for (i, l) in self.fit.layers.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "  L{i:<3} df {:.4} dm {:.4} | filters {} (res {:.4}, bern {:.4}) | windows {} (res {:.4}, bern {:.4})",
+                l.filter_density,
+                l.map_density,
+                l.filters.model.spec(),
+                l.filters.residual,
+                l.filters.bernoulli_residual,
+                l.windows.model.spec(),
+                l.windows.residual,
+                l.windows.bernoulli_residual
+            );
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------
+
+fn geom_field(obj: &Json, i: usize, key: &str) -> Result<usize, String> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("layer {i}: field '{key}' expects a non-negative integer"))
+}
+
+/// Build the feature set from per-row density samples (optionally
+/// weighted — the histogram input path reuses this with bin centers).
+fn side_from_samples(samples: &[(f64, f64)]) -> SideData {
+    let total: f64 = samples.iter().map(|s| s.1).sum();
+    let mean = samples.iter().map(|s| s.0 * s.1).sum::<f64>() / total.max(1e-12);
+    let mut hist = [0.0; FIT_BINS];
+    for &(d, w) in samples {
+        hist[relative_bin(d, mean)] += w;
+    }
+    for h in &mut hist {
+        *h /= total.max(1e-12);
+    }
+    SideData {
+        mean,
+        hist,
+        agreement: None,
+        fano: None,
+        rows: samples.len(),
+    }
+}
+
+/// Map a density to its mean-relative histogram bin: `x = d / 2·mean`,
+/// so the histogram shape is density-invariant — a bimodal channel-skew
+/// profile looks bimodal at 50% density and at 99.5% sparsity alike,
+/// instead of collapsing into the lowest absolute bin.
+fn relative_bin(d: f64, mean: f64) -> usize {
+    let x = if mean > 0.0 { d / (2.0 * mean) } else { 0.0 };
+    ((x * FIT_BINS as f64) as usize).min(FIT_BINS - 1)
+}
+
+/// Fano factor (variance / mean) of a pooled count sample; 1.0 for a
+/// degenerate sample (Poisson reference — "no information").
+fn fano(counts: &[f64]) -> f64 {
+    if counts.is_empty() {
+        return 1.0;
+    }
+    let n = counts.len() as f64;
+    let mean = counts.iter().sum::<f64>() / n;
+    if mean <= 0.0 {
+        return 1.0;
+    }
+    let var = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>() / n;
+    var / mean
+}
+
+/// The shared feature extraction over explicit bit rows — used for
+/// measured occupancy and for synthesized candidate matrices, so both
+/// sides of every comparison go through identical arithmetic.
+fn features_from_bits(rows: &[Vec<bool>]) -> SideData {
+    let cells = rows.first().map(|r| r.len()).unwrap_or(0);
+    let mut densities = Vec::with_capacity(rows.len());
+    let mut agree = 0u64;
+    let mut pairs = 0u64;
+    let mut counts8: Vec<f64> = Vec::new();
+    let mut counts32: Vec<f64> = Vec::new();
+    for row in rows {
+        let nnz = row.iter().filter(|&&b| b).count();
+        densities.push(nnz as f64 / cells.max(1) as f64);
+        for w in row.windows(2) {
+            pairs += 1;
+            if w[0] == w[1] {
+                agree += 1;
+            }
+        }
+        for block in row.chunks_exact(8) {
+            counts8.push(block.iter().filter(|&&b| b).count() as f64);
+        }
+        for block in row.chunks_exact(32) {
+            counts32.push(block.iter().filter(|&&b| b).count() as f64);
+        }
+    }
+    let samples: Vec<(f64, f64)> = densities.iter().map(|&d| (d, 1.0)).collect();
+    let mut side = side_from_samples(&samples);
+    side.agreement = Some(if pairs > 0 {
+        agree as f64 / pairs as f64
+    } else {
+        1.0
+    });
+    side.fano = Some((fano(&counts8), fano(&counts32)));
+    side.rows = rows.len();
+    side
+}
+
+/// Parse one side of one layer: exactly one of `<p>_densities`,
+/// `<p>_hist`, `<p>_occupancy` (where `<p>` is `filter` or `map`).
+fn parse_side(lj: &Json, i: usize, prefix: &str) -> Result<SideData, String> {
+    let dens_key = format!("{prefix}_densities");
+    let hist_key = format!("{prefix}_hist");
+    let occ_key = format!("{prefix}_occupancy");
+    let present = [&dens_key, &hist_key, &occ_key]
+        .iter()
+        .filter(|k| lj.get(k).is_some())
+        .count();
+    if present != 1 {
+        return Err(format!(
+            "layer {i}: expected exactly one of '{dens_key}', '{hist_key}', \
+             '{occ_key}' (found {present})"
+        ));
+    }
+    if let Some(v) = lj.get(&dens_key) {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| format!("layer {i}: '{dens_key}' expects an array"))?;
+        if arr.is_empty() {
+            return Err(format!("layer {i}: '{dens_key}' is empty"));
+        }
+        let mut samples = Vec::with_capacity(arr.len());
+        for (j, x) in arr.iter().enumerate() {
+            let d = x
+                .as_f64()
+                .ok_or_else(|| format!("layer {i}: '{dens_key}[{j}]' expects a number"))?;
+            if !(0.0..=1.0).contains(&d) {
+                return Err(format!("layer {i}: '{dens_key}[{j}]' = {d} outside [0, 1]"));
+            }
+            samples.push((d, 1.0));
+        }
+        return Ok(side_from_samples(&samples));
+    }
+    if let Some(v) = lj.get(&hist_key) {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| format!("layer {i}: '{hist_key}' expects an array"))?;
+        if arr.len() < 2 {
+            return Err(format!(
+                "layer {i}: '{hist_key}' needs >= 2 uniform bins over [0, 1]"
+            ));
+        }
+        let mut samples = Vec::with_capacity(arr.len());
+        let mut total = 0.0;
+        for (j, x) in arr.iter().enumerate() {
+            let w = x
+                .as_f64()
+                .ok_or_else(|| format!("layer {i}: '{hist_key}[{j}]' expects a number"))?;
+            if !w.is_finite() || w < 0.0 {
+                return Err(format!(
+                    "layer {i}: '{hist_key}[{j}]' = {w} must be a finite weight >= 0"
+                ));
+            }
+            let center = (j as f64 + 0.5) / arr.len() as f64;
+            samples.push((center, w));
+            total += w;
+        }
+        if total <= 0.0 {
+            return Err(format!("layer {i}: '{hist_key}' has zero total weight"));
+        }
+        return Ok(side_from_samples(&samples));
+    }
+    let arr = lj
+        .get(&occ_key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("layer {i}: '{occ_key}' expects an array of strings"))?;
+    if arr.is_empty() {
+        return Err(format!("layer {i}: '{occ_key}' is empty"));
+    }
+    let mut rows: Vec<Vec<bool>> = Vec::with_capacity(arr.len());
+    let mut cells = 0usize;
+    for (j, x) in arr.iter().enumerate() {
+        let s = x
+            .as_str()
+            .ok_or_else(|| format!("layer {i}: '{occ_key}[{j}]' expects a string"))?;
+        let mut bits = Vec::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '0' => bits.push(false),
+                '1' => bits.push(true),
+                other => {
+                    return Err(format!(
+                        "layer {i}: '{occ_key}[{j}]' contains '{other}' (only '0'/'1')"
+                    ))
+                }
+            }
+        }
+        if j == 0 {
+            cells = bits.len();
+            if cells < 64 {
+                return Err(format!(
+                    "layer {i}: '{occ_key}' rows need >= 64 cells, got {cells}"
+                ));
+            }
+        } else if bits.len() != cells {
+            return Err(format!(
+                "layer {i}: '{occ_key}[{j}]' length {} != row 0 length {cells}",
+                bits.len()
+            ));
+        }
+        rows.push(bits);
+    }
+    Ok(features_from_bits(&rows))
+}
+
+/// Parse a trace document (strict: unknown keys, bad versions, and
+/// malformed measurements are all errors, never silent defaults).
+pub fn parse_trace(j: &Json) -> Result<Trace, String> {
+    let obj = j.as_obj().ok_or("trace must be a JSON object")?;
+    for k in obj.keys() {
+        if !matches!(
+            k.as_str(),
+            "format" | "version" | "name" | "description" | "layers"
+        ) {
+            return Err(format!("unknown trace key '{k}'"));
+        }
+    }
+    match j.get("format").and_then(Json::as_str) {
+        Some(TRACE_FORMAT) => {}
+        Some(other) => return Err(format!("'format' = '{other}', expected '{TRACE_FORMAT}'")),
+        None => return Err(format!("trace missing 'format' (expected '{TRACE_FORMAT}')")),
+    }
+    match j.get("version").and_then(Json::as_u64) {
+        Some(TRACE_VERSION) => {}
+        Some(v) => return Err(format!("trace version {v} unsupported (expected {TRACE_VERSION})")),
+        None => return Err("trace missing integer 'version'".into()),
+    }
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("trace missing 'name'")?;
+    if name.is_empty() || name.chars().any(|c| c.is_whitespace()) {
+        return Err(format!("invalid trace name '{name}'"));
+    }
+    let layers_json = j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or("trace missing 'layers' array")?;
+    if layers_json.is_empty() {
+        return Err("trace has no layers".into());
+    }
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for (i, lj) in layers_json.iter().enumerate() {
+        let lobj = lj
+            .as_obj()
+            .ok_or_else(|| format!("layer {i} must be an object"))?;
+        for k in lobj.keys() {
+            if !matches!(
+                k.as_str(),
+                "h" | "w"
+                    | "d"
+                    | "k"
+                    | "n"
+                    | "stride"
+                    | "pad"
+                    | "filter_densities"
+                    | "filter_hist"
+                    | "filter_occupancy"
+                    | "map_densities"
+                    | "map_hist"
+                    | "map_occupancy"
+            ) {
+                return Err(format!("layer {i}: unknown key '{k}'"));
+            }
+        }
+        let geom = [
+            geom_field(lj, i, "h")?,
+            geom_field(lj, i, "w")?,
+            geom_field(lj, i, "d")?,
+            geom_field(lj, i, "k")?,
+            geom_field(lj, i, "n")?,
+            geom_field(lj, i, "stride")?,
+            geom_field(lj, i, "pad")?,
+        ];
+        layers.push(TraceLayer {
+            geom,
+            filters: parse_side(lj, i, "filter")?,
+            maps: parse_side(lj, i, "map")?,
+        });
+    }
+    Ok(Trace {
+        name: name.to_string(),
+        layers,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Fitting
+// ---------------------------------------------------------------------
+
+/// Filter-side candidate grid. Index 0 MUST be Bernoulli (the fit
+/// reports every candidate's improvement against it).
+fn filter_candidates() -> Vec<SparsityModel> {
+    let mut v = vec![SparsityModel::Bernoulli];
+    for hot_pct in [10, 25, 50, 75] {
+        v.push(SparsityModel::ChannelSkew { hot_pct });
+    }
+    // bank=128 is deliberately absent: at the probe geometry it is
+    // statistically indistinguishable from Bernoulli, so keeping it
+    // would only add tie-break noise.
+    for bank in [4, 8, 16, 32, 64] {
+        v.push(SparsityModel::BankBalanced { bank });
+    }
+    v
+}
+
+/// Window-side candidate grid. Index 0 MUST be Bernoulli. run=2 is
+/// deliberately absent (its Markov chain is exactly independent at
+/// d = 0.5, i.e. Bernoulli by another name).
+fn window_candidates() -> Vec<SparsityModel> {
+    let mut v = vec![SparsityModel::Bernoulli];
+    for run in [4, 8, 16, 32, 64, 128, 256] {
+        v.push(SparsityModel::Clustered { run });
+    }
+    v
+}
+
+/// The synthesized signature of one candidate at one (quantized)
+/// density: the same features `features_from_bits` extracts, drawn from
+/// the candidate's actual mask generator at a fixed probe geometry with
+/// a fixed seed — so the whole fit is deterministic.
+fn synth_signature(model: &SparsityModel, side: Side, mille: u32) -> SideData {
+    let d = f64::from(mille) / 1000.0;
+    let tag = format!(
+        "{}|{}|{mille}",
+        model.spec(),
+        if side == Side::Filter { "f" } else { "w" }
+    );
+    let mut rng = Pcg32::new(FIT_SEED, fnv1a64(tag.as_bytes(), FNV_OFFSET_BASIS));
+    let m = match side {
+        Side::Filter => model.filter_masks(&mut rng, PROBE_ROWS, PROBE_CELLS, d),
+        Side::Window => model.window_masks(&mut rng, PROBE_ROWS, PROBE_CELLS, d),
+    };
+    features_from_bits(&matrix_bits(&m, PROBE_ROWS, PROBE_CELLS))
+}
+
+/// Expand a `MaskMatrix` into explicit bit rows (probe geometry only —
+/// this is fit-time code, not the simulator hot path).
+fn matrix_bits(m: &MaskMatrix, rows: usize, cells: usize) -> Vec<Vec<bool>> {
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut bits = Vec::with_capacity(cells);
+        let mut c = 0usize;
+        while bits.len() < cells {
+            let mask = m.get(r, c).mask;
+            let lim = (cells - bits.len()).min(128);
+            for b in 0..lim {
+                bits.push((mask >> b) & 1 == 1);
+            }
+            c += 1;
+        }
+        out.push(bits);
+    }
+    out
+}
+
+/// Weighted squared distance between a measured side and a candidate
+/// signature. The histogram term is always present; agreement and Fano
+/// terms only when the trace carried raw occupancy.
+fn distance(meas: &SideData, cand: &SideData) -> f64 {
+    let mut sse = 0.0;
+    for (a, b) in meas.hist.iter().zip(cand.hist.iter()) {
+        sse += (a - b) * (a - b);
+    }
+    if let (Some(a), Some(b)) = (meas.agreement, cand.agreement) {
+        sse += W_AGREE * (a - b) * (a - b);
+    }
+    if let (Some((a8, a32)), Some((b8, b32))) = (meas.fano, cand.fano) {
+        let g8 = (a8 - b8) / (a8.abs() + b8.abs() + 1e-9);
+        let g32 = (a32 - b32) / (a32.abs() + b32.abs() + 1e-9);
+        sse += W_FANO * (g8 * g8 + g32 * g32);
+    }
+    sse
+}
+
+/// Deterministic argmin: smallest residual by `total_cmp`, ties broken
+/// by spec-string order (so a fit never depends on grid ordering).
+fn argmin_idx(cands: &[SparsityModel], dist: &[f64]) -> usize {
+    let mut best = 0usize;
+    for i in 1..dist.len() {
+        match dist[i].total_cmp(&dist[best]) {
+            std::cmp::Ordering::Less => best = i,
+            std::cmp::Ordering::Equal if cands[i].spec() < cands[best].spec() => best = i,
+            _ => {}
+        }
+    }
+    best
+}
+
+type SigMemo = BTreeMap<(String, u8, u32), SideData>;
+
+fn fit_side(
+    data: &SideData,
+    cands: &[SparsityModel],
+    side: Side,
+    memo: &mut SigMemo,
+) -> (SideFit, Vec<f64>) {
+    // Quantize the synthesis density so layers with near-identical
+    // means share one memoized signature draw.
+    let mille = ((data.mean * 1000.0).round() as u32).clamp(5, 995);
+    let mut dist = Vec::with_capacity(cands.len());
+    for c in cands {
+        let key = (c.spec(), side as u8, mille);
+        let sig = memo
+            .entry(key)
+            .or_insert_with(|| synth_signature(c, side, mille));
+        dist.push(distance(data, sig));
+    }
+    let best = argmin_idx(cands, &dist);
+    (
+        SideFit {
+            model: cands[best],
+            residual: dist[best],
+            bernoulli_residual: dist[0],
+        },
+        dist,
+    )
+}
+
+/// Fit a parsed trace: per-layer per-side least-squares over the
+/// candidate grids, then one network-level model — the side (filters vs
+/// windows) whose best aggregate candidate improves most over
+/// Bernoulli. `LayerDecay` never appears as a candidate: with per-layer
+/// means pinned exactly in the derived spec, it is equivalent to
+/// Bernoulli within a layer (its whole effect is the depth profile the
+/// pinned means already carry).
+pub fn fit_trace(trace: &Trace) -> TraceFit {
+    let fil_c = filter_candidates();
+    let win_c = window_candidates();
+    debug_assert!(matches!(fil_c[0], SparsityModel::Bernoulli));
+    debug_assert!(matches!(win_c[0], SparsityModel::Bernoulli));
+    let mut memo = SigMemo::new();
+    let mut fil_tot = vec![0.0f64; fil_c.len()];
+    let mut win_tot = vec![0.0f64; win_c.len()];
+    let mut layers = Vec::with_capacity(trace.layers.len());
+    for l in &trace.layers {
+        let (ff, fd) = fit_side(&l.filters, &fil_c, Side::Filter, &mut memo);
+        let (wf, wd) = fit_side(&l.maps, &win_c, Side::Window, &mut memo);
+        for (t, d) in fil_tot.iter_mut().zip(&fd) {
+            *t += d;
+        }
+        for (t, d) in win_tot.iter_mut().zip(&wd) {
+            *t += d;
+        }
+        layers.push(LayerFit {
+            filter_density: l.filters.mean,
+            map_density: l.maps.mean,
+            filters: ff,
+            windows: wf,
+        });
+    }
+    let fi = argmin_idx(&fil_c, &fil_tot);
+    let wi = argmin_idx(&win_c, &win_tot);
+    let fil_gain = fil_tot[0] - fil_tot[fi];
+    let win_gain = win_tot[0] - win_tot[wi];
+    let (model, residual) = if matches!(fil_c[fi], SparsityModel::Bernoulli)
+        && matches!(win_c[wi], SparsityModel::Bernoulli)
+    {
+        (SparsityModel::Bernoulli, fil_tot[0].min(win_tot[0]))
+    } else if win_gain > fil_gain {
+        (win_c[wi], win_tot[wi])
+    } else {
+        (fil_c[fi], fil_tot[fi])
+    };
+    TraceFit {
+        layers,
+        model,
+        residual,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Loading (parse + fit + register)
+// ---------------------------------------------------------------------
+
+/// Parse, fit, and register a trace document. The derived network spec
+/// pins the exact measured per-layer mean densities; the registry name
+/// is `<name>@<8-hex content hash>`, so same-name-different-content
+/// traces get distinct registry entries and distinct cache tokens, and
+/// the identical document loads to the identical handle (dedup).
+pub fn load_trace_json(j: &Json) -> Result<LoadedTrace, String> {
+    let trace = parse_trace(j)?;
+    let content_hash = fnv1a64(j.to_string().as_bytes(), FNV_OFFSET_BASIS);
+    let fit = fit_trace(&trace);
+    let registered = format!(
+        "{}@{:08x}",
+        trace.name,
+        (content_hash ^ (content_hash >> 32)) as u32
+    );
+    let mut layer_arr = Vec::with_capacity(trace.layers.len());
+    for (l, lf) in trace.layers.iter().zip(&fit.layers) {
+        let [h, w, d, k, n, stride, pad] = l.geom;
+        let mut lj = Json::obj();
+        lj.set("h", h)
+            .set("w", w)
+            .set("d", d)
+            .set("k", k)
+            .set("n", n)
+            .set("stride", stride)
+            .set("pad", pad)
+            .set("filter_density", lf.filter_density)
+            .set("map_density", lf.map_density);
+        layer_arr.push(lj);
+    }
+    let mut spec = Json::obj();
+    spec.set("name", registered.as_str())
+        .set("layers", Json::Arr(layer_arr));
+    let benchmark =
+        register_custom_network(&spec).map_err(|e| format!("trace '{}': {e}", trace.name))?;
+    Ok(LoadedTrace {
+        benchmark,
+        name: trace.name,
+        registered,
+        content_hash,
+        fit,
+    })
+}
+
+/// Load a trace from a JSON file (the CLI's `--trace <file>` path).
+pub fn load_trace_file(path: &str) -> Result<LoadedTrace, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let j = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    load_trace_json(&j).map_err(|e| format!("{path}: {e}"))
+}
+
+// ---------------------------------------------------------------------
+// Synthesis (the round-trip harness)
+// ---------------------------------------------------------------------
+
+/// Fabricate a trace document by sampling a [`SparsityModel`] — the
+/// round-trip harness of the fitting step (synthesize → fit must
+/// recover the generator, tests/trace_goldens.rs) and a convenient way
+/// to produce inputs when no profiler is at hand. Layer geometry is a
+/// fixed small conv; per-layer mean densities follow the model's depth
+/// profile, so `LayerDecay` round-trips through the measured means.
+/// `cells` must be >= 64 (the occupancy minimum).
+pub fn synthesize_trace_json(
+    name: &str,
+    model: SparsityModel,
+    filter_density: f64,
+    map_density: f64,
+    layers: usize,
+    rows: usize,
+    cells: usize,
+    seed: u64,
+) -> Json {
+    let mut layer_arr = Vec::with_capacity(layers);
+    for i in 0..layers {
+        let (fd, md) = model.depth_profile(filter_density, map_density, i, layers);
+        let mut frng = Pcg32::new(seed ^ 0x7F17, i as u64 * 2 + 1);
+        let fm = model.filter_masks(&mut frng, rows, cells, fd);
+        let mut wrng = Pcg32::new(seed ^ 0x7F17, i as u64 * 2 + 2);
+        let wm = model.window_masks(&mut wrng, rows, cells, md);
+        let mut lj = Json::obj();
+        lj.set("h", 14usize)
+            .set("w", 14usize)
+            .set("d", 64usize)
+            .set("k", 3usize)
+            .set("n", 64usize)
+            .set("stride", 1usize)
+            .set("pad", 1usize)
+            .set("filter_occupancy", occupancy_json(&fm, rows, cells))
+            .set("map_occupancy", occupancy_json(&wm, rows, cells));
+        layer_arr.push(lj);
+    }
+    let mut j = Json::obj();
+    j.set("format", TRACE_FORMAT)
+        .set("version", TRACE_VERSION)
+        .set("name", name)
+        .set("layers", Json::Arr(layer_arr));
+    j
+}
+
+fn occupancy_json(m: &MaskMatrix, rows: usize, cells: usize) -> Json {
+    let bits = matrix_bits(m, rows, cells);
+    Json::Arr(
+        bits.iter()
+            .map(|row| {
+                Json::Str(row.iter().map(|&b| if b { '1' } else { '0' }).collect())
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(name: &str, model: SparsityModel, d: f64, seed: u64) -> Json {
+        synthesize_trace_json(name, model, 0.4, d, 1, 48, 512, seed)
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        let good = synth("t-parse", SparsityModel::Bernoulli, 0.4, 1);
+        assert!(parse_trace(&good).is_ok());
+
+        let mut j = good.clone();
+        j.set("bogus", 1u64);
+        assert!(parse_trace(&j).unwrap_err().contains("unknown trace key"));
+
+        let mut j = good.clone();
+        j.set("format", "not-a-trace");
+        assert!(parse_trace(&j).unwrap_err().contains("'format'"));
+
+        let mut j = good.clone();
+        j.set("version", 2u64);
+        assert!(parse_trace(&j).unwrap_err().contains("version 2"));
+
+        let mut j = good.clone();
+        j.set("name", "has space");
+        assert!(parse_trace(&j).unwrap_err().contains("invalid trace name"));
+
+        let mut j = good.clone();
+        j.set("layers", Json::Arr(vec![]));
+        assert!(parse_trace(&j).unwrap_err().contains("no layers"));
+    }
+
+    #[test]
+    fn parse_rejects_bad_side_data() {
+        // Two kinds of measurement on the same side.
+        let mut lj = Json::obj();
+        lj.set("h", 14usize)
+            .set("w", 14usize)
+            .set("d", 64usize)
+            .set("k", 3usize)
+            .set("n", 64usize)
+            .set("stride", 1usize)
+            .set("pad", 1usize)
+            .set("filter_densities", Json::Arr(vec![Json::Num(0.5)]))
+            .set("filter_hist", Json::Arr(vec![Json::Num(1.0), Json::Num(1.0)]))
+            .set("map_densities", Json::Arr(vec![Json::Num(0.5)]));
+        let mut j = Json::obj();
+        j.set("format", TRACE_FORMAT)
+            .set("version", TRACE_VERSION)
+            .set("name", "t-bad")
+            .set("layers", Json::Arr(vec![lj]));
+        assert!(parse_trace(&j).unwrap_err().contains("exactly one of"));
+
+        // Ragged occupancy rows.
+        let mut lj = Json::obj();
+        lj.set("h", 14usize)
+            .set("w", 14usize)
+            .set("d", 64usize)
+            .set("k", 3usize)
+            .set("n", 64usize)
+            .set("stride", 1usize)
+            .set("pad", 1usize)
+            .set(
+                "filter_occupancy",
+                Json::Arr(vec![
+                    Json::Str("01".repeat(32)),
+                    Json::Str("01".repeat(16)),
+                ]),
+            )
+            .set("map_densities", Json::Arr(vec![Json::Num(0.5)]));
+        let mut j = Json::obj();
+        j.set("format", TRACE_FORMAT)
+            .set("version", TRACE_VERSION)
+            .set("name", "t-ragged")
+            .set("layers", Json::Arr(vec![lj]));
+        assert!(parse_trace(&j).unwrap_err().contains("length"));
+
+        // Density out of range.
+        let mut lj = Json::obj();
+        lj.set("h", 14usize)
+            .set("w", 14usize)
+            .set("d", 64usize)
+            .set("k", 3usize)
+            .set("n", 64usize)
+            .set("stride", 1usize)
+            .set("pad", 1usize)
+            .set("filter_densities", Json::Arr(vec![Json::Num(1.5)]))
+            .set("map_densities", Json::Arr(vec![Json::Num(0.5)]));
+        let mut j = Json::obj();
+        j.set("format", TRACE_FORMAT)
+            .set("version", TRACE_VERSION)
+            .set("name", "t-range")
+            .set("layers", Json::Arr(vec![lj]));
+        assert!(parse_trace(&j).unwrap_err().contains("outside [0, 1]"));
+    }
+
+    #[test]
+    fn relative_histogram_is_density_invariant() {
+        // Same relative spread at ~40% density and at ~99% sparsity
+        // lands in the same bins — the spiking regime must not collapse
+        // into bin 0. (Sample values are chosen off the bin boundaries
+        // so float rounding cannot flip a bin.)
+        let dense: Vec<(f64, f64)> = vec![(0.21, 1.0), (0.34, 1.0), (0.66, 1.0)];
+        let sparse: Vec<(f64, f64)> = vec![(0.0042, 1.0), (0.0068, 1.0), (0.0132, 1.0)];
+        let a = side_from_samples(&dense);
+        let b = side_from_samples(&sparse);
+        assert_eq!(a.hist, b.hist, "relative hist must ignore the scale");
+        assert!(a.hist[0] < 1e-12, "spread must not collapse into bin 0");
+    }
+
+    #[test]
+    fn fit_is_deterministic() {
+        let j = synth("t-det", SparsityModel::Clustered { run: 32 }, 0.45, 3);
+        let t = parse_trace(&j).unwrap();
+        let a = fit_trace(&t);
+        let b = fit_trace(&t);
+        assert_eq!(a.model.spec(), b.model.spec());
+        assert_eq!(a.residual.to_bits(), b.residual.to_bits());
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.filters.residual.to_bits(), y.filters.residual.to_bits());
+            assert_eq!(x.windows.residual.to_bits(), y.windows.residual.to_bits());
+        }
+    }
+
+    #[test]
+    fn clustered_window_structure_is_recovered() {
+        let j = synth("t-clust", SparsityModel::Clustered { run: 32 }, 0.45, 5);
+        let lt = load_trace_json(&j).unwrap();
+        assert_eq!(
+            lt.fit.model.family(),
+            "clustered",
+            "expected a clustered fit, got {} (residual {})",
+            lt.fit.model.spec(),
+            lt.fit.residual
+        );
+        // The fit must beat Bernoulli decisively on the window side.
+        let l = &lt.fit.layers[0];
+        assert!(
+            l.windows.residual < l.windows.bernoulli_residual,
+            "clustered fit {} not better than bernoulli {}",
+            l.windows.residual,
+            l.windows.bernoulli_residual
+        );
+    }
+
+    #[test]
+    fn identical_content_dedups_to_one_handle() {
+        let j = synth("t-dedup", SparsityModel::Bernoulli, 0.4, 7);
+        let a = load_trace_json(&j).unwrap();
+        let b = load_trace_json(&j).unwrap();
+        assert_eq!(a.benchmark, b.benchmark);
+        assert_eq!(a.registered, b.registered);
+        assert_eq!(a.benchmark.cache_token(), b.benchmark.cache_token());
+    }
+
+    #[test]
+    fn same_name_different_content_never_aliases() {
+        let a = load_trace_json(&synth("t-alias", SparsityModel::Bernoulli, 0.40, 11)).unwrap();
+        let b = load_trace_json(&synth("t-alias", SparsityModel::Bernoulli, 0.41, 12)).unwrap();
+        assert_ne!(a.content_hash, b.content_hash);
+        assert_ne!(a.registered, b.registered, "mangled names must differ");
+        assert_ne!(a.benchmark, b.benchmark);
+        assert_ne!(
+            a.benchmark.cache_token(),
+            b.benchmark.cache_token(),
+            "distinct traces must never share a cache identity"
+        );
+    }
+
+    #[test]
+    fn measured_means_are_pinned_exactly() {
+        let j = synth("t-pin", SparsityModel::Bernoulli, 0.5, 13);
+        let t = parse_trace(&j).unwrap();
+        let lt = load_trace_json(&j).unwrap();
+        let spec = crate::workload::networks::network(lt.benchmark);
+        let per = spec.layer_densities();
+        assert_eq!(per.len(), t.layers.len());
+        for ((fd, md), l) in per.iter().zip(&t.layers) {
+            assert_eq!(fd.to_bits(), l.filters.mean.to_bits());
+            assert_eq!(md.to_bits(), l.maps.mean.to_bits());
+        }
+    }
+}

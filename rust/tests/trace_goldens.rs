@@ -1,0 +1,389 @@
+//! Trace-fitting goldens and the fit round-trip property (ISSUE 10).
+//!
+//! Two self-sealing golden families over the shipped presets under
+//! `rust/traces/` (same scheme as `scenario_goldens.rs` — first run in
+//! a fresh environment seals, committed files then pin):
+//!
+//! 1. the full fit report (`LoadedTrace::describe()`): per-layer fitted
+//!    model parameters, residuals, and the registered cache identity;
+//! 2. scenario cycles per (preset, arch): the trace's fitted network
+//!    under its fitted model through the real simulator.
+//!
+//! Plus the seeded round-trip property (`PROP_SEED`/`PROP_CASES`
+//! convention from `tests/invariants.rs`): synthesize a trace from each
+//! `SparsityModel`, fit it, and assert the fitted parameters recover
+//! the generator within tolerance — and the cache-key law: two traces
+//! sharing a display name but differing in content must never share a
+//! service cache entry.
+
+use barista::config::{ArchKind, SimConfig};
+use barista::coordinator::{run_one, RunRequest};
+use barista::service::cache::canonical_job_string;
+use barista::service::{job_key, JobSpec};
+use barista::util::prop::run_prop;
+use barista::workload::traces::{fit_trace, parse_trace};
+use barista::workload::{load_trace_file, load_trace_json, synthesize_trace_json, SparsityModel};
+
+/// Read a tuning env var; a set-but-unparseable value is a hard error,
+/// never a silent fall-back.
+fn env_u64(name: &str, default: u64) -> u64 {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(s) => s
+            .parse()
+            .unwrap_or_else(|e| panic!("{name}='{s}' must be a decimal integer: {e}")),
+    }
+}
+
+fn prop_seed() -> u64 {
+    env_u64("PROP_SEED", 0xBA7157A)
+}
+
+fn cases(base: u64) -> u64 {
+    base * env_u64("PROP_CASES", 1).max(1)
+}
+
+/// The shipped presets: (file stem, path).
+const PRESETS: [(&str, &str); 2] = [
+    (
+        "spiking_resnet",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/traces/spiking_resnet.json"),
+    ),
+    (
+        "pruned_cnn",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/traces/pruned_cnn.json"),
+    ),
+];
+
+/// Mirror of main.rs's scenario arch set (Dense baseline, strongest
+/// prior two-sided design, BARISTA, Ideal bound).
+const SCENARIO_ARCHS: [ArchKind; 4] = [
+    ArchKind::Dense,
+    ArchKind::SparTen,
+    ArchKind::Barista,
+    ArchKind::Ideal,
+];
+
+fn golden_dir() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden")
+}
+
+/// Seal-or-compare a golden holding arbitrary text.
+fn check_text_golden(path: &str, got: &str, what: &str) -> bool {
+    match std::fs::read_to_string(path) {
+        Ok(want) => {
+            assert_eq!(
+                got, want,
+                "{what} drifted from golden {path}. If intentional, bump \
+                 SIM_VERSION in src/lib.rs and refresh the file."
+            );
+            true
+        }
+        Err(_) => {
+            std::fs::write(path, got).expect("seal golden file");
+            false
+        }
+    }
+}
+
+#[test]
+fn preset_fit_reports_are_pinned() {
+    std::fs::create_dir_all(golden_dir()).expect("create golden dir");
+    let mut sealed = 0usize;
+    for (stem, path) in PRESETS {
+        let t = load_trace_file(path).expect("load preset");
+        let got = t.describe();
+        let gpath = format!("{}/trace_fit_{stem}.txt", golden_dir());
+        if !check_text_golden(&gpath, &got, &format!("fit report for {stem}")) {
+            sealed += 1;
+        }
+    }
+    println!("trace fit goldens: {} presets, {sealed} sealed", PRESETS.len());
+}
+
+#[test]
+fn preset_scenario_cycles_are_pinned() {
+    std::fs::create_dir_all(golden_dir()).expect("create golden dir");
+    let mut sealed = 0usize;
+    let mut checked = 0usize;
+    for (stem, path) in PRESETS {
+        let t = load_trace_file(path).expect("load preset");
+        for arch in SCENARIO_ARCHS {
+            let mut cfg = SimConfig::paper(arch);
+            cfg.window_cap = 24;
+            cfg.batch = 1;
+            cfg.sparsity = t.fit.model;
+            let got = run_one(&RunRequest {
+                benchmark: t.benchmark,
+                config: cfg,
+            })
+            .network
+            .cycles;
+            assert!(
+                got.is_finite() && got > 0.0,
+                "{stem} on {arch}: insane cycles {got}"
+            );
+            let gpath = format!("{}/trace_scn_{stem}_{}_cycles.txt", golden_dir(), arch.name());
+            match std::fs::read_to_string(&gpath) {
+                Ok(s) => {
+                    let want: f64 = s.trim().parse().unwrap_or_else(|e| {
+                        panic!("golden file {gpath} must hold one f64: {e}")
+                    });
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "pinned cycles for {stem} on {arch} drifted: got {got}, \
+                         golden {want}. If intentional, bump SIM_VERSION in \
+                         src/lib.rs and refresh {gpath}."
+                    );
+                    checked += 1;
+                }
+                Err(_) => {
+                    std::fs::write(&gpath, format!("{got}\n")).expect("seal golden file");
+                    sealed += 1;
+                }
+            }
+        }
+    }
+    println!("trace scenario goldens: {checked} checked, {sealed} sealed");
+}
+
+/// The anti-aliasing law at the service layer: two traces with the same
+/// display name but different content get distinct memo/cache keys for
+/// otherwise identical jobs; the identical document keys identically.
+#[test]
+fn same_name_different_content_never_shares_a_cache_key() {
+    let a = load_trace_json(&synthesize_trace_json(
+        "alias-check",
+        SparsityModel::Bernoulli,
+        0.40,
+        0.40,
+        1,
+        96,
+        768,
+        101,
+    ))
+    .expect("load a");
+    let b = load_trace_json(&synthesize_trace_json(
+        "alias-check",
+        SparsityModel::Bernoulli,
+        0.40,
+        0.40,
+        1,
+        96,
+        768,
+        202,
+    ))
+    .expect("load b");
+    assert_eq!(a.name, b.name, "the display names collide by design");
+    let cfg = SimConfig::paper(ArchKind::Barista);
+    let ra = RunRequest {
+        benchmark: a.benchmark,
+        config: cfg.clone(),
+    };
+    let rb = RunRequest {
+        benchmark: b.benchmark,
+        config: cfg.clone(),
+    };
+    assert_ne!(
+        canonical_job_string(&ra),
+        canonical_job_string(&rb),
+        "distinct traces must never share a canonical job string"
+    );
+    assert_ne!(
+        job_key(&ra),
+        job_key(&rb),
+        "distinct traces must never share a cache key"
+    );
+    // And the dedup direction: the identical document keys identically.
+    let a2 = load_trace_json(&synthesize_trace_json(
+        "alias-check",
+        SparsityModel::Bernoulli,
+        0.40,
+        0.40,
+        1,
+        96,
+        768,
+        101,
+    ))
+    .expect("reload a");
+    let ra2 = RunRequest {
+        benchmark: a2.benchmark,
+        config: cfg,
+    };
+    assert_eq!(canonical_job_string(&ra), canonical_job_string(&ra2));
+    assert_eq!(job_key(&ra), job_key(&ra2));
+}
+
+/// A traced job survives the wire protocol round trip: the embedded
+/// `network_spec` re-registers on the receiving side to the same cache
+/// identity and the same simulation config.
+#[test]
+fn traced_jobs_round_trip_the_wire_protocol() {
+    for (_, path) in PRESETS {
+        let t = load_trace_file(path).expect("load preset");
+        let mut cfg = SimConfig::paper(ArchKind::Barista);
+        cfg.window_cap = 48;
+        cfg.sparsity = t.fit.model;
+        let spec = JobSpec {
+            benchmark: t.benchmark,
+            config: cfg,
+        };
+        let wire = spec.to_json();
+        assert!(
+            wire.get("network_spec").is_some(),
+            "traced job must embed its network_spec on the wire"
+        );
+        let back = JobSpec::from_json(&wire).expect("decode traced job");
+        assert_eq!(
+            back.benchmark.cache_token(),
+            spec.benchmark.cache_token(),
+            "wire round trip must preserve the trace's cache identity"
+        );
+        assert_eq!(
+            back.config.canonical_json().to_string(),
+            spec.config.canonical_json().to_string()
+        );
+    }
+}
+
+/// Round-trip property: synthesize a trace from a known generator, fit
+/// it, and the fitted parameters must recover the generator within
+/// tolerance. Tolerances are grid-aware (the candidate grids are
+/// log-spaced, so "within a factor of 4" means the fit landed on the
+/// true grid point or one of its neighbours).
+#[test]
+fn prop_fit_recovers_generator() {
+    run_prop("fit_recovers_generator", prop_seed(), cases(6), |rng| {
+        let d = 0.25 + 0.2 * rng.next_f64();
+        let name = format!("rt-{}", rng.next_u64());
+        let seed = rng.next_u64();
+        match rng.gen_range(5) {
+            0 => {
+                let gen = [8u32, 32, 128][rng.gen_range(3) as usize];
+                let j = synthesize_trace_json(
+                    &name,
+                    SparsityModel::Clustered { run: gen },
+                    0.35,
+                    d,
+                    1,
+                    96,
+                    768,
+                    seed,
+                );
+                let fit = fit_trace(&parse_trace(&j)?);
+                let side = fit.layers[0].windows.model;
+                let SparsityModel::Clustered { run } = side else {
+                    return Err(format!(
+                        "clustered:{gen} at d={d:.3} fitted as {side} on the window side"
+                    ));
+                };
+                if run * 4 < gen || run > gen * 4 {
+                    return Err(format!(
+                        "clustered:{gen} at d={d:.3} fitted run {run} (outside 4x)"
+                    ));
+                }
+                if fit.model.family() != "clustered" {
+                    return Err(format!(
+                        "clustered:{gen}: network model {} is not clustered",
+                        fit.model
+                    ));
+                }
+            }
+            1 => {
+                let gen = [10u32, 25, 50, 75][rng.gen_range(4) as usize];
+                let j = synthesize_trace_json(
+                    &name,
+                    SparsityModel::ChannelSkew { hot_pct: gen },
+                    d,
+                    0.35,
+                    1,
+                    96,
+                    768,
+                    seed,
+                );
+                let fit = fit_trace(&parse_trace(&j)?);
+                let side = fit.layers[0].filters.model;
+                let SparsityModel::ChannelSkew { hot_pct } = side else {
+                    return Err(format!(
+                        "channel-skew:{gen} at d={d:.3} fitted as {side} on the filter side"
+                    ));
+                };
+                if hot_pct.abs_diff(gen) > 35 {
+                    return Err(format!(
+                        "channel-skew:{gen} at d={d:.3} fitted hot_pct {hot_pct}"
+                    ));
+                }
+            }
+            2 => {
+                let gen = [4u32, 8, 16, 32, 64][rng.gen_range(5) as usize];
+                let j = synthesize_trace_json(
+                    &name,
+                    SparsityModel::BankBalanced { bank: gen },
+                    d,
+                    0.35,
+                    1,
+                    96,
+                    768,
+                    seed,
+                );
+                let fit = fit_trace(&parse_trace(&j)?);
+                let side = fit.layers[0].filters.model;
+                let SparsityModel::BankBalanced { bank } = side else {
+                    return Err(format!(
+                        "bank-balanced:{gen} at d={d:.3} fitted as {side} on the filter side"
+                    ));
+                };
+                if bank * 4 < gen || bank > gen * 4 {
+                    return Err(format!(
+                        "bank-balanced:{gen} at d={d:.3} fitted bank {bank} (outside 4x)"
+                    ));
+                }
+            }
+            3 => {
+                // LayerDecay's whole effect is the depth profile, and
+                // the derived spec pins the per-layer means exactly —
+                // recovery means the means decay monotonically.
+                let j = synthesize_trace_json(
+                    &name,
+                    SparsityModel::LayerDecay { decay_pct: 40 },
+                    0.35,
+                    0.45,
+                    4,
+                    96,
+                    768,
+                    seed,
+                );
+                let fit = fit_trace(&parse_trace(&j)?);
+                for w in fit.layers.windows(2) {
+                    if w[1].map_density >= w[0].map_density {
+                        return Err(format!(
+                            "layer-decay:40 means not decreasing: {} -> {}",
+                            w[0].map_density, w[1].map_density
+                        ));
+                    }
+                }
+            }
+            _ => {
+                let j = synthesize_trace_json(
+                    &name,
+                    SparsityModel::Bernoulli,
+                    0.35,
+                    d,
+                    1,
+                    96,
+                    768,
+                    seed,
+                );
+                let fit = fit_trace(&parse_trace(&j)?);
+                if fit.model.family() != "bernoulli" {
+                    return Err(format!(
+                        "bernoulli at d={d:.3} fitted as {} (residual {:.4})",
+                        fit.model, fit.residual
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
